@@ -1,0 +1,69 @@
+//! Ablation: GPU-count scalability beyond the paper's 2-GPU testbed.
+//!
+//! With N GPUs sharing CXL capacity, per-AIC offered load grows with N;
+//! striping across more AICs should keep relative throughput flat while
+//! the non-striped per-GPU-affinity layout degrades once GPUs outnumber
+//! cards. (The paper's §IV-B claims striping "improves scalability" —
+//! this bench quantifies that claim on 1–4 GPUs.)
+
+use cxlfine::mem::Policy;
+use cxlfine::model::footprint::Workload;
+use cxlfine::model::presets::qwen25_7b;
+use cxlfine::offload::{simulate_iteration, MemoryPlan, RunConfig};
+use cxlfine::topology::presets::{config_b, with_dram_capacity, with_gpus};
+use cxlfine::trow;
+use cxlfine::util::bench::{points_json, BenchReport};
+use cxlfine::util::table::Table;
+use cxlfine::util::units::GIB;
+
+fn main() {
+    let mut report = BenchReport::new("ablation_gpu_scaling");
+    let mut t = Table::new(&["gpus", "baseline tok/s", "affinity %", "striped %"]);
+    let (mut xs, mut aff, mut strp) = (vec![], vec![], vec![]);
+    for n in [1usize, 2, 3, 4] {
+        let base_topo = with_gpus(config_b(), n);
+        let cxl_topo = with_gpus(with_dram_capacity(config_b(), 128 * GIB), n);
+        // B=1: the transfer-bound regime where contention matters most
+        let w = Workload::new(n, 1, 8192);
+        let run = |topo: &cxlfine::topology::SystemTopology, policy| {
+            let cfg = RunConfig::new(qwen25_7b(), w, policy);
+            let plan = MemoryPlan::build(topo, &cfg).unwrap();
+            simulate_iteration(topo, &cfg, &plan).tokens_per_sec()
+        };
+        let base = run(&base_topo, Policy::DramOnly);
+        let affinity = run(&cxl_topo, Policy::CxlAware { striping: false }) / base;
+        let striped = run(&cxl_topo, Policy::CxlAware { striping: true }) / base;
+        t.row(trow![
+            n,
+            format!("{base:.0}"),
+            format!("{:.1}", 100.0 * affinity),
+            format!("{:.1}", 100.0 * striped)
+        ]);
+        xs.push(n as f64);
+        aff.push(affinity);
+        strp.push(striped);
+    }
+    // striping must dominate affinity once GPUs > AICs (n = 3, 4)
+    for i in 2..4 {
+        assert!(
+            strp[i] >= aff[i] - 1e-9,
+            "striping should win at {} GPUs: {:.3} vs {:.3}",
+            i + 1,
+            strp[i],
+            aff[i]
+        );
+    }
+    // and striped throughput should stay within 70% of baseline at 4 GPUs
+    assert!(strp[3] > 0.5, "striped 4-GPU relative {:.3}", strp[3]);
+    println!(
+        "4-GPU relative throughput: affinity {:.0}% vs striped {:.0}%",
+        aff[3] * 100.0,
+        strp[3] * 100.0
+    );
+    report.section(
+        "relative_vs_gpus",
+        t,
+        points_json(&xs, &[("affinity_rel", &aff), ("striped_rel", &strp)]),
+    );
+    report.finish();
+}

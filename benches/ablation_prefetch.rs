@@ -1,0 +1,51 @@
+//! Ablation: parameter prefetch depth (the DESIGN.md §5 design-choice
+//! study). ZeRO-Offload overlaps the next block's H2D copy with the
+//! current block's kernel; depth 0–1 exposes transfer latency, excessive
+//! depth buys nothing (and would cost GPU memory).
+
+use cxlfine::mem::Policy;
+use cxlfine::model::footprint::Workload;
+use cxlfine::model::presets::qwen25_7b;
+use cxlfine::offload::{simulate_iteration, MemoryPlan, RunConfig};
+use cxlfine::topology::presets::{config_a, with_dram_capacity};
+use cxlfine::trow;
+use cxlfine::util::bench::{points_json, BenchReport};
+use cxlfine::util::table::Table;
+use cxlfine::util::units::GIB;
+
+fn main() {
+    let mut report = BenchReport::new("ablation_prefetch");
+    let topo = with_dram_capacity(config_a(), 128 * GIB);
+    // small batch: parameter streaming dominates → prefetch matters most
+    let w = Workload::new(1, 1, 4096);
+    let mut t = Table::new(&["prefetch_depth", "iter_s", "tokens_per_sec", "vs depth=1"]);
+    let (mut xs, mut tps) = (vec![], vec![]);
+    let mut depth1 = 0.0f64;
+    for depth in [1usize, 2, 3, 4, 6, 8] {
+        let mut cfg = RunConfig::new(
+            qwen25_7b(),
+            w,
+            Policy::CxlAware { striping: false },
+        );
+        cfg.prefetch_depth = depth;
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        let b = simulate_iteration(&topo, &cfg, &plan);
+        if depth == 1 {
+            depth1 = b.tokens_per_sec();
+        }
+        t.row(trow![
+            depth,
+            format!("{:.3}", b.iter_s),
+            format!("{:.0}", b.tokens_per_sec()),
+            format!("{:+.1}%", 100.0 * (b.tokens_per_sec() / depth1 - 1.0))
+        ]);
+        xs.push(depth as f64);
+        tps.push(b.tokens_per_sec());
+    }
+    // diminishing returns: depth 2 ≥ depth 1; depth 8 ≈ depth 4
+    assert!(tps[1] >= tps[0], "prefetch 2 must not lose to 1");
+    let tail = (tps[5] / tps[3] - 1.0).abs();
+    assert!(tail < 0.05, "depth 8 vs 4 should be flat, got {tail:.3}");
+    report.section("throughput_vs_depth", t, points_json(&xs, &[("tokens_per_sec", &tps)]));
+    report.finish();
+}

@@ -1,0 +1,116 @@
+//! §Perf microbench: the real Rust CPU Adam hot path on this host.
+//!
+//! Reports effective bandwidth (28 B moved per element) vs thread count
+//! and element count — the L3 optimization target of DESIGN.md §8
+//! (≥ 60 % of practical host memory bandwidth at large N).
+
+use cxlfine::optim::{adam_step, AdamHp, AdamState};
+use cxlfine::sim::memmodel::ADAM_BYTES_PER_ELEM;
+use cxlfine::trow;
+use cxlfine::util::bench::{points_json, BenchReport};
+use cxlfine::util::table::Table;
+use cxlfine::util::threadpool::default_threads;
+
+fn bench_once(n: usize, threads: usize, iters: usize) -> f64 {
+    let mut p = vec![1.0f32; n];
+    let g: Vec<f32> = (0..n).map(|i| (i as f32 % 7.0) * 0.01).collect();
+    let mut st = AdamState::new(n);
+    let hp = AdamHp::default();
+    adam_step(&mut p, &g, &mut st, &hp, threads); // warm
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        adam_step(&mut p, &g, &mut st, &hp, threads);
+    }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    n as f64 / dt // elements/sec
+}
+
+fn main() {
+    let mut report = BenchReport::new("adam_hotpath");
+    let max_threads = default_threads();
+
+    // ---- thread scaling at a fixed large N ---------------------------
+    let n = 50_000_000;
+    let mut t = Table::new(&["threads", "Gelem/s", "GB/s moved", "scaling"]);
+    let mut threads_list = vec![1usize];
+    let mut cur = 2;
+    while cur <= max_threads {
+        threads_list.push(cur);
+        cur *= 2;
+    }
+    let (mut xs, mut rates) = (vec![], vec![]);
+    let mut base = 0.0f64;
+    for &threads in &threads_list {
+        let eps = bench_once(n, threads, 3);
+        if threads == 1 {
+            base = eps;
+        }
+        t.row(trow![
+            threads,
+            format!("{:.2}", eps / 1e9),
+            format!("{:.1}", eps * ADAM_BYTES_PER_ELEM / 1e9),
+            format!("{:.2}x", eps / base)
+        ]);
+        xs.push(threads as f64);
+        rates.push(eps);
+    }
+    let peak = rates.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "peak: {:.2} Gelem/s = {:.1} GB/s moved ({} threads available)",
+        peak / 1e9,
+        peak * ADAM_BYTES_PER_ELEM / 1e9,
+        max_threads
+    );
+    assert!(
+        peak >= base,
+        "adding threads must never lose throughput at 50M elements"
+    );
+    report.section("thread_scaling_50m", t, points_json(&xs, &[("elem_per_s", &rates)]));
+
+    // ---- size sweep at max threads -----------------------------------
+    let mut t2 = Table::new(&["elements", "Gelem/s", "GB/s moved"]);
+    let (mut xs2, mut rates2) = (vec![], vec![]);
+    for &n in &[1_000_000usize, 5_000_000, 20_000_000, 50_000_000, 100_000_000] {
+        let eps = bench_once(n, max_threads, if n <= 5_000_000 { 10 } else { 3 });
+        t2.row(trow![
+            n,
+            format!("{:.2}", eps / 1e9),
+            format!("{:.1}", eps * ADAM_BYTES_PER_ELEM / 1e9)
+        ]);
+        xs2.push(n as f64);
+        rates2.push(eps);
+    }
+    report.section("size_sweep", t2, points_json(&xs2, &[("elem_per_s", &rates2)]));
+
+    // ---- §Perf iteration log: serial reference vs the tuned chunk ----
+    let n = 20_000_000;
+    let serial = {
+        use cxlfine::optim::adam::adam_update_serial;
+        let mut p = vec![1.0f32; n];
+        let g = vec![0.1f32; n];
+        let (mut m, mut v) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let hp = AdamHp::default();
+        adam_update_serial(&mut p, &g, &mut m, &mut v, &hp, 1);
+        let t0 = std::time::Instant::now();
+        for s in 2..5u64 {
+            adam_update_serial(&mut p, &g, &mut m, &mut v, &hp, s);
+        }
+        n as f64 * 3.0 / t0.elapsed().as_secs_f64()
+    };
+    let unrolled = bench_once(n, 1, 3);
+    let mut t3 = Table::new(&["variant", "Gelem/s"]).left(0);
+    t3.row(trow!["serial reference", format!("{:.2}", serial / 1e9)]);
+    t3.row(trow!["hot-path chunk (zipped)", format!("{:.2}", unrolled / 1e9)]);
+    println!(
+        "serial {:.2} vs hot-path {:.2} Gelem/s ({:+.0}%)",
+        serial / 1e9,
+        unrolled / 1e9,
+        100.0 * (unrolled / serial - 1.0)
+    );
+    report.section(
+        "serial_vs_unrolled_20m",
+        t3,
+        points_json(&[1.0, 2.0], &[("elem_per_s", &[serial, unrolled])]),
+    );
+    report.finish();
+}

@@ -1,0 +1,59 @@
+//! Fig. 2: 12B model, batch 5, 2 GPUs — throughput and CPU memory
+//! requirement vs context length (512 … 32K).
+//!
+//! Paper shape: memory grows linearly with C (activation checkpoints);
+//! throughput in tokens/s grows as longer contexts amortize the fixed
+//! parameter-streaming + optimizer cost.
+
+use cxlfine::mem::Policy;
+use cxlfine::model::footprint::{Footprint, Workload};
+use cxlfine::model::presets::mistral_nemo_12b;
+use cxlfine::offload::{simulate_iteration, MemoryPlan, RunConfig};
+use cxlfine::topology::presets::config_a;
+use cxlfine::trow;
+use cxlfine::util::bench::{points_json, BenchReport};
+use cxlfine::util::table::Table;
+use cxlfine::util::units::GIB;
+
+fn main() {
+    let mut report = BenchReport::new("fig2_context_scaling");
+    // Use the CXL-aware plan on Config A so every cell fits (the paper ran
+    // on 512 GB DRAM + 512 GB AIC; pure DRAM OOMs at the top end).
+    let topo = config_a();
+    let model = mistral_nemo_12b();
+    let mut t = Table::new(&["context", "cpu_mem_gib", "tokens_per_sec", "iter_s"]);
+    let mut xs = Vec::new();
+    let mut mem = Vec::new();
+    let mut tps = Vec::new();
+    for c in [512usize, 1024, 2048, 4096, 8192, 16384, 32768] {
+        let w = Workload::new(2, 5, c);
+        let f = Footprint::compute(&model, &w);
+        let cfg = RunConfig::new(model.clone(), w, Policy::CxlAware { striping: false });
+        let plan = MemoryPlan::build(&topo, &cfg).expect("plan fits on config A");
+        let b = simulate_iteration(&topo, &cfg, &plan);
+        let gib = f.total() as f64 / GIB as f64;
+        t.row(trow![
+            c,
+            format!("{gib:.1}"),
+            format!("{:.0}", b.tokens_per_sec()),
+            format!("{:.2}", b.iter_s)
+        ]);
+        xs.push(c as f64);
+        mem.push(gib);
+        tps.push(b.tokens_per_sec());
+    }
+    // paper shape: memory linear in C — check the last doubling is ~2× the
+    // activation delta
+    let slope1 = (mem[6] - mem[5]) / (32768.0 - 16384.0);
+    let slope2 = (mem[5] - mem[4]) / (16384.0 - 8192.0);
+    assert!(
+        (slope1 / slope2 - 1.0).abs() < 0.05,
+        "memory not linear in C: slopes {slope1:.4} vs {slope2:.4}"
+    );
+    report.section(
+        "mem_and_throughput_vs_context",
+        t,
+        points_json(&xs, &[("cpu_mem_gib", &mem), ("tokens_per_sec", &tps)]),
+    );
+    report.finish();
+}

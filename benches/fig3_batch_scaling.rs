@@ -1,0 +1,61 @@
+//! Fig. 3: 12B model, 4K context, 2 GPUs — throughput and memory vs batch
+//! size (1 … 48).
+//!
+//! Paper shape: throughput improves with batch until GPU-utilization
+//! saturation; memory grows linearly with batch.
+
+use cxlfine::mem::Policy;
+use cxlfine::model::footprint::{Footprint, Workload};
+use cxlfine::model::presets::mistral_nemo_12b;
+use cxlfine::offload::{simulate_iteration, MemoryPlan, RunConfig};
+use cxlfine::topology::presets::config_a;
+use cxlfine::trow;
+use cxlfine::util::bench::{points_json, BenchReport};
+use cxlfine::util::table::Table;
+use cxlfine::util::units::GIB;
+
+fn main() {
+    let mut report = BenchReport::new("fig3_batch_scaling");
+    let topo = config_a();
+    let model = mistral_nemo_12b();
+    let mut t = Table::new(&["batch", "cpu_mem_gib", "tokens_per_sec", "gain_vs_prev"]);
+    let (mut xs, mut mem, mut tps) = (Vec::new(), Vec::new(), Vec::new());
+    let mut prev = 0.0f64;
+    for b in [1usize, 2, 4, 8, 16, 24, 32, 48] {
+        let w = Workload::new(2, b, 4096);
+        let f = Footprint::compute(&model, &w);
+        let cfg = RunConfig::new(model.clone(), w, Policy::CxlAware { striping: false });
+        let plan = MemoryPlan::build(&topo, &cfg).expect("plan fits");
+        let bd = simulate_iteration(&topo, &cfg, &plan);
+        let rate = bd.tokens_per_sec();
+        t.row(trow![
+            b,
+            format!("{:.1}", f.total() as f64 / GIB as f64),
+            format!("{rate:.0}"),
+            if prev > 0.0 {
+                format!("{:.2}x", rate / prev)
+            } else {
+                "-".into()
+            }
+        ]);
+        xs.push(b as f64);
+        mem.push(f.total() as f64 / GIB as f64);
+        tps.push(rate);
+        prev = rate;
+    }
+    // paper shape: big early gains, saturating tail
+    let early_gain = tps[1] / tps[0];
+    let late_gain = tps[7] / tps[6];
+    assert!(early_gain > 1.3, "batch 1→2 should pay off: {early_gain}");
+    assert!(late_gain < early_gain, "gains must diminish");
+    // memory linear in batch
+    let slope1 = (mem[7] - mem[6]) / 16.0;
+    let slope2 = (mem[4] - mem[3]) / 8.0;
+    assert!((slope1 / slope2 - 1.0).abs() < 0.05, "memory not linear in B");
+    report.section(
+        "throughput_and_mem_vs_batch",
+        t,
+        points_json(&xs, &[("cpu_mem_gib", &mem), ("tokens_per_sec", &tps)]),
+    );
+    report.finish();
+}

@@ -1,0 +1,129 @@
+//! Fig. 9: training-throughput comparison on the single-AIC platform
+//! (Config A): Baseline (DRAM-only) vs Naive CXL vs CXL-aware allocation,
+//! across context lengths and batch sizes.
+//!
+//! Paper bands (normalized to baseline = 100%):
+//!   (a) 7B, 1 GPU:  naive 76–94%, ours 97–99%
+//!   (b) 12B, 1 GPU: naive 72–93%, ours 88–96%  (DRAM pressure → PGO spill)
+//!   (c) 7B+12B, 2 GPUs: naive 84–94%, ours 86–99% (residual contention)
+//!
+//! We assert the *shape*: ordering baseline ≥ ours ≥ naive everywhere, and
+//! the band positions within generous tolerances.
+
+use cxlfine::mem::Policy;
+use cxlfine::model::presets::{mistral_nemo_12b, qwen25_7b};
+use cxlfine::offload::sweep_grid;
+use cxlfine::topology::presets::{config_a, with_dram_capacity};
+use cxlfine::trow;
+use cxlfine::util::bench::BenchReport;
+use cxlfine::util::json::{Json, JsonObj};
+use cxlfine::util::table::Table;
+use cxlfine::util::units::GIB;
+
+const CONTEXTS: &[usize] = &[4096, 8192, 16384, 32768];
+const BATCHES: &[usize] = &[1, 4, 16, 32];
+
+fn panel(
+    report: &mut BenchReport,
+    name: &str,
+    model: cxlfine::model::ModelConfig,
+    gpus: usize,
+) -> (f64, f64, f64, f64) {
+    let base_topo = config_a();
+    let cxl_topo = with_dram_capacity(config_a(), 128 * GIB);
+    let policies = [
+        Policy::DramOnly,
+        Policy::NaiveInterleave,
+        Policy::CxlAware { striping: false },
+    ];
+    let res = sweep_grid(
+        &base_topo, &cxl_topo, &model, gpus, CONTEXTS, BATCHES, &policies,
+    );
+    let mut t = Table::new(&["context", "batch", "baseline tok/s", "naive %", "ours %"]);
+    let mut arr = Vec::new();
+    for p in &res.points {
+        let base_tps = p.runs[0]
+            .as_ref()
+            .map(|b| b.tokens_per_sec())
+            .unwrap_or(f64::NAN);
+        let naive = res.normalized(p, 1, 0);
+        let ours = res.normalized(p, 2, 0);
+        let pct = |v: Option<f64>| {
+            v.map(|r| format!("{:.1}", 100.0 * r))
+                .unwrap_or_else(|| "OOM".into())
+        };
+        t.row(trow![
+            p.context,
+            p.batch,
+            if base_tps.is_nan() { "OOM".into() } else { format!("{base_tps:.0}") },
+            pct(naive),
+            pct(ours)
+        ]);
+        let mut o = JsonObj::new();
+        o.set("context", p.context);
+        o.set("batch", p.batch);
+        o.set("baseline_tps", if base_tps.is_nan() { Json::Null } else { base_tps.into() });
+        o.set("naive_rel", naive.map(Json::from).unwrap_or(Json::Null));
+        o.set("ours_rel", ours.map(Json::from).unwrap_or(Json::Null));
+        arr.push(Json::Obj(o));
+    }
+    // ordering invariant on every comparable cell
+    for p in &res.points {
+        if let (Some(n), Some(o)) = (res.normalized(p, 1, 0), res.normalized(p, 2, 0)) {
+            assert!(
+                o >= n - 1e-9,
+                "{name}: ours ({o:.3}) must beat naive ({n:.3}) at C={} B={}",
+                p.context,
+                p.batch
+            );
+            assert!(o <= 1.02, "{name}: ours cannot beat baseline on one AIC: {o:.3}");
+        }
+    }
+    let (nlo, nhi) = res.normalized_range(1, 0).expect("naive range");
+    let (olo, ohi) = res.normalized_range(2, 0).expect("ours range");
+    println!(
+        "{name}: naive {:.0}%–{:.0}% | ours {:.0}%–{:.0}% of baseline",
+        nlo * 100.0,
+        nhi * 100.0,
+        olo * 100.0,
+        ohi * 100.0
+    );
+    report.section(name, t, Json::Arr(arr));
+    (nlo, nhi, olo, ohi)
+}
+
+fn main() {
+    let mut report = BenchReport::new("fig9_single_aic");
+
+    // NOTE on tolerances: the paper's bar groups sample a subset of the
+    // (C, B) plane; our full cross-product includes harder transfer-bound
+    // corners (e.g. B=1 at 4K, where parameter streaming dominates), so
+    // the naive band is wider here than the quoted 76–94%. The assertions
+    // below pin the SHAPE: naive always loses, CXL-aware recovers most of
+    // the gap, and its ceiling touches the baseline.
+
+    // (a) 7B, single GPU — paper: naive 76–94%, ours 97–99%
+    let (nlo, nhi, olo, ohi) = panel(&mut report, "a_7b_1gpu", qwen25_7b(), 1);
+    assert!(nhi < 1.0, "naive must never reach baseline: {nhi:.2}");
+    assert!(olo > nlo + 0.10, "ours floor must clear naive floor: {olo:.2} vs {nlo:.2}");
+    assert!(ohi > 0.97, "ours ceiling must touch baseline: {ohi:.2}");
+
+    // (b) 12B, single GPU — paper: naive 72–93%, ours 88–96% (PGO spill)
+    let (nlo, nhi, olo, _ohi) = panel(&mut report, "b_12b_1gpu", mistral_nemo_12b(), 1);
+    assert!(nhi < 1.0, "12B naive ceiling: {nhi:.2}");
+    assert!(olo > nlo + 0.10, "12B ours floor vs naive: {olo:.2} vs {nlo:.2}");
+    assert!(olo > 0.75, "12B ours floor: {olo:.2}");
+
+    // (c) both models, dual GPU — paper: naive 84–94%, ours 86–99%
+    // (residual single-AIC contention caps the recovery)
+    let (nlo7, _, olo7, ohi7) = panel(&mut report, "c_7b_2gpu", qwen25_7b(), 2);
+    let (nlo12, _, olo12, _) = panel(&mut report, "c_12b_2gpu", mistral_nemo_12b(), 2);
+    assert!(olo7 >= nlo7 && olo12 >= nlo12, "dual-GPU ordering");
+    assert!(ohi7 > 0.95, "7B dual-GPU ours ceiling: {ohi7:.2}");
+    assert!(
+        olo7 < 0.97 || olo12 < 0.97,
+        "single-AIC dual-GPU should NOT fully recover (that's striping's job): {olo7:.2}/{olo12:.2}"
+    );
+
+    report.finish();
+}

@@ -1,0 +1,46 @@
+//! Table I: breakdown of system-memory components during CPU offloading.
+//!
+//! Regenerates the paper's table for both workload models at representative
+//! workloads, and checks the formulas' structural properties (fixed 20·P
+//! cost + context-linear activations).
+
+use cxlfine::jobj;
+use cxlfine::model::footprint::{Footprint, Workload};
+use cxlfine::model::presets::{mistral_nemo_12b, qwen25_7b};
+use cxlfine::trow;
+use cxlfine::util::bench::BenchReport;
+use cxlfine::util::table::Table;
+use cxlfine::util::units::fmt_bytes;
+
+fn main() {
+    let mut report = BenchReport::new("table1_footprint");
+    for model in [qwen25_7b(), mistral_nemo_12b()] {
+        let w = Workload::new(2, 16, 4096);
+        let f = Footprint::compute(&model, &w);
+        let mut t = Table::new(&["component", "precision", "formula", "bytes"]).left(0).left(1).left(2);
+        let p = model.params();
+        t.row(trow!["model parameters", "bf16", "2*P", fmt_bytes(f.params_bf16)]);
+        t.row(trow!["gradients", "bf16", "2*P", fmt_bytes(f.grads_bf16)]);
+        t.row(trow![
+            "checkpointed activations",
+            "bf16",
+            "2*(Ng*B*C*L*H)",
+            fmt_bytes(f.activations_bf16)
+        ]);
+        t.row(trow!["model parameters", "fp32", "4*P", fmt_bytes(f.params_fp32)]);
+        t.row(trow!["gradients", "fp32", "4*P", fmt_bytes(f.grads_fp32)]);
+        t.row(trow!["optimizer states", "fp32", "8*P", fmt_bytes(f.optimizer_fp32)]);
+        t.row(trow!["TOTAL", "", "20*P + act", fmt_bytes(f.total())]);
+        // structural checks (the "formulas hold" assertion)
+        assert_eq!(f.total() - f.activations_bf16, 20 * p);
+        let raw = jobj! {
+            "model" => model.name.as_str(),
+            "params" => p,
+            "total_bytes" => f.total(),
+            "activations_bytes" => f.activations_bf16,
+            "latency_critical_bytes" => f.latency_critical(),
+        };
+        report.section(&format!("{}", model.name), t, raw);
+    }
+    report.finish();
+}

@@ -1,0 +1,162 @@
+"""AOT lowering: JAX/Pallas model → HLO **text** artifacts + manifest.json.
+
+Run once by ``make artifacts``; Python never touches the request path. The
+interchange format is HLO text, NOT ``lowered.compile()`` or serialized
+protos: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the Rust ``xla`` crate binds) rejects.
+The text parser re-assigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Usage::
+
+    python -m compile.aot --out ../artifacts [--layers 4 --hidden 256 ...]
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(fn, example_args):
+    """Lower a python function to HLO text via StableHLO.
+
+    ``return_tuple=True`` so every artifact's root is a tuple — the Rust
+    side unwraps uniformly with ``to_tuple()``.
+    """
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def tensor_meta(name, s):
+    return {
+        "name": name,
+        "shape": list(s.shape),
+        "dtype": {"float32": "f32", "int32": "i32"}[str(s.dtype)],
+    }
+
+
+def build_entries(cfg: M.TinyConfig):
+    """Define every entry point: (fn, named input specs, output names)."""
+    f32, i32 = jnp.float32, jnp.int32
+    b, c, h, v = cfg.batch, cfg.context, cfg.hidden, cfg.vocab
+    ids = ("ids", spec((b, c), i32))
+    x = ("x", spec((b, c, h), f32))
+    emb = ("emb", spec((v, h), f32))
+    labels = ("labels", spec((b, c), i32))
+    block_params = [
+        (name, spec(shape, f32)) for name, shape in M.block_param_shapes(cfg).items()
+    ]
+    dy = ("dy", spec((b, c, h), f32))
+
+    entries = {}
+    entries["embed_fwd"] = (
+        functools.partial(M.embed_fwd, cfg),
+        [ids, emb],
+        ["x"],
+    )
+    entries["block_fwd"] = (
+        lambda x, *p: (M.block_fwd(cfg, x, *p),),
+        [x] + block_params,
+        ["y"],
+    )
+    entries["block_bwd"] = (
+        functools.partial(M.block_bwd, cfg),
+        [x] + block_params + [dy],
+        ["dx"] + [f"d{n}" for n, _ in block_params],
+    )
+    entries["head_loss"] = (
+        functools.partial(M.head_loss, cfg),
+        [x, ("lnf", spec((h,), f32)), emb, labels],
+        ["loss", "dx", "dlnf", "demb"],
+    )
+    entries["embed_bwd"] = (
+        functools.partial(M.embed_bwd, cfg),
+        [ids, ("dx", spec((b, c, h), f32))],
+        ["demb"],
+    )
+    return entries
+
+
+def lower_all(cfg: M.TinyConfig, out_dir: str, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "model": {
+            "layers": cfg.layers,
+            "hidden": cfg.hidden,
+            "heads": cfg.heads,
+            "vocab": cfg.vocab,
+            "ffn": cfg.ffn,
+            "batch": cfg.batch,
+            "context": cfg.context,
+            "n_params": cfg.n_params(),
+        },
+        "entries": {},
+    }
+    for name, (fn, inputs, out_names) in build_entries(cfg).items():
+        example_args = [s for _, s in inputs]
+        text = to_hlo_text(fn, example_args)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        # output specs via eval_shape (no execution)
+        out_shapes = jax.eval_shape(fn, *example_args)
+        outputs = [
+            tensor_meta(n, s) for n, s in zip(out_names, jax.tree.leaves(out_shapes))
+        ]
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": [tensor_meta(n, s) for n, s in inputs],
+            "outputs": outputs,
+        }
+        if verbose:
+            print(f"  lowered {name:<10} -> {fname} ({len(text)/1e6:.2f} MB hlo text)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(
+            f"wrote manifest with {len(manifest['entries'])} entries; "
+            f"model has {cfg.n_params()/1e6:.2f}M params"
+        )
+    return manifest
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--layers", type=int, default=4)
+    p.add_argument("--hidden", type=int, default=256)
+    p.add_argument("--heads", type=int, default=4)
+    p.add_argument("--vocab", type=int, default=2048)
+    p.add_argument("--ffn", type=int, default=704)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--context", type=int, default=128)
+    a = p.parse_args()
+    cfg = M.TinyConfig(
+        layers=a.layers,
+        hidden=a.hidden,
+        heads=a.heads,
+        vocab=a.vocab,
+        ffn=a.ffn,
+        batch=a.batch,
+        context=a.context,
+    )
+    lower_all(cfg, a.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""L1: Pallas kernels for the compute hot-spots (flash attention, fused
+linear-cross-entropy) plus their pure-jnp oracles in ``ref``.
+
+Everything here lowers with ``interpret=True`` so the emitted HLO runs on
+any PJRT backend, including the Rust CPU client (see DESIGN.md §4 for the
+TPU hardware-adaptation story).
+"""
+
+from . import attention, fused_ce, ref  # noqa: F401

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package must
+match its oracle to float32 tolerance across the hypothesis shape/dtype
+sweep in ``python/tests/``. They are also used as the (recomputing)
+backward implementations inside the kernels' ``custom_vjp`` rules.
+"""
+
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal=True):
+    """Naive scaled-dot-product attention.
+
+    Args:
+      q, k, v: ``[bh, seq, head_dim]`` (batch*heads folded together).
+      causal: apply a causal mask.
+
+    Returns:
+      ``[bh, seq, head_dim]`` attention output (same dtype as q).
+    """
+    seq = q.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((seq, seq), bool))
+        s = jnp.where(mask[None, :, :], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def linear_cross_entropy(x, emb, labels):
+    """Materialized linear + softmax cross-entropy.
+
+    Args:
+      x: ``[tokens, hidden]`` final hidden states (already normed).
+      emb: ``[vocab, hidden]`` tied LM-head weights.
+      labels: ``[tokens]`` int32 target ids.
+
+    Returns:
+      scalar mean cross-entropy (f32).
+    """
+    logits = x.astype(jnp.float32) @ emb.astype(jnp.float32).T  # [T, V]
+    m = logits.max(-1)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m[:, None]), -1)) + m
+    label_logit = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - label_logit)
+
+
+def lse_and_label_logit(x, emb, labels):
+    """The two per-row streaming statistics the fused-CE kernel produces."""
+    logits = x.astype(jnp.float32) @ emb.astype(jnp.float32).T
+    m = logits.max(-1)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m[:, None]), -1)) + m
+    label_logit = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse, label_logit

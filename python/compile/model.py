@@ -1,0 +1,152 @@
+"""L2: the JAX transformer, written per-block so the Rust coordinator can
+stream it (ZeRO-Offload granularity).
+
+Entry points (each lowered separately by ``aot.py``; flattened-leaf order is
+the contract with ``rust/src/train/``):
+
+* ``embed_fwd(ids[B,C] i32, emb[V,H])            -> (x[B,C,H],)``
+* ``block_fwd(x, ln1, wq, wk, wv, wo, ln2, wg, wu, wd) -> (y,)``
+* ``block_bwd(x, <params>, dy)                   -> (dx, d<params>...)``
+* ``head_loss(x, lnf, emb, labels)               -> (loss, dx, dlnf, demb)``
+* ``embed_bwd(ids, dx)                           -> (demb,)``
+
+``block_bwd`` is the whole-block VJP lowered as ONE computation taking the
+*checkpointed input* — gradient checkpointing is therefore structural: the
+artifact recomputes the forward from the checkpoint inside itself, exactly
+like Fig. 1 step (5).
+
+Attention runs through the L1 Pallas flash kernel; the loss through the L1
+fused linear-cross-entropy kernel. RoPE provides positional information.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention
+from .kernels.fused_ce import fused_linear_cross_entropy
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyConfig:
+    """Architecture of the artifact model (CPU-PJRT sized)."""
+
+    layers: int = 4
+    hidden: int = 256
+    heads: int = 4
+    vocab: int = 2048
+    ffn: int = 704
+    batch: int = 4
+    context: int = 128
+
+    @property
+    def head_dim(self):
+        return self.hidden // self.heads
+
+    def n_params(self):
+        per_block = (
+            2 * self.hidden  # two norms
+            + 4 * self.hidden * self.hidden  # q, k, v, o
+            + 3 * self.hidden * self.ffn  # gate, up, down
+        )
+        return self.layers * per_block + self.vocab * self.hidden + self.hidden
+
+
+# Parameter leaf order for one block — the Rust side mirrors this.
+BLOCK_PARAM_NAMES = ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd")
+
+
+def block_param_shapes(cfg: TinyConfig):
+    h, f = cfg.hidden, cfg.ffn
+    return {
+        "ln1": (h,),
+        "wq": (h, h),
+        "wk": (h, h),
+        "wv": (h, h),
+        "wo": (h, h),
+        "ln2": (h,),
+        "wg": (h, f),
+        "wu": (h, f),
+        "wd": (f, h),
+    }
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def rope(x):
+    """Rotary position embedding over ``[B, Hh, C, D]``."""
+    _, _, c, d = x.shape
+    half = d // 2
+    pos = jnp.arange(c, dtype=jnp.float32)[:, None]
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * freq[None, :]  # [C, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    ).astype(x.dtype)
+
+
+def block_fwd(cfg: TinyConfig, x, ln1, wq, wk, wv, wo, ln2, wg, wu, wd):
+    """One pre-norm transformer block. x: [B, C, H] → [B, C, H]."""
+    b, c, h = x.shape
+    hh, d = cfg.heads, cfg.head_dim
+
+    xn = rmsnorm(x, ln1)
+    q = (xn @ wq).reshape(b, c, hh, d).transpose(0, 2, 1, 3)
+    k = (xn @ wk).reshape(b, c, hh, d).transpose(0, 2, 1, 3)
+    v = (xn @ wv).reshape(b, c, hh, d).transpose(0, 2, 1, 3)
+    q, k = rope(q), rope(k)
+    # fold batch+heads for the kernel
+    attn = flash_attention(
+        q.reshape(b * hh, c, d), k.reshape(b * hh, c, d), v.reshape(b * hh, c, d)
+    )
+    attn = attn.reshape(b, hh, c, d).transpose(0, 2, 1, 3).reshape(b, c, h)
+    x = x + attn @ wo
+
+    xn = rmsnorm(x, ln2)
+    x = x + (jax.nn.silu(xn @ wg) * (xn @ wu)) @ wd
+    return x
+
+
+def block_bwd(cfg: TinyConfig, x, *params_and_dy):
+    """Whole-block VJP from the checkpointed input (recompute included)."""
+    *params, dy = params_and_dy
+    _, vjp = jax.vjp(lambda x, *p: block_fwd(cfg, x, *p), x, *params)
+    grads = vjp(dy)
+    return tuple(grads)  # (dx, dln1, dwq, ..., dwd)
+
+
+def embed_fwd(cfg: TinyConfig, ids, emb):
+    return (jnp.take(emb, ids, axis=0),)
+
+
+def embed_bwd(cfg: TinyConfig, ids, dx):
+    demb = jnp.zeros((cfg.vocab, cfg.hidden), dx.dtype)
+    return (demb.at[ids.reshape(-1)].add(dx.reshape(-1, cfg.hidden)),)
+
+
+def head_loss(cfg: TinyConfig, x, lnf, emb, labels):
+    """Final norm + tied head + fused CE; returns loss and input grads."""
+
+    def loss_fn(x, lnf, emb):
+        xn = rmsnorm(x, lnf).reshape(-1, cfg.hidden)
+        return fused_linear_cross_entropy(xn, emb, labels.reshape(-1))
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(x, lnf, emb)
+    dx, dlnf, demb = grads
+    return loss, dx, dlnf, demb
+
+
+def full_model_loss(cfg: TinyConfig, ids, labels, emb, lnf, blocks):
+    """Reference whole-model loss (used by tests to validate the streamed
+    per-block path end to end). ``blocks`` is a list of param dicts."""
+    (x,) = embed_fwd(cfg, ids, emb)
+    for p in blocks:
+        x = block_fwd(cfg, x, *[p[n] for n in BLOCK_PARAM_NAMES])
+    loss, *_ = head_loss(cfg, x, lnf, emb, labels)
+    return loss

@@ -1,0 +1,146 @@
+"""L2 model: per-block fwd/bwd correctness, RoPE properties, and the
+streamed-vs-monolithic equivalence the Rust trainer relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.TinyConfig(layers=2, hidden=64, heads=4, vocab=256, ffn=96, batch=2, context=32)
+
+
+def init_block(key, cfg):
+    shapes = M.block_param_shapes(cfg)
+    params = {}
+    for name in M.BLOCK_PARAM_NAMES:
+        key, sub = jax.random.split(key)
+        if name.startswith("ln"):
+            params[name] = jnp.ones(shapes[name], jnp.float32)
+        else:
+            params[name] = jax.random.normal(sub, shapes[name], jnp.float32) * 0.05
+    return key, params
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    key, b0 = init_block(key, CFG)
+    key, b1 = init_block(key, CFG)
+    key, k1, k2, k3 = jax.random.split(key, 4)
+    emb = jax.random.normal(k1, (CFG.vocab, CFG.hidden)) * 0.05
+    lnf = jnp.ones((CFG.hidden,))
+    ids = jax.random.randint(k2, (CFG.batch, CFG.context), 0, CFG.vocab)
+    labels = jax.random.randint(k3, (CFG.batch, CFG.context), 0, CFG.vocab)
+    return dict(blocks=[b0, b1], emb=emb, lnf=lnf, ids=ids, labels=labels)
+
+
+def test_block_fwd_preserves_shape(setup):
+    (x,) = M.embed_fwd(CFG, setup["ids"], setup["emb"])
+    y = M.block_fwd(CFG, x, *[setup["blocks"][0][n] for n in M.BLOCK_PARAM_NAMES])
+    assert y.shape == x.shape
+    assert jnp.all(jnp.isfinite(y))
+
+
+def test_block_bwd_matches_autodiff(setup):
+    (x,) = M.embed_fwd(CFG, setup["ids"], setup["emb"])
+    params = [setup["blocks"][0][n] for n in M.BLOCK_PARAM_NAMES]
+    dy = jnp.ones_like(x) * 0.1
+    grads = M.block_bwd(CFG, x, *params, dy)
+    assert len(grads) == 1 + len(params)
+    # against direct jax.grad of <block_fwd, dy>
+    def scalar_fn(x, *p):
+        return (M.block_fwd(CFG, x, *p) * dy).sum()
+    want = jax.grad(scalar_fn, argnums=tuple(range(len(params) + 1)))(x, *params)
+    for g, w in zip(grads, want):
+        np.testing.assert_allclose(g, w, rtol=2e-4, atol=2e-4)
+
+
+def test_head_loss_grads_match_autodiff(setup):
+    (x,) = M.embed_fwd(CFG, setup["ids"], setup["emb"])
+    loss, dx, dlnf, demb = M.head_loss(CFG, x, setup["lnf"], setup["emb"], setup["labels"])
+    assert loss.shape == ()
+    assert float(loss) > 0
+    def f(x, lnf, emb):
+        return M.head_loss(CFG, x, lnf, emb, setup["labels"])[0]
+    wdx, wdlnf, wdemb = jax.grad(f, argnums=(0, 1, 2))(x, setup["lnf"], setup["emb"])
+    np.testing.assert_allclose(dx, wdx, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(dlnf, wdlnf, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(demb, wdemb, rtol=1e-5, atol=1e-6)
+
+
+def test_embed_bwd_is_gather_transpose(setup):
+    (x,) = M.embed_fwd(CFG, setup["ids"], setup["emb"])
+    dx = jnp.ones_like(x)
+    (demb,) = M.embed_bwd(CFG, setup["ids"], dx)
+    want = jax.grad(lambda e: (M.embed_fwd(CFG, setup["ids"], e)[0] * dx).sum())(
+        setup["emb"]
+    )
+    np.testing.assert_allclose(demb, want, rtol=1e-6, atol=1e-6)
+
+
+def test_streamed_equals_monolithic(setup):
+    """The property the Rust trainer depends on: running blocks one at a
+    time from checkpoints gives the same loss/grads as the whole model."""
+    loss_mono = M.full_model_loss(
+        CFG, setup["ids"], setup["labels"], setup["emb"], setup["lnf"], setup["blocks"]
+    )
+    # streamed: embed → block-by-block with checkpoints → head
+    (x,) = M.embed_fwd(CFG, setup["ids"], setup["emb"])
+    ckpts = []
+    for p in setup["blocks"]:
+        ckpts.append(x)
+        x = M.block_fwd(CFG, x, *[p[n] for n in M.BLOCK_PARAM_NAMES])
+    loss_stream, dx, _, demb_head = M.head_loss(
+        CFG, x, setup["lnf"], setup["emb"], setup["labels"]
+    )
+    np.testing.assert_allclose(loss_stream, loss_mono, rtol=1e-6)
+    # streamed backward: reverse blocks from checkpoints, then embed_bwd;
+    # full embedding gradient = gather-transpose part + tied-head part.
+    for l in reversed(range(len(setup["blocks"]))):
+        p = [setup["blocks"][l][n] for n in M.BLOCK_PARAM_NAMES]
+        dx = M.block_bwd(CFG, ckpts[l], *p, dx)[0]
+    (demb_gather,) = M.embed_bwd(CFG, setup["ids"], dx)
+    demb_stream = demb_gather + demb_head
+    want_demb = jax.grad(
+        lambda e: M.full_model_loss(
+            CFG, setup["ids"], setup["labels"], e, setup["lnf"], setup["blocks"]
+        )
+    )(setup["emb"])
+    np.testing.assert_allclose(demb_stream, want_demb, rtol=3e-4, atol=3e-5)
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 4, 32, 16))
+    r = M.rope(x)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(r, axis=-1), rtol=1e-5
+    )
+
+
+def test_rope_relative_property():
+    # dot(rope(q)_i, rope(k)_j) depends only on (i - j) for single-freq pairs
+    d = 8
+    q = jnp.tile(jnp.array([1.0, 0.5, -0.3, 0.8, 0.1, -0.2, 0.7, 0.4]), (1, 1, 16, 1))
+    k = q
+    rq, rk = M.rope(q), M.rope(k)
+    dots = jnp.einsum("bhqd,bhkd->bhqk", rq, rk)[0, 0]
+    # compare dot(i, i+3) across i
+    diag3 = jnp.array([dots[i, i + 3] for i in range(10)])
+    np.testing.assert_allclose(diag3, diag3[0] * jnp.ones_like(diag3), rtol=1e-4)
+
+
+def test_rmsnorm_scale_invariance():
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 16))
+    n1 = M.rmsnorm(x, jnp.ones(16))
+    n2 = M.rmsnorm(x * 10.0, jnp.ones(16))
+    np.testing.assert_allclose(n1, n2, rtol=1e-4, atol=1e-5)
+
+
+def test_param_count_formula():
+    assert CFG.n_params() == (
+        2 * (2 * 64 + 4 * 64 * 64 + 3 * 64 * 96) + 256 * 64 + 64
+    )

@@ -1,0 +1,358 @@
+//! Implementations of the CLI subcommands.
+
+use anyhow::anyhow;
+
+use super::{parse, CliDone};
+use crate::mem::Policy;
+use crate::model::footprint::{Footprint, Workload};
+use crate::model::{presets as mpresets, ModelConfig};
+use crate::offload::{simulate_iteration, sweep_grid, MemoryPlan, RunConfig};
+use crate::optim::{adam_step, AdamHp, AdamState};
+use crate::sim::memmodel::{OptLayout, OptimizerMemModel};
+use crate::sim::{Dir, Fabric};
+use crate::topology::{presets as tpresets, GpuId, NodeId, SystemTopology};
+use crate::trow;
+use crate::util::cli::CliSpec;
+use crate::util::table::Table;
+use crate::util::units::{fmt_bytes, fmt_rate, fmt_secs, GIB};
+
+fn get_topo(name: &str, dram: Option<&str>) -> Result<SystemTopology, CliDone> {
+    let t = tpresets::by_name(name)
+        .ok_or_else(|| CliDone::Bad(format!("unknown preset {name:?} (config-a|config-b|dev-tiny)")))?;
+    match dram {
+        Some(d) => {
+            let bytes = crate::util::units::parse_bytes(d).map_err(CliDone::Bad)?;
+            Ok(tpresets::with_dram_capacity(t, bytes))
+        }
+        None => Ok(t),
+    }
+}
+
+fn get_model(name: &str) -> Result<ModelConfig, CliDone> {
+    mpresets::by_name(name)
+        .ok_or_else(|| CliDone::Bad(format!("unknown model {name:?} (7b|12b|tiny|tiny-2m)")))
+}
+
+fn get_policy(name: &str) -> Result<Policy, CliDone> {
+    Policy::by_name(name).ok_or_else(|| {
+        CliDone::Bad(format!(
+            "unknown policy {name:?} (baseline|naive|cxl-aware|cxl-aware+striping)"
+        ))
+    })
+}
+
+pub fn topo(args: &[String]) -> Result<(), CliDone> {
+    let spec = CliSpec::new("cxlfine topo", "print a hardware preset")
+        .opt("preset", "config-a", "config-a | config-b | dev-tiny")
+        .opt("dram", "", "override DRAM capacity, e.g. 128GiB");
+    let a = parse(spec, args)?;
+    let dram = a.get("dram").filter(|s| !s.is_empty());
+    let t = get_topo(a.get("preset").unwrap(), dram)?;
+    print!("{}", t.describe());
+    Ok(())
+}
+
+pub fn plan(args: &[String]) -> Result<(), CliDone> {
+    let spec = CliSpec::new("cxlfine plan", "memory footprint + placement")
+        .opt("model", "12b", "7b | 12b | tiny | tiny-2m")
+        .opt("preset", "config-a", "hardware preset")
+        .opt("dram", "", "override DRAM capacity (e.g. 128GiB)")
+        .opt("gpus", "2", "number of GPUs")
+        .opt("batch", "16", "per-GPU batch size")
+        .opt("context", "4096", "context length (tokens)")
+        .opt("policy", "cxl-aware", "placement policy");
+    let a = parse(spec, args)?;
+    let topo = get_topo(a.get("preset").unwrap(), a.get("dram").filter(|s| !s.is_empty()))?;
+    let model = get_model(a.get("model").unwrap())?;
+    let policy = get_policy(a.get("policy").unwrap())?;
+    let w = Workload::new(
+        a.parse_usize("gpus")?,
+        a.parse_usize("batch")?,
+        a.parse_usize("context")?,
+    );
+    let f = Footprint::compute(&model, &w);
+    let mut t = Table::new(&["component", "precision", "bytes"]).left(0);
+    t.row(trow!["model parameters", "bf16", fmt_bytes(f.params_bf16)]);
+    t.row(trow!["gradients", "bf16", fmt_bytes(f.grads_bf16)]);
+    t.row(trow!["checkpointed activations", "bf16", fmt_bytes(f.activations_bf16)]);
+    t.row(trow!["model parameters (master)", "fp32", fmt_bytes(f.params_fp32)]);
+    t.row(trow!["gradients (accum)", "fp32", fmt_bytes(f.grads_fp32)]);
+    t.row(trow!["optimizer states (Adam)", "fp32", fmt_bytes(f.optimizer_fp32)]);
+    t.row(trow!["TOTAL", "", fmt_bytes(f.total())]);
+    println!(
+        "Table I footprint — {} ({}), {} GPUs, B={}, C={}",
+        model.name,
+        model.params_label(),
+        w.n_gpus,
+        w.batch,
+        w.context
+    );
+    print!("{}", t.render());
+    let cfg = RunConfig::new(model, w, policy);
+    match MemoryPlan::build(&topo, &cfg) {
+        Ok(plan) => {
+            println!();
+            print!("{}", plan.alloc.describe());
+        }
+        Err(e) => println!("\nplan does NOT fit: {e}"),
+    }
+    Ok(())
+}
+
+pub fn simulate(args: &[String]) -> Result<(), CliDone> {
+    let spec = CliSpec::new("cxlfine simulate", "one-iteration phase breakdown")
+        .opt("model", "12b", "model preset")
+        .opt("preset", "config-a", "hardware preset")
+        .opt("dram", "", "override DRAM capacity")
+        .opt("gpus", "2", "number of GPUs")
+        .opt("batch", "16", "per-GPU batch")
+        .opt("context", "4096", "context length")
+        .opt("policy", "cxl-aware", "placement policy")
+        .opt("prefetch", "2", "parameter prefetch depth (blocks)");
+    let a = parse(spec, args)?;
+    let topo = get_topo(a.get("preset").unwrap(), a.get("dram").filter(|s| !s.is_empty()))?;
+    let model = get_model(a.get("model").unwrap())?;
+    let policy = get_policy(a.get("policy").unwrap())?;
+    let w = Workload::new(
+        a.parse_usize("gpus")?,
+        a.parse_usize("batch")?,
+        a.parse_usize("context")?,
+    );
+    let mut cfg = RunConfig::new(model, w, policy);
+    cfg.prefetch_depth = a.parse_usize("prefetch")?;
+    let plan = MemoryPlan::build(&topo, &cfg).map_err(|e| anyhow!("{e}"))?;
+    let b = simulate_iteration(&topo, &cfg, &plan);
+    let mut t = Table::new(&["phase", "seconds", "share"]).left(0);
+    let (sf, sb, ss) = b.shares();
+    t.row(trow!["FWD", fmt_secs(b.fwd_s), format!("{:.1}%", 100.0 * sf)]);
+    t.row(trow!["BWD", fmt_secs(b.bwd_s), format!("{:.1}%", 100.0 * sb)]);
+    t.row(trow!["STEP", fmt_secs(b.step_s), format!("{:.1}%", 100.0 * ss)]);
+    t.row(trow!["iteration", fmt_secs(b.iter_s), "100%"]);
+    println!(
+        "policy {} on {}: {:.0} tokens/s",
+        policy.name(),
+        topo.name,
+        b.tokens_per_sec()
+    );
+    print!("{}", t.render());
+    Ok(())
+}
+
+pub fn sweep(args: &[String]) -> Result<(), CliDone> {
+    let spec = CliSpec::new("cxlfine sweep", "policy grid vs baseline (Fig. 9/10)")
+        .opt("model", "7b", "model preset")
+        .opt("preset", "config-a", "hardware preset for CXL runs")
+        .opt("dram", "128GiB", "DRAM available to CXL policies")
+        .opt("gpus", "1", "number of GPUs")
+        .opt("contexts", "4096,8192,16384,32768", "comma list")
+        .opt("batches", "1,4,16,32", "comma list")
+        .flag("striping", "include the striped CXL-aware policy");
+    let a = parse(spec, args)?;
+    let base_topo = get_topo(a.get("preset").unwrap(), None)?;
+    let cxl_topo = get_topo(a.get("preset").unwrap(), a.get("dram"))?;
+    let model = get_model(a.get("model").unwrap())?;
+    let gpus = a.parse_usize("gpus")?;
+    let contexts: Vec<usize> = a
+        .parse_count_list("contexts")?
+        .into_iter()
+        .map(|v| v as usize)
+        .collect();
+    let batches: Vec<usize> = a
+        .parse_count_list("batches")?
+        .into_iter()
+        .map(|v| v as usize)
+        .collect();
+    let mut policies = vec![Policy::DramOnly, Policy::NaiveInterleave];
+    policies.push(Policy::CxlAware {
+        striping: a.flag("striping"),
+    });
+    let res = sweep_grid(&base_topo, &cxl_topo, &model, gpus, &contexts, &batches, &policies);
+    let mut t = Table::new(&["context", "batch", "baseline tok/s", "naive %", "ours %"]);
+    for p in &res.points {
+        let base = p.runs[0].as_ref();
+        let fmt_norm = |i: usize| match res.normalized(p, i, 0) {
+            Some(r) => format!("{:.1}%", 100.0 * r),
+            None => "OOM".into(),
+        };
+        t.row(trow![
+            p.context,
+            p.batch,
+            base.map(|b| format!("{:.0}", b.tokens_per_sec()))
+                .unwrap_or_else(|| "OOM".into()),
+            fmt_norm(1),
+            fmt_norm(2)
+        ]);
+    }
+    println!(
+        "{} × {} GPU(s) on {} (CXL policies get {} DRAM)",
+        model.name,
+        gpus,
+        base_topo.name,
+        a.get("dram").unwrap()
+    );
+    print!("{}", t.render());
+    if let Some((lo, hi)) = res.normalized_range(1, 0) {
+        println!("naive range: {:.0}%–{:.0}%", lo * 100.0, hi * 100.0);
+    }
+    if let Some((lo, hi)) = res.normalized_range(2, 0) {
+        println!("ours  range: {:.0}%–{:.0}%", lo * 100.0, hi * 100.0);
+    }
+    Ok(())
+}
+
+pub fn optimizer(args: &[String]) -> Result<(), CliDone> {
+    let spec = CliSpec::new(
+        "cxlfine optimizer",
+        "Adam step time vs elements: simulated DRAM/CXL + real measured (this host)",
+    )
+    .opt("elements", "1m,5m,20m,50m,100m,200m", "element counts")
+    .opt("preset", "config-a", "hardware preset for the simulated lines")
+    .flag("measure", "also run the real Rust Adam on this machine");
+    let a = parse(spec, args)?;
+    let topo = get_topo(a.get("preset").unwrap(), None)?;
+    let mm = OptimizerMemModel::new(&topo);
+    let cxl = topo.cxl_nodes()[0];
+    let mut t = Table::new(&["elements", "sim DRAM", "sim CXL", "ratio", "measured (host)"]);
+    for n in a.parse_count_list("elements")? {
+        let td = mm.step_time(n, &OptLayout::dram_only());
+        let tc = mm.step_time(n, &OptLayout::single_node(cxl));
+        let measured = if a.flag("measure") && n <= 200_000_000 {
+            let mut p = vec![1.0f32; n as usize];
+            let g = vec![0.5f32; n as usize];
+            let mut st = AdamState::new(n as usize);
+            let t0 = std::time::Instant::now();
+            adam_step(&mut p, &g, &mut st, &AdamHp::default(), crate::util::threadpool::default_threads());
+            fmt_secs(t0.elapsed().as_secs_f64())
+        } else {
+            "-".into()
+        };
+        t.row(trow![n, fmt_secs(td), fmt_secs(tc), format!("{:.2}x", tc / td), measured]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+pub fn bandwidth(args: &[String]) -> Result<(), CliDone> {
+    let spec = CliSpec::new("cxlfine bandwidth", "host→GPU DMA bandwidth (Fig. 6)")
+        .opt("preset", "config-a", "hardware preset")
+        .opt("sizes", "64k,1m,16m,256m,1000m", "transfer sizes (bytes)")
+        .opt("gpus", "2", "concurrent GPUs");
+    let a = parse(spec, args)?;
+    let topo = get_topo(a.get("preset").unwrap(), None)?;
+    let n_gpus = a.parse_usize("gpus")?.min(topo.gpus.len());
+    let cxl = topo.cxl_nodes()[0];
+    let mut t = Table::new(&["size", "DRAM 1 GPU", "CXL 1 GPU", &format!("DRAM {n_gpus} GPUs (agg)"), &format!("CXL {n_gpus} GPUs (agg)")]);
+    for size in a.parse_count_list("sizes")? {
+        let size = size as f64;
+        let single = |node: NodeId| {
+            let mut fab = Fabric::new(&topo);
+            let f = fab.transfer(GpuId(0), node, Dir::HostToGpu, size, 0);
+            fab.sim.run_to_idle();
+            fab.sim.stats(f).unwrap().e2e_throughput()
+        };
+        let multi = |node: NodeId| {
+            let mut fab = Fabric::new(&topo);
+            for g in 0..n_gpus {
+                fab.transfer(GpuId(g), node, Dir::HostToGpu, size, g as u64);
+            }
+            fab.sim.run_to_idle();
+            n_gpus as f64 * size / fab.now()
+        };
+        t.row(trow![
+            fmt_bytes(size as u64),
+            fmt_rate(single(NodeId(0))),
+            fmt_rate(single(cxl)),
+            fmt_rate(multi(NodeId(0))),
+            fmt_rate(multi(cxl))
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+pub fn train(args: &[String]) -> Result<(), CliDone> {
+    let spec = CliSpec::new("cxlfine train", "functional fine-tuning on AOT artifacts")
+        .opt("artifacts", "artifacts", "artifact directory (make artifacts)")
+        .opt("steps", "200", "training steps")
+        .opt("lr", "0.003", "learning rate")
+        .opt("log-every", "10", "log interval")
+        .opt("out", "", "write loss curve CSV here");
+    let a = parse(spec, args)?;
+    let rt = crate::runtime::Runtime::load(a.get("artifacts").unwrap())?;
+    let (b, c) = crate::train::batch_shape(&rt)?;
+    let cfg = crate::train::TrainerCfg {
+        batch: b,
+        context: c,
+        steps: a.parse_usize("steps")?,
+        hp: AdamHp {
+            lr: a.parse_f64("lr")? as f32,
+            ..Default::default()
+        },
+        log_every: a.parse_usize("log-every")?,
+        ..Default::default()
+    };
+    println!(
+        "training {} params on {} (B={b}, C={c})",
+        rt.manifest().meta_usize("n_params").unwrap_or(0),
+        rt.platform()
+    );
+    let mut trainer = crate::train::Trainer::new(&rt, cfg)?;
+    let logs = trainer.train()?;
+    let first = logs.first().unwrap().loss;
+    let last = logs.last().unwrap().loss;
+    println!("loss: {first:.4} → {last:.4} over {} steps", logs.len());
+    if let Some(path) = a.get("out").filter(|s| !s.is_empty()) {
+        let mut csv = String::from("step,loss,wall_s\n");
+        for l in &logs {
+            csv.push_str(&format!("{},{},{}\n", l.step, l.loss, l.wall_s));
+        }
+        std::fs::write(path, csv).map_err(|e| anyhow!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    let _ = GIB;
+    Ok(())
+}
+
+/// `cxlfine trace` — export a Chrome-trace of one simulated iteration.
+pub fn trace(args: &[String]) -> Result<(), CliDone> {
+    let spec = CliSpec::new(
+        "cxlfine trace",
+        "export a chrome://tracing JSON of one simulated iteration",
+    )
+    .opt("model", "12b", "model preset")
+    .opt("preset", "config-a", "hardware preset")
+    .opt("dram", "", "override DRAM capacity")
+    .opt("gpus", "2", "number of GPUs")
+    .opt("batch", "16", "per-GPU batch")
+    .opt("context", "4096", "context length")
+    .opt("policy", "cxl-aware", "placement policy")
+    .opt("out", "trace.json", "output path");
+    let a = parse(spec, args)?;
+    let topo = get_topo(a.get("preset").unwrap(), a.get("dram").filter(|s| !s.is_empty()))?;
+    let model = get_model(a.get("model").unwrap())?;
+    let policy = get_policy(a.get("policy").unwrap())?;
+    let w = Workload::new(
+        a.parse_usize("gpus")?,
+        a.parse_usize("batch")?,
+        a.parse_usize("context")?,
+    );
+    let cfg = RunConfig::new(model, w, policy);
+    let plan = MemoryPlan::build(&topo, &cfg).map_err(|e| anyhow!("{e}"))?;
+    let (bd, trace) = crate::offload::simulate_iteration_traced(&topo, &cfg, &plan);
+    let out = a.get("out").unwrap();
+    std::fs::write(out, trace.to_chrome_trace().to_string_pretty())
+        .map_err(|e| anyhow!("writing {out}: {e}"))?;
+    println!(
+        "wrote {} spans to {out} (iteration {:.2}s: FWD {:.2}s BWD {:.2}s STEP {:.2}s)",
+        trace.spans().len(),
+        bd.iter_s,
+        bd.fwd_s,
+        bd.bwd_s,
+        bd.step_s
+    );
+    println!("open chrome://tracing or https://ui.perfetto.dev and load the file");
+    for (lane, busy) in trace.lane_busy() {
+        println!("  lane {lane:<14} busy {:.2}s ({:.0}%)", busy, 100.0 * busy / bd.iter_s);
+    }
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! `cxlfine` command-line interface.
+//!
+//! Subcommands:
+//! * `topo`      — print a hardware preset,
+//! * `plan`      — Table-I footprint + memory placement for a run,
+//! * `simulate`  — one iteration's phase breakdown under a policy,
+//! * `sweep`     — (C, B) policy grid normalized to baseline (Fig. 9/10),
+//! * `optimizer` — CPU Adam step time vs element count (Fig. 5; sim + real),
+//! * `bandwidth` — host→GPU transfer bandwidth matrix (Fig. 6),
+//! * `train`     — run the functional fine-tuning loop on the artifacts.
+
+pub mod commands;
+
+use crate::util::cli::{CliError, CliSpec};
+
+/// Top-level dispatch. Returns process exit code.
+pub fn run(args: Vec<String>) -> i32 {
+    crate::util::logging::init_from_env();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprintln!("{}", usage());
+        return 2;
+    };
+    let result = match cmd.as_str() {
+        "topo" => commands::topo(rest),
+        "plan" => commands::plan(rest),
+        "simulate" => commands::simulate(rest),
+        "sweep" => commands::sweep(rest),
+        "optimizer" => commands::optimizer(rest),
+        "bandwidth" => commands::bandwidth(rest),
+        "train" => commands::train(rest),
+        "trace" => commands::trace(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            return 0;
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{}", usage());
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(CliDone::Help(text)) => {
+            println!("{text}");
+            0
+        }
+        Err(CliDone::Bad(msg)) => {
+            eprintln!("{msg}");
+            2
+        }
+        Err(CliDone::Runtime(e)) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn usage() -> String {
+    "cxlfine — CXL-aware memory allocation for long-context LLM fine-tuning\n\
+     (reproduction of Liaw & Chen, CS.DC 2025)\n\n\
+     USAGE: cxlfine <command> [options]   (--help on any command)\n\n\
+     COMMANDS:\n  \
+       topo       print a hardware preset (config-a | config-b | dev-tiny)\n  \
+       plan       Table-I memory footprint + placement for a run\n  \
+       simulate   one training iteration's FWD/BWD/STEP breakdown\n  \
+       sweep      (context, batch) policy grid vs baseline (Fig. 9/10)\n  \
+       optimizer  CPU Adam time vs element count, DRAM vs CXL (Fig. 5)\n  \
+       bandwidth  host->GPU DMA bandwidth matrix (Fig. 6)\n  \
+       train      run the functional fine-tuning loop on AOT artifacts\n  \
+       trace      export a chrome://tracing JSON of one simulated iteration"
+        .to_string()
+}
+
+/// Command error plumbing.
+pub enum CliDone {
+    Help(String),
+    Bad(String),
+    Runtime(anyhow::Error),
+}
+
+impl From<CliError> for CliDone {
+    fn from(e: CliError) -> Self {
+        match e {
+            CliError::Help(h) => CliDone::Help(h),
+            CliError::Bad(m) => CliDone::Bad(m),
+        }
+    }
+}
+
+impl From<anyhow::Error> for CliDone {
+    fn from(e: anyhow::Error) -> Self {
+        CliDone::Runtime(e)
+    }
+}
+
+pub(crate) fn parse(spec: CliSpec, args: &[String]) -> Result<crate::util::cli::CliArgs, CliDone> {
+    spec.parse(args).map_err(CliDone::from)
+}

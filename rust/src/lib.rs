@@ -1,0 +1,29 @@
+//! # cxlfine
+//!
+//! Reproduction of *"Analysis and Optimized CXL-Attached Memory Allocation
+//! for Long-Context LLM Fine-Tuning"* (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: ZeRO-Offload-style fine-tuning
+//!   workflow engine, CXL-aware memory allocator with multi-AIC striping,
+//!   a calibrated discrete-event CXL/NUMA/PCIe simulator, a real
+//!   multithreaded CPU Adam, and a PJRT runtime that executes the
+//!   AOT-compiled model.
+//! * **L2 (python/compile/model.py)** — the JAX transformer (fwd/bwd per
+//!   block), lowered once to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — Pallas flash-attention and fused
+//!   linear-cross-entropy kernels, validated against a pure-jnp oracle.
+//!
+//! See `DESIGN.md` for the experiment index mapping every paper table and
+//! figure to a module and bench target.
+
+pub mod cli;
+pub mod mem;
+pub mod model;
+pub mod offload;
+pub mod optim;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod train;
+pub mod util;

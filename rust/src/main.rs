@@ -1,0 +1,9 @@
+//! `cxlfine` — leader entrypoint.
+//!
+//! The coordinator binary: placement planning, iteration simulation,
+//! figure sweeps, and the functional PJRT training loop. See `--help`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(cxlfine::cli::run(args));
+}

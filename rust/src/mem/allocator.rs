@@ -1,0 +1,311 @@
+//! The NUMA-aware allocator: tracks per-node capacity, commits placements
+//! computed by a [`Policy`], and reports utilization. This is the library's
+//! stand-in for `libnuma`/`numactl` in the real system — plus the paper's
+//! CXL-aware logic layered on top.
+
+use std::collections::HashMap;
+
+use super::policy::Policy;
+use super::region::{Placement, Region, RegionId, RegionRequest};
+use crate::topology::{NodeId, SystemTopology};
+use crate::util::units::fmt_bytes;
+
+/// Allocation failure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AllocError {
+    pub request: String,
+    pub bytes: u64,
+    pub shortfall: u64,
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cannot place {} ({}): short {}",
+            self.request,
+            fmt_bytes(self.bytes),
+            fmt_bytes(self.shortfall)
+        )
+    }
+}
+impl std::error::Error for AllocError {}
+
+/// Per-node capacity tracker + region table.
+pub struct NumaAllocator<'t> {
+    topo: &'t SystemTopology,
+    policy: Policy,
+    free: Vec<u64>,
+    regions: HashMap<usize, Region>,
+    next_id: usize,
+}
+
+impl<'t> NumaAllocator<'t> {
+    pub fn new(topo: &'t SystemTopology, policy: Policy) -> Self {
+        Self {
+            topo,
+            policy,
+            free: topo.mem_nodes.iter().map(|n| n.capacity).collect(),
+            regions: HashMap::new(),
+            next_id: 0,
+        }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    pub fn topo(&self) -> &SystemTopology {
+        self.topo
+    }
+
+    /// Free bytes on a node.
+    pub fn free_on(&self, node: NodeId) -> u64 {
+        self.free[node.0]
+    }
+
+    /// Used bytes on a node.
+    pub fn used_on(&self, node: NodeId) -> u64 {
+        self.topo.node(node).capacity - self.free[node.0]
+    }
+
+    /// Place and commit a region.
+    pub fn alloc(&mut self, req: RegionRequest) -> Result<RegionId, AllocError> {
+        let placement = self
+            .policy
+            .place(self.topo, &req, &self.free)
+            .map_err(|shortfall| AllocError {
+                request: req.name.clone(),
+                bytes: req.bytes,
+                shortfall,
+            })?;
+        placement.validate(req.bytes);
+        self.commit(req, placement)
+    }
+
+    /// Commit an explicitly computed placement (used by tests and by the
+    /// engine when it needs policy-independent staging buffers).
+    pub fn commit(
+        &mut self,
+        req: RegionRequest,
+        placement: Placement,
+    ) -> Result<RegionId, AllocError> {
+        for (n, b) in &placement.parts {
+            if *b > self.free[n.0] {
+                return Err(AllocError {
+                    request: req.name.clone(),
+                    bytes: req.bytes,
+                    shortfall: *b - self.free[n.0],
+                });
+            }
+        }
+        for (n, b) in &placement.parts {
+            self.free[n.0] -= *b;
+        }
+        let id = RegionId(self.next_id);
+        self.next_id += 1;
+        self.regions.insert(
+            id.0,
+            Region {
+                id,
+                name: req.name,
+                class: req.class,
+                bytes: req.bytes,
+                gpu: req.gpu,
+                placement,
+            },
+        );
+        Ok(id)
+    }
+
+    /// Release a region, returning its bytes to the nodes.
+    pub fn release(&mut self, id: RegionId) -> bool {
+        match self.regions.remove(&id.0) {
+            Some(r) => {
+                for (n, b) in &r.placement.parts {
+                    self.free[n.0] += *b;
+                    debug_assert!(self.free[n.0] <= self.topo.node(*n).capacity);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn region(&self, id: RegionId) -> Option<&Region> {
+        self.regions.get(&id.0)
+    }
+
+    pub fn regions(&self) -> impl Iterator<Item = &Region> {
+        self.regions.values()
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    /// Total bytes allocated across all nodes.
+    pub fn total_used(&self) -> u64 {
+        self.topo
+            .all_nodes()
+            .iter()
+            .map(|&n| self.used_on(n))
+            .sum()
+    }
+
+    /// Utilization table (for reports / `cxlfine plan`).
+    pub fn describe(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(s, "allocator ({}):", self.policy.name());
+        for n in self.topo.all_nodes() {
+            let spec = self.topo.node(n);
+            let used = self.used_on(n);
+            let _ = writeln!(
+                s,
+                "  {}: {} / {} used ({:.1}%)",
+                spec.name,
+                fmt_bytes(used),
+                fmt_bytes(spec.capacity),
+                100.0 * used as f64 / spec.capacity as f64
+            );
+        }
+        let mut regions: Vec<&Region> = self.regions.values().collect();
+        regions.sort_by_key(|r| r.id.0);
+        for r in regions {
+            let parts: Vec<String> = r
+                .placement
+                .parts
+                .iter()
+                .map(|(n, b)| format!("{}={}", self.topo.node(*n).name, fmt_bytes(*b)))
+                .collect();
+            let _ = writeln!(
+                s,
+                "  region {} [{}] {}: {}",
+                r.name,
+                r.class.name(),
+                fmt_bytes(r.bytes),
+                parts.join(" + ")
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::region::TensorClass;
+    use crate::topology::presets::{config_a, dev_tiny};
+    use crate::util::units::GIB;
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let topo = config_a();
+        let mut a = NumaAllocator::new(&topo, Policy::DramOnly);
+        let before = a.free_on(NodeId(0));
+        let id = a
+            .alloc(RegionRequest::new("p", TensorClass::MasterParams, 4 * GIB))
+            .unwrap();
+        assert_eq!(a.free_on(NodeId(0)), before - 4 * GIB);
+        assert_eq!(a.region(id).unwrap().bytes, 4 * GIB);
+        assert!(a.release(id));
+        assert_eq!(a.free_on(NodeId(0)), before);
+        assert!(!a.release(id), "double free must be rejected");
+    }
+
+    #[test]
+    fn oom_error_carries_shortfall() {
+        let topo = dev_tiny(); // 8 GiB DRAM
+        let mut a = NumaAllocator::new(&topo, Policy::DramOnly);
+        let err = a
+            .alloc(RegionRequest::new("big", TensorClass::MasterParams, 100 * GIB))
+            .unwrap_err();
+        assert_eq!(err.shortfall, 92 * GIB);
+        assert!(err.to_string().contains("short"));
+    }
+
+    #[test]
+    fn sequential_allocs_respect_capacity() {
+        let topo = dev_tiny();
+        let mut a = NumaAllocator::new(&topo, Policy::CxlAware { striping: true });
+        // fill CXL (4+4 GiB) with activations, then overflow to DRAM
+        let mut ids = Vec::new();
+        for i in 0..5 {
+            let id = a
+                .alloc(RegionRequest::new(
+                    format!("act{i}"),
+                    TensorClass::Activations,
+                    2 * GIB,
+                ))
+                .unwrap();
+            ids.push(id);
+        }
+        // 10 GiB of activations: 8 on CXL, 2 on DRAM
+        let on_cxl: u64 = ids
+            .iter()
+            .map(|&id| {
+                let r = a.region(id).unwrap();
+                r.placement.bytes_on(NodeId(1)) + r.placement.bytes_on(NodeId(2))
+            })
+            .sum();
+        assert_eq!(on_cxl, 8 * GIB);
+        assert_eq!(a.total_used(), 10 * GIB);
+    }
+
+    #[test]
+    fn used_plus_free_is_capacity_invariant() {
+        use crate::util::proptest_lite::*;
+        let topo = dev_tiny();
+        let gen = VecOf {
+            inner: PairOf(
+                U64Range {
+                    lo: 1,
+                    hi: 3 * GIB,
+                },
+                UsizeRange { lo: 0, hi: 11 },
+            ),
+            min_len: 1,
+            max_len: 12,
+        };
+        forall("used+free=cap", 21, 60, &gen, |ops| {
+            let mut a = NumaAllocator::new(&topo, Policy::CxlAware { striping: true });
+            let mut live = Vec::new();
+            for (bytes, sel) in ops {
+                let class = TensorClass::all()[sel % 6];
+                if sel % 2 == 0 || live.is_empty() {
+                    if let Ok(id) = a.alloc(RegionRequest::new("r", class, *bytes)) {
+                        live.push(id);
+                    }
+                } else {
+                    let id = live.remove(sel % live.len());
+                    a.release(id);
+                }
+                // invariant: per-node used + free == capacity
+                for n in a.topo().all_nodes() {
+                    let cap = a.topo().node(n).capacity;
+                    if a.free_on(n) + a.used_on(n) != cap {
+                        return Err(format!("node {} accounting broken", n.0));
+                    }
+                }
+                // invariant: sum of region placements == total used
+                let sum: u64 = a.regions().map(|r| r.placement.total_bytes()).sum();
+                if sum != a.total_used() {
+                    return Err("region sum != used".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn describe_lists_regions() {
+        let topo = config_a();
+        let mut a = NumaAllocator::new(&topo, Policy::CxlAware { striping: false });
+        a.alloc(RegionRequest::new("opt", TensorClass::OptimizerStates, GIB))
+            .unwrap();
+        let d = a.describe();
+        assert!(d.contains("opt"));
+        assert!(d.contains("optimizer-states-fp32"));
+    }
+}

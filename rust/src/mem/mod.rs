@@ -1,0 +1,16 @@
+//! Memory management layer: the paper's contribution.
+//!
+//! * [`region`] — Table I data classes + placements,
+//! * [`striping`] — multi-AIC stripe arithmetic (§IV-B),
+//! * [`policy`] — DramOnly / NaiveInterleave / CxlAware placement (§IV-A),
+//! * [`allocator`] — NUMA capacity tracking and region lifecycle (the
+//!   `libnuma` stand-in).
+
+pub mod allocator;
+pub mod policy;
+pub mod region;
+pub mod striping;
+
+pub use allocator::{AllocError, NumaAllocator};
+pub use policy::Policy;
+pub use region::{Placement, Region, RegionId, RegionRequest, TensorClass};

@@ -1,0 +1,387 @@
+//! Placement policies — the heart of the paper.
+//!
+//! * [`Policy::DramOnly`] — the baseline: everything in local DRAM.
+//! * [`Policy::NaiveInterleave`] — the "Naive CXL" configuration: pages
+//!   round-robin across the local-DRAM node and every CXL node
+//!   (`numactl --interleave=all`), blind to data classes.
+//! * [`Policy::CxlAware`] — §IV-A: latency-critical optimizer data (fp32
+//!   P/G/O) pinned to local DRAM, latency-tolerant GPU-transfer data (bf16
+//!   P/G, activation checkpoints) on CXL. With `striping` (§IV-B) the
+//!   CXL-resident data of each GPU is striped across *all* AICs, and
+//!   optimizer data that spills out of DRAM is partitioned across
+//!   DRAM + AICs proportionally to sustained bandwidth (Fig. 8c).
+//!   Without striping (single-AIC Config A) per-GPU data keeps an AIC
+//!   affinity (GPU *i* → AIC *i mod n*).
+
+use super::region::{Placement, RegionRequest};
+use super::striping;
+use crate::sim::memmodel::AccessMode;
+use crate::topology::{NodeId, SystemTopology};
+
+/// The three evaluated placement policies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    DramOnly,
+    NaiveInterleave,
+    CxlAware { striping: bool },
+}
+
+impl Policy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::DramOnly => "baseline-dram",
+            Policy::NaiveInterleave => "naive-cxl",
+            Policy::CxlAware { striping: false } => "cxl-aware",
+            Policy::CxlAware { striping: true } => "cxl-aware+striping",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Policy> {
+        match s {
+            "baseline" | "dram" | "baseline-dram" => Some(Policy::DramOnly),
+            "naive" | "naive-cxl" | "interleave" => Some(Policy::NaiveInterleave),
+            "cxl-aware" | "ours" => Some(Policy::CxlAware { striping: false }),
+            "cxl-aware+striping" | "ours+striping" | "striped" => {
+                Some(Policy::CxlAware { striping: true })
+            }
+            _ => None,
+        }
+    }
+
+    /// Compute the placement for `req` given per-node free bytes.
+    /// Returns `Err(shortfall)` if the policy cannot place the region.
+    pub fn place(
+        self,
+        topo: &SystemTopology,
+        req: &RegionRequest,
+        free: &[u64],
+    ) -> Result<Placement, u64> {
+        if req.bytes == 0 {
+            return Ok(Placement {
+                parts: vec![],
+                mode: AccessMode::Partitioned,
+            });
+        }
+        match self {
+            Policy::DramOnly => {
+                let dram = NodeId(0);
+                if free[0] >= req.bytes {
+                    Ok(Placement::single(dram, req.bytes))
+                } else {
+                    Err(req.bytes - free[0])
+                }
+            }
+            Policy::NaiveInterleave => {
+                // interleave across all nodes, capacity-aware
+                let nodes = topo.all_nodes();
+                let (parts, unplaced) = striping::equal_split(req.bytes, &nodes, free);
+                if unplaced > 0 {
+                    return Err(unplaced);
+                }
+                Ok(Placement {
+                    parts,
+                    mode: AccessMode::Interleaved,
+                })
+            }
+            Policy::CxlAware { striping: stripe } => {
+                self.place_cxl_aware(topo, req, free, stripe)
+            }
+        }
+    }
+
+    fn place_cxl_aware(
+        self,
+        topo: &SystemTopology,
+        req: &RegionRequest,
+        free: &[u64],
+        stripe: bool,
+    ) -> Result<Placement, u64> {
+        let dram = NodeId(0);
+        let cxl = topo.cxl_nodes();
+        if req.class.latency_critical() {
+            // DRAM first; spill per §IV-B (Fig. 8c).
+            if free[0] >= req.bytes {
+                return Ok(Placement::single(dram, req.bytes));
+            }
+            let dram_take = free[0];
+            let rest = req.bytes - dram_take;
+            let (mut parts, unplaced) = if stripe {
+                // bandwidth-proportional partition of the spill across AICs
+                let weights: Vec<f64> =
+                    cxl.iter().map(|&n| topo.node(n).cpu_stream_bw).collect();
+                striping::weighted_split(rest, &cxl, &weights, free)
+            } else {
+                striping::sequential_fill(rest, &cxl, free)
+            };
+            if unplaced > 0 {
+                return Err(unplaced);
+            }
+            if dram_take > 0 {
+                parts.insert(0, (dram, dram_take));
+            }
+            Ok(Placement {
+                parts,
+                mode: AccessMode::Partitioned,
+            })
+        } else {
+            // Latency-tolerant → CXL capacity; overflow back to DRAM.
+            let preferred: Vec<NodeId> = if cxl.is_empty() {
+                vec![dram]
+            } else if stripe {
+                cxl.clone()
+            } else {
+                // AIC affinity: GPU i → AIC (i mod n); non-GPU data fills
+                // sequentially.
+                match req.gpu {
+                    Some(g) => {
+                        let mut order: Vec<NodeId> = Vec::with_capacity(cxl.len());
+                        for k in 0..cxl.len() {
+                            order.push(cxl[(g.0 + k) % cxl.len()]);
+                        }
+                        order
+                    }
+                    None => cxl.clone(),
+                }
+            };
+            let (mut parts, unplaced) = if stripe && !cxl.is_empty() {
+                striping::equal_split(req.bytes, &preferred, free)
+            } else {
+                striping::sequential_fill(req.bytes, &preferred, free)
+            };
+            let mut rest = unplaced;
+            if rest > 0 && !cxl.is_empty() {
+                // overflow to DRAM
+                let take = rest.min(free[0]);
+                if take > 0 {
+                    parts.push((dram, take));
+                    rest -= take;
+                }
+            }
+            if rest > 0 {
+                return Err(rest);
+            }
+            Ok(Placement {
+                parts,
+                mode: AccessMode::Partitioned,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::region::TensorClass;
+    use crate::topology::presets::{config_a, config_b, with_dram_capacity};
+    use crate::topology::GpuId;
+    use crate::util::units::GIB;
+
+    fn free_of(topo: &SystemTopology) -> Vec<u64> {
+        topo.mem_nodes.iter().map(|n| n.capacity).collect()
+    }
+
+    #[test]
+    fn dram_only_places_or_fails() {
+        let topo = config_a();
+        let mut free = free_of(&topo);
+        let req = RegionRequest::new("p", TensorClass::MasterParams, 10 * GIB);
+        let p = Policy::DramOnly.place(&topo, &req, &free).unwrap();
+        assert_eq!(p.parts, vec![(NodeId(0), 10 * GIB)]);
+        free[0] = GIB;
+        let err = Policy::DramOnly.place(&topo, &req, &free).unwrap_err();
+        assert_eq!(err, 9 * GIB);
+    }
+
+    #[test]
+    fn naive_interleave_spreads_equally() {
+        let topo = config_a(); // dram + 1 AIC
+        let free = free_of(&topo);
+        let req = RegionRequest::new("x", TensorClass::OptimizerStates, 100 * GIB);
+        let p = Policy::NaiveInterleave.place(&topo, &req, &free).unwrap();
+        assert_eq!(p.mode, AccessMode::Interleaved);
+        assert_eq!(p.parts.len(), 2);
+        assert_eq!(p.bytes_on(NodeId(0)), 50 * GIB);
+        assert_eq!(p.bytes_on(NodeId(1)), 50 * GIB);
+    }
+
+    #[test]
+    fn naive_interleave_ignores_latency_classes() {
+        // the defining flaw: optimizer data lands on CXL even with DRAM free
+        let topo = config_a();
+        let free = free_of(&topo);
+        let req = RegionRequest::new("o", TensorClass::OptimizerStates, 10 * GIB);
+        let p = Policy::NaiveInterleave.place(&topo, &req, &free).unwrap();
+        assert!(p.touches(NodeId(1)), "naive policy must hit CXL");
+    }
+
+    #[test]
+    fn cxl_aware_pins_optimizer_data_to_dram() {
+        let topo = config_a();
+        let free = free_of(&topo);
+        for class in [
+            TensorClass::MasterParams,
+            TensorClass::Gradients32,
+            TensorClass::OptimizerStates,
+        ] {
+            let req = RegionRequest::new("c", class, 40 * GIB);
+            let p = Policy::CxlAware { striping: false }
+                .place(&topo, &req, &free)
+                .unwrap();
+            assert_eq!(p.parts, vec![(NodeId(0), 40 * GIB)], "{class:?}");
+        }
+    }
+
+    #[test]
+    fn cxl_aware_sends_transfer_data_to_cxl() {
+        let topo = config_a();
+        let free = free_of(&topo);
+        for class in [
+            TensorClass::Params16,
+            TensorClass::Grads16,
+            TensorClass::Activations,
+        ] {
+            let req = RegionRequest::new("t", class, 40 * GIB);
+            let p = Policy::CxlAware { striping: false }
+                .place(&topo, &req, &free)
+                .unwrap();
+            assert!(!p.touches(NodeId(0)), "{class:?} should avoid DRAM");
+            assert!(p.touches(NodeId(1)));
+        }
+    }
+
+    #[test]
+    fn cxl_aware_spill_stripes_proportionally() {
+        // Fig. 8c: optimizer state too big for DRAM → DRAM + AIC partition.
+        let topo = with_dram_capacity(config_b(), 16 * GIB);
+        let free = free_of(&topo);
+        let req = RegionRequest::new("o", TensorClass::OptimizerStates, 48 * GIB);
+        let p = Policy::CxlAware { striping: true }
+            .place(&topo, &req, &free)
+            .unwrap();
+        assert_eq!(p.mode, AccessMode::Partitioned);
+        assert_eq!(p.bytes_on(NodeId(0)), 16 * GIB, "DRAM filled first");
+        // spill split across two AICs with equal cpu_stream_bw → equal halves
+        assert_eq!(p.bytes_on(NodeId(1)), 16 * GIB);
+        assert_eq!(p.bytes_on(NodeId(2)), 16 * GIB);
+    }
+
+    #[test]
+    fn striping_spreads_activations_across_all_aics() {
+        let topo = config_b();
+        let free = free_of(&topo);
+        let req =
+            RegionRequest::new("a", TensorClass::Activations, 64 * GIB).for_gpu(GpuId(0));
+        let p = Policy::CxlAware { striping: true }
+            .place(&topo, &req, &free)
+            .unwrap();
+        assert_eq!(p.bytes_on(NodeId(1)), 32 * GIB);
+        assert_eq!(p.bytes_on(NodeId(2)), 32 * GIB);
+    }
+
+    #[test]
+    fn no_striping_gives_per_gpu_affinity() {
+        let topo = config_b();
+        let free = free_of(&topo);
+        let p0 = Policy::CxlAware { striping: false }
+            .place(
+                &topo,
+                &RegionRequest::new("a0", TensorClass::Activations, GIB).for_gpu(GpuId(0)),
+                &free,
+            )
+            .unwrap();
+        let p1 = Policy::CxlAware { striping: false }
+            .place(
+                &topo,
+                &RegionRequest::new("a1", TensorClass::Activations, GIB).for_gpu(GpuId(1)),
+                &free,
+            )
+            .unwrap();
+        assert_eq!(p0.parts, vec![(NodeId(1), GIB)]);
+        assert_eq!(p1.parts, vec![(NodeId(2), GIB)]);
+    }
+
+    #[test]
+    fn transfer_data_overflows_to_dram_when_cxl_full() {
+        let topo = config_a();
+        let mut free = free_of(&topo);
+        free[1] = GIB; // AIC almost full
+        let req = RegionRequest::new("a", TensorClass::Activations, 3 * GIB);
+        let p = Policy::CxlAware { striping: false }
+            .place(&topo, &req, &free)
+            .unwrap();
+        assert_eq!(p.bytes_on(NodeId(1)), GIB);
+        assert_eq!(p.bytes_on(NodeId(0)), 2 * GIB);
+    }
+
+    #[test]
+    fn shortfall_reported_when_nothing_fits() {
+        let topo = config_a();
+        let free = vec![GIB, GIB];
+        let req = RegionRequest::new("x", TensorClass::Activations, 10 * GIB);
+        let err = Policy::CxlAware { striping: true }
+            .place(&topo, &req, &free)
+            .unwrap_err();
+        assert_eq!(err, 8 * GIB);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for p in [
+            Policy::DramOnly,
+            Policy::NaiveInterleave,
+            Policy::CxlAware { striping: false },
+            Policy::CxlAware { striping: true },
+        ] {
+            assert_eq!(Policy::by_name(p.name()), Some(p));
+        }
+        assert_eq!(Policy::by_name("??"), None);
+    }
+
+    #[test]
+    fn placement_conservation_property() {
+        use crate::util::proptest_lite::*;
+        let topo = config_b();
+        let gen = PairOf(
+            U64Range {
+                lo: 1,
+                hi: 300 * GIB,
+            },
+            UsizeRange { lo: 0, hi: 5 },
+        );
+        for policy in [
+            Policy::DramOnly,
+            Policy::NaiveInterleave,
+            Policy::CxlAware { striping: false },
+            Policy::CxlAware { striping: true },
+        ] {
+            forall("placement-conserves", 7, 200, &gen, |(bytes, class_idx)| {
+                let class = TensorClass::all()[*class_idx % 6];
+                let free = free_of(&topo);
+                let req = RegionRequest::new("r", class, *bytes);
+                match policy.place(&topo, &req, &free) {
+                    Ok(p) => {
+                        if p.total_bytes() != *bytes {
+                            return Err(format!(
+                                "{policy:?}: placed {} of {bytes}",
+                                p.total_bytes()
+                            ));
+                        }
+                        for (n, b) in &p.parts {
+                            if *b > free[n.0] {
+                                return Err(format!("{policy:?}: node {} over cap", n.0));
+                            }
+                        }
+                        Ok(())
+                    }
+                    Err(short) => {
+                        if short == 0 {
+                            Err("zero shortfall error".into())
+                        } else {
+                            Ok(())
+                        }
+                    }
+                }
+            });
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! Memory regions and the paper's data taxonomy.
+//!
+//! Table I's system-memory components, tagged with the property that drives
+//! placement (§IV-A): latency-critical data is touched by the CPU optimizer
+//! inner loop; latency-tolerant data only rides DMA engines to/from GPUs.
+
+use crate::sim::memmodel::AccessMode;
+use crate::topology::{GpuId, NodeId};
+
+/// The offloaded data classes of Table I.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TensorClass {
+    /// fp32 master parameters (optimizer input/output). Latency-critical.
+    MasterParams,
+    /// fp32 gradients accumulated for the optimizer. Latency-critical.
+    Gradients32,
+    /// fp32 Adam moments (m, v). Latency-critical.
+    OptimizerStates,
+    /// bf16 parameter copies streamed to GPUs each step. Latency-tolerant.
+    Params16,
+    /// bf16 gradients offloaded from GPUs each step. Latency-tolerant.
+    Grads16,
+    /// bf16 checkpointed activations (per GPU). Latency-tolerant, the
+    /// capacity driver for long contexts.
+    Activations,
+}
+
+impl TensorClass {
+    /// Is this class read/written by the CPU optimizer inner loop?
+    /// (§III-A: such data suffers the CXL latency penalty.)
+    pub fn latency_critical(self) -> bool {
+        matches!(
+            self,
+            TensorClass::MasterParams | TensorClass::Gradients32 | TensorClass::OptimizerStates
+        )
+    }
+
+    /// Is this class only moved by DMA to/from GPUs? (§III-B: such data is
+    /// bandwidth-bound and tolerates CXL placement.)
+    pub fn gpu_transfer(self) -> bool {
+        !self.latency_critical()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TensorClass::MasterParams => "master-params-fp32",
+            TensorClass::Gradients32 => "grads-fp32",
+            TensorClass::OptimizerStates => "optimizer-states-fp32",
+            TensorClass::Params16 => "params-bf16",
+            TensorClass::Grads16 => "grads-bf16",
+            TensorClass::Activations => "activations-bf16",
+        }
+    }
+
+    pub fn all() -> [TensorClass; 6] {
+        [
+            TensorClass::MasterParams,
+            TensorClass::Gradients32,
+            TensorClass::OptimizerStates,
+            TensorClass::Params16,
+            TensorClass::Grads16,
+            TensorClass::Activations,
+        ]
+    }
+}
+
+/// Where a region's bytes physically live.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    /// (node, bytes) shards; bytes sum to the region size.
+    pub parts: Vec<(NodeId, u64)>,
+    /// How the shards are accessed by CPU threads (drives STEP timing).
+    pub mode: AccessMode,
+}
+
+impl Placement {
+    pub fn single(node: NodeId, bytes: u64) -> Self {
+        Self {
+            parts: vec![(node, bytes)],
+            mode: AccessMode::Partitioned,
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.parts.iter().map(|(_, b)| *b).sum()
+    }
+
+    pub fn bytes_on(&self, node: NodeId) -> u64 {
+        self.parts
+            .iter()
+            .filter(|(n, _)| *n == node)
+            .map(|(_, b)| *b)
+            .sum()
+    }
+
+    /// Fractions per node (for fabric striped transfers / STEP layout).
+    pub fn fractions(&self) -> Vec<(NodeId, f64)> {
+        let total = self.total_bytes() as f64;
+        assert!(total > 0.0, "fractions of an empty placement");
+        self.parts
+            .iter()
+            .map(|(n, b)| (*n, *b as f64 / total))
+            .collect()
+    }
+
+    /// True if any byte lives on one of `nodes`.
+    pub fn touches(&self, node: NodeId) -> bool {
+        self.parts.iter().any(|(n, b)| *n == node && *b > 0)
+    }
+
+    pub fn validate(&self, expected_bytes: u64) {
+        assert_eq!(
+            self.total_bytes(),
+            expected_bytes,
+            "placement bytes mismatch"
+        );
+        // no duplicate node entries (allocator merges them)
+        let mut seen = std::collections::HashSet::new();
+        for (n, _) in &self.parts {
+            assert!(seen.insert(n.0), "duplicate node {} in placement", n.0);
+        }
+    }
+}
+
+/// A named allocation request.
+#[derive(Clone, Debug)]
+pub struct RegionRequest {
+    pub name: String,
+    pub class: TensorClass,
+    pub bytes: u64,
+    /// Owning GPU for per-GPU data (activation checkpoints, bf16 staging);
+    /// lets policies give each GPU an AIC affinity when not striping.
+    pub gpu: Option<GpuId>,
+}
+
+impl RegionRequest {
+    pub fn new(name: impl Into<String>, class: TensorClass, bytes: u64) -> Self {
+        Self {
+            name: name.into(),
+            class,
+            bytes,
+            gpu: None,
+        }
+    }
+
+    pub fn for_gpu(mut self, gpu: GpuId) -> Self {
+        self.gpu = Some(gpu);
+        self
+    }
+}
+
+/// Identifier of a committed region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RegionId(pub usize);
+
+/// A committed region.
+#[derive(Clone, Debug)]
+pub struct Region {
+    pub id: RegionId,
+    pub name: String,
+    pub class: TensorClass,
+    pub bytes: u64,
+    pub gpu: Option<GpuId>,
+    pub placement: Placement,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_taxonomy_matches_fig8a() {
+        // fp32 P, G, O → DRAM side; bf16 P, G and activations → CXL side.
+        assert!(TensorClass::MasterParams.latency_critical());
+        assert!(TensorClass::Gradients32.latency_critical());
+        assert!(TensorClass::OptimizerStates.latency_critical());
+        assert!(TensorClass::Params16.gpu_transfer());
+        assert!(TensorClass::Grads16.gpu_transfer());
+        assert!(TensorClass::Activations.gpu_transfer());
+    }
+
+    #[test]
+    fn classes_partition() {
+        for c in TensorClass::all() {
+            assert!(c.latency_critical() != c.gpu_transfer());
+        }
+    }
+
+    #[test]
+    fn placement_accounting() {
+        let p = Placement {
+            parts: vec![(NodeId(0), 600), (NodeId(1), 400)],
+            mode: AccessMode::Partitioned,
+        };
+        p.validate(1000);
+        assert_eq!(p.total_bytes(), 1000);
+        assert_eq!(p.bytes_on(NodeId(1)), 400);
+        assert!(p.touches(NodeId(0)));
+        assert!(!p.touches(NodeId(2)));
+        let f = p.fractions();
+        assert!((f[0].1 - 0.6).abs() < 1e-12);
+        assert!((f[1].1 - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "bytes mismatch")]
+    fn validate_rejects_wrong_total() {
+        Placement::single(NodeId(0), 10).validate(11);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate node")]
+    fn validate_rejects_duplicates() {
+        let p = Placement {
+            parts: vec![(NodeId(0), 5), (NodeId(0), 5)],
+            mode: AccessMode::Partitioned,
+        };
+        p.validate(10);
+    }
+}

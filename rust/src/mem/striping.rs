@@ -1,0 +1,242 @@
+//! Stripe arithmetic: split a byte count across nodes by weight, capped by
+//! per-node free capacity. Shared by the placement policies (§IV-B) and the
+//! fabric's striped transfers.
+
+use crate::topology::NodeId;
+
+/// Split `bytes` across `nodes` proportionally to `weights`, respecting
+/// per-node `free` capacity. Returns `(shards, unplaced)`: shards are
+/// `(node, bytes)` with every node appearing at most once and zero-byte
+/// shards omitted; `unplaced > 0` means capacity ran out.
+///
+/// The split is exact (shards sum to `bytes - unplaced`): fractional
+/// entitlements are floored and the remainder distributed to the largest
+/// fractional parts first (largest-remainder method), so results are
+/// deterministic and balanced to within one byte before capacity clamping.
+pub fn weighted_split(
+    bytes: u64,
+    nodes: &[NodeId],
+    weights: &[f64],
+    free: &[u64], // indexed by NodeId.0
+) -> (Vec<(NodeId, u64)>, u64) {
+    assert_eq!(nodes.len(), weights.len());
+    assert!(weights.iter().all(|w| *w >= 0.0));
+    let mut remaining = bytes;
+    let mut shards: Vec<(NodeId, u64)> = Vec::new();
+    // Iterate: allocate by weight among nodes that still have free space;
+    // nodes that hit capacity drop out and their share is redistributed.
+    let mut free_left: Vec<u64> = nodes.iter().map(|n| free[n.0]).collect();
+    let mut acc: Vec<u64> = vec![0; nodes.len()];
+    while remaining > 0 {
+        let live: Vec<usize> = (0..nodes.len())
+            .filter(|&i| free_left[i] > 0 && weights[i] > 0.0)
+            .collect();
+        if live.is_empty() {
+            break;
+        }
+        let wsum: f64 = live.iter().map(|&i| weights[i]).sum();
+        // entitlement per live node this round
+        let mut round: Vec<(usize, u64, f64)> = Vec::with_capacity(live.len()); // (idx, floor, frac)
+        let mut floored_total = 0u64;
+        for &i in &live {
+            let ent = remaining as f64 * weights[i] / wsum;
+            let fl = (ent.floor() as u64).min(free_left[i]);
+            round.push((i, fl, ent - ent.floor()));
+            floored_total += fl;
+        }
+        // distribute the integer remainder by largest fraction (stable order)
+        let mut leftover = remaining - floored_total.min(remaining);
+        round.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&b.0)));
+        let spread = round_len_guard(round.len());
+        for (i, fl, _) in round.iter_mut() {
+            let extra = if leftover > 0 && *fl < free_left[*i] {
+                let e = std::cmp::min(leftover, free_left[*i] - *fl);
+                // one byte at a time is exact but slow; grant the min of
+                // leftover and capacity — later rounds rebalance.
+                let e = e.min(1 + leftover / spread); // keep it spread
+                leftover -= e;
+                e
+            } else {
+                0
+            };
+            let grant = *fl + extra;
+            acc[*i] += grant;
+            free_left[*i] -= grant;
+            remaining -= grant;
+        }
+        // If no progress was possible this round (all floors zero and no
+        // leftover placed), push single bytes to the first live node to
+        // guarantee termination.
+        if round.iter().all(|(_, fl, _)| *fl == 0) && remaining > 0 {
+            let mut progressed = false;
+            for &i in &live {
+                if free_left[i] > 0 {
+                    let grant = remaining.min(1);
+                    acc[i] += grant;
+                    free_left[i] -= grant;
+                    remaining -= grant;
+                    progressed = true;
+                    break;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+    }
+    for (i, node) in nodes.iter().enumerate() {
+        if acc[i] > 0 {
+            shards.push((*node, acc[i]));
+        }
+    }
+    (shards, remaining)
+}
+
+#[allow(dead_code)]
+fn round_len(r: &[(usize, u64, f64)]) -> usize {
+    r.len()
+}
+fn round_len_guard(n: usize) -> u64 {
+    n.max(1) as u64
+}
+
+/// Equal-weight split (naive interleave across nodes).
+pub fn equal_split(bytes: u64, nodes: &[NodeId], free: &[u64]) -> (Vec<(NodeId, u64)>, u64) {
+    let w = vec![1.0; nodes.len()];
+    weighted_split(bytes, nodes, &w, free)
+}
+
+/// Sequential fill: pack into nodes in order, moving on when full.
+pub fn sequential_fill(bytes: u64, nodes: &[NodeId], free: &[u64]) -> (Vec<(NodeId, u64)>, u64) {
+    let mut remaining = bytes;
+    let mut shards = Vec::new();
+    for &n in nodes {
+        if remaining == 0 {
+            break;
+        }
+        let take = remaining.min(free[n.0]);
+        if take > 0 {
+            shards.push((n, take));
+            remaining -= take;
+        }
+    }
+    (shards, remaining)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes(n: usize) -> Vec<NodeId> {
+        (0..n).map(NodeId).collect()
+    }
+
+    #[test]
+    fn equal_split_is_balanced() {
+        let free = vec![u64::MAX / 4; 3];
+        let (shards, unplaced) = equal_split(1_000_003, &nodes(3), &free);
+        assert_eq!(unplaced, 0);
+        let total: u64 = shards.iter().map(|(_, b)| b).sum();
+        assert_eq!(total, 1_000_003);
+        let min = shards.iter().map(|(_, b)| *b).min().unwrap();
+        let max = shards.iter().map(|(_, b)| *b).max().unwrap();
+        assert!(max - min <= 2, "imbalance {max}-{min}");
+    }
+
+    #[test]
+    fn weighted_split_proportional() {
+        let free = vec![u64::MAX / 4; 2];
+        let (shards, unplaced) =
+            weighted_split(1_000_000, &nodes(2), &[3.0, 1.0], &free);
+        assert_eq!(unplaced, 0);
+        assert_eq!(shards.len(), 2);
+        let b0 = shards[0].1 as f64;
+        let b1 = shards[1].1 as f64;
+        assert!((b0 / b1 - 3.0).abs() < 0.01, "ratio {}", b0 / b1);
+    }
+
+    #[test]
+    fn capacity_overflow_redistributes() {
+        // node0 can only take 100; the rest flows to node1.
+        let free = vec![100, 10_000];
+        let (shards, unplaced) = equal_split(5_000, &nodes(2), &free);
+        assert_eq!(unplaced, 0);
+        assert_eq!(shards.iter().find(|(n, _)| n.0 == 0).unwrap().1, 100);
+        assert_eq!(shards.iter().find(|(n, _)| n.0 == 1).unwrap().1, 4_900);
+    }
+
+    #[test]
+    fn reports_unplaced_when_everything_full() {
+        let free = vec![10, 20];
+        let (shards, unplaced) = equal_split(100, &nodes(2), &free);
+        let placed: u64 = shards.iter().map(|(_, b)| b).sum();
+        assert_eq!(placed, 30);
+        assert_eq!(unplaced, 70);
+    }
+
+    #[test]
+    fn zero_weight_node_gets_nothing() {
+        let free = vec![1000, 1000];
+        let (shards, unplaced) = weighted_split(500, &nodes(2), &[0.0, 1.0], &free);
+        assert_eq!(unplaced, 0);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].0, NodeId(1));
+    }
+
+    #[test]
+    fn sequential_fill_order() {
+        let free = vec![100, 100, 100];
+        let (shards, unplaced) = sequential_fill(150, &nodes(3), &free);
+        assert_eq!(unplaced, 0);
+        assert_eq!(shards, vec![(NodeId(0), 100), (NodeId(1), 50)]);
+    }
+
+    #[test]
+    fn zero_bytes_is_empty() {
+        let free = vec![100];
+        let (shards, unplaced) = equal_split(0, &nodes(1), &free);
+        assert!(shards.is_empty());
+        assert_eq!(unplaced, 0);
+    }
+
+    #[test]
+    fn split_conserves_bytes_property() {
+        use crate::util::proptest_lite::*;
+        let gen = PairOf(
+            U64Range { lo: 0, hi: 1 << 40 },
+            VecOf {
+                inner: U64Range { lo: 0, hi: 1 << 38 },
+                min_len: 1,
+                max_len: 5,
+            },
+        );
+        forall("split-conserves", 42, 300, &gen, |(bytes, frees)| {
+            let ns: Vec<NodeId> = (0..frees.len()).map(NodeId).collect();
+            let (shards, unplaced) = equal_split(*bytes, &ns, frees);
+            let placed: u64 = shards.iter().map(|(_, b)| b).sum();
+            if placed + unplaced != *bytes {
+                return Err(format!("placed {placed} + unplaced {unplaced} != {bytes}"));
+            }
+            for (n, b) in &shards {
+                if *b > frees[n.0] {
+                    return Err(format!("node {} over capacity", n.0));
+                }
+            }
+            // at most one shard per node
+            let mut seen = std::collections::HashSet::new();
+            for (n, _) in &shards {
+                if !seen.insert(n.0) {
+                    return Err("duplicate shard".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weighted_split_deterministic() {
+        let free = vec![1 << 30; 4];
+        let run = || weighted_split(123_456_789, &nodes(4), &[1.0, 2.0, 3.0, 4.0], &free);
+        assert_eq!(run(), run());
+    }
+}

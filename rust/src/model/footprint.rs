@@ -1,0 +1,200 @@
+//! Table I: breakdown of system-memory components during long-context CPU
+//! offloading.
+//!
+//! | Component                 | Precision | Bytes                  |
+//! |---------------------------|-----------|------------------------|
+//! | Model parameters          | bf16      | 2·P                    |
+//! | Gradients                 | bf16      | 2·P                    |
+//! | Checkpointed activations  | bf16      | 2·(N_g·B·C·L·H)        |
+//! | Model parameters (master) | fp32      | 4·P                    |
+//! | Gradients (accum)         | fp32      | 4·P                    |
+//! | Optimizer states (Adam)   | fp32      | 8·P                    |
+
+use super::ModelConfig;
+use crate::mem::TensorClass;
+
+/// A fine-tuning workload shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Workload {
+    /// Number of GPUs (`N_g`).
+    pub n_gpus: usize,
+    /// Per-GPU micro-batch (`B`).
+    pub batch: usize,
+    /// Context length in tokens (`C`).
+    pub context: usize,
+}
+
+impl Workload {
+    pub fn new(n_gpus: usize, batch: usize, context: usize) -> Self {
+        assert!(n_gpus > 0 && batch > 0 && context > 0);
+        Self {
+            n_gpus,
+            batch,
+            context,
+        }
+    }
+
+    /// Tokens processed per iteration across all GPUs.
+    pub fn tokens_per_iter(&self) -> u64 {
+        (self.n_gpus * self.batch * self.context) as u64
+    }
+}
+
+/// Byte sizes of each Table-I component.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Footprint {
+    pub params_bf16: u64,
+    pub grads_bf16: u64,
+    pub activations_bf16: u64,
+    pub params_fp32: u64,
+    pub grads_fp32: u64,
+    pub optimizer_fp32: u64,
+}
+
+impl Footprint {
+    /// Apply the Table-I formulas.
+    pub fn compute(model: &ModelConfig, w: &Workload) -> Self {
+        let p = model.params();
+        let act = 2
+            * (w.n_gpus as u64)
+            * (w.batch as u64)
+            * (w.context as u64)
+            * (model.layers as u64)
+            * (model.hidden as u64);
+        Self {
+            params_bf16: 2 * p,
+            grads_bf16: 2 * p,
+            activations_bf16: act,
+            params_fp32: 4 * p,
+            grads_fp32: 4 * p,
+            optimizer_fp32: 8 * p,
+        }
+    }
+
+    /// Total system-memory demand.
+    pub fn total(&self) -> u64 {
+        self.params_bf16
+            + self.grads_bf16
+            + self.activations_bf16
+            + self.params_fp32
+            + self.grads_fp32
+            + self.optimizer_fp32
+    }
+
+    /// Latency-critical subtotal (fp32 P, G, O — the DRAM side of Fig. 8a).
+    pub fn latency_critical(&self) -> u64 {
+        self.params_fp32 + self.grads_fp32 + self.optimizer_fp32
+    }
+
+    /// Latency-tolerant subtotal (bf16 P, G, A — the CXL side of Fig. 8a).
+    pub fn gpu_transfer(&self) -> u64 {
+        self.params_bf16 + self.grads_bf16 + self.activations_bf16
+    }
+
+    /// Per-class view, aligned with `mem::TensorClass`.
+    pub fn by_class(&self) -> [(TensorClass, u64); 6] {
+        [
+            (TensorClass::MasterParams, self.params_fp32),
+            (TensorClass::Gradients32, self.grads_fp32),
+            (TensorClass::OptimizerStates, self.optimizer_fp32),
+            (TensorClass::Params16, self.params_bf16),
+            (TensorClass::Grads16, self.grads_bf16),
+            (TensorClass::Activations, self.activations_bf16),
+        ]
+    }
+
+    /// Activations bytes for ONE GPU (per-GPU regions are allocated
+    /// separately so striping can give them per-card affinity).
+    pub fn activations_per_gpu(&self, w: &Workload) -> u64 {
+        self.activations_bf16 / w.n_gpus as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets::{mistral_nemo_12b, qwen25_7b, tiny_2m};
+    use crate::util::units::GIB;
+
+    #[test]
+    fn table_i_formulas() {
+        let m = tiny_2m();
+        let w = Workload::new(2, 4, 1024);
+        let f = Footprint::compute(&m, &w);
+        let p = m.params();
+        assert_eq!(f.params_bf16, 2 * p);
+        assert_eq!(f.grads_bf16, 2 * p);
+        assert_eq!(f.params_fp32, 4 * p);
+        assert_eq!(f.grads_fp32, 4 * p);
+        assert_eq!(f.optimizer_fp32, 8 * p);
+        assert_eq!(
+            f.activations_bf16,
+            2 * 2 * 4 * 1024 * (m.layers as u64) * (m.hidden as u64)
+        );
+        assert_eq!(f.total(), 20 * p + f.activations_bf16);
+    }
+
+    #[test]
+    fn fixed_cost_is_20p() {
+        // Everything except activations is 20 bytes/param.
+        let m = qwen25_7b();
+        let w = Workload::new(1, 1, 512);
+        let f = Footprint::compute(&m, &w);
+        assert_eq!(f.total() - f.activations_bf16, 20 * m.params());
+    }
+
+    #[test]
+    fn activations_scale_linearly_with_context() {
+        // Fig. 2's driver: memory grows linearly in C.
+        let m = mistral_nemo_12b();
+        let f1 = Footprint::compute(&m, &Workload::new(2, 5, 4096));
+        let f2 = Footprint::compute(&m, &Workload::new(2, 5, 8192));
+        assert_eq!(f2.activations_bf16, 2 * f1.activations_bf16);
+        assert_eq!(f1.params_fp32, f2.params_fp32, "P terms don't move with C");
+    }
+
+    #[test]
+    fn activations_scale_linearly_with_batch_and_gpus() {
+        let m = mistral_nemo_12b();
+        let base = Footprint::compute(&m, &Workload::new(1, 1, 4096)).activations_bf16;
+        assert_eq!(
+            Footprint::compute(&m, &Workload::new(2, 1, 4096)).activations_bf16,
+            2 * base
+        );
+        assert_eq!(
+            Footprint::compute(&m, &Workload::new(1, 8, 4096)).activations_bf16,
+            8 * base
+        );
+    }
+
+    #[test]
+    fn twelve_b_at_32k_needs_several_hundred_gib() {
+        // Sanity vs Fig. 2: 12B, B=5, C=32K, 2 GPUs exceeds 512 GB DRAM.
+        let m = mistral_nemo_12b();
+        let f = Footprint::compute(&m, &Workload::new(2, 5, 32768));
+        assert!(f.total() > 300 * GIB, "total {}", f.total() / GIB);
+        // the paper's point: the C-dependent activation term has grown to
+        // the same order as the whole fixed 20·P cost...
+        assert!(f.activations_bf16 * 2 > f.latency_critical());
+        // ...and at the Fig. 3 batch scale (B=16) it dominates outright.
+        let f16 = Footprint::compute(&m, &Workload::new(2, 16, 32768));
+        assert!(f16.activations_bf16 > f16.latency_critical());
+    }
+
+    #[test]
+    fn class_split_partitions_total() {
+        let m = qwen25_7b();
+        let f = Footprint::compute(&m, &Workload::new(2, 16, 4096));
+        assert_eq!(f.latency_critical() + f.gpu_transfer(), f.total());
+        let by: u64 = f.by_class().iter().map(|(_, b)| b).sum();
+        assert_eq!(by, f.total());
+    }
+
+    #[test]
+    fn per_gpu_activations_divide_evenly() {
+        let m = qwen25_7b();
+        let w = Workload::new(2, 16, 4096);
+        let f = Footprint::compute(&m, &w);
+        assert_eq!(f.activations_per_gpu(&w) * 2, f.activations_bf16);
+    }
+}

@@ -1,0 +1,140 @@
+//! Transformer model descriptions: architecture presets, the Table-I
+//! system-memory footprint model, and the FLOPs model that feeds GPU
+//! compute times in the simulator.
+
+pub mod flops;
+pub mod footprint;
+pub mod presets;
+
+/// Decoder-only transformer architecture (GQA, gated MLP — the Qwen2.5 /
+/// Mistral-NeMo family shape).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Number of transformer blocks (Table I's `L`).
+    pub layers: usize,
+    /// Hidden size (`H`).
+    pub hidden: usize,
+    /// Attention heads.
+    pub heads: usize,
+    /// KV heads (grouped-query attention).
+    pub kv_heads: usize,
+    /// Per-head dimension.
+    pub head_dim: usize,
+    /// Gated-MLP intermediate size.
+    pub ffn_hidden: usize,
+    /// Vocabulary size (`V`).
+    pub vocab: usize,
+    /// Whether input embedding and LM head share weights.
+    pub tie_embeddings: bool,
+}
+
+impl ModelConfig {
+    /// Parameters in one attention block (q/k/v/o projections).
+    pub fn attn_params(&self) -> u64 {
+        let h = self.hidden as u64;
+        let qo = self.heads as u64 * self.head_dim as u64;
+        let kv = self.kv_heads as u64 * self.head_dim as u64;
+        h * qo      // Wq
+            + h * kv // Wk
+            + h * kv // Wv
+            + qo * h // Wo
+    }
+
+    /// Parameters in one gated MLP (gate, up, down).
+    pub fn mlp_params(&self) -> u64 {
+        3 * self.hidden as u64 * self.ffn_hidden as u64
+    }
+
+    /// Norm parameters per block (two RMSNorms).
+    pub fn norm_params(&self) -> u64 {
+        2 * self.hidden as u64
+    }
+
+    /// Parameters per transformer block.
+    pub fn block_params(&self) -> u64 {
+        self.attn_params() + self.mlp_params() + self.norm_params()
+    }
+
+    /// Embedding (and untied LM head) parameters, plus final norm.
+    pub fn embedding_params(&self) -> u64 {
+        let e = self.vocab as u64 * self.hidden as u64;
+        let head = if self.tie_embeddings { 0 } else { e };
+        e + head + self.hidden as u64
+    }
+
+    /// Total parameter count (Table I's `P`).
+    pub fn params(&self) -> u64 {
+        self.layers as u64 * self.block_params() + self.embedding_params()
+    }
+
+    /// Short human label like "12.2B".
+    pub fn params_label(&self) -> String {
+        let p = self.params() as f64;
+        if p >= 1e9 {
+            format!("{:.1}B", p / 1e9)
+        } else if p >= 1e6 {
+            format!("{:.1}M", p / 1e6)
+        } else {
+            format!("{:.0}K", p / 1e3)
+        }
+    }
+
+    pub fn validate(&self) {
+        assert!(self.layers > 0 && self.hidden > 0 && self.vocab > 0);
+        assert_eq!(
+            self.hidden % self.heads,
+            0,
+            "hidden must divide evenly into heads for this family"
+        );
+        assert!(
+            self.heads % self.kv_heads == 0,
+            "GQA requires kv_heads | heads"
+        );
+        assert!(self.head_dim > 0 && self.ffn_hidden > 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets::*;
+
+    #[test]
+    fn qwen25_7b_param_count() {
+        let m = qwen25_7b();
+        m.validate();
+        let p = m.params() as f64 / 1e9;
+        // Qwen2.5-7B is 7.6B total parameters.
+        assert!((7.4..7.8).contains(&p), "qwen param count {p}B");
+    }
+
+    #[test]
+    fn mistral_nemo_12b_param_count() {
+        let m = mistral_nemo_12b();
+        m.validate();
+        let p = m.params() as f64 / 1e9;
+        // Mistral NeMo is 12.2B total parameters.
+        assert!((11.9..12.6).contains(&p), "nemo param count {p}B");
+    }
+
+    #[test]
+    fn tiny_is_small() {
+        let m = tiny_20m();
+        m.validate();
+        assert!(m.params() < 40_000_000);
+    }
+
+    #[test]
+    fn block_params_dominated_by_mlp() {
+        let m = qwen25_7b();
+        assert!(m.mlp_params() > m.attn_params());
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        assert_eq!(by_name("7b").unwrap().name, qwen25_7b().name);
+        assert_eq!(by_name("12b").unwrap().name, mistral_nemo_12b().name);
+        assert!(by_name("tiny").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

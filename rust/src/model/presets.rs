@@ -1,0 +1,79 @@
+//! Model presets: the paper's two workloads (§V-A2) with their real
+//! architectural dimensions, plus tiny configs for the functional (PJRT)
+//! training path.
+
+use super::ModelConfig;
+
+/// Qwen2.5-7B (the paper's "7B" workload): 28 layers, H=3584, 28 heads /
+/// 4 KV heads, FFN 18944, vocab 152k, untied head → 7.6B params.
+pub fn qwen25_7b() -> ModelConfig {
+    ModelConfig {
+        name: "qwen2.5-7b".into(),
+        layers: 28,
+        hidden: 3584,
+        heads: 28,
+        kv_heads: 4,
+        head_dim: 128,
+        ffn_hidden: 18944,
+        vocab: 152_064,
+        tie_embeddings: false,
+    }
+}
+
+/// Mistral NeMo 12B (the paper's "12B" workload): 40 layers, H=5120,
+/// 32 heads / 8 KV heads, head_dim 128, FFN 14336, vocab 131k → 12.2B.
+pub fn mistral_nemo_12b() -> ModelConfig {
+    ModelConfig {
+        name: "mistral-nemo-12b".into(),
+        layers: 40,
+        hidden: 5120,
+        heads: 32,
+        kv_heads: 8,
+        head_dim: 128,
+        ffn_hidden: 14336,
+        vocab: 131_072,
+        tie_embeddings: false,
+    }
+}
+
+/// ~20M-parameter GPT for the real end-to-end training example
+/// (CPU-PJRT-sized; same code path as the big models).
+pub fn tiny_20m() -> ModelConfig {
+    ModelConfig {
+        name: "tiny-20m".into(),
+        layers: 6,
+        hidden: 384,
+        heads: 6,
+        kv_heads: 6,
+        head_dim: 64,
+        ffn_hidden: 1024,
+        vocab: 4096,
+        tie_embeddings: true,
+    }
+}
+
+/// ~2M-parameter GPT for fast integration tests.
+pub fn tiny_2m() -> ModelConfig {
+    ModelConfig {
+        name: "tiny-2m".into(),
+        layers: 2,
+        hidden: 128,
+        heads: 4,
+        kv_heads: 4,
+        head_dim: 32,
+        ffn_hidden: 384,
+        vocab: 1024,
+        tie_embeddings: true,
+    }
+}
+
+/// Resolve a CLI name.
+pub fn by_name(name: &str) -> Option<ModelConfig> {
+    match name {
+        "7b" | "qwen" | "qwen2.5-7b" => Some(qwen25_7b()),
+        "12b" | "nemo" | "mistral-nemo-12b" => Some(mistral_nemo_12b()),
+        "tiny" | "tiny-20m" => Some(tiny_20m()),
+        "tiny-2m" => Some(tiny_2m()),
+        _ => None,
+    }
+}

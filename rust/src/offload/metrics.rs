@@ -1,0 +1,88 @@
+//! Phase/throughput metrics for iteration runs (the Fig. 7/9/10 quantities).
+
+use crate::jobj;
+use crate::util::json::Json;
+
+/// Wall-clock breakdown of one training iteration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PhaseBreakdown {
+    /// Forward phase (parameter streaming + kernels + checkpoint offload).
+    pub fwd_s: f64,
+    /// Backward phase (reloads + recompute + backward + gradient offload).
+    pub bwd_s: f64,
+    /// CPU optimizer update + bf16 parameter cast.
+    pub step_s: f64,
+    /// End-to-end iteration time.
+    pub iter_s: f64,
+    /// Tokens processed this iteration (all GPUs).
+    pub tokens: u64,
+}
+
+impl PhaseBreakdown {
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.iter_s
+    }
+
+    /// Throughput relative to a baseline run (the paper's normalized %).
+    pub fn relative_to(&self, baseline: &PhaseBreakdown) -> f64 {
+        self.tokens_per_sec() / baseline.tokens_per_sec()
+    }
+
+    /// Phase share of the iteration, (fwd, bwd, step) fractions.
+    pub fn shares(&self) -> (f64, f64, f64) {
+        (
+            self.fwd_s / self.iter_s,
+            self.bwd_s / self.iter_s,
+            self.step_s / self.iter_s,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        jobj! {
+            "fwd_s" => self.fwd_s,
+            "bwd_s" => self.bwd_s,
+            "step_s" => self.step_s,
+            "iter_s" => self.iter_s,
+            "tokens" => self.tokens,
+            "tokens_per_sec" => self.tokens_per_sec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bd(fwd: f64, bwd: f64, step: f64, tokens: u64) -> PhaseBreakdown {
+        PhaseBreakdown {
+            fwd_s: fwd,
+            bwd_s: bwd,
+            step_s: step,
+            iter_s: fwd + bwd + step,
+            tokens,
+        }
+    }
+
+    #[test]
+    fn throughput_math() {
+        let b = bd(1.0, 2.0, 1.0, 8000);
+        assert!((b.tokens_per_sec() - 2000.0).abs() < 1e-9);
+        let base = bd(1.0, 1.0, 1.0, 8000);
+        assert!((b.relative_to(&base) - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let b = bd(0.5, 1.5, 0.25, 100);
+        let (f, w, s) = b.shares();
+        assert!((f + w + s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let b = bd(1.0, 2.0, 3.0, 42);
+        let j = b.to_json();
+        assert_eq!(j.path(&["tokens"]).unwrap().as_u64(), Some(42));
+        assert!(j.path(&["tokens_per_sec"]).unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! The CPU-offloading coordinator: the paper's Figure-1 workflow.
+//!
+//! * [`plan`] — Table-I region allocation under a placement policy,
+//! * [`iteration`] — one simulated training iteration with full
+//!   transfer/compute overlap over the fabric,
+//! * [`metrics`] — phase breakdowns and throughput reports,
+//! * [`sweep`] — (C, B) grid sweeps producing the Fig. 9/10 matrices.
+
+pub mod iteration;
+pub mod metrics;
+pub mod plan;
+pub mod sweep;
+
+pub use iteration::{simulate_iteration, simulate_iteration_traced};
+pub use metrics::PhaseBreakdown;
+pub use plan::{MemoryPlan, PlanError, RunConfig};
+pub use sweep::{sweep_grid, GridPoint, SweepResult};

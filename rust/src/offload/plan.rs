@@ -1,0 +1,332 @@
+//! Memory plan: allocate every Table-I region for a fine-tuning run under a
+//! chosen placement policy. The plan is what the iteration simulator and
+//! the functional trainer both consume — placement decisions are made once,
+//! here, exactly like the real system pins its arenas at startup.
+
+use crate::mem::{NumaAllocator, Policy, RegionId, RegionRequest, TensorClass};
+use crate::model::footprint::{Footprint, Workload};
+use crate::model::ModelConfig;
+use crate::sim::memmodel::{AccessMode, OptLayout};
+use crate::topology::{GpuId, NodeId, SystemTopology};
+
+/// Everything needed to run (or simulate) one fine-tuning configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: ModelConfig,
+    pub workload: Workload,
+    pub policy: Policy,
+    /// Blocks of parameters prefetched ahead of compute (ZeRO-Offload
+    /// overlaps the next block's H2D copy with the current block's kernel).
+    pub prefetch_depth: usize,
+}
+
+impl RunConfig {
+    pub fn new(model: ModelConfig, workload: Workload, policy: Policy) -> Self {
+        Self {
+            model,
+            workload,
+            policy,
+            prefetch_depth: 2,
+        }
+    }
+}
+
+/// The committed regions of one run.
+pub struct MemoryPlan<'t> {
+    pub alloc: NumaAllocator<'t>,
+    pub footprint: Footprint,
+    pub master: RegionId,
+    pub grads32: RegionId,
+    pub optstates: RegionId,
+    pub params16: RegionId,
+    pub grads16: RegionId,
+    /// One checkpointed-activation region per GPU.
+    pub activations: Vec<RegionId>,
+}
+
+/// Why a plan could not be built.
+#[derive(Debug, Clone)]
+pub struct PlanError {
+    pub message: String,
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+impl std::error::Error for PlanError {}
+
+impl<'t> MemoryPlan<'t> {
+    /// Allocate all regions. Latency-critical regions are requested first
+    /// so the CXL-aware policy reserves DRAM for them before bulk data
+    /// arrives (the real allocator pins arenas in the same order).
+    pub fn build(
+        topo: &'t SystemTopology,
+        cfg: &RunConfig,
+    ) -> Result<MemoryPlan<'t>, PlanError> {
+        let f = Footprint::compute(&cfg.model, &cfg.workload);
+        let mut alloc = NumaAllocator::new(topo, cfg.policy);
+        let mut get = |req: RegionRequest| {
+            alloc.alloc(req).map_err(|e| PlanError {
+                message: format!("{} (policy {})", e, cfg.policy.name()),
+            })
+        };
+        let master = get(RegionRequest::new(
+            "master-params",
+            TensorClass::MasterParams,
+            f.params_fp32,
+        ))?;
+        let grads32 = get(RegionRequest::new(
+            "grads-fp32",
+            TensorClass::Gradients32,
+            f.grads_fp32,
+        ))?;
+        let optstates = get(RegionRequest::new(
+            "optimizer-states",
+            TensorClass::OptimizerStates,
+            f.optimizer_fp32,
+        ))?;
+        let params16 = get(RegionRequest::new(
+            "params-bf16",
+            TensorClass::Params16,
+            f.params_bf16,
+        ))?;
+        let grads16 = get(RegionRequest::new(
+            "grads-bf16",
+            TensorClass::Grads16,
+            f.grads_bf16,
+        ))?;
+        let mut activations = Vec::with_capacity(cfg.workload.n_gpus);
+        for g in 0..cfg.workload.n_gpus {
+            activations.push(get(RegionRequest::new(
+                format!("activations-gpu{g}"),
+                TensorClass::Activations,
+                f.activations_per_gpu(&cfg.workload),
+            )
+            .for_gpu(GpuId(g)))?);
+        }
+        Ok(MemoryPlan {
+            alloc,
+            footprint: f,
+            master,
+            grads32,
+            optstates,
+            params16,
+            grads16,
+            activations,
+        })
+    }
+
+    /// Does this configuration fit at all (used by capacity sweeps)?
+    pub fn fits(topo: &SystemTopology, cfg: &RunConfig) -> bool {
+        MemoryPlan::build(topo, cfg).is_ok()
+    }
+
+    /// Merged placement of the optimizer's working set (fp32 P, G, O) as an
+    /// [`OptLayout`] for the STEP timing model.
+    pub fn opt_layout(&self) -> OptLayout {
+        let regions = [self.master, self.grads32, self.optstates];
+        let mut per_node: std::collections::BTreeMap<usize, u64> = Default::default();
+        let mut mode = AccessMode::Partitioned;
+        for id in regions {
+            let r = self.alloc.region(id).expect("plan region");
+            if r.placement.mode == AccessMode::Interleaved {
+                mode = AccessMode::Interleaved;
+            }
+            for (n, b) in &r.placement.parts {
+                *per_node.entry(n.0).or_insert(0) += *b;
+            }
+        }
+        let total: u64 = per_node.values().sum();
+        OptLayout {
+            parts: per_node
+                .into_iter()
+                .map(|(n, b)| (NodeId(n), b as f64 / total as f64))
+                .collect(),
+            mode,
+        }
+    }
+
+    /// Generic stream layout of a single region (for cast/copy timing).
+    pub fn region_layout(&self, id: RegionId) -> OptLayout {
+        let r = self.alloc.region(id).expect("plan region");
+        OptLayout {
+            parts: r.placement.fractions(),
+            mode: r.placement.mode,
+        }
+    }
+
+    /// Host-side node fractions a GPU's parameter stream reads from.
+    pub fn params16_fractions(&self) -> Vec<(NodeId, f64)> {
+        self.alloc
+            .region(self.params16)
+            .unwrap()
+            .placement
+            .fractions()
+    }
+
+    /// Host-side node fractions a GPU's gradient offload writes to.
+    pub fn grads16_fractions(&self) -> Vec<(NodeId, f64)> {
+        self.alloc
+            .region(self.grads16)
+            .unwrap()
+            .placement
+            .fractions()
+    }
+
+    /// Host-side node fractions of one GPU's activation checkpoints.
+    pub fn activation_fractions(&self, gpu: GpuId) -> Vec<(NodeId, f64)> {
+        self.alloc
+            .region(self.activations[gpu.0])
+            .unwrap()
+            .placement
+            .fractions()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets::{mistral_nemo_12b, qwen25_7b, tiny_2m};
+    use crate::topology::presets::{config_a, config_b, dev_tiny, with_dram_capacity};
+    use crate::util::units::GIB;
+
+    #[test]
+    fn baseline_plan_all_in_dram() {
+        let topo = config_a();
+        let cfg = RunConfig::new(qwen25_7b(), Workload::new(1, 8, 4096), Policy::DramOnly);
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        assert_eq!(plan.alloc.used_on(NodeId(1)), 0);
+        let layout = plan.opt_layout();
+        assert_eq!(layout.parts, vec![(NodeId(0), 1.0)]);
+    }
+
+    #[test]
+    fn paper_constrained_dram_forces_cxl_use() {
+        // §V-B: 128 GiB DRAM + 512 GiB AIC. 7.6B model: fp32 PGO = 121.7 GiB
+        // fits DRAM; bf16 P/G + activations land on CXL.
+        let topo = with_dram_capacity(config_a(), 128 * GIB);
+        let cfg = RunConfig::new(
+            qwen25_7b(),
+            Workload::new(1, 8, 4096),
+            Policy::CxlAware { striping: false },
+        );
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        let layout = plan.opt_layout();
+        assert_eq!(layout.parts, vec![(NodeId(0), 1.0)], "PGO stays in DRAM");
+        for (_, frac) in plan.params16_fractions() {
+            assert!(frac > 0.0);
+        }
+        let p16 = plan.params16_fractions();
+        assert!(p16.iter().all(|(n, _)| n.0 != 0), "bf16 params on CXL");
+    }
+
+    #[test]
+    fn naive_plan_puts_optimizer_data_on_cxl() {
+        let topo = with_dram_capacity(config_a(), 128 * GIB);
+        let cfg = RunConfig::new(
+            qwen25_7b(),
+            Workload::new(1, 8, 4096),
+            Policy::NaiveInterleave,
+        );
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        let layout = plan.opt_layout();
+        assert_eq!(layout.mode, AccessMode::Interleaved);
+        assert!(
+            layout.parts.iter().any(|(n, f)| n.0 == 1 && *f > 0.3),
+            "naive interleave must put a large PGO share on CXL: {layout:?}"
+        );
+    }
+
+    #[test]
+    fn dram_only_larger_than_capacity_fails() {
+        // 12B @ 32K context × 2 GPUs × batch 16 overflows 512 GB DRAM → the
+        // motivation for CXL (Fig. 2/3).
+        let topo = config_a();
+        let cfg = RunConfig::new(
+            mistral_nemo_12b(),
+            Workload::new(2, 16, 32768),
+            Policy::DramOnly,
+        );
+        assert!(!MemoryPlan::fits(&topo, &cfg));
+        // ...but the CXL-aware plan fits using the AIC.
+        let cfg2 = RunConfig {
+            policy: Policy::CxlAware { striping: false },
+            ..cfg
+        };
+        assert!(MemoryPlan::fits(&topo, &cfg2));
+    }
+
+    #[test]
+    fn striping_spreads_activations_over_both_aics() {
+        let topo = config_b();
+        let cfg = RunConfig::new(
+            mistral_nemo_12b(),
+            Workload::new(2, 16, 4096),
+            Policy::CxlAware { striping: true },
+        );
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        for g in 0..2 {
+            let fr = plan.activation_fractions(GpuId(g));
+            assert_eq!(fr.len(), 2, "gpu{g} activations should stripe: {fr:?}");
+            for (_, f) in fr {
+                assert!((f - 0.5).abs() < 0.01);
+            }
+        }
+    }
+
+    #[test]
+    fn affinity_mode_separates_gpus() {
+        let topo = config_b();
+        let cfg = RunConfig::new(
+            qwen25_7b(),
+            Workload::new(2, 8, 4096),
+            Policy::CxlAware { striping: false },
+        );
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        let f0 = plan.activation_fractions(GpuId(0));
+        let f1 = plan.activation_fractions(GpuId(1));
+        assert_ne!(f0[0].0, f1[0].0, "per-GPU AIC affinity expected");
+    }
+
+    #[test]
+    fn spilled_optimizer_layout_is_partitioned() {
+        // dev_tiny has 8 GiB DRAM; a 2M model with huge batch won't spill,
+        // so shrink DRAM instead: 12B fp32 PGO = 195 GiB > 128 GiB DRAM.
+        let topo = with_dram_capacity(config_b(), 128 * GIB);
+        let cfg = RunConfig::new(
+            mistral_nemo_12b(),
+            Workload::new(1, 1, 512),
+            Policy::CxlAware { striping: true },
+        );
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        let layout = plan.opt_layout();
+        assert_eq!(layout.mode, AccessMode::Partitioned);
+        assert!(layout.parts.len() >= 2, "spill expected: {layout:?}");
+        let dram_frac = layout
+            .parts
+            .iter()
+            .find(|(n, _)| n.0 == 0)
+            .map(|(_, f)| *f)
+            .unwrap_or(0.0);
+        assert!(dram_frac > 0.5, "most PGO still in DRAM: {dram_frac}");
+    }
+
+    #[test]
+    fn tiny_plan_on_dev_machine() {
+        let topo = dev_tiny();
+        for policy in [
+            Policy::DramOnly,
+            Policy::NaiveInterleave,
+            Policy::CxlAware { striping: false },
+            Policy::CxlAware { striping: true },
+        ] {
+            let cfg = RunConfig::new(tiny_2m(), Workload::new(2, 4, 512), policy);
+            let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+            assert_eq!(plan.activations.len(), 2);
+            let total_expected = plan.footprint.total();
+            assert_eq!(plan.alloc.total_used(), total_expected);
+        }
+    }
+}

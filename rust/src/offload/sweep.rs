@@ -1,0 +1,157 @@
+//! (context, batch) grid sweeps — the machinery behind Figures 9 and 10.
+//!
+//! For each grid cell the sweep simulates one iteration under each policy
+//! and normalizes throughput against the DRAM-only baseline, reproducing
+//! the paper's "% of baseline" bars.
+
+use super::iteration::simulate_iteration;
+use super::metrics::PhaseBreakdown;
+use super::plan::{MemoryPlan, RunConfig};
+use crate::mem::Policy;
+use crate::model::footprint::Workload;
+use crate::model::ModelConfig;
+use crate::topology::SystemTopology;
+
+/// One grid cell result.
+#[derive(Clone, Debug)]
+pub struct GridPoint {
+    pub context: usize,
+    pub batch: usize,
+    /// Breakdown per policy, ordered as the `policies` argument.
+    pub runs: Vec<Option<PhaseBreakdown>>,
+}
+
+/// A whole sweep.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub model: String,
+    pub n_gpus: usize,
+    pub policies: Vec<Policy>,
+    pub points: Vec<GridPoint>,
+}
+
+impl SweepResult {
+    /// Normalized throughput of `policy_idx` vs `baseline_idx` at a point
+    /// (None if either run did not fit in memory).
+    pub fn normalized(&self, point: &GridPoint, policy_idx: usize, baseline_idx: usize) -> Option<f64> {
+        let run = point.runs.get(policy_idx)?.as_ref()?;
+        let base = point.runs.get(baseline_idx)?.as_ref()?;
+        Some(run.relative_to(base))
+    }
+
+    /// (min, max) normalized throughput of a policy across all points that
+    /// have both runs — the paper's "X %–Y % of baseline" ranges.
+    pub fn normalized_range(&self, policy_idx: usize, baseline_idx: usize) -> Option<(f64, f64)> {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        let mut any = false;
+        for p in &self.points {
+            if let Some(r) = self.normalized(p, policy_idx, baseline_idx) {
+                lo = lo.min(r);
+                hi = hi.max(r);
+                any = true;
+            }
+        }
+        any.then_some((lo, hi))
+    }
+}
+
+/// Run the grid. Baseline runs use `baseline_topo` (all-DRAM host); policy
+/// runs use `policy_topo` (the DRAM-constrained + CXL host). Cells whose
+/// plan does not fit are recorded as `None` — exactly the cells the paper
+/// could not run without CXL.
+pub fn sweep_grid(
+    baseline_topo: &SystemTopology,
+    policy_topo: &SystemTopology,
+    model: &ModelConfig,
+    n_gpus: usize,
+    contexts: &[usize],
+    batches: &[usize],
+    policies: &[Policy],
+) -> SweepResult {
+    let mut points = Vec::new();
+    for &c in contexts {
+        for &b in batches {
+            let w = Workload::new(n_gpus, b, c);
+            let mut runs = Vec::with_capacity(policies.len());
+            for &policy in policies {
+                let topo = if policy == Policy::DramOnly {
+                    baseline_topo
+                } else {
+                    policy_topo
+                };
+                let cfg = RunConfig::new(model.clone(), w, policy);
+                let run = MemoryPlan::build(topo, &cfg)
+                    .ok()
+                    .map(|plan| simulate_iteration(topo, &cfg, &plan));
+                runs.push(run);
+            }
+            points.push(GridPoint {
+                context: c,
+                batch: b,
+                runs,
+            });
+        }
+    }
+    SweepResult {
+        model: model.name.clone(),
+        n_gpus,
+        policies: policies.to_vec(),
+        points,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets::qwen25_7b;
+    use crate::topology::presets::{config_a, with_dram_capacity};
+    use crate::util::units::GIB;
+
+    #[test]
+    fn fig9a_band_shape() {
+        // Small slice of the Fig. 9a grid; check the paper's ordering and
+        // that "ours" lands close to baseline.
+        let base = config_a();
+        let cxl = with_dram_capacity(config_a(), 128 * GIB);
+        let policies = [
+            Policy::DramOnly,
+            Policy::NaiveInterleave,
+            Policy::CxlAware { striping: false },
+        ];
+        let res = sweep_grid(
+            &base,
+            &cxl,
+            &qwen25_7b(),
+            1,
+            &[4096, 8192],
+            &[4, 8],
+            &policies,
+        );
+        assert_eq!(res.points.len(), 4);
+        let (nlo, nhi) = res.normalized_range(1, 0).unwrap();
+        let (olo, ohi) = res.normalized_range(2, 0).unwrap();
+        assert!(nhi < 1.0, "naive never reaches baseline: {nhi}");
+        assert!(olo > nlo, "ours lower bound beats naive's: {olo} vs {nlo}");
+        assert!(ohi > 0.94, "ours upper bound near baseline: {ohi}");
+    }
+
+    #[test]
+    fn unfittable_cells_are_none() {
+        // Force baseline OOM with a tiny DRAM-only machine.
+        let tiny_base = with_dram_capacity(config_a(), 8 * GIB);
+        let cxl = with_dram_capacity(config_a(), 128 * GIB);
+        let res = sweep_grid(
+            &tiny_base,
+            &cxl,
+            &qwen25_7b(),
+            1,
+            &[4096],
+            &[8],
+            &[Policy::DramOnly, Policy::CxlAware { striping: false }],
+        );
+        assert!(res.points[0].runs[0].is_none(), "baseline must OOM");
+        assert!(res.points[0].runs[1].is_some(), "CXL plan must fit");
+        assert!(res.normalized_range(1, 0).is_none());
+    }
+}

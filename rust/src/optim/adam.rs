@@ -1,0 +1,304 @@
+//! Real vectorized, multithreaded CPU Adam — the optimizer the coordinator
+//! executes after every iteration (ZeRO-Offload runs exactly this update on
+//! the host; DeepSpeed's version is OpenMP + AVX, ours is chunked
+//! `std::thread::scope` + an unrolled inner loop the compiler
+//! auto-vectorizes).
+//!
+//! The update, per element:
+//! ```text
+//! m ← β₁·m + (1-β₁)·g           v ← β₂·v + (1-β₂)·g²
+//! m̂ = m / (1-β₁ᵗ)               v̂ = v / (1-β₂ᵗ)
+//! p ← p − lr·( m̂ / (√v̂ + ε) + λ·p )
+//! ```
+
+use crate::util::threadpool::default_threads;
+
+/// Adam hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct AdamHp {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Decoupled weight decay (AdamW-style); 0 disables.
+    pub weight_decay: f32,
+}
+
+impl Default for AdamHp {
+    fn default() -> Self {
+        Self {
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+        }
+    }
+}
+
+/// Optimizer state for one parameter group (fp32 master copy lives with it).
+#[derive(Clone, Debug)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Completed steps (bias correction uses step+1 during the call).
+    pub step: u64,
+}
+
+impl AdamState {
+    pub fn new(n: usize) -> Self {
+        Self {
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.m.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.m.is_empty()
+    }
+}
+
+/// Single-threaded reference update over a slice range (also the oracle the
+/// parallel path is tested against).
+pub fn adam_update_serial(
+    params: &mut [f32],
+    grads: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    hp: &AdamHp,
+    step: u64, // 1-based
+) {
+    assert_eq!(params.len(), grads.len());
+    assert_eq!(params.len(), m.len());
+    assert_eq!(params.len(), v.len());
+    let bc1 = 1.0 - hp.beta1.powi(step as i32);
+    let bc2 = 1.0 - hp.beta2.powi(step as i32);
+    let inv_bc1 = 1.0 / bc1;
+    let inv_bc2 = 1.0 / bc2;
+    for i in 0..params.len() {
+        let g = grads[i];
+        let mi = hp.beta1 * m[i] + (1.0 - hp.beta1) * g;
+        let vi = hp.beta2 * v[i] + (1.0 - hp.beta2) * g * g;
+        m[i] = mi;
+        v[i] = vi;
+        let mhat = mi * inv_bc1;
+        let vhat = vi * inv_bc2;
+        params[i] -= hp.lr * (mhat / (vhat.sqrt() + hp.eps) + hp.weight_decay * params[i]);
+    }
+}
+
+/// The optimized hot path over one chunk.
+///
+/// §Perf note (EXPERIMENTS.md): an earlier manually-unrolled-by-8 variant
+/// was 20 % SLOWER than this plain zipped loop under
+/// `-C target-cpu=native` — the sub-slice reborrows blocked LLVM's
+/// vectorizer, while the iterator form below compiles to clean packed
+/// AVX (vsqrtps + vdivps) with no bounds checks. Measure before unrolling.
+#[inline]
+pub fn adam_update_chunk(
+    params: &mut [f32],
+    grads: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    hp: &AdamHp,
+    inv_bc1: f32,
+    inv_bc2: f32,
+) {
+    let n = params.len();
+    assert!(grads.len() == n && m.len() == n && v.len() == n);
+    let lr = hp.lr;
+    let b1 = hp.beta1;
+    let ob1 = 1.0 - hp.beta1;
+    let b2 = hp.beta2;
+    let ob2 = 1.0 - hp.beta2;
+    let eps = hp.eps;
+    let wd = hp.weight_decay;
+    for (((p, &g), mi), vi) in params
+        .iter_mut()
+        .zip(grads.iter())
+        .zip(m.iter_mut())
+        .zip(v.iter_mut())
+    {
+        let mn = b1 * *mi + ob1 * g;
+        let vn = b2 * *vi + ob2 * g * g;
+        *mi = mn;
+        *vi = vn;
+        let mhat = mn * inv_bc1;
+        let vhat = vn * inv_bc2;
+        *p -= lr * (mhat / (vhat.sqrt() + eps) + wd * *p);
+    }
+}
+
+/// Parallel Adam step: advances `state.step`, updates `params` in place.
+pub fn adam_step(
+    params: &mut [f32],
+    grads: &[f32],
+    state: &mut AdamState,
+    hp: &AdamHp,
+    nthreads: usize,
+) {
+    assert_eq!(params.len(), grads.len(), "param/grad length mismatch");
+    assert_eq!(params.len(), state.len(), "param/state length mismatch");
+    state.step += 1;
+    let step = state.step;
+    let bc1 = 1.0 - hp.beta1.powi(step as i32);
+    let bc2 = 1.0 - hp.beta2.powi(step as i32);
+    let inv_bc1 = 1.0 / bc1;
+    let inv_bc2 = 1.0 / bc2;
+    let n = params.len();
+    if n == 0 {
+        return;
+    }
+    let nthreads = nthreads.max(1).min(n);
+    if nthreads == 1 {
+        adam_update_chunk(params, grads, &mut state.m, &mut state.v, hp, inv_bc1, inv_bc2);
+        return;
+    }
+    // Split all four slices identically and fan out.
+    let base = n / nthreads;
+    let extra = n % nthreads;
+    std::thread::scope(|scope| {
+        let mut p_rest = params;
+        let mut g_rest = grads;
+        let mut m_rest = state.m.as_mut_slice();
+        let mut v_rest = state.v.as_mut_slice();
+        for t in 0..nthreads {
+            let len = base + usize::from(t < extra);
+            let (p, pr) = p_rest.split_at_mut(len);
+            let (g, gr) = g_rest.split_at(len);
+            let (m, mr) = m_rest.split_at_mut(len);
+            let (v, vr) = v_rest.split_at_mut(len);
+            p_rest = pr;
+            g_rest = gr;
+            m_rest = mr;
+            v_rest = vr;
+            scope.spawn(move || {
+                adam_update_chunk(p, g, m, v, hp, inv_bc1, inv_bc2);
+            });
+        }
+    });
+}
+
+/// Convenience wrapper with the default thread count.
+pub fn adam_step_auto(params: &mut [f32], grads: &[f32], state: &mut AdamState, hp: &AdamHp) {
+    adam_step(params, grads, state, hp, default_threads());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256pp;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seeded(seed);
+        (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn parallel_matches_serial_exactly() {
+        let n = 10_007;
+        let hp = AdamHp {
+            weight_decay: 0.01,
+            ..Default::default()
+        };
+        let grads = randv(n, 1);
+        let mut p1 = randv(n, 2);
+        let mut p2 = p1.clone();
+        let mut s1 = AdamState::new(n);
+        let mut s2 = AdamState::new(n);
+        for step in 1..=3 {
+            adam_update_serial(&mut p1, &grads, &mut s1.m, &mut s1.v, &hp, step);
+            s1.step = step;
+            adam_step(&mut p2, &grads, &mut s2, &hp, 8);
+        }
+        // chunked math is element-local → bitwise identical
+        assert_eq!(p1, p2);
+        assert_eq!(s1.m, s2.m);
+        assert_eq!(s1.v, s2.v);
+    }
+
+    #[test]
+    fn descends_a_quadratic() {
+        // minimize f(p) = Σ (p - 3)²; gradient = 2(p-3)
+        let n = 256;
+        let hp = AdamHp {
+            lr: 0.05,
+            ..Default::default()
+        };
+        let mut p = vec![0.0f32; n];
+        let mut st = AdamState::new(n);
+        for _ in 0..500 {
+            let g: Vec<f32> = p.iter().map(|x| 2.0 * (x - 3.0)).collect();
+            adam_step(&mut p, &g, &mut st, &hp, 4);
+        }
+        for &x in &p {
+            assert!((x - 3.0).abs() < 0.05, "param {x} did not converge");
+        }
+    }
+
+    #[test]
+    fn bias_correction_first_step() {
+        // After one step with constant gradient g, Adam moves by ≈ lr·sign(g)
+        // (bias correction makes m̂ = g, v̂ = g²).
+        let hp = AdamHp::default();
+        let mut p = vec![1.0f32; 4];
+        let g = vec![0.5f32; 4];
+        let mut st = AdamState::new(4);
+        adam_step(&mut p, &g, &mut st, &hp, 1);
+        for &x in &p {
+            assert!(
+                (x - (1.0 - hp.lr)).abs() < 1e-4,
+                "first step should be ≈ -lr: {x}"
+            );
+        }
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params_with_zero_grad() {
+        let hp = AdamHp {
+            lr: 0.1,
+            weight_decay: 0.5,
+            ..Default::default()
+        };
+        let mut p = vec![2.0f32; 8];
+        let g = vec![0.0f32; 8];
+        let mut st = AdamState::new(8);
+        adam_step(&mut p, &g, &mut st, &hp, 2);
+        for &x in &p {
+            assert!((x - (2.0 - 0.1 * 0.5 * 2.0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn step_counter_advances() {
+        let mut st = AdamState::new(4);
+        let mut p = vec![0.0f32; 4];
+        let g = vec![1.0f32; 4];
+        adam_step(&mut p, &g, &mut st, &AdamHp::default(), 2);
+        adam_step(&mut p, &g, &mut st, &AdamHp::default(), 2);
+        assert_eq!(st.step, 2);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let mut st = AdamState::new(0);
+        let mut p: Vec<f32> = vec![];
+        adam_step(&mut p, &[], &mut st, &AdamHp::default(), 8);
+        let mut st3 = AdamState::new(3);
+        let mut p3 = vec![1.0f32; 3];
+        adam_step(&mut p3, &[0.1, 0.2, 0.3], &mut st3, &AdamHp::default(), 64);
+        assert!(p3.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        let mut st = AdamState::new(4);
+        let mut p = vec![0.0f32; 4];
+        adam_step(&mut p, &[1.0; 3], &mut st, &AdamHp::default(), 1);
+    }
+}

@@ -1,0 +1,9 @@
+//! CPU optimizer: the real vectorized Adam the coordinator runs on the
+//! host (L3 owns the optimizer, exactly as ZeRO-Offload does), plus the
+//! placed-tensor wrapper that ties parameter groups to memory regions.
+
+pub mod adam;
+pub mod group;
+
+pub use adam::{adam_step, adam_step_auto, AdamHp, AdamState};
+pub use group::ParamGroup;

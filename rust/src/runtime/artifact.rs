@@ -1,0 +1,195 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! lowers the JAX/Pallas model to HLO text) and the Rust runtime.
+//!
+//! `artifacts/manifest.json` maps entry-point names to HLO files plus input
+//! and output specs (flattened pytree leaves, in call order):
+//!
+//! ```json
+//! {
+//!   "model": {"layers": 2, "hidden": 128, ...},
+//!   "entries": {
+//!     "block_fwd": {
+//!       "file": "block_fwd.hlo.txt",
+//!       "inputs":  [{"name": "x", "shape": [4, 64, 128], "dtype": "f32"}, ...],
+//!       "outputs": [{"name": "y", "shape": [4, 64, 128], "dtype": "f32"}]
+//!     }
+//!   }
+//! }
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor spec (flattened leaf).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered entry point.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    /// Model metadata (architecture dims used at lowering time).
+    pub model_meta: BTreeMap<String, f64>,
+    pub entries: BTreeMap<String, Entry>,
+}
+
+fn parse_spec(j: &Json) -> Result<TensorSpec> {
+    let name = j
+        .path(&["name"])
+        .and_then(Json::as_str)
+        .unwrap_or("?")
+        .to_string();
+    let shape = j
+        .path(&["shape"])
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = j
+        .path(&["dtype"])
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("tensor spec missing dtype"))?
+        .to_string();
+    Ok(TensorSpec { name, shape, dtype })
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let mut model_meta = BTreeMap::new();
+        if let Some(meta) = j.path(&["model"]).and_then(Json::as_obj) {
+            for (k, v) in meta.iter() {
+                if let Some(n) = v.as_f64() {
+                    model_meta.insert(k.to_string(), n);
+                }
+            }
+        }
+        let entries_json = j
+            .path(&["entries"])
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest.json missing 'entries'"))?;
+        let mut entries = BTreeMap::new();
+        for (name, e) in entries_json.iter() {
+            let file = e
+                .path(&["file"])
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry {name} missing file"))?;
+            let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+                e.path(&[key])
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry {name} missing {key}"))?
+                    .iter()
+                    .map(parse_spec)
+                    .collect()
+            };
+            entries.insert(
+                name.to_string(),
+                Entry {
+                    name: name.to_string(),
+                    file: dir.join(file),
+                    inputs: parse_list("inputs")?,
+                    outputs: parse_list("outputs")?,
+                },
+            );
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(Manifest {
+            dir,
+            model_meta,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact entry {name:?} (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.model_meta
+            .get(key)
+            .map(|v| *v as usize)
+            .ok_or_else(|| anyhow!("manifest model meta missing {key:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"layers": 2, "hidden": 128, "vocab": 1024},
+      "entries": {
+        "block_fwd": {
+          "file": "block_fwd.hlo.txt",
+          "inputs": [
+            {"name": "x", "shape": [4, 64, 128], "dtype": "f32"},
+            {"name": "wq", "shape": [128, 128], "dtype": "f32"}
+          ],
+          "outputs": [{"name": "y", "shape": [4, 64, 128], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.meta_usize("layers").unwrap(), 2);
+        let e = m.entry("block_fwd").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![4, 64, 128]);
+        assert_eq!(e.inputs[0].element_count(), 4 * 64 * 128);
+        assert_eq!(e.file, PathBuf::from("/tmp/a/block_fwd.hlo.txt"));
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_empty_and_malformed() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse(r#"{"entries": {}}"#, PathBuf::new()).is_err());
+        assert!(Manifest::parse("not json", PathBuf::new()).is_err());
+        let missing_shape = r#"{"entries": {"e": {"file": "f",
+            "inputs": [{"name": "x", "dtype": "f32"}], "outputs": []}}}"#;
+        assert!(Manifest::parse(missing_shape, PathBuf::new()).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them on
+//! the CPU PJRT client. This is the only place Python-authored compute
+//! enters the Rust process — as compiled executables, never as Python.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! re-assigns ids (see /opt/xla-example/README.md and DESIGN.md §3).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{Entry, Manifest};
+
+/// A host tensor: f32 data + shape (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl HostTensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "data/shape mismatch"
+        );
+        Self { data, shape }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self {
+            data: vec![0.0; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self {
+            data: vec![v],
+            shape: vec![],
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Integer tensor (token ids / labels) — lowered as i32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensorI32 {
+    pub data: Vec<i32>,
+    pub shape: Vec<usize>,
+}
+
+impl HostTensorI32 {
+    pub fn new(data: Vec<i32>, shape: Vec<usize>) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Self { data, shape }
+    }
+}
+
+/// An argument to an entry point.
+#[derive(Clone, Debug)]
+pub enum Arg {
+    F32(HostTensor),
+    I32(HostTensorI32),
+}
+
+impl Arg {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Arg::F32(t) => {
+                let lit = xla::Literal::vec1(&t.data);
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                Ok(lit.reshape(&dims)?)
+            }
+            Arg::I32(t) => {
+                let lit = xla::Literal::vec1(&t.data);
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                Ok(lit.reshape(&dims)?)
+            }
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Arg::F32(t) => &t.shape,
+            Arg::I32(t) => &t.shape,
+        }
+    }
+}
+
+impl From<HostTensor> for Arg {
+    fn from(t: HostTensor) -> Self {
+        Arg::F32(t)
+    }
+}
+impl From<HostTensorI32> for Arg {
+    fn from(t: HostTensorI32) -> Self {
+        Arg::I32(t)
+    }
+}
+
+/// The runtime: one PJRT CPU client + all compiled entry points.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load every entry in an artifact directory and compile it.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for (name, entry) in &manifest.entries {
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .with_context(|| format!("parsing HLO text {}", entry.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling entry {name}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Runtime {
+            client,
+            manifest,
+            exes,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn entry_checked(&self, name: &str, args: &[Arg]) -> Result<&Entry> {
+        let entry = self.manifest.entry(name)?;
+        if args.len() != entry.inputs.len() {
+            bail!(
+                "entry {name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                args.len()
+            );
+        }
+        for (i, (a, spec)) in args.iter().zip(&entry.inputs).enumerate() {
+            if a.shape() != spec.shape.as_slice() {
+                bail!(
+                    "entry {name} input {i} ({}): shape {:?} != expected {:?}",
+                    spec.name,
+                    a.shape(),
+                    spec.shape
+                );
+            }
+        }
+        Ok(entry)
+    }
+
+    /// Execute an entry point; returns its outputs as f32 host tensors
+    /// (all our model outputs are f32; losses are scalars).
+    pub fn exec(&self, name: &str, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let entry = self.entry_checked(name, args)?;
+        let exe = self.exes.get(name).expect("compiled with manifest");
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(Arg::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        // aot.py lowers with return_tuple=True → root is always a tuple.
+        let parts = root.to_tuple()?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "entry {name}: manifest promises {} outputs, executable returned {}",
+                entry.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&entry.outputs) {
+            let data: Vec<f32> = lit
+                .to_vec()
+                .with_context(|| format!("reading output {} of {name}", spec.name))?;
+            if data.len() != spec.element_count() {
+                bail!(
+                    "entry {name} output {}: got {} elements, expected {}",
+                    spec.name,
+                    data.len(),
+                    spec.element_count()
+                );
+            }
+            out.push(HostTensor::new(data, spec.shape.clone()));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_validates_shape() {
+        let t = HostTensor::new(vec![1.0; 6], vec![2, 3]);
+        assert_eq!(t.element_count(), 6);
+        let z = HostTensor::zeros(&[4, 4]);
+        assert_eq!(z.data.len(), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "data/shape mismatch")]
+    fn host_tensor_rejects_bad_shape() {
+        HostTensor::new(vec![1.0; 5], vec![2, 3]);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let s = HostTensor::scalar(2.5);
+        assert!(s.shape.is_empty());
+        assert_eq!(s.element_count(), 1);
+    }
+
+    // Execution against real artifacts is covered by rust/tests/ (needs
+    // `make artifacts` to have run).
+}

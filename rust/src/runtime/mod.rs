@@ -1,0 +1,8 @@
+//! PJRT runtime layer: artifact manifest + executable loading/execution.
+//! See `python/compile/aot.py` for the producer side.
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{Entry, Manifest, TensorSpec};
+pub use engine::{Arg, HostTensor, HostTensorI32, Runtime};

@@ -1,0 +1,293 @@
+//! CPU-side memory timing model for the optimizer step (Fig. 5 / Fig. 7
+//! STEP phase).
+//!
+//! The CPU Adam update streams, per element: 16 B read (fp32 param + grad +
+//! two moments are 16 B resident, re-read each step) and 12 B written
+//! (param + both moments). The phase is bounded below by a vectorized
+//! compute floor and above by the sustained read-modify-write bandwidth of
+//! whichever memory node(s) hold the data:
+//!
+//! `t_elem = max(compute_floor, miss_ramp(W) · t_mem(layout))`
+//!
+//! * `compute_floor` — cache-resident vectorized update cost (topology
+//!   calibration; all optimizer threads active).
+//! * `miss_ramp(W)` — fraction of traffic actually served by memory, a
+//!   log-linear ramp from `W = LLC` (everything stays cached across steps)
+//!   to `W = 8·LLC` (pure streaming). This reproduces Fig. 5's knee: CXL
+//!   placement is *free* below ~10–20 M elements and ~4× above.
+//! * `t_mem(layout)` — per-element memory time of the placement:
+//!   - **Interleaved** (naive `numactl --interleave`): page-granular
+//!     round-robin means every scan thread alternates fast and slow pages;
+//!     per-node times *add*.
+//!   - **Partitioned** (multi-AIC striping, Fig. 8c): contiguous shards
+//!     with threads pinned per shard; shards drain in parallel so the
+//!     *slowest shard* sets the time, and sizing shards ∝ bandwidth
+//!     recovers the aggregate of all channels.
+
+use crate::topology::{NodeId, SystemTopology};
+
+/// Bytes read per Adam element (fp32 p, g, m, v).
+pub const ADAM_READ_BYTES: f64 = 16.0;
+/// Bytes written per Adam element (fp32 p, m, v).
+pub const ADAM_WRITE_BYTES: f64 = 12.0;
+/// Total bytes moved per element per step.
+pub const ADAM_BYTES_PER_ELEM: f64 = ADAM_READ_BYTES + ADAM_WRITE_BYTES;
+/// Resident working-set bytes per element.
+pub const ADAM_RESIDENT_BYTES: f64 = 16.0;
+
+/// How a multi-node layout is accessed by the optimizer threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessMode {
+    /// Page-granular round-robin (the kernel's default interleave policy).
+    Interleaved,
+    /// Contiguous shards with thread affinity (our striping).
+    Partitioned,
+}
+
+/// Placement of the optimizer working set: fractions per node, summing to 1.
+#[derive(Clone, Debug)]
+pub struct OptLayout {
+    pub parts: Vec<(NodeId, f64)>,
+    pub mode: AccessMode,
+}
+
+impl OptLayout {
+    pub fn dram_only() -> Self {
+        Self {
+            parts: vec![(NodeId(0), 1.0)],
+            mode: AccessMode::Partitioned,
+        }
+    }
+
+    pub fn single_node(node: NodeId) -> Self {
+        Self {
+            parts: vec![(node, 1.0)],
+            mode: AccessMode::Partitioned,
+        }
+    }
+
+    pub fn interleave(nodes: &[NodeId]) -> Self {
+        let f = 1.0 / nodes.len() as f64;
+        Self {
+            parts: nodes.iter().map(|&n| (n, f)).collect(),
+            mode: AccessMode::Interleaved,
+        }
+    }
+
+    /// Bandwidth-proportional partitioning across `nodes` (Fig. 8c).
+    pub fn striped_proportional(topo: &SystemTopology, nodes: &[NodeId]) -> Self {
+        let total: f64 = nodes.iter().map(|&n| topo.node(n).cpu_stream_bw).sum();
+        Self {
+            parts: nodes
+                .iter()
+                .map(|&n| (n, topo.node(n).cpu_stream_bw / total))
+                .collect(),
+            mode: AccessMode::Partitioned,
+        }
+    }
+
+    pub fn validate(&self) {
+        let total: f64 = self.parts.iter().map(|(_, f)| *f).sum();
+        assert!(
+            (total - 1.0).abs() < 1e-6,
+            "layout fractions sum to {total}, expected 1"
+        );
+        for (_, f) in &self.parts {
+            assert!(*f >= 0.0);
+        }
+    }
+}
+
+/// The calibrated optimizer timing model.
+pub struct OptimizerMemModel<'a> {
+    topo: &'a SystemTopology,
+}
+
+impl<'a> OptimizerMemModel<'a> {
+    pub fn new(topo: &'a SystemTopology) -> Self {
+        Self { topo }
+    }
+
+    /// Fraction of optimizer traffic served from memory (vs caches) for a
+    /// resident working set of `w_bytes`. Log-linear ramp LLC → 8·LLC.
+    pub fn miss_ramp(&self, w_bytes: f64) -> f64 {
+        let llc = self.topo.cpu.llc_bytes as f64;
+        if w_bytes <= llc {
+            return 0.0;
+        }
+        let x = (w_bytes / llc).log2() / 3.0; // 8×LLC → log2(8)/3 = 1
+        x.clamp(0.0, 1.0)
+    }
+
+    /// Per-element memory service time (seconds) of a layout at full miss.
+    fn mem_time_per_elem(&self, layout: &OptLayout) -> f64 {
+        layout.validate();
+        match layout.mode {
+            AccessMode::Interleaved => layout
+                .parts
+                .iter()
+                .map(|(n, f)| f * ADAM_BYTES_PER_ELEM / self.topo.node(*n).cpu_stream_bw)
+                .sum(),
+            AccessMode::Partitioned => layout
+                .parts
+                .iter()
+                .map(|(n, f)| f * ADAM_BYTES_PER_ELEM / self.topo.node(*n).cpu_stream_bw)
+                .fold(0.0, f64::max),
+        }
+    }
+
+    /// Wall-clock seconds for one optimizer step over `elements` Adam
+    /// elements placed as `layout`.
+    pub fn step_time(&self, elements: u64, layout: &OptLayout) -> f64 {
+        let n = elements as f64;
+        let w = n * ADAM_RESIDENT_BYTES;
+        let compute = self.topo.cpu.adam_compute_ns_per_elem * 1e-9;
+        let mem = self.miss_ramp(w) * self.mem_time_per_elem(layout);
+        n * compute.max(mem)
+    }
+
+    /// Effective elements/second for reporting.
+    pub fn throughput(&self, elements: u64, layout: &OptLayout) -> f64 {
+        elements as f64 / self.step_time(elements, layout)
+    }
+
+    /// Pure streaming time (no reuse, always memory-bound) for `bytes`
+    /// spread as `layout` — used for the post-step fp32→bf16 parameter
+    /// cast and CPU-side gradient upcast.
+    pub fn stream_time(&self, bytes: f64, layout: &OptLayout) -> f64 {
+        layout.validate();
+        match layout.mode {
+            AccessMode::Interleaved => layout
+                .parts
+                .iter()
+                .map(|(n, f)| f * bytes / self.topo.node(*n).cpu_stream_bw)
+                .sum(),
+            AccessMode::Partitioned => layout
+                .parts
+                .iter()
+                .map(|(n, f)| f * bytes / self.topo.node(*n).cpu_stream_bw)
+                .fold(0.0, f64::max),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets::config_a;
+
+    fn cxl0() -> NodeId {
+        NodeId(1)
+    }
+
+    #[test]
+    fn small_n_parity_between_dram_and_cxl() {
+        // Fig. 5 left region: below the cache knee, placement is irrelevant.
+        let topo = config_a();
+        let m = OptimizerMemModel::new(&topo);
+        let n = 2_000_000; // 32 MB resident < 108 MB LLC
+        let t_dram = m.step_time(n, &OptLayout::dram_only());
+        let t_cxl = m.step_time(n, &OptLayout::single_node(cxl0()));
+        assert!((t_cxl / t_dram - 1.0).abs() < 1e-9, "small-N parity broken");
+    }
+
+    #[test]
+    fn large_n_cxl_roughly_4x() {
+        // Fig. 5 right region: ≥ ~4× inflation for CXL-resident data.
+        let topo = config_a();
+        let m = OptimizerMemModel::new(&topo);
+        let n = 200_000_000; // 3.2 GB resident ≫ 8×LLC
+        let ratio = m.step_time(n, &OptLayout::single_node(cxl0()))
+            / m.step_time(n, &OptLayout::dram_only());
+        assert!((3.2..4.8).contains(&ratio), "large-N CXL ratio {ratio}");
+    }
+
+    #[test]
+    fn knee_lands_in_tens_of_millions() {
+        // The divergence point (CXL ≥ 1.5× DRAM) should fall in the
+        // 5–40 M element band ("roughly 20 million" in §III-A).
+        let topo = config_a();
+        let m = OptimizerMemModel::new(&topo);
+        let mut knee = None;
+        for exp in 0..400 {
+            let n = (1e6 * 1.04f64.powi(exp)) as u64;
+            let r = m.step_time(n, &OptLayout::single_node(cxl0()))
+                / m.step_time(n, &OptLayout::dram_only());
+            if r >= 1.5 {
+                knee = Some(n);
+                break;
+            }
+        }
+        let knee = knee.expect("CXL never diverged");
+        assert!(
+            (5_000_000..40_000_000).contains(&knee),
+            "knee at {knee} elements"
+        );
+    }
+
+    #[test]
+    fn dram_stays_near_compute_floor() {
+        // Fig. 5 DRAM line is nearly flat in time-per-element.
+        let topo = config_a();
+        let m = OptimizerMemModel::new(&topo);
+        let t_small = m.step_time(1_000_000, &OptLayout::dram_only()) / 1e6;
+        let t_large = m.step_time(500_000_000, &OptLayout::dram_only()) / 5e8;
+        assert!(t_large / t_small < 1.2, "DRAM per-element time rose {}x", t_large / t_small);
+    }
+
+    #[test]
+    fn interleave_worse_than_stripe_at_scale() {
+        // Fig. 8c: bandwidth-proportional striping beats naive interleave.
+        let topo = config_a();
+        let m = OptimizerMemModel::new(&topo);
+        let nodes = [NodeId(0), cxl0()];
+        let n = 400_000_000;
+        let t_inter = m.step_time(n, &OptLayout::interleave(&nodes));
+        let t_stripe = m.step_time(n, &OptLayout::striped_proportional(&topo, &nodes));
+        assert!(
+            t_stripe < t_inter,
+            "stripe {t_stripe} should beat interleave {t_inter}"
+        );
+    }
+
+    #[test]
+    fn proportional_stripe_matches_dram_at_scale() {
+        // Fig. 10a: with shards ∝ bandwidth the slow node never dominates;
+        // the step stays at (or below) the DRAM-only time.
+        let topo = config_a();
+        let m = OptimizerMemModel::new(&topo);
+        let nodes = [NodeId(0), cxl0()];
+        let n = 400_000_000;
+        let t_stripe = m.step_time(n, &OptLayout::striped_proportional(&topo, &nodes));
+        let t_dram = m.step_time(n, &OptLayout::dram_only());
+        assert!(t_stripe <= t_dram * 1.01, "stripe {t_stripe} vs dram {t_dram}");
+    }
+
+    #[test]
+    fn miss_ramp_monotone_and_bounded() {
+        let topo = config_a();
+        let m = OptimizerMemModel::new(&topo);
+        let llc = topo.cpu.llc_bytes as f64;
+        assert_eq!(m.miss_ramp(llc * 0.5), 0.0);
+        assert_eq!(m.miss_ramp(llc), 0.0);
+        let mut last = 0.0;
+        for mult in [1.1, 2.0, 4.0, 8.0, 16.0] {
+            let r = m.miss_ramp(llc * mult);
+            assert!(r >= last && (0.0..=1.0).contains(&r));
+            last = r;
+        }
+        assert_eq!(m.miss_ramp(llc * 8.0), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "fractions sum")]
+    fn layout_fractions_validated() {
+        let topo = config_a();
+        let m = OptimizerMemModel::new(&topo);
+        let bad = OptLayout {
+            parts: vec![(NodeId(0), 0.3)],
+            mode: AccessMode::Partitioned,
+        };
+        m.step_time(1000, &bad);
+    }
+}

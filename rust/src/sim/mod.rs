@@ -1,0 +1,19 @@
+//! Discrete-event simulation of the memory system and interconnect.
+//!
+//! Two complementary models:
+//! * [`flow`] + [`fabric`] — flow-level DES with max-min fair bandwidth
+//!   sharing for all DMA traffic (GPU loads/offloads, Fig. 6 contention),
+//! * [`memmodel`] — calibrated timing of the CPU-side optimizer step as a
+//!   function of data placement (Fig. 5 / Fig. 7 STEP).
+//!
+//! Calibration constants live in `topology::presets`; DESIGN.md §6 lists
+//! their sources.
+
+pub mod fabric;
+pub mod flow;
+pub mod memmodel;
+pub mod trace;
+
+pub use fabric::{Dir, Fabric, DMA_SETUP_S};
+pub use flow::{CapacityModel, Event, FlowId, FlowSim, FlowStats, ResourceId, SimTime, TimerId};
+pub use memmodel::{AccessMode, OptLayout, OptimizerMemModel};

@@ -1,0 +1,147 @@
+//! Execution-trace recording for simulated iterations, exported as Chrome
+//! trace JSON (`chrome://tracing` / Perfetto). Invaluable for *seeing* the
+//! overlap structure: parameter prefetch lanes, checkpoint offloads,
+//! per-GPU compute, the STEP tail — and how contention stretches them.
+
+use crate::jobj;
+use crate::util::json::{Json, JsonObj};
+
+/// One completed span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    /// Human label, e.g. "fwd-param-load b=3".
+    pub name: String,
+    /// Track (Chrome trace "tid"), e.g. "gpu0/h2d".
+    pub lane: String,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+impl Span {
+    pub fn duration(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
+/// Collects spans during a simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct TraceRecorder {
+    spans: Vec<Span>,
+}
+
+impl TraceRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, name: impl Into<String>, lane: impl Into<String>, start_s: f64, end_s: f64) {
+        let (name, lane) = (name.into(), lane.into());
+        debug_assert!(end_s >= start_s, "span {name} ends before it starts");
+        self.spans.push(Span {
+            name,
+            lane,
+            start_s,
+            end_s,
+        });
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Total span time per lane (utilization summary).
+    pub fn lane_busy(&self) -> Vec<(String, f64)> {
+        let mut acc: std::collections::BTreeMap<String, f64> = Default::default();
+        for s in &self.spans {
+            *acc.entry(s.lane.clone()).or_insert(0.0) += s.duration();
+        }
+        acc.into_iter().collect()
+    }
+
+    /// Chrome trace event format (JSON array of "X" complete events;
+    /// timestamps in microseconds as the format requires).
+    pub fn to_chrome_trace(&self) -> Json {
+        let mut events = Vec::with_capacity(self.spans.len());
+        // stable lane ordering → stable tids
+        let mut lanes: Vec<&str> = self.spans.iter().map(|s| s.lane.as_str()).collect();
+        lanes.sort_unstable();
+        lanes.dedup();
+        let tid_of = |lane: &str| lanes.binary_search(&lane).unwrap() as u64;
+        for s in &self.spans {
+            let mut o = JsonObj::new();
+            o.set("name", s.name.as_str());
+            o.set("ph", "X");
+            o.set("ts", s.start_s * 1e6);
+            o.set("dur", s.duration() * 1e6);
+            o.set("pid", 0u64);
+            o.set("tid", tid_of(&s.lane));
+            events.push(Json::Obj(o));
+        }
+        // thread-name metadata so lanes are labeled in the viewer
+        for lane in &lanes {
+            let mut o = JsonObj::new();
+            o.set("name", "thread_name");
+            o.set("ph", "M");
+            o.set("pid", 0u64);
+            o.set("tid", tid_of(lane));
+            o.set("args", jobj! {"name" => *lane});
+            events.push(Json::Obj(o));
+        }
+        Json::Arr(events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut tr = TraceRecorder::new();
+        tr.record("load b=0", "gpu0/h2d", 0.0, 1.0);
+        tr.record("load b=1", "gpu0/h2d", 1.0, 2.5);
+        tr.record("fwd b=0", "gpu0/compute", 1.0, 2.0);
+        assert_eq!(tr.spans().len(), 3);
+        let busy = tr.lane_busy();
+        assert_eq!(busy.len(), 2);
+        assert_eq!(busy[0].0, "gpu0/compute");
+        assert!((busy[0].1 - 1.0).abs() < 1e-12);
+        assert!((busy[1].1 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let mut tr = TraceRecorder::new();
+        tr.record("a", "lane0", 0.5, 1.5);
+        tr.record("b", "lane1", 0.0, 0.25);
+        let j = tr.to_chrome_trace();
+        let arr = j.as_arr().unwrap();
+        // 2 spans + 2 thread_name metadata
+        assert_eq!(arr.len(), 4);
+        let first = &arr[0];
+        assert_eq!(first.path(&["ph"]).unwrap().as_str(), Some("X"));
+        assert_eq!(first.path(&["ts"]).unwrap().as_f64(), Some(0.5e6));
+        assert_eq!(first.path(&["dur"]).unwrap().as_f64(), Some(1e6));
+        // parses back
+        let text = j.to_string_pretty();
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn lanes_get_distinct_tids() {
+        let mut tr = TraceRecorder::new();
+        tr.record("a", "z-lane", 0.0, 1.0);
+        tr.record("b", "a-lane", 0.0, 1.0);
+        let j = tr.to_chrome_trace();
+        let arr = j.as_arr().unwrap();
+        let tids: std::collections::HashSet<u64> = arr[..2]
+            .iter()
+            .map(|e| e.path(&["tid"]).unwrap().as_u64().unwrap())
+            .collect();
+        assert_eq!(tids.len(), 2);
+    }
+}

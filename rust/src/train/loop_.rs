@@ -1,0 +1,226 @@
+//! The functional fine-tuning loop: the Figure-1 workflow executed for
+//! real on the PJRT CPU client.
+//!
+//! Per step:
+//! 1. embed the batch (`embed_fwd`),
+//! 2. **FWD** — run blocks in order, storing each block's *input* in the
+//!    host checkpoint arena (the "offloaded activation checkpoint"),
+//! 3. head + loss (`head_loss`, fused linear-cross-entropy → loss, dx, and
+//!    the tied-head embedding gradient),
+//! 4. **BWD** — blocks in reverse: reload the checkpoint, `block_bwd`
+//!    (which recomputes the forward internally — true gradient
+//!    checkpointing), collect per-block gradients,
+//! 5. **STEP** — the Rust CPU Adam updates every group.
+//!
+//! The same placement machinery the simulator uses tags the checkpoint
+//! arena and parameter groups with memory regions, so a training run also
+//! reports where its bytes would live on the Config-A/B machines.
+
+use anyhow::{bail, Result};
+
+use super::data::CorpusGen;
+use super::state::TrainState;
+use crate::optim::AdamHp;
+use crate::runtime::{Arg, HostTensor, HostTensorI32, Runtime};
+
+/// Trainer configuration.
+#[derive(Clone, Debug)]
+pub struct TrainerCfg {
+    pub batch: usize,
+    pub context: usize,
+    pub steps: usize,
+    pub hp: AdamHp,
+    pub threads: usize,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainerCfg {
+    fn default() -> Self {
+        Self {
+            batch: 4,
+            context: 128,
+            steps: 200,
+            hp: AdamHp {
+                lr: 3e-3,
+                ..Default::default()
+            },
+            threads: crate::util::threadpool::default_threads(),
+            seed: 0,
+            log_every: 10,
+        }
+    }
+}
+
+/// One logged step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f64,
+    pub wall_s: f64,
+    /// Bytes held in the host checkpoint arena at the FWD/BWD boundary.
+    pub checkpoint_bytes: u64,
+}
+
+/// The trainer.
+pub struct Trainer<'r> {
+    rt: &'r Runtime,
+    pub state: TrainState,
+    cfg: TrainerCfg,
+    data: CorpusGen,
+}
+
+impl<'r> Trainer<'r> {
+    pub fn new(rt: &'r Runtime, cfg: TrainerCfg) -> Result<Self> {
+        let vocab = rt.manifest().meta_usize("vocab")?;
+        let state = TrainState::init(rt.manifest(), cfg.seed)?;
+        let data = CorpusGen::new(vocab, cfg.seed ^ 0xC0FFEE);
+        // shape sanity: the artifacts were lowered for a fixed (B, C)
+        let (b, c) = batch_shape(rt)?;
+        if (b, c) != (cfg.batch, cfg.context) {
+            bail!(
+                "artifacts lowered for batch={b} context={c}, trainer configured {}/{}",
+                cfg.batch,
+                cfg.context
+            );
+        }
+        Ok(Self {
+            rt,
+            state,
+            cfg,
+            data,
+        })
+    }
+
+    /// Run one training step; returns the mean loss.
+    pub fn step(&mut self) -> Result<(f64, u64)> {
+        let (ids, labels) = self.data.batch(self.cfg.batch, self.cfg.context);
+        let shape = vec![self.cfg.batch, self.cfg.context];
+        let ids_t = HostTensorI32::new(ids.clone(), shape.clone());
+        let labels_t = HostTensorI32::new(labels, shape);
+
+        // (1) embed
+        let x0 = self
+            .rt
+            .exec(
+                "embed_fwd",
+                &[
+                    Arg::I32(ids_t.clone()),
+                    Arg::F32(self.state.embed.tensor(0)),
+                ],
+            )?
+            .remove(0);
+
+        // (2) FWD with checkpoint offload: arena keeps each block's input
+        let layers = self.state.blocks.len();
+        let mut arena: Vec<HostTensor> = Vec::with_capacity(layers);
+        let mut x = x0;
+        for l in 0..layers {
+            arena.push(x.clone()); // the offloaded checkpoint
+            let mut args: Vec<Arg> = Vec::with_capacity(1 + self.state.blocks[l].specs.len());
+            args.push(Arg::F32(x));
+            args.extend(self.state.blocks[l].tensors().into_iter().map(Arg::F32));
+            x = self.rt.exec("block_fwd", &args)?.remove(0);
+        }
+        let checkpoint_bytes: u64 = arena
+            .iter()
+            .map(|t| 4 * t.element_count() as u64)
+            .sum();
+
+        // (3) head + loss (+ tied-head embedding grad)
+        let mut head_out = self.rt.exec(
+            "head_loss",
+            &[
+                Arg::F32(x),
+                Arg::F32(self.state.final_norm.tensor(0)),
+                Arg::F32(self.state.embed.tensor(0)),
+                Arg::I32(labels_t),
+            ],
+        )?;
+        // outputs: loss, dx, dlnf, demb_head
+        let loss = head_out[0].data[0] as f64;
+        let demb_head = head_out.pop().expect("demb_head");
+        let dlnf = head_out.pop().expect("dlnf");
+        let mut dx = head_out.pop().expect("dx");
+
+        // (4) BWD: reload checkpoints, recompute-and-backprop per block
+        let mut block_grads: Vec<Vec<f32>> = Vec::with_capacity(layers);
+        for l in (0..layers).rev() {
+            let ckpt = arena[l].clone(); // "reload from host memory"
+            let mut args: Vec<Arg> = Vec::with_capacity(2 + self.state.blocks[l].specs.len());
+            args.push(Arg::F32(ckpt));
+            args.extend(self.state.blocks[l].tensors().into_iter().map(Arg::F32));
+            args.push(Arg::F32(dx));
+            let mut outs = self.rt.exec("block_bwd", &args)?;
+            // outputs: dx, then one grad per param tensor
+            dx = outs.remove(0);
+            let flat = self.state.blocks[l].flatten_grads(&outs)?;
+            block_grads.push(flat);
+        }
+        block_grads.reverse();
+
+        // embedding grad: scatter-add of dx through the embedding + tied head
+        let demb = self
+            .rt
+            .exec("embed_bwd", &[Arg::I32(ids_t), Arg::F32(dx)])?
+            .remove(0);
+        let mut demb_total = demb.data;
+        for (a, b) in demb_total.iter_mut().zip(&demb_head.data) {
+            *a += b;
+        }
+
+        // (5) STEP: Rust CPU Adam over every group
+        for (l, g) in block_grads.iter().enumerate() {
+            self.state.blocks[l].step(g, &self.cfg.hp, self.cfg.threads);
+        }
+        self.state.embed.step(&demb_total, &self.cfg.hp, self.cfg.threads);
+        self.state
+            .final_norm
+            .step(&dlnf.data, &self.cfg.hp, self.cfg.threads);
+
+        Ok((loss, checkpoint_bytes))
+    }
+
+    /// Run the configured number of steps, returning the loss curve.
+    pub fn train(&mut self) -> Result<Vec<StepLog>> {
+        let mut logs = Vec::with_capacity(self.cfg.steps);
+        for s in 0..self.cfg.steps {
+            let t0 = std::time::Instant::now();
+            let (loss, checkpoint_bytes) = self.step()?;
+            let wall_s = t0.elapsed().as_secs_f64();
+            if !loss.is_finite() {
+                bail!("loss diverged at step {s}");
+            }
+            let log = StepLog {
+                step: s,
+                loss,
+                wall_s,
+                checkpoint_bytes,
+            };
+            if s % self.cfg.log_every == 0 || s + 1 == self.cfg.steps {
+                crate::log_info!(
+                    "step {:>4}  loss {:.4}  {:.0} tok/s  ckpt {}",
+                    s,
+                    loss,
+                    (self.cfg.batch * self.cfg.context) as f64 / wall_s,
+                    crate::util::units::fmt_bytes(checkpoint_bytes)
+                );
+            }
+            logs.push(log);
+        }
+        Ok(logs)
+    }
+}
+
+/// Read the lowered (batch, context) from the embed entry.
+pub fn batch_shape(rt: &Runtime) -> Result<(usize, usize)> {
+    let e = rt.manifest().entry("embed_fwd")?;
+    let s = &e.inputs[0].shape;
+    if s.len() != 2 {
+        bail!("embed_fwd ids should be [B, C], got {s:?}");
+    }
+    Ok((s[0], s[1]))
+}
+
+// Integration tests for the trainer live in rust/tests/e2e_train.rs (they
+// need real artifacts from `make artifacts`).

@@ -1,0 +1,11 @@
+//! Functional training path: real numerics through the PJRT runtime with
+//! the Figure-1 offload workflow (streamed blocks, host checkpoint arena,
+//! Rust CPU Adam).
+
+pub mod data;
+pub mod loop_;
+pub mod state;
+
+pub use data::CorpusGen;
+pub use loop_::{batch_shape, StepLog, Trainer, TrainerCfg};
+pub use state::{BlockParams, TrainState};

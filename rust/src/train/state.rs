@@ -1,0 +1,213 @@
+//! Training state: fp32 master parameters organized per transformer block
+//! (the streaming granularity of the offload workflow) plus embedding and
+//! final-norm groups, each with its own Adam state.
+//!
+//! Shapes come from the artifact manifest, so Rust never hard-codes the
+//! model architecture — it mirrors whatever `python/compile/aot.py` lowered.
+
+use anyhow::{bail, Result};
+
+use crate::optim::{AdamHp, AdamState};
+use crate::runtime::{HostTensor, Manifest, TensorSpec};
+use crate::util::prng::Xoshiro256pp;
+
+/// One block's parameters: named tensors, flat Adam state over the concat.
+#[derive(Clone, Debug)]
+pub struct BlockParams {
+    pub specs: Vec<TensorSpec>,
+    /// Flattened concatenation of all tensors, in spec order.
+    pub flat: Vec<f32>,
+    /// Byte-free offsets into `flat` per tensor.
+    pub offsets: Vec<usize>,
+    pub adam: AdamState,
+}
+
+impl BlockParams {
+    fn init(specs: Vec<TensorSpec>, rng: &mut Xoshiro256pp) -> Self {
+        let mut flat = Vec::new();
+        let mut offsets = Vec::with_capacity(specs.len());
+        for s in &specs {
+            offsets.push(flat.len());
+            let n = s.element_count();
+            if s.name.starts_with("ln") || s.name.contains("norm") {
+                flat.extend(std::iter::repeat(1.0f32).take(n));
+            } else {
+                // scaled-normal init: std 0.02 like GPT
+                flat.extend((0..n).map(|_| (rng.normal() as f32) * 0.02));
+            }
+        }
+        let adam = AdamState::new(flat.len());
+        Self {
+            specs,
+            flat,
+            offsets,
+            adam,
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.flat.len()
+    }
+
+    /// View tensor `i` as a HostTensor (copies — tiny model, clarity wins).
+    pub fn tensor(&self, i: usize) -> HostTensor {
+        let start = self.offsets[i];
+        let n = self.specs[i].element_count();
+        HostTensor::new(
+            self.flat[start..start + n].to_vec(),
+            self.specs[i].shape.clone(),
+        )
+    }
+
+    /// All tensors in order.
+    pub fn tensors(&self) -> Vec<HostTensor> {
+        (0..self.specs.len()).map(|i| self.tensor(i)).collect()
+    }
+
+    /// Flatten per-tensor gradients (same order) into one buffer.
+    pub fn flatten_grads(&self, grads: &[HostTensor]) -> Result<Vec<f32>> {
+        if grads.len() != self.specs.len() {
+            bail!(
+                "expected {} grad tensors, got {}",
+                self.specs.len(),
+                grads.len()
+            );
+        }
+        let mut flat = Vec::with_capacity(self.flat.len());
+        for (g, s) in grads.iter().zip(&self.specs) {
+            if g.shape != s.shape {
+                bail!("grad shape {:?} != param shape {:?} ({})", g.shape, s.shape, s.name);
+            }
+            flat.extend_from_slice(&g.data);
+        }
+        Ok(flat)
+    }
+
+    /// Adam over the whole block.
+    pub fn step(&mut self, grads_flat: &[f32], hp: &AdamHp, threads: usize) {
+        crate::optim::adam_step(&mut self.flat, grads_flat, &mut self.adam, hp, threads);
+    }
+}
+
+/// Whole-model state.
+pub struct TrainState {
+    pub blocks: Vec<BlockParams>,
+    /// Embedding table [V, H] (tied with the LM head).
+    pub embed: BlockParams,
+    /// Final norm scale [H].
+    pub final_norm: BlockParams,
+}
+
+impl TrainState {
+    /// Initialize from the manifest: block shapes from `block_fwd` inputs
+    /// (skipping the leading activation `x`), embedding from `embed_fwd`,
+    /// final norm from `head_loss`.
+    pub fn init(manifest: &Manifest, seed: u64) -> Result<TrainState> {
+        let mut rng = Xoshiro256pp::seeded(seed);
+        let layers = manifest.meta_usize("layers")?;
+        let block_entry = manifest.entry("block_fwd")?;
+        if block_entry.inputs.len() < 2 {
+            bail!("block_fwd must take (x, params...)");
+        }
+        let block_specs: Vec<TensorSpec> = block_entry.inputs[1..].to_vec();
+        let blocks = (0..layers)
+            .map(|_| BlockParams::init(block_specs.clone(), &mut rng))
+            .collect();
+        let embed_spec = manifest.entry("embed_fwd")?.inputs[1].clone();
+        let embed = BlockParams::init(vec![embed_spec], &mut rng);
+        let lnf_spec = manifest.entry("head_loss")?.inputs[1].clone();
+        let final_norm = BlockParams::init(vec![lnf_spec], &mut rng);
+        Ok(TrainState {
+            blocks,
+            embed,
+            final_norm,
+        })
+    }
+
+    /// Total trainable parameters.
+    pub fn n_params(&self) -> usize {
+        self.blocks.iter().map(|b| b.n_params()).sum::<usize>()
+            + self.embed.n_params()
+            + self.final_norm.n_params()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn fake_manifest() -> Manifest {
+        let text = r#"{
+          "model": {"layers": 2, "hidden": 8, "vocab": 32},
+          "entries": {
+            "embed_fwd": {"file": "e.hlo.txt",
+              "inputs": [{"name": "ids", "shape": [1, 4], "dtype": "i32"},
+                         {"name": "emb", "shape": [32, 8], "dtype": "f32"}],
+              "outputs": [{"name": "x", "shape": [1, 4, 8], "dtype": "f32"}]},
+            "block_fwd": {"file": "b.hlo.txt",
+              "inputs": [{"name": "x", "shape": [1, 4, 8], "dtype": "f32"},
+                         {"name": "ln1", "shape": [8], "dtype": "f32"},
+                         {"name": "wq", "shape": [8, 8], "dtype": "f32"}],
+              "outputs": [{"name": "y", "shape": [1, 4, 8], "dtype": "f32"}]},
+            "head_loss": {"file": "h.hlo.txt",
+              "inputs": [{"name": "x", "shape": [1, 4, 8], "dtype": "f32"},
+                         {"name": "lnf", "shape": [8], "dtype": "f32"},
+                         {"name": "emb", "shape": [32, 8], "dtype": "f32"},
+                         {"name": "labels", "shape": [1, 4], "dtype": "i32"}],
+              "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]}
+          }
+        }"#;
+        Manifest::parse(text, PathBuf::from("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn init_builds_correct_shapes() {
+        let st = TrainState::init(&fake_manifest(), 3).unwrap();
+        assert_eq!(st.blocks.len(), 2);
+        assert_eq!(st.blocks[0].specs.len(), 2); // ln1, wq
+        assert_eq!(st.blocks[0].n_params(), 8 + 64);
+        assert_eq!(st.embed.n_params(), 32 * 8);
+        assert_eq!(st.final_norm.n_params(), 8);
+        assert_eq!(st.n_params(), 2 * 72 + 256 + 8);
+    }
+
+    #[test]
+    fn norm_tensors_init_to_one_weights_to_small() {
+        let st = TrainState::init(&fake_manifest(), 3).unwrap();
+        let ln = st.blocks[0].tensor(0);
+        assert!(ln.data.iter().all(|&x| x == 1.0));
+        let wq = st.blocks[0].tensor(1);
+        assert!(wq.data.iter().any(|&x| x != 0.0));
+        assert!(wq.data.iter().all(|&x| x.abs() < 0.2));
+    }
+
+    #[test]
+    fn blocks_get_different_random_init() {
+        let st = TrainState::init(&fake_manifest(), 3).unwrap();
+        assert_ne!(st.blocks[0].tensor(1).data, st.blocks[1].tensor(1).data);
+    }
+
+    #[test]
+    fn flatten_grads_validates() {
+        let st = TrainState::init(&fake_manifest(), 3).unwrap();
+        let good = vec![
+            HostTensor::zeros(&[8]),
+            HostTensor::zeros(&[8, 8]),
+        ];
+        let flat = st.blocks[0].flatten_grads(&good).unwrap();
+        assert_eq!(flat.len(), st.blocks[0].n_params());
+        let bad = vec![HostTensor::zeros(&[8])];
+        assert!(st.blocks[0].flatten_grads(&bad).is_err());
+    }
+
+    #[test]
+    fn step_moves_params() {
+        let mut st = TrainState::init(&fake_manifest(), 3).unwrap();
+        let before = st.blocks[0].flat.clone();
+        let grads = vec![0.1f32; st.blocks[0].n_params()];
+        st.blocks[0].step(&grads, &AdamHp::default(), 2);
+        assert_ne!(before, st.blocks[0].flat);
+        assert_eq!(st.blocks[0].adam.step, 1);
+    }
+}

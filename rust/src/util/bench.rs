@@ -1,0 +1,189 @@
+//! Bench harness (criterion is not in the offline vendor set).
+//!
+//! Each `benches/*.rs` target uses `harness = false` and drives this
+//! runner. It provides warmup + timed iterations with outlier-robust
+//! summary statistics, renders ASCII tables, and persists machine-readable
+//! results under `bench_out/<bench>/<series>.{json,csv}` so EXPERIMENTS.md
+//! can reference stable files.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use super::stats::Sample;
+use super::table::Table;
+use crate::jobj;
+use crate::util::json::{Json, JsonObj};
+
+/// Timing summary for one measured closure.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Measurement {
+    pub fn to_json(&self) -> Json {
+        jobj! {
+            "name" => self.name.as_str(),
+            "iters" => self.iters,
+            "mean_s" => self.mean_s,
+            "median_s" => self.median_s,
+            "stddev_s" => self.stddev_s,
+            "min_s" => self.min_s,
+            "max_s" => self.max_s,
+        }
+    }
+}
+
+/// Measure `f` with `warmup` unmeasured and `iters` measured invocations.
+pub fn measure<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut sample = Sample::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        sample.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement {
+        name: name.to_string(),
+        iters,
+        mean_s: sample.mean(),
+        median_s: sample.median(),
+        stddev_s: sample.stddev(),
+        min_s: sample.min(),
+        max_s: sample.max(),
+    }
+}
+
+/// Auto-scaled measurement: picks an iteration count so total measured time
+/// is roughly `target_s`, then measures. Good for very fast bodies.
+pub fn measure_auto<F: FnMut()>(name: &str, target_s: f64, mut f: F) -> Measurement {
+    // estimate per-call cost
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_s / once) as usize).clamp(3, 10_000);
+    measure(name, (iters / 10).max(1), iters, f)
+}
+
+/// A bench "report": accumulates named tables (one per figure panel) and
+/// writes them to `bench_out/`.
+pub struct BenchReport {
+    bench_name: String,
+    out_dir: PathBuf,
+    sections: Vec<(String, Table, Json)>,
+}
+
+impl BenchReport {
+    pub fn new(bench_name: &str) -> Self {
+        let out_dir = std::env::var("CXLFINE_BENCH_OUT")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("bench_out"))
+            .join(bench_name);
+        Self {
+            bench_name: bench_name.to_string(),
+            out_dir,
+            sections: Vec::new(),
+        }
+    }
+
+    /// Add a rendered section (table + raw json payload) to the report.
+    pub fn section(&mut self, series: &str, table: Table, raw: Json) {
+        self.sections.push((series.to_string(), table, raw));
+    }
+
+    /// Print all sections to stdout and persist them. Returns output dir.
+    pub fn finish(self) -> PathBuf {
+        println!("\n=== bench: {} ===", self.bench_name);
+        std::fs::create_dir_all(&self.out_dir).ok();
+        for (series, table, raw) in &self.sections {
+            println!("\n--- {series} ---");
+            print!("{}", table.render());
+            write_text(&self.out_dir.join(format!("{series}.csv")), &table.to_csv());
+            write_text(
+                &self.out_dir.join(format!("{series}.json")),
+                &raw.to_string_pretty(),
+            );
+        }
+        println!(
+            "\n[bench {}] wrote {} series to {}",
+            self.bench_name,
+            self.sections.len(),
+            self.out_dir.display()
+        );
+        self.out_dir
+    }
+}
+
+fn write_text(path: &Path, text: &str) {
+    if let Err(e) = std::fs::write(path, text) {
+        eprintln!("warn: could not write {}: {e}", path.display());
+    }
+}
+
+/// Helper: a JSON array of {x, <series>: y...} points.
+pub fn points_json(xs: &[f64], series: &[(&str, &[f64])]) -> Json {
+    let mut arr = Vec::with_capacity(xs.len());
+    for (i, &x) in xs.iter().enumerate() {
+        let mut o = JsonObj::new();
+        o.set("x", x);
+        for (name, ys) in series {
+            o.set(*name, ys[i]);
+        }
+        arr.push(Json::Obj(o));
+    }
+    Json::Arr(arr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iterations() {
+        let mut calls = 0usize;
+        let m = measure("noop", 2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(m.iters, 5);
+        assert!(m.mean_s >= 0.0 && m.min_s <= m.max_s);
+    }
+
+    #[test]
+    fn measure_auto_bounded() {
+        let m = measure_auto("fast", 0.01, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(m.iters >= 3);
+    }
+
+    #[test]
+    fn report_writes_files() {
+        let dir = std::env::temp_dir().join(format!("cxlfine_bench_test_{}", std::process::id()));
+        std::env::set_var("CXLFINE_BENCH_OUT", &dir);
+        let mut r = BenchReport::new("unit");
+        let mut t = Table::new(&["a"]);
+        t.row(vec!["1".into()]);
+        r.section("s1", t, jobj! {"k" => 1u64});
+        let out = r.finish();
+        assert!(out.join("s1.csv").exists());
+        assert!(out.join("s1.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+        std::env::remove_var("CXLFINE_BENCH_OUT");
+    }
+
+    #[test]
+    fn points_json_shape() {
+        let j = points_json(&[1.0, 2.0], &[("y", &[10.0, 20.0])]);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[1].path(&["y"]).unwrap().as_f64(), Some(20.0));
+    }
+}

@@ -1,0 +1,380 @@
+//! Tiny declarative CLI argument parser (the offline vendor set has no
+//! `clap`). Supports subcommands, `--flag`, `--opt value` / `--opt=value`,
+//! repeated options, positionals, defaults and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one option/flag.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+    repeated: bool,
+}
+
+/// A declarative command-line spec; build with the fluent API then `parse`.
+#[derive(Clone, Debug, Default)]
+pub struct CliSpec {
+    name: &'static str,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(&'static str, &'static str, bool)>, // (name, help, required)
+}
+
+/// Parse result: option values + positionals.
+#[derive(Clone, Debug, Default)]
+pub struct CliArgs {
+    values: BTreeMap<&'static str, Vec<String>>,
+    flags: BTreeMap<&'static str, bool>,
+    positionals: Vec<String>,
+}
+
+#[derive(Debug)]
+pub enum CliError {
+    /// `--help` was requested; the payload is the rendered help text.
+    Help(String),
+    /// A genuine parse failure; payload is the message (help appended).
+    Bad(String),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Help(h) => write!(f, "{h}"),
+            CliError::Bad(m) => write!(f, "{m}"),
+        }
+    }
+}
+impl std::error::Error for CliError {}
+
+impl CliSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            ..Default::default()
+        }
+    }
+
+    /// A boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+            repeated: false,
+        });
+        self
+    }
+
+    /// A `--name <value>` option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default.to_string()),
+            repeated: false,
+        });
+        self
+    }
+
+    /// A required `--name <value>` option.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: None,
+            repeated: false,
+        });
+        self
+    }
+
+    /// A repeatable `--name <value>` option (collects all occurrences).
+    pub fn multi(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: None,
+            repeated: true,
+        });
+        self
+    }
+
+    /// A positional argument.
+    pub fn positional(mut self, name: &'static str, help: &'static str, required: bool) -> Self {
+        self.positionals.push((name, help, required));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\nUSAGE:\n  {} [OPTIONS]{}", self.name, {
+            let mut p = String::new();
+            for (name, _, required) in &self.positionals {
+                if *required {
+                    let _ = write!(p, " <{name}>");
+                } else {
+                    let _ = write!(p, " [{name}]");
+                }
+            }
+            p
+        });
+        if !self.positionals.is_empty() {
+            let _ = writeln!(s, "\nARGS:");
+            for (name, help, _) in &self.positionals {
+                let _ = writeln!(s, "  {name:<22} {help}");
+            }
+        }
+        let _ = writeln!(s, "\nOPTIONS:");
+        for o in &self.opts {
+            let lhs = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let default = match &o.default {
+                Some(d) if o.takes_value => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            let _ = writeln!(s, "  {lhs:<22} {}{}", o.help, default);
+        }
+        let _ = writeln!(s, "  {:<22} print this help", "--help");
+        s
+    }
+
+    /// Parse a raw token list (without the program name).
+    pub fn parse(&self, raw: &[String]) -> Result<CliArgs, CliError> {
+        let mut out = CliArgs::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                out.values.insert(o.name, vec![d.clone()]);
+            }
+            if !o.takes_value {
+                out.flags.insert(o.name, false);
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::Help(self.help_text()));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| self.bad(format!("unknown option --{name}")))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| self.bad(format!("--{name} needs a value")))?
+                        }
+                    };
+                    let slot = out.values.entry(spec.name).or_default();
+                    if spec.repeated {
+                        // first push replaces the (empty) default state
+                        if !spec.repeated || slot.first().map(|s| s.as_str())
+                            == spec.default.as_deref()
+                        {
+                            slot.clear();
+                        }
+                        slot.push(val);
+                    } else {
+                        *slot = vec![val];
+                    }
+                } else {
+                    if inline_val.is_some() {
+                        return Err(self.bad(format!("flag --{name} takes no value")));
+                    }
+                    out.flags.insert(spec.name, true);
+                }
+            } else {
+                out.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Required options and positionals.
+        for o in &self.opts {
+            if o.takes_value && o.default.is_none() && !o.repeated && !out.values.contains_key(o.name)
+            {
+                return Err(self.bad(format!("missing required option --{}", o.name)));
+            }
+        }
+        let required_positionals = self.positionals.iter().filter(|(_, _, r)| *r).count();
+        if out.positionals.len() < required_positionals {
+            return Err(self.bad(format!(
+                "expected at least {required_positionals} positional argument(s)"
+            )));
+        }
+        Ok(out)
+    }
+
+    fn bad(&self, msg: String) -> CliError {
+        CliError::Bad(format!("{msg}\n\n{}", self.help_text()))
+    }
+}
+
+impl CliArgs {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.values.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+
+    pub fn parse_u64(&self, name: &str) -> Result<u64, CliError> {
+        let s = self
+            .get(name)
+            .ok_or_else(|| CliError::Bad(format!("missing --{name}")))?;
+        crate::util::units::parse_count(s).map_err(CliError::Bad)
+    }
+
+    pub fn parse_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.parse_u64(name).map(|v| v as usize)
+    }
+
+    pub fn parse_f64(&self, name: &str) -> Result<f64, CliError> {
+        let s = self
+            .get(name)
+            .ok_or_else(|| CliError::Bad(format!("missing --{name}")))?;
+        s.parse()
+            .map_err(|e| CliError::Bad(format!("--{name}: bad float {s:?}: {e}")))
+    }
+
+    pub fn parse_bytes(&self, name: &str) -> Result<u64, CliError> {
+        let s = self
+            .get(name)
+            .ok_or_else(|| CliError::Bad(format!("missing --{name}")))?;
+        crate::util::units::parse_bytes(s).map_err(CliError::Bad)
+    }
+
+    /// Parse a comma-separated list of counts, e.g. `--batch 1,2,4,8`.
+    pub fn parse_count_list(&self, name: &str) -> Result<Vec<u64>, CliError> {
+        let s = self
+            .get(name)
+            .ok_or_else(|| CliError::Bad(format!("missing --{name}")))?;
+        s.split(',')
+            .map(|t| crate::util::units::parse_count(t.trim()).map_err(CliError::Bad))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+fn strings(toks: &[&str]) -> Vec<String> {
+    toks.iter().map(|s| s.to_string()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CliSpec {
+        CliSpec::new("demo", "test spec")
+            .opt("model", "tiny", "model preset")
+            .opt("batch", "8", "batch size")
+            .flag("verbose", "chatty output")
+            .multi("policy", "placement policy (repeatable)")
+            .positional("input", "input file", false)
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(&[]).unwrap();
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.parse_u64("batch").unwrap(), 8);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn parse_forms() {
+        let a = spec()
+            .parse(&strings(&["--model=7b", "--batch", "32", "--verbose", "in.txt"]))
+            .unwrap();
+        assert_eq!(a.get("model"), Some("7b"));
+        assert_eq!(a.parse_u64("batch").unwrap(), 32);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(0), Some("in.txt"));
+    }
+
+    #[test]
+    fn repeated_options_collect() {
+        let a = spec()
+            .parse(&strings(&["--policy", "dram", "--policy", "cxl-aware"]))
+            .unwrap();
+        assert_eq!(a.get_all("policy"), &["dram", "cxl-aware"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        match spec().parse(&strings(&["--nope"])) {
+            Err(CliError::Bad(msg)) => assert!(msg.contains("unknown option")),
+            other => panic!("expected Bad, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn help_requested() {
+        match spec().parse(&strings(&["--help"])) {
+            Err(CliError::Help(h)) => {
+                assert!(h.contains("model preset"));
+                assert!(h.contains("USAGE"));
+            }
+            other => panic!("expected Help, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(matches!(
+            spec().parse(&strings(&["--batch"])),
+            Err(CliError::Bad(_))
+        ));
+    }
+
+    #[test]
+    fn count_suffixes() {
+        let a = spec().parse(&strings(&["--batch", "32k"])).unwrap();
+        assert_eq!(a.parse_u64("batch").unwrap(), 32_000);
+    }
+
+    #[test]
+    fn count_list() {
+        let s = CliSpec::new("x", "y").opt("sizes", "1,2", "sweep");
+        let a = s.parse(&strings(&["--sizes", "4k, 32k ,1m"])).unwrap();
+        assert_eq!(a.parse_count_list("sizes").unwrap(), vec![4000, 32_000, 1_000_000]);
+    }
+
+    #[test]
+    fn required_option_enforced() {
+        let s = CliSpec::new("x", "y").req("out", "output dir");
+        assert!(matches!(s.parse(&[]), Err(CliError::Bad(_))));
+        let a = s.parse(&strings(&["--out", "/tmp"])).unwrap();
+        assert_eq!(a.get("out"), Some("/tmp"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Hand-rolled substrates for crates that are unavailable in the offline
+//! vendor set (`rand`, `serde_json`, `clap`, `rayon`, `criterion`,
+//! `proptest`). Everything downstream in the crate builds on these.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod proptest_lite;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+pub mod units;

@@ -1,0 +1,326 @@
+//! A miniature property-testing harness (no `proptest` offline).
+//!
+//! Provides value generators driven by [`Xoshiro256pp`] and a `forall`
+//! runner with greedy shrinking: on failure it repeatedly asks the
+//! generator's paired shrinker for smaller candidates, keeping any that
+//! still fail, and reports the minimal one. Enough machinery for the
+//! coordinator invariants this crate cares about (routing, batching,
+//! placement, striping, simulator state).
+
+use super::prng::Xoshiro256pp;
+
+/// A generator of values plus a shrinking strategy.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Xoshiro256pp) -> Self::Value;
+    /// Candidate smaller values, most aggressive first. Default: none.
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Uniform u64 in `[lo, hi]` with halving shrink toward `lo`.
+pub struct U64Range {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Gen for U64Range {
+    type Value = u64;
+    fn generate(&self, rng: &mut Xoshiro256pp) -> u64 {
+        rng.range_u64(self.lo, self.hi)
+    }
+    fn shrink(&self, value: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        let v = *value;
+        if v > self.lo {
+            out.push(self.lo);
+            let mid = self.lo + (v - self.lo) / 2;
+            if mid != self.lo && mid != v {
+                out.push(mid);
+            }
+            if v - 1 != self.lo && v - 1 != mid {
+                out.push(v - 1);
+            }
+        }
+        out
+    }
+}
+
+/// usize variant.
+pub struct UsizeRange {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeRange {
+    type Value = usize;
+    fn generate(&self, rng: &mut Xoshiro256pp) -> usize {
+        rng.range_usize(self.lo, self.hi)
+    }
+    fn shrink(&self, value: &usize) -> Vec<usize> {
+        U64Range {
+            lo: self.lo as u64,
+            hi: self.hi as u64,
+        }
+        .shrink(&(*value as u64))
+        .into_iter()
+        .map(|v| v as usize)
+        .collect()
+    }
+}
+
+/// Uniform f64 in `[lo, hi)`; shrinks toward lo and simple round values.
+pub struct F64Range {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen for F64Range {
+    type Value = f64;
+    fn generate(&self, rng: &mut Xoshiro256pp) -> f64 {
+        rng.range_f64(self.lo, self.hi)
+    }
+    fn shrink(&self, value: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if *value != self.lo {
+            out.push(self.lo);
+            let mid = self.lo + (value - self.lo) / 2.0;
+            if mid != self.lo && mid != *value {
+                out.push(mid);
+            }
+        }
+        out
+    }
+}
+
+/// Vec of another generator with length in `[min_len, max_len]`; shrinks by
+/// dropping halves/elements then shrinking elements.
+pub struct VecOf<G> {
+    pub inner: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Xoshiro256pp) -> Self::Value {
+        let len = rng.range_usize(self.min_len, self.max_len);
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        let n = value.len();
+        if n > self.min_len {
+            // drop second half, first half, single elements
+            let keep = (n / 2).max(self.min_len);
+            out.push(value[..keep].to_vec());
+            out.push(value[n - keep..].to_vec());
+            if n >= 1 && n - 1 >= self.min_len {
+                let mut v = value.clone();
+                v.pop();
+                out.push(v);
+            }
+        }
+        // shrink the first shrinkable element
+        for (i, el) in value.iter().enumerate().take(4) {
+            for smaller in self.inner.shrink(el) {
+                let mut v = value.clone();
+                v[i] = smaller;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub struct PairOf<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Xoshiro256pp) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        for a in self.0.shrink(&value.0) {
+            out.push((a, value.1.clone()));
+        }
+        for b in self.1.shrink(&value.1) {
+            out.push((value.0.clone(), b));
+        }
+        out
+    }
+}
+
+/// One of a fixed set of choices (no shrinking beyond first element).
+pub struct OneOf<T: Clone + std::fmt::Debug>(pub Vec<T>);
+
+impl<T: Clone + std::fmt::Debug> Gen for OneOf<T> {
+    type Value = T;
+    fn generate(&self, rng: &mut Xoshiro256pp) -> T {
+        rng.choice(&self.0).clone()
+    }
+}
+
+/// Result of a property run.
+#[derive(Debug)]
+pub struct Failure<V> {
+    pub seed: u64,
+    pub case_index: usize,
+    pub original: V,
+    pub minimal: V,
+    pub message: String,
+}
+
+/// Run `prop` on `cases` generated values; on failure, shrink and panic with
+/// the minimal counterexample. `name` labels the property in the panic.
+pub fn forall<G, F>(name: &str, seed: u64, cases: usize, gen: &G, prop: F)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> Result<(), String>,
+{
+    if let Some(fail) = forall_quiet(seed, cases, gen, &prop) {
+        panic!(
+            "property {name:?} failed (seed={}, case={}):\n  original: {:?}\n  minimal:  {:?}\n  error: {}",
+            fail.seed, fail.case_index, fail.original, fail.minimal, fail.message
+        );
+    }
+}
+
+/// Like [`forall`] but returns the failure instead of panicking (testable).
+pub fn forall_quiet<G, F>(
+    seed: u64,
+    cases: usize,
+    gen: &G,
+    prop: &F,
+) -> Option<Failure<G::Value>>
+where
+    G: Gen,
+    F: Fn(&G::Value) -> Result<(), String>,
+{
+    let mut rng = Xoshiro256pp::seeded(seed);
+    for case_index in 0..cases {
+        let value = gen.generate(&mut rng);
+        if let Err(message) = prop(&value) {
+            let (minimal, message) = shrink_loop(gen, value.clone(), message, prop);
+            return Some(Failure {
+                seed,
+                case_index,
+                original: value,
+                minimal,
+                message,
+            });
+        }
+    }
+    None
+}
+
+fn shrink_loop<G, F>(gen: &G, mut current: G::Value, mut msg: String, prop: &F) -> (G::Value, String)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> Result<(), String>,
+{
+    // Greedy descent, bounded to avoid pathological loops.
+    for _ in 0..1000 {
+        let mut improved = false;
+        for cand in gen.shrink(&current) {
+            if let Err(m) = prop(&cand) {
+                current = cand;
+                msg = m;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    (current, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_returns_none() {
+        let g = U64Range { lo: 0, hi: 100 };
+        assert!(forall_quiet(1, 200, &g, &|v| {
+            if *v <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        })
+        .is_none());
+    }
+
+    #[test]
+    fn shrinks_u64_to_boundary() {
+        // Property: v < 37. Minimal counterexample should be exactly 37.
+        let g = U64Range { lo: 0, hi: 10_000 };
+        let fail = forall_quiet(7, 500, &g, &|v| {
+            if *v < 37 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 37"))
+            }
+        })
+        .expect("must fail");
+        assert_eq!(fail.minimal, 37, "greedy shrink should reach the boundary");
+    }
+
+    #[test]
+    fn shrinks_vec_length() {
+        // Property: len < 3. Minimal counterexample has exactly len 3.
+        let g = VecOf {
+            inner: U64Range { lo: 0, hi: 5 },
+            min_len: 0,
+            max_len: 40,
+        };
+        let fail = forall_quiet(11, 200, &g, &|v: &Vec<u64>| {
+            if v.len() < 3 {
+                Ok(())
+            } else {
+                Err("too long".into())
+            }
+        })
+        .expect("must fail");
+        assert_eq!(fail.minimal.len(), 3);
+    }
+
+    #[test]
+    fn pair_shrinks_both_sides() {
+        let g = PairOf(U64Range { lo: 0, hi: 100 }, U64Range { lo: 0, hi: 100 });
+        let fail = forall_quiet(13, 500, &g, &|(a, b)| {
+            if a + b < 50 {
+                Ok(())
+            } else {
+                Err("sum too big".into())
+            }
+        })
+        .expect("must fail");
+        assert_eq!(fail.minimal.0 + fail.minimal.1, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_panics_with_context() {
+        let g = U64Range { lo: 0, hi: 10 };
+        forall("always-fails", 3, 10, &g, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = VecOf {
+            inner: U64Range { lo: 0, hi: 1000 },
+            min_len: 1,
+            max_len: 10,
+        };
+        let mut r1 = Xoshiro256pp::seeded(99);
+        let mut r2 = Xoshiro256pp::seeded(99);
+        assert_eq!(g.generate(&mut r1), g.generate(&mut r2));
+    }
+}

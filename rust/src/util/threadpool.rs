@@ -1,0 +1,198 @@
+//! Data-parallel helpers over `std::thread::scope` (no `rayon` offline).
+//!
+//! The optimizer hot path and the bench harness need exactly two shapes of
+//! parallelism:
+//!   * [`par_chunks_mut`] — split a mutable slice into near-equal chunks and
+//!     run a closure per chunk on its own thread (the ZeRO-Offload
+//!     OpenMP-parallel-for equivalent),
+//!   * [`par_map`] — map a closure over indexed work items with a bounded
+//!     worker count and collect results in order.
+//!
+//! Threads are spawned per call; for the multi-millisecond optimizer
+//! chunks this cost (~10 µs/thread) is noise, and it keeps the code free of
+//! global state.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default: physical parallelism,
+/// clamped to something sane.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 128)
+}
+
+/// Split `data` into `nthreads` near-equal contiguous chunks and invoke
+/// `f(chunk_index, element_offset, chunk)` on each, in parallel.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], nthreads: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let nthreads = nthreads.max(1).min(n);
+    if nthreads == 1 {
+        f(0, 0, data);
+        return;
+    }
+    let base = n / nthreads;
+    let extra = n % nthreads;
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut offset = 0usize;
+        for i in 0..nthreads {
+            let len = base + usize::from(i < extra);
+            let (chunk, tail) = rest.split_at_mut(len);
+            rest = tail;
+            let fr = &f;
+            let off = offset;
+            scope.spawn(move || fr(i, off, chunk));
+            offset += len;
+        }
+    });
+}
+
+/// Parallel map over `nitems` indexed work items with at most `nworkers`
+/// threads; results are returned in item order. Work stealing is a shared
+/// atomic cursor — items should be coarse enough to amortize it.
+pub fn par_map<R: Send, F>(nitems: usize, nworkers: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    if nitems == 0 {
+        return Vec::new();
+    }
+    let nworkers = nworkers.max(1).min(nitems);
+    if nworkers == 1 {
+        return (0..nitems).map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = (0..nitems).map(|_| None).collect();
+    {
+        // Hand each worker disjoint &mut access via raw parts; simpler and
+        // still safe is a mutex-free approach with per-item cells:
+        let cells: Vec<std::sync::Mutex<&mut Option<R>>> =
+            slots.iter_mut().map(std::sync::Mutex::new).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..nworkers {
+                let cursor = &cursor;
+                let cells = &cells;
+                let f = &f;
+                scope.spawn(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= nitems {
+                        break;
+                    }
+                    let r = f(i);
+                    **cells[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+    }
+    slots.into_iter().map(|s| s.expect("worker filled slot")).collect()
+}
+
+/// Parallel fold: run `f(chunk_index, range)` per contiguous index range and
+/// combine the per-thread results with `combine`.
+pub fn par_ranges<R: Send, F, C>(n: usize, nthreads: usize, f: F, combine: C) -> Option<R>
+where
+    F: Fn(usize, std::ops::Range<usize>) -> R + Sync,
+    C: Fn(R, R) -> R,
+{
+    if n == 0 {
+        return None;
+    }
+    let nthreads = nthreads.max(1).min(n);
+    let base = n / nthreads;
+    let extra = n % nthreads;
+    let mut results: Vec<R> = Vec::with_capacity(nthreads);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(nthreads);
+        let mut start = 0usize;
+        for i in 0..nthreads {
+            let len = base + usize::from(i < extra);
+            let range = start..start + len;
+            start += len;
+            let fr = &f;
+            handles.push(scope.spawn(move || fr(i, range)));
+        }
+        for h in handles {
+            results.push(h.join().expect("worker panicked"));
+        }
+    });
+    results.into_iter().reduce(combine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything_once() {
+        let mut v = vec![0u32; 10_007];
+        par_chunks_mut(&mut v, 8, |_, _, chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn chunk_offsets_are_correct() {
+        let mut v: Vec<usize> = vec![0; 1000];
+        par_chunks_mut(&mut v, 7, |_, offset, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = offset + i;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i);
+        }
+    }
+
+    #[test]
+    fn chunks_single_thread_path() {
+        let mut v = vec![1u64; 17];
+        par_chunks_mut(&mut v, 1, |idx, off, chunk| {
+            assert_eq!((idx, off), (0, 0));
+            assert_eq!(chunk.len(), 17);
+        });
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = par_map(100, 8, |i| i * i);
+        for (i, &x) in out.iter().enumerate() {
+            assert_eq!(x, i * i);
+        }
+    }
+
+    #[test]
+    fn map_empty() {
+        let out: Vec<u32> = par_map(0, 8, |_| unreachable!());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn ranges_fold_sum() {
+        let total = par_ranges(1_000, 6, |_, r| r.sum::<usize>(), |a, b| a + b).unwrap();
+        assert_eq!(total, 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let mut v = vec![0u8; 3];
+        par_chunks_mut(&mut v, 64, |_, _, c| {
+            for x in c {
+                *x = 7;
+            }
+        });
+        assert_eq!(v, vec![7, 7, 7]);
+        let out = par_map(2, 64, |i| i + 1);
+        assert_eq!(out, vec![1, 2]);
+    }
+}

@@ -1,0 +1,141 @@
+//! Byte / time / rate unit helpers shared across the simulator and reports.
+
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+pub const TIB: u64 = 1 << 40;
+
+/// Decimal (SI) units, used for link rates quoted in GB/s.
+pub const KB: u64 = 1_000;
+pub const MB: u64 = 1_000_000;
+pub const GB: u64 = 1_000_000_000;
+
+/// Format a byte count with binary units, e.g. `1.50 GiB`.
+pub fn fmt_bytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    if bytes >= TIB {
+        format!("{:.2} TiB", b / TIB as f64)
+    } else if bytes >= GIB {
+        format!("{:.2} GiB", b / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.2} MiB", b / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.2} KiB", b / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format a rate in bytes/second as GiB/s (the unit Fig. 6 uses).
+pub fn fmt_rate(bytes_per_sec: f64) -> String {
+    format!("{:.2} GiB/s", bytes_per_sec / GIB as f64)
+}
+
+/// Format seconds adaptively (ns/µs/ms/s).
+pub fn fmt_secs(secs: f64) -> String {
+    if !secs.is_finite() {
+        return format!("{secs}");
+    }
+    let a = secs.abs();
+    if a >= 1.0 {
+        format!("{secs:.3} s")
+    } else if a >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Parse strings like `512GiB`, `128 MiB`, `64GB`, `4096`, `2TiB` into bytes.
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let s = s.trim();
+    let split = s
+        .find(|c: char| !c.is_ascii_digit() && c != '.' && c != '_')
+        .unwrap_or(s.len());
+    let (num, unit) = s.split_at(split);
+    let num: f64 = num
+        .replace('_', "")
+        .parse()
+        .map_err(|e| format!("bad number in {s:?}: {e}"))?;
+    let mult = match unit.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1,
+        "k" | "kib" => KIB,
+        "m" | "mib" => MIB,
+        "g" | "gib" => GIB,
+        "t" | "tib" => TIB,
+        "kb" => KB,
+        "mb" => MB,
+        "gb" => GB,
+        "tb" => 1_000_000_000_000,
+        other => return Err(format!("unknown byte unit {other:?} in {s:?}")),
+    };
+    Ok((num * mult as f64).round() as u64)
+}
+
+/// Parse counts like `32k`, `1m`, `20M`, `1e9` into u64 (used by CLI sweeps).
+pub fn parse_count(s: &str) -> Result<u64, String> {
+    let s = s.trim();
+    if let Some(stripped) = s.strip_suffix(['k', 'K']) {
+        return Ok((stripped
+            .parse::<f64>()
+            .map_err(|e| format!("bad count {s:?}: {e}"))?
+            * 1e3) as u64);
+    }
+    if let Some(stripped) = s.strip_suffix(['m', 'M']) {
+        return Ok((stripped
+            .parse::<f64>()
+            .map_err(|e| format!("bad count {s:?}: {e}"))?
+            * 1e6) as u64);
+    }
+    if let Some(stripped) = s.strip_suffix(['b', 'B', 'g', 'G']) {
+        return Ok((stripped
+            .parse::<f64>()
+            .map_err(|e| format!("bad count {s:?}: {e}"))?
+            * 1e9) as u64);
+    }
+    s.parse::<f64>()
+        .map(|f| f as u64)
+        .map_err(|e| format!("bad count {s:?}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2 * KIB), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * MIB + MIB / 2), "3.50 MiB");
+        assert_eq!(fmt_bytes(512 * GIB), "512.00 GiB");
+        assert_eq!(fmt_bytes(2 * TIB), "2.00 TiB");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(parse_bytes("512GiB").unwrap(), 512 * GIB);
+        assert_eq!(parse_bytes("128 MiB").unwrap(), 128 * MIB);
+        assert_eq!(parse_bytes("64GB").unwrap(), 64 * GB);
+        assert_eq!(parse_bytes("4096").unwrap(), 4096);
+        assert_eq!(parse_bytes("1.5k").unwrap(), 1536);
+        assert!(parse_bytes("12xyz").is_err());
+    }
+
+    #[test]
+    fn parse_counts() {
+        assert_eq!(parse_count("32k").unwrap(), 32_000);
+        assert_eq!(parse_count("20M").unwrap(), 20_000_000);
+        assert_eq!(parse_count("1.5b").unwrap(), 1_500_000_000);
+        assert_eq!(parse_count("777").unwrap(), 777);
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+        assert_eq!(fmt_secs(0.002), "2.000 ms");
+        assert_eq!(fmt_secs(3.4e-6), "3.400 µs");
+        assert_eq!(fmt_secs(120e-9), "120.0 ns");
+    }
+}

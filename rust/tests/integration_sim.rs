@@ -1,0 +1,215 @@
+//! Cross-module integration tests: topology → plan → simulation → metrics,
+//! plus failure injection (OOM paths, malformed manifests, workload/topology
+//! mismatches) and whole-pipeline invariants.
+
+use cxlfine::mem::{Policy, RegionRequest, TensorClass};
+use cxlfine::model::footprint::{Footprint, Workload};
+use cxlfine::model::presets::{mistral_nemo_12b, qwen25_7b, tiny_2m};
+use cxlfine::offload::{simulate_iteration, simulate_iteration_traced, MemoryPlan, RunConfig};
+use cxlfine::runtime::Manifest;
+use cxlfine::topology::presets::{config_a, config_b, dev_tiny, with_dram_capacity};
+use cxlfine::topology::NodeId;
+use cxlfine::util::units::GIB;
+
+#[test]
+fn full_pipeline_all_policies_all_presets() {
+    // every (preset, policy) combination must plan + simulate cleanly for
+    // a workload that fits
+    for topo in [config_a(), config_b(), dev_tiny()] {
+        let model = if topo.name.starts_with("dev") {
+            tiny_2m()
+        } else {
+            qwen25_7b()
+        };
+        for policy in [
+            Policy::DramOnly,
+            Policy::NaiveInterleave,
+            Policy::CxlAware { striping: false },
+            Policy::CxlAware { striping: true },
+        ] {
+            let w = Workload::new(2, 2, 512);
+            let cfg = RunConfig::new(model.clone(), w, policy);
+            let plan = MemoryPlan::build(&topo, &cfg)
+                .unwrap_or_else(|e| panic!("{} {:?}: {e}", topo.name, policy));
+            let b = simulate_iteration(&topo, &cfg, &plan);
+            assert!(b.iter_s.is_finite() && b.iter_s > 0.0);
+            assert!(b.fwd_s > 0.0 && b.bwd_s > 0.0 && b.step_s > 0.0);
+        }
+    }
+}
+
+#[test]
+fn trace_covers_every_scheduled_operation() {
+    let topo = config_a();
+    let cfg = RunConfig::new(qwen25_7b(), Workload::new(2, 4, 4096), Policy::DramOnly);
+    let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+    let (b, trace) = simulate_iteration_traced(&topo, &cfg, &plan);
+    let l = cfg.model.layers;
+    // per GPU: L param loads + L fwd + L ckpt offloads + L param reloads
+    //          + L ckpt loads + L bwd + L grad offloads = 7L spans, + STEP
+    assert_eq!(trace.spans().len(), 2 * 7 * l + 1, "span count");
+    // no span exceeds the iteration window
+    for s in trace.spans() {
+        assert!(s.start_s >= 0.0 && s.end_s <= b.iter_s + 1e-9, "span out of window: {s:?}");
+        assert!(s.duration() >= 0.0);
+    }
+    // compute lanes must be busy a plausible fraction of the iteration
+    let busy = trace.lane_busy();
+    let gpu0_compute = busy
+        .iter()
+        .find(|(lane, _)| lane == "gpu0/compute")
+        .map(|(_, b)| *b)
+        .unwrap();
+    assert!(gpu0_compute > 0.3 * b.iter_s, "GPU idle too much: {gpu0_compute} of {}", b.iter_s);
+}
+
+#[test]
+fn oom_failure_paths_are_clean_errors() {
+    // baseline OOM
+    let topo = with_dram_capacity(config_a(), 8 * GIB);
+    let cfg = RunConfig::new(qwen25_7b(), Workload::new(1, 1, 4096), Policy::DramOnly);
+    let err = match MemoryPlan::build(&topo, &cfg) {
+        Err(e) => e,
+        Ok(_) => panic!("plan must not fit in 8 GiB"),
+    };
+    assert!(err.to_string().contains("cannot place"));
+    // CXL policy OOM when even the AIC is too small
+    let cfg2 = RunConfig::new(
+        mistral_nemo_12b(),
+        Workload::new(2, 32, 32768),
+        Policy::CxlAware { striping: false },
+    );
+    let small = with_dram_capacity(config_a(), 64 * GIB);
+    assert!(MemoryPlan::build(&small, &cfg2).is_err());
+}
+
+#[test]
+#[should_panic(expected = "workload wants")]
+fn too_many_gpus_is_rejected() {
+    let topo = config_a(); // 2 GPUs
+    let cfg = RunConfig::new(tiny_2m(), Workload::new(3, 1, 128), Policy::DramOnly);
+    // plan succeeds (memory is memory) but simulation must reject
+    let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+    let _ = simulate_iteration(&topo, &cfg, &plan);
+}
+
+#[test]
+fn footprint_matches_allocator_accounting_exactly() {
+    // Table-I totals and the allocator must agree byte-for-byte
+    for (model, w) in [
+        (qwen25_7b(), Workload::new(1, 8, 4096)),
+        (mistral_nemo_12b(), Workload::new(2, 16, 8192)),
+    ] {
+        let topo = config_b();
+        let f = Footprint::compute(&model, &w);
+        let cfg = RunConfig::new(model, w, Policy::CxlAware { striping: true });
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        assert_eq!(plan.alloc.total_used(), f.total());
+    }
+}
+
+#[test]
+fn policy_relative_order_is_invariant_across_hardware() {
+    // baseline ≥ cxl-aware ≥ naive on both CXL configurations
+    for (mk_topo, striping) in [(config_a as fn() -> _, false), (config_b as fn() -> _, true)] {
+        let base_topo = mk_topo();
+        let cxl_topo = with_dram_capacity(mk_topo(), 128 * GIB);
+        let w = Workload::new(2, 8, 8192);
+        let run = |topo: &cxlfine::topology::SystemTopology, policy| {
+            let cfg = RunConfig::new(qwen25_7b(), w, policy);
+            let plan = MemoryPlan::build(topo, &cfg).unwrap();
+            simulate_iteration(topo, &cfg, &plan).tokens_per_sec()
+        };
+        let base = run(&base_topo, Policy::DramOnly);
+        let ours = run(&cxl_topo, Policy::CxlAware { striping });
+        let naive = run(&cxl_topo, Policy::NaiveInterleave);
+        assert!(base >= ours * 0.999, "baseline {base} vs ours {ours}");
+        assert!(ours >= naive, "ours {ours} vs naive {naive}");
+    }
+}
+
+#[test]
+fn striping_beats_affinity_under_shared_aic_pressure() {
+    // Config B, both GPUs: striped placement should never lose to affinity
+    let topo = with_dram_capacity(config_b(), 128 * GIB);
+    let w = Workload::new(2, 1, 8192);
+    let run = |policy| {
+        let cfg = RunConfig::new(qwen25_7b(), w, policy);
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        simulate_iteration(&topo, &cfg, &plan).tokens_per_sec()
+    };
+    let affinity = run(Policy::CxlAware { striping: false });
+    let striped = run(Policy::CxlAware { striping: true });
+    assert!(striped >= affinity * 0.999, "striped {striped} vs affinity {affinity}");
+}
+
+#[test]
+fn manifest_failure_injection() {
+    // missing directory
+    assert!(Manifest::load("/nonexistent/path").is_err());
+    // corrupt json
+    let dir = std::env::temp_dir().join(format!("cxlfine_manifest_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    // structurally valid but empty
+    std::fs::write(dir.join("manifest.json"), r#"{"entries": {}}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn allocator_survives_adversarial_sequences() {
+    use cxlfine::mem::NumaAllocator;
+    // fill, free everything, refill — capacity must be fully recovered
+    let topo = dev_tiny();
+    let mut a = NumaAllocator::new(&topo, Policy::CxlAware { striping: true });
+    let mut ids = vec![];
+    loop {
+        match a.alloc(RegionRequest::new("x", TensorClass::Activations, GIB)) {
+            Ok(id) => ids.push(id),
+            Err(_) => break,
+        }
+    }
+    let n_first = ids.len();
+    assert!(n_first >= 15, "should fit ~16 GiB of activations, got {n_first}");
+    for id in ids.drain(..) {
+        assert!(a.release(id));
+    }
+    assert_eq!(a.total_used(), 0);
+    // refill reaches the same count (no leaks, no fragmentation artifacts)
+    let mut n_second = 0;
+    while a
+        .alloc(RegionRequest::new("y", TensorClass::Activations, GIB))
+        .is_ok()
+    {
+        n_second += 1;
+    }
+    assert_eq!(n_first, n_second);
+}
+
+#[test]
+fn naive_interleave_touches_every_node() {
+    let topo = config_b();
+    let cfg = RunConfig::new(
+        qwen25_7b(),
+        Workload::new(1, 4, 4096),
+        Policy::NaiveInterleave,
+    );
+    let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+    for node in topo.all_nodes() {
+        assert!(
+            plan.alloc.used_on(node) > 0,
+            "interleave must use node {node:?}"
+        );
+    }
+    // whereas CXL-aware keeps node 0 for PGO only when DRAM suffices
+    let cfg2 = RunConfig::new(
+        qwen25_7b(),
+        Workload::new(1, 4, 4096),
+        Policy::CxlAware { striping: true },
+    );
+    let plan2 = MemoryPlan::build(&topo, &cfg2).unwrap();
+    let f = plan2.footprint.latency_critical();
+    assert_eq!(plan2.alloc.used_on(NodeId(0)), f, "only PGO in DRAM");
+}

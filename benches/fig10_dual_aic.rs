@@ -4,7 +4,7 @@
 //! Paper bands: naive loses 2–11%; ours recovers to ~99–101% of the
 //! DRAM-only baseline — the striping result that motivates §IV-B.
 
-use cxlfine::mem::Policy;
+use cxlfine::mem::{EngineRef, Policy};
 use cxlfine::model::presets::{mistral_nemo_12b, qwen25_7b};
 use cxlfine::offload::sweep_grid;
 use cxlfine::topology::presets::{config_b, with_dram_capacity};
@@ -25,10 +25,10 @@ fn panel(
 ) -> (f64, f64) {
     let base_topo = config_b();
     let cxl_topo = with_dram_capacity(config_b(), 128 * GIB);
-    let policies = [
-        Policy::DramOnly,
-        Policy::NaiveInterleave,
-        Policy::CxlAware { striping: true },
+    let policies: Vec<EngineRef> = vec![
+        Policy::DramOnly.into(),
+        Policy::NaiveInterleave.into(),
+        Policy::CxlAware { striping: true }.into(),
     ];
     let res = sweep_grid(&base_topo, &cxl_topo, &model, gpus, CONTEXTS, BATCHES, &policies);
     let mut t = Table::new(&["context", "batch", "baseline tok/s", "naive %", "ours+striping %"]);

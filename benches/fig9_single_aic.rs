@@ -10,7 +10,7 @@
 //! We assert the *shape*: ordering baseline ≥ ours ≥ naive everywhere, and
 //! the band positions within generous tolerances.
 
-use cxlfine::mem::Policy;
+use cxlfine::mem::{EngineRef, Policy};
 use cxlfine::model::presets::{mistral_nemo_12b, qwen25_7b};
 use cxlfine::offload::sweep_grid;
 use cxlfine::topology::presets::{config_a, with_dram_capacity};
@@ -31,10 +31,10 @@ fn panel(
 ) -> (f64, f64, f64, f64) {
     let base_topo = config_a();
     let cxl_topo = with_dram_capacity(config_a(), 128 * GIB);
-    let policies = [
-        Policy::DramOnly,
-        Policy::NaiveInterleave,
-        Policy::CxlAware { striping: false },
+    let policies: Vec<EngineRef> = vec![
+        Policy::DramOnly.into(),
+        Policy::NaiveInterleave.into(),
+        Policy::CxlAware { striping: false }.into(),
     ];
     let res = sweep_grid(
         &base_topo, &cxl_topo, &model, gpus, CONTEXTS, BATCHES, &policies,

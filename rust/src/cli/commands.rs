@@ -3,7 +3,7 @@
 use anyhow::anyhow;
 
 use super::{parse, CliDone};
-use crate::mem::Policy;
+use crate::mem::{engine, EngineRef, Policy};
 use crate::model::footprint::{Footprint, Workload};
 use crate::model::{presets as mpresets, ModelConfig};
 use crate::offload::{simulate_iteration, sweep_grid, MemoryPlan, RunConfig};
@@ -33,10 +33,11 @@ fn get_model(name: &str) -> Result<ModelConfig, CliDone> {
         .ok_or_else(|| CliDone::Bad(format!("unknown model {name:?} (7b|12b|tiny|tiny-2m)")))
 }
 
-fn get_policy(name: &str) -> Result<Policy, CliDone> {
-    Policy::by_name(name).ok_or_else(|| {
+fn get_engine(name: &str) -> Result<EngineRef, CliDone> {
+    engine::by_name(name).ok_or_else(|| {
         CliDone::Bad(format!(
-            "unknown policy {name:?} (baseline|naive|cxl-aware|cxl-aware+striping)"
+            "unknown policy {name:?} ({})",
+            engine::known_names().join("|")
         ))
     })
 }
@@ -60,11 +61,15 @@ pub fn plan(args: &[String]) -> Result<(), CliDone> {
         .opt("gpus", "2", "number of GPUs")
         .opt("batch", "16", "per-GPU batch size")
         .opt("context", "4096", "context length (tokens)")
-        .opt("policy", "cxl-aware", "placement policy");
+        .opt(
+            "policy",
+            "cxl-aware",
+            "placement policy (baseline|naive|cxl-aware|cxl-aware+striping|adaptive-spill)",
+        );
     let a = parse(spec, args)?;
     let topo = get_topo(a.get("preset").unwrap(), a.get("dram").filter(|s| !s.is_empty()))?;
     let model = get_model(a.get("model").unwrap())?;
-    let policy = get_policy(a.get("policy").unwrap())?;
+    let policy = get_engine(a.get("policy").unwrap())?;
     let w = Workload::new(
         a.parse_usize("gpus")?,
         a.parse_usize("batch")?,
@@ -112,13 +117,13 @@ pub fn simulate(args: &[String]) -> Result<(), CliDone> {
     let a = parse(spec, args)?;
     let topo = get_topo(a.get("preset").unwrap(), a.get("dram").filter(|s| !s.is_empty()))?;
     let model = get_model(a.get("model").unwrap())?;
-    let policy = get_policy(a.get("policy").unwrap())?;
+    let policy = get_engine(a.get("policy").unwrap())?;
     let w = Workload::new(
         a.parse_usize("gpus")?,
         a.parse_usize("batch")?,
         a.parse_usize("context")?,
     );
-    let mut cfg = RunConfig::new(model, w, policy);
+    let mut cfg = RunConfig::new(model, w, policy.clone());
     cfg.prefetch_depth = a.parse_usize("prefetch")?;
     let plan = MemoryPlan::build(&topo, &cfg).map_err(|e| anyhow!("{e}"))?;
     let b = simulate_iteration(&topo, &cfg, &plan);
@@ -146,7 +151,12 @@ pub fn sweep(args: &[String]) -> Result<(), CliDone> {
         .opt("gpus", "1", "number of GPUs")
         .opt("contexts", "4096,8192,16384,32768", "comma list")
         .opt("batches", "1,4,16,32", "comma list")
-        .flag("striping", "include the striped CXL-aware policy");
+        .opt(
+            "ours",
+            "",
+            "engine for the 'ours' column (any registered policy, e.g. adaptive-spill)",
+        )
+        .flag("striping", "use the striped CXL-aware policy as 'ours'");
     let a = parse(spec, args)?;
     let base_topo = get_topo(a.get("preset").unwrap(), None)?;
     let cxl_topo = get_topo(a.get("preset").unwrap(), a.get("dram"))?;
@@ -162,12 +172,27 @@ pub fn sweep(args: &[String]) -> Result<(), CliDone> {
         .into_iter()
         .map(|v| v as usize)
         .collect();
-    let mut policies = vec![Policy::DramOnly, Policy::NaiveInterleave];
-    policies.push(Policy::CxlAware {
-        striping: a.flag("striping"),
-    });
+    let ours: EngineRef = match a.get("ours").filter(|s| !s.is_empty()) {
+        Some(name) => {
+            if a.flag("striping") {
+                return Err(CliDone::Bad(
+                    "--ours and --striping conflict: --striping selects cxl-aware+striping \
+                     as the 'ours' column, --ours names an engine directly"
+                        .to_string(),
+                ));
+            }
+            get_engine(name)?
+        }
+        None => Policy::CxlAware {
+            striping: a.flag("striping"),
+        }
+        .into(),
+    };
+    let policies: Vec<EngineRef> =
+        vec![Policy::DramOnly.into(), Policy::NaiveInterleave.into(), ours];
     let res = sweep_grid(&base_topo, &cxl_topo, &model, gpus, &contexts, &batches, &policies);
-    let mut t = Table::new(&["context", "batch", "baseline tok/s", "naive %", "ours %"]);
+    let ours_col = format!("{} %", res.policies[2]);
+    let mut t = Table::new(&["context", "batch", "baseline tok/s", "naive %", &ours_col]);
     for p in &res.points {
         let base = p.runs[0].as_ref();
         let fmt_norm = |i: usize| match res.normalized(p, i, 0) {
@@ -330,7 +355,7 @@ pub fn trace(args: &[String]) -> Result<(), CliDone> {
     let a = parse(spec, args)?;
     let topo = get_topo(a.get("preset").unwrap(), a.get("dram").filter(|s| !s.is_empty()))?;
     let model = get_model(a.get("model").unwrap())?;
-    let policy = get_policy(a.get("policy").unwrap())?;
+    let policy = get_engine(a.get("policy").unwrap())?;
     let w = Workload::new(
         a.parse_usize("gpus")?,
         a.parse_usize("batch")?,

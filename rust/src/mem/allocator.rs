@@ -1,11 +1,11 @@
 //! The NUMA-aware allocator: tracks per-node capacity, commits placements
-//! computed by a [`Policy`], and reports utilization. This is the library's
-//! stand-in for `libnuma`/`numactl` in the real system — plus the paper's
-//! CXL-aware logic layered on top.
+//! computed by a [`PlacementEngine`], and reports utilization. This is the
+//! library's stand-in for `libnuma`/`numactl` in the real system — plus the
+//! paper's CXL-aware logic layered on top.
 
 use std::collections::HashMap;
 
-use super::policy::Policy;
+use super::engine::{EngineRef, PlacementEngine};
 use super::region::{Placement, Region, RegionId, RegionRequest};
 use crate::topology::{NodeId, SystemTopology};
 use crate::util::units::fmt_bytes;
@@ -34,25 +34,26 @@ impl std::error::Error for AllocError {}
 /// Per-node capacity tracker + region table.
 pub struct NumaAllocator<'t> {
     topo: &'t SystemTopology,
-    policy: Policy,
+    engine: EngineRef,
     free: Vec<u64>,
     regions: HashMap<usize, Region>,
     next_id: usize,
 }
 
 impl<'t> NumaAllocator<'t> {
-    pub fn new(topo: &'t SystemTopology, policy: Policy) -> Self {
+    pub fn new(topo: &'t SystemTopology, engine: impl Into<EngineRef>) -> Self {
         Self {
             topo,
-            policy,
+            engine: engine.into(),
             free: topo.mem_nodes.iter().map(|n| n.capacity).collect(),
             regions: HashMap::new(),
             next_id: 0,
         }
     }
 
-    pub fn policy(&self) -> Policy {
-        self.policy
+    /// The placement engine this allocator routes requests through.
+    pub fn engine(&self) -> &dyn PlacementEngine {
+        self.engine.as_ref()
     }
 
     pub fn topo(&self) -> &SystemTopology {
@@ -72,7 +73,7 @@ impl<'t> NumaAllocator<'t> {
     /// Place and commit a region.
     pub fn alloc(&mut self, req: RegionRequest) -> Result<RegionId, AllocError> {
         let placement = self
-            .policy
+            .engine
             .place(self.topo, &req, &self.free)
             .map_err(|shortfall| AllocError {
                 request: req.name.clone(),
@@ -157,7 +158,7 @@ impl<'t> NumaAllocator<'t> {
     pub fn describe(&self) -> String {
         use std::fmt::Write;
         let mut s = String::new();
-        let _ = writeln!(s, "allocator ({}):", self.policy.name());
+        let _ = writeln!(s, "allocator ({}):", self.engine.name());
         for n in self.topo.all_nodes() {
             let spec = self.topo.node(n);
             let used = self.used_on(n);
@@ -196,6 +197,7 @@ impl<'t> NumaAllocator<'t> {
 mod tests {
     use super::*;
     use crate::mem::region::TensorClass;
+    use crate::mem::Policy;
     use crate::topology::presets::{config_a, dev_tiny};
     use crate::util::units::GIB;
 

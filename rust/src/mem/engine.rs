@@ -1,0 +1,397 @@
+//! The pluggable placement layer: [`PlacementEngine`] + a name registry.
+//!
+//! The paper evaluates exactly three policies, and the original code froze
+//! them into the [`Policy`] enum — every new placement strategy meant
+//! touching every `match` arm. This module inverts that: placement is an
+//! object-safe trait, the legacy enum variants are engines (byte-identical
+//! plans, see the golden-parity tests below), and new strategies plug in by
+//! implementing the trait and registering a name. The allocator, plan
+//! builder, iteration simulator, grid sweep, CLI and benches all consume
+//! [`EngineRef`]s, never the enum.
+//!
+//! One genuinely new engine ships here: [`AdaptiveSpill`], which re-weights
+//! spill/stripe shares by each node's `cpu_stream_bw` **and** its remaining
+//! free-capacity fraction — a nearly-full AIC absorbs proportionally less,
+//! so repeated allocations degrade gracefully instead of wedging one card
+//! (the MemAscend-style spill-ordering idea on top of Fig. 8c's
+//! bandwidth-proportional split).
+
+use std::sync::Arc;
+
+use super::policy::Policy;
+use super::region::{Placement, RegionRequest};
+use super::striping;
+use crate::sim::memmodel::AccessMode;
+use crate::topology::{NodeId, SystemTopology};
+
+/// An object-safe placement strategy.
+///
+/// Implementations must be pure functions of `(topo, req, free)` — the
+/// allocator commits the returned placement and owns all bookkeeping, so
+/// engines never see their own history except through `free`.
+pub trait PlacementEngine: Send + Sync {
+    /// Registry / CLI name, e.g. `"cxl-aware+striping"`.
+    fn name(&self) -> &str;
+
+    /// Compute the placement for `req` given per-node free bytes (indexed
+    /// by `NodeId.0`). `Err(shortfall)` when the region cannot be placed.
+    fn place(
+        &self,
+        topo: &SystemTopology,
+        req: &RegionRequest,
+        free: &[u64],
+    ) -> Result<Placement, u64>;
+
+    /// Baseline engines run against the all-DRAM host in grid sweeps
+    /// (the paper's "DRAM-only" comparison column).
+    fn is_baseline(&self) -> bool {
+        false
+    }
+}
+
+/// Shared handle to an engine — what every layer above `mem` threads around.
+pub type EngineRef = Arc<dyn PlacementEngine>;
+
+/// The legacy policies are engines; plans are byte-identical by delegation.
+impl PlacementEngine for Policy {
+    fn name(&self) -> &str {
+        Policy::name(*self)
+    }
+
+    fn place(
+        &self,
+        topo: &SystemTopology,
+        req: &RegionRequest,
+        free: &[u64],
+    ) -> Result<Placement, u64> {
+        Policy::place(*self, topo, req, free)
+    }
+
+    fn is_baseline(&self) -> bool {
+        matches!(self, Policy::DramOnly)
+    }
+}
+
+impl From<Policy> for EngineRef {
+    fn from(p: Policy) -> Self {
+        Arc::new(p)
+    }
+}
+
+/// Adaptive bandwidth-weighted spill (§IV-B, extended).
+///
+/// Like `cxl-aware+striping`, latency-critical data fills DRAM first; but
+/// both the optimizer-spill partition and the latency-tolerant stripes are
+/// weighted by `cpu_stream_bw × free_fraction` per CXL node instead of by
+/// bandwidth alone. Static bandwidth weighting keeps hammering a card that
+/// is already nearly full (its weight never drops), forcing later regions
+/// into capacity-clamped, unbalanced splits; folding in the remaining free
+/// fraction spreads pressure so every allocation in a long sequence stays
+/// close to bandwidth-proportional.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdaptiveSpill;
+
+impl AdaptiveSpill {
+    pub const NAME: &'static str = "adaptive-spill";
+
+    fn weights(topo: &SystemTopology, nodes: &[NodeId], free: &[u64]) -> Vec<f64> {
+        nodes
+            .iter()
+            .map(|&n| {
+                let spec = topo.node(n);
+                let cap = spec.capacity as f64;
+                let free_frac = if cap > 0.0 { free[n.0] as f64 / cap } else { 0.0 };
+                spec.cpu_stream_bw * free_frac
+            })
+            .collect()
+    }
+}
+
+impl PlacementEngine for AdaptiveSpill {
+    fn name(&self) -> &str {
+        Self::NAME
+    }
+
+    fn place(
+        &self,
+        topo: &SystemTopology,
+        req: &RegionRequest,
+        free: &[u64],
+    ) -> Result<Placement, u64> {
+        if req.bytes == 0 {
+            return Ok(Placement {
+                parts: vec![],
+                mode: AccessMode::Partitioned,
+            });
+        }
+        let dram = NodeId(0);
+        let cxl = topo.cxl_nodes();
+        if req.class.latency_critical() {
+            // DRAM first; spill across AICs weighted by bw × free fraction.
+            if free[0] >= req.bytes {
+                return Ok(Placement::single(dram, req.bytes));
+            }
+            let dram_take = free[0];
+            let rest = req.bytes - dram_take;
+            if cxl.is_empty() {
+                return Err(rest);
+            }
+            let weights = Self::weights(topo, &cxl, free);
+            let (mut parts, unplaced) = striping::weighted_split(rest, &cxl, &weights, free);
+            if unplaced > 0 {
+                return Err(unplaced);
+            }
+            if dram_take > 0 {
+                parts.insert(0, (dram, dram_take));
+            }
+            Ok(Placement {
+                parts,
+                mode: AccessMode::Partitioned,
+            })
+        } else {
+            // Latency-tolerant → adaptive stripes over CXL, overflow to DRAM.
+            let (mut parts, unplaced) = if cxl.is_empty() {
+                striping::sequential_fill(req.bytes, &[dram], free)
+            } else {
+                let weights = Self::weights(topo, &cxl, free);
+                striping::weighted_split(req.bytes, &cxl, &weights, free)
+            };
+            let mut rest = unplaced;
+            if rest > 0 && !cxl.is_empty() {
+                let take = rest.min(free[0]);
+                if take > 0 {
+                    parts.push((dram, take));
+                    rest -= take;
+                }
+            }
+            if rest > 0 {
+                return Err(rest);
+            }
+            Ok(Placement {
+                parts,
+                mode: AccessMode::Partitioned,
+            })
+        }
+    }
+}
+
+impl From<AdaptiveSpill> for EngineRef {
+    fn from(e: AdaptiveSpill) -> Self {
+        Arc::new(e)
+    }
+}
+
+/// Canonical names of every registered engine (CLI help text).
+pub fn known_names() -> Vec<&'static str> {
+    vec![
+        "baseline-dram",
+        "naive-cxl",
+        "cxl-aware",
+        "cxl-aware+striping",
+        AdaptiveSpill::NAME,
+    ]
+}
+
+/// Resolve an engine by name (accepts every legacy `Policy::by_name` alias
+/// plus the adaptive engine's aliases). This is what the CLI uses, so new
+/// engines become selectable by registering here — no enum edits anywhere.
+pub fn by_name(name: &str) -> Option<EngineRef> {
+    if let Some(p) = Policy::by_name(name) {
+        return Some(p.into());
+    }
+    match name {
+        AdaptiveSpill::NAME | "adaptive" | "bw-adaptive" => Some(AdaptiveSpill.into()),
+        _ => None,
+    }
+}
+
+/// One instance of every registered engine, in canonical order.
+pub fn registry() -> Vec<EngineRef> {
+    known_names()
+        .into_iter()
+        .map(|n| by_name(n).expect("known name resolves"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::region::TensorClass;
+    use crate::topology::presets::{config_a, config_b, with_dram_capacity};
+    use crate::topology::GpuId;
+    use crate::util::units::GIB;
+
+    fn free_of(topo: &SystemTopology) -> Vec<u64> {
+        topo.mem_nodes.iter().map(|n| n.capacity).collect()
+    }
+
+    #[test]
+    fn registry_resolves_every_known_name() {
+        for name in known_names() {
+            let e = by_name(name).unwrap_or_else(|| panic!("{name} must resolve"));
+            assert_eq!(e.name(), name, "canonical name must round-trip");
+        }
+        assert!(by_name("??").is_none());
+        assert_eq!(registry().len(), known_names().len());
+    }
+
+    #[test]
+    fn adaptive_aliases_resolve() {
+        for alias in ["adaptive-spill", "adaptive", "bw-adaptive"] {
+            assert_eq!(by_name(alias).unwrap().name(), AdaptiveSpill::NAME);
+        }
+    }
+
+    #[test]
+    fn only_dram_only_is_baseline() {
+        for e in registry() {
+            assert_eq!(e.is_baseline(), e.name() == "baseline-dram", "{}", e.name());
+        }
+    }
+
+    /// Golden parity: the three legacy policies must produce byte-identical
+    /// placements whether called through the enum or through the registry.
+    #[test]
+    fn legacy_policies_golden_parity_through_trait() {
+        let topos = [
+            config_a(),
+            config_b(),
+            with_dram_capacity(config_a(), 16 * GIB),
+            with_dram_capacity(config_b(), 16 * GIB),
+        ];
+        let policies = [
+            Policy::DramOnly,
+            Policy::NaiveInterleave,
+            Policy::CxlAware { striping: false },
+            Policy::CxlAware { striping: true },
+        ];
+        for topo in &topos {
+            for policy in policies {
+                let engine = by_name(PlacementEngine::name(&policy)).expect("registered");
+                for class in TensorClass::all() {
+                    for bytes in [0u64, 1, GIB - 1, 10 * GIB, 300 * GIB, 2000 * GIB] {
+                        for gpu in [None, Some(GpuId(0)), Some(GpuId(1))] {
+                            let mut req = RegionRequest::new("r", class, bytes);
+                            if let Some(g) = gpu {
+                                req = req.for_gpu(g);
+                            }
+                            // full and degraded free vectors
+                            let mut frees = vec![free_of(topo)];
+                            let mut tight = free_of(topo);
+                            for f in tight.iter_mut() {
+                                *f /= 7;
+                            }
+                            frees.push(tight);
+                            for free in &frees {
+                                let via_enum = policy.place(topo, &req, free);
+                                let via_trait = engine.place(topo, &req, free);
+                                assert_eq!(
+                                    via_enum, via_trait,
+                                    "parity broken: {} {class:?} {bytes}B gpu={gpu:?}",
+                                    Policy::name(policy)
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_pins_fitting_optimizer_data_to_dram() {
+        let topo = config_a();
+        let free = free_of(&topo);
+        let req = RegionRequest::new("o", TensorClass::OptimizerStates, 40 * GIB);
+        let p = AdaptiveSpill.place(&topo, &req, &free).unwrap();
+        assert_eq!(p.parts, vec![(NodeId(0), 40 * GIB)]);
+    }
+
+    #[test]
+    fn adaptive_spill_weights_by_bandwidth_and_free_capacity() {
+        // Config B: two AICs with equal cpu_stream_bw; make cxl0 75 % full.
+        // weights ∝ bw × free_frac → 0.25 : 1.0 → the 50 GiB spill splits
+        // 10 GiB : 40 GiB instead of the static policy's 25 : 25.
+        let topo = with_dram_capacity(config_b(), GIB);
+        let mut free = free_of(&topo);
+        free[0] = 0; // DRAM exhausted → everything spills
+        free[1] = 64 * GIB; // cxl0: 64 of 256 GiB free
+        free[2] = 256 * GIB; // cxl1: empty
+        let req = RegionRequest::new("o", TensorClass::OptimizerStates, 50 * GIB);
+        let p = AdaptiveSpill.place(&topo, &req, &free).unwrap();
+        assert_eq!(p.mode, AccessMode::Partitioned);
+        assert_eq!(p.bytes_on(NodeId(0)), 0);
+        let on1 = p.bytes_on(NodeId(1)) as i64;
+        let on2 = p.bytes_on(NodeId(2)) as i64;
+        assert!((on1 - (10 * GIB) as i64).abs() <= 8, "cxl0 share {on1}");
+        assert!((on2 - (40 * GIB) as i64).abs() <= 8, "cxl1 share {on2}");
+        assert_eq!(p.total_bytes(), 50 * GIB);
+    }
+
+    #[test]
+    fn adaptive_matches_static_stripe_on_fresh_nodes() {
+        // With both AICs empty the free fractions are equal, so the adaptive
+        // weights reduce to plain bandwidth weights: equal halves here.
+        let topo = config_b();
+        let free = free_of(&topo);
+        let req = RegionRequest::new("a", TensorClass::Activations, 64 * GIB);
+        let p = AdaptiveSpill.place(&topo, &req, &free).unwrap();
+        assert_eq!(p.bytes_on(NodeId(1)), 32 * GIB);
+        assert_eq!(p.bytes_on(NodeId(2)), 32 * GIB);
+        assert!(!p.touches(NodeId(0)));
+    }
+
+    #[test]
+    fn adaptive_overflows_transfer_data_to_dram() {
+        let topo = config_a();
+        let mut free = free_of(&topo);
+        free[1] = GIB;
+        let req = RegionRequest::new("a", TensorClass::Activations, 3 * GIB);
+        let p = AdaptiveSpill.place(&topo, &req, &free).unwrap();
+        assert_eq!(p.bytes_on(NodeId(1)), GIB);
+        assert_eq!(p.bytes_on(NodeId(0)), 2 * GIB);
+    }
+
+    #[test]
+    fn adaptive_reports_shortfall() {
+        let topo = config_a();
+        let free = vec![GIB, GIB];
+        let req = RegionRequest::new("o", TensorClass::OptimizerStates, 10 * GIB);
+        let err = AdaptiveSpill.place(&topo, &req, &free).unwrap_err();
+        assert_eq!(err, 8 * GIB);
+    }
+
+    #[test]
+    fn adaptive_conserves_bytes_property() {
+        use crate::util::proptest_lite::*;
+        let topo = config_b();
+        let gen = PairOf(
+            U64Range {
+                lo: 1,
+                hi: 900 * GIB,
+            },
+            UsizeRange { lo: 0, hi: 5 },
+        );
+        forall("adaptive-conserves", 19, 200, &gen, |(bytes, class_idx)| {
+            let class = TensorClass::all()[*class_idx % 6];
+            let free = free_of(&topo);
+            let req = RegionRequest::new("r", class, *bytes);
+            match AdaptiveSpill.place(&topo, &req, &free) {
+                Ok(p) => {
+                    if p.total_bytes() != *bytes {
+                        return Err(format!("placed {} of {bytes}", p.total_bytes()));
+                    }
+                    for (n, b) in &p.parts {
+                        if *b > free[n.0] {
+                            return Err(format!("node {} over cap", n.0));
+                        }
+                    }
+                    p.validate(*bytes);
+                    Ok(())
+                }
+                Err(0) => Err("zero shortfall".into()),
+                Err(_) => Ok(()),
+            }
+        });
+    }
+}

@@ -2,15 +2,21 @@
 //!
 //! * [`region`] — Table I data classes + placements,
 //! * [`striping`] — multi-AIC stripe arithmetic (§IV-B),
-//! * [`policy`] — DramOnly / NaiveInterleave / CxlAware placement (§IV-A),
+//! * [`policy`] — the three legacy policies (DramOnly / NaiveInterleave /
+//!   CxlAware, §IV-A) as a compact enum,
+//! * [`engine`] — the pluggable [`PlacementEngine`] trait + name registry
+//!   every layer above consumes (the legacy policies implement it, plans
+//!   byte-identical; new strategies plug in without enum edits),
 //! * [`allocator`] — NUMA capacity tracking and region lifecycle (the
 //!   `libnuma` stand-in).
 
 pub mod allocator;
+pub mod engine;
 pub mod policy;
 pub mod region;
 pub mod striping;
 
 pub use allocator::{AllocError, NumaAllocator};
+pub use engine::{AdaptiveSpill, EngineRef, PlacementEngine};
 pub use policy::Policy;
 pub use region::{Placement, Region, RegionId, RegionRequest, TensorClass};

@@ -325,6 +325,59 @@ mod tests {
     }
 
     #[test]
+    fn striped_spill_engages_when_dram_is_full() {
+        // DRAM exhausted entirely → the whole latency-critical region is a
+        // spill, bandwidth-proportionally striped across both AICs.
+        let topo = config_b();
+        let mut free = free_of(&topo);
+        free[0] = 0;
+        let req = RegionRequest::new("o", TensorClass::OptimizerStates, 48 * GIB);
+        let p = Policy::CxlAware { striping: true }
+            .place(&topo, &req, &free)
+            .unwrap();
+        assert_eq!(p.mode, AccessMode::Partitioned);
+        assert!(!p.touches(NodeId(0)), "no DRAM part when DRAM is full");
+        // equal cpu_stream_bw on both AICs → equal halves
+        assert_eq!(p.bytes_on(NodeId(1)), 24 * GIB);
+        assert_eq!(p.bytes_on(NodeId(2)), 24 * GIB);
+        assert_eq!(p.total_bytes(), 48 * GIB);
+    }
+
+    #[test]
+    fn unstriped_spill_fills_aics_sequentially() {
+        // Without striping the spill packs AIC-by-AIC (Config A's
+        // single-card behaviour generalized): first card fills before the
+        // second sees a byte.
+        let topo = config_b();
+        let mut free = free_of(&topo);
+        free[0] = 4 * GIB;
+        free[1] = 10 * GIB; // first AIC nearly full
+        let req = RegionRequest::new("g", TensorClass::Gradients32, 30 * GIB);
+        let p = Policy::CxlAware { striping: false }
+            .place(&topo, &req, &free)
+            .unwrap();
+        assert_eq!(p.parts[0], (NodeId(0), 4 * GIB), "DRAM part leads");
+        assert_eq!(p.bytes_on(NodeId(1)), 10 * GIB, "AIC0 filled to capacity");
+        assert_eq!(p.bytes_on(NodeId(2)), 16 * GIB, "remainder on AIC1");
+        assert_eq!(p.mode, AccessMode::Partitioned);
+    }
+
+    #[test]
+    fn spill_shortfall_propagates_when_aics_are_full_too() {
+        // DRAM and both AICs nearly full → Err carries the exact number of
+        // bytes that found no home, for both striped and sequential spills.
+        let topo = config_b();
+        let free = vec![2 * GIB, GIB, GIB];
+        let req = RegionRequest::new("m", TensorClass::MasterParams, 10 * GIB);
+        for striping in [true, false] {
+            let err = Policy::CxlAware { striping }
+                .place(&topo, &req, &free)
+                .unwrap_err();
+            assert_eq!(err, 6 * GIB, "striping={striping}");
+        }
+    }
+
+    #[test]
     fn by_name_roundtrip() {
         for p in [
             Policy::DramOnly,

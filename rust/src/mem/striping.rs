@@ -40,26 +40,32 @@ pub fn weighted_split(
         let mut floored_total = 0u64;
         for &i in &live {
             let ent = remaining as f64 * weights[i] / wsum;
-            let fl = (ent.floor() as u64).min(free_left[i]);
+            // Clamp to `remaining`: above 2^53 bytes, `remaining as f64`
+            // can round UP, making floor(ent) exceed what is left and
+            // underflowing the `remaining -= grant` below.
+            let fl = (ent.floor() as u64).min(free_left[i]).min(remaining);
             round.push((i, fl, ent - ent.floor()));
             floored_total += fl;
         }
-        // distribute the integer remainder by largest fraction (stable order)
+        // Distribute the integer remainder by largest fraction (stable
+        // order), strictly ONE byte per node — classic largest-remainder.
+        // (An earlier `1 + leftover/len` batching could hand the
+        // highest-fraction node far more than its entitlement whenever
+        // capacity clamping inflated `leftover`; bulk redistribution now
+        // happens only through the recomputed floors of the next round.)
         let mut leftover = remaining - floored_total.min(remaining);
         round.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&b.0)));
-        let spread = round_len_guard(round.len());
         for (i, fl, _) in round.iter_mut() {
             let extra = if leftover > 0 && *fl < free_left[*i] {
-                let e = std::cmp::min(leftover, free_left[*i] - *fl);
-                // one byte at a time is exact but slow; grant the min of
-                // leftover and capacity — later rounds rebalance.
-                let e = e.min(1 + leftover / spread); // keep it spread
-                leftover -= e;
-                e
+                leftover -= 1;
+                1
             } else {
                 0
             };
-            let grant = *fl + extra;
+            // Clamp to what is actually left: above 2^53 bytes the f64
+            // entitlements round, and the SUM of per-node floors can
+            // exceed `remaining` even though each floor alone was clamped.
+            let grant = (*fl + extra).min(remaining);
             acc[*i] += grant;
             free_left[*i] -= grant;
             remaining -= grant;
@@ -90,14 +96,6 @@ pub fn weighted_split(
         }
     }
     (shards, remaining)
-}
-
-#[allow(dead_code)]
-fn round_len(r: &[(usize, u64, f64)]) -> usize {
-    r.len()
-}
-fn round_len_guard(n: usize) -> u64 {
-    n.max(1) as u64
 }
 
 /// Equal-weight split (naive interleave across nodes).
@@ -238,5 +236,106 @@ mod tests {
         let free = vec![1 << 30; 4];
         let run = || weighted_split(123_456_789, &nodes(4), &[1.0, 2.0, 3.0, 4.0], &free);
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn conserves_beyond_f64_integer_precision() {
+        // Above 2^53, `bytes as f64` rounds; the entitlement clamp must
+        // keep grants within `remaining` (this used to underflow u64).
+        for bytes in [(1u64 << 60) - 1, (1 << 53) + 1, u64::MAX / 4] {
+            for n in [1usize, 3] {
+                let ns = nodes(n);
+                let free = vec![u64::MAX / 2; n];
+                let (shards, unplaced) = weighted_split(bytes, &ns, &vec![1.0; n], &free);
+                let placed: u64 = shards.iter().map(|(_, b)| b).sum();
+                assert_eq!(placed + unplaced, bytes, "conservation at {bytes} over {n}");
+                assert_eq!(unplaced, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn grants_never_exceed_entitlement_by_more_than_one_byte() {
+        // With ample capacity the split completes in one round, so every
+        // node must land within one byte of its exact fractional
+        // entitlement — the defining property of the largest-remainder
+        // method (the old batched grant violated this for the
+        // highest-fraction node).
+        use crate::util::proptest_lite::*;
+        let gen = PairOf(
+            U64Range { lo: 0, hi: 1 << 40 },
+            VecOf {
+                inner: U64Range { lo: 1, hi: 100 },
+                min_len: 2,
+                max_len: 6,
+            },
+        );
+        forall("lr-entitlement", 5, 300, &gen, |(bytes, raw_weights)| {
+            let n = raw_weights.len();
+            let ns: Vec<NodeId> = (0..n).map(NodeId).collect();
+            let ws: Vec<f64> = raw_weights.iter().map(|&w| w as f64).collect();
+            let free = vec![u64::MAX / 8; n];
+            let (shards, unplaced) = weighted_split(*bytes, &ns, &ws, &free);
+            if unplaced != 0 {
+                return Err(format!("unplaced {unplaced} with ample capacity"));
+            }
+            let wsum: f64 = ws.iter().sum();
+            for (idx, w) in ws.iter().enumerate() {
+                let got = shards
+                    .iter()
+                    .find(|(node, _)| node.0 == idx)
+                    .map(|(_, b)| *b)
+                    .unwrap_or(0) as f64;
+                // f64 slack: entitlements of ~2^40-byte splits carry ~0.1 B
+                // of rounding noise on top of the ±1 B remainder grant.
+                let ent = *bytes as f64 * w / wsum;
+                if got > ent + 1.5 || got < ent - 1.5 {
+                    return Err(format!(
+                        "node {idx}: got {got} vs entitlement {ent:.1} (weights {ws:?})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weighted_split_proportional_under_tight_capacity() {
+        // Node 0 has a tiny cap; its overflow must redistribute to the
+        // remaining nodes in WEIGHT proportion (3:1 here), not drift toward
+        // whichever node sorts first. A few bytes of largest-remainder
+        // rounding per redistribution round is the only tolerated skew.
+        use crate::util::proptest_lite::*;
+        let gen = U64Range {
+            lo: 10_000,
+            hi: 50_000_000,
+        };
+        forall("tight-cap-proportional", 17, 200, &gen, |bytes| {
+            let ns = nodes(3);
+            let free = vec![1000, u64::MAX / 8, u64::MAX / 8];
+            let (shards, unplaced) = weighted_split(*bytes, &ns, &[5.0, 3.0, 1.0], &free);
+            if unplaced != 0 {
+                return Err("unexpected unplaced".into());
+            }
+            let on = |i: usize| {
+                shards
+                    .iter()
+                    .find(|(n, _)| n.0 == i)
+                    .map(|(_, b)| *b)
+                    .unwrap_or(0)
+            };
+            if on(0) != 1000 {
+                return Err(format!("capped node got {} != 1000", on(0)));
+            }
+            let (b1, b2) = (on(1) as i64, on(2) as i64);
+            if b1 + b2 + 1000 != *bytes as i64 {
+                return Err("conservation broken".into());
+            }
+            // 3:1 within a few redistribution rounds of ±1-byte grants
+            if (b1 - 3 * b2).abs() > 64 {
+                return Err(format!("spill not 3:1 proportional: {b1} vs {b2}"));
+            }
+            Ok(())
+        });
     }
 }

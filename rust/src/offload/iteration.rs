@@ -27,7 +27,14 @@ use crate::sim::flow::Event;
 use crate::sim::memmodel::OptimizerMemModel;
 use crate::topology::{GpuId, SystemTopology};
 
-/// Event tags: kind · 2^24 | gpu · 2^16 | block.
+/// Event tags: kind · 2^48 | gpu · 2^32 | block.
+///
+/// Field widths: 16 bits of kind headroom, 16-bit GPU index, 32-bit block
+/// index. The original packing (kind·2^24 | gpu·2^16 | block) silently
+/// corrupted tags once `gpu > 255` (bled into the kind field) or
+/// `block > 65535` (bled into the gpu field) — far below the GPU-fleet and
+/// deep-model scales the roadmap targets. `tag` now debug-asserts both
+/// bounds and the round-trip is regression-tested at the field boundaries.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Kind {
     FwdParamLoad = 0,
@@ -40,12 +47,25 @@ enum Kind {
     Step = 7,
 }
 
+const TAG_GPU_BITS: u32 = 16;
+const TAG_BLOCK_BITS: u32 = 32;
+
 fn tag(kind: Kind, gpu: usize, block: usize) -> u64 {
-    ((kind as u64) << 24) | ((gpu as u64) << 16) | block as u64
+    debug_assert!(
+        (gpu as u64) < (1 << TAG_GPU_BITS),
+        "gpu index {gpu} overflows the {TAG_GPU_BITS}-bit tag field"
+    );
+    debug_assert!(
+        (block as u64) < (1u64 << TAG_BLOCK_BITS),
+        "block index {block} overflows the {TAG_BLOCK_BITS}-bit tag field"
+    );
+    ((kind as u64) << (TAG_GPU_BITS + TAG_BLOCK_BITS))
+        | ((gpu as u64) << TAG_BLOCK_BITS)
+        | block as u64
 }
 
 fn untag(t: u64) -> (Kind, usize, usize) {
-    let kind = match t >> 24 {
+    let kind = match t >> (TAG_GPU_BITS + TAG_BLOCK_BITS) {
         0 => Kind::FwdParamLoad,
         1 => Kind::FwdCompute,
         2 => Kind::ActOffload,
@@ -56,7 +76,11 @@ fn untag(t: u64) -> (Kind, usize, usize) {
         7 => Kind::Step,
         k => panic!("bad tag kind {k}"),
     };
-    (kind, ((t >> 16) & 0xff) as usize, (t & 0xffff) as usize)
+    (
+        kind,
+        ((t >> TAG_BLOCK_BITS) & ((1 << TAG_GPU_BITS) - 1)) as usize,
+        (t & ((1u64 << TAG_BLOCK_BITS) - 1)) as usize,
+    )
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -479,6 +503,45 @@ mod tests {
         let cfg = RunConfig::new(model, w, policy);
         let plan = MemoryPlan::build(topo, &cfg).unwrap();
         simulate_iteration(topo, &cfg, &plan)
+    }
+
+    #[test]
+    fn tag_roundtrips_at_field_boundaries() {
+        // Regression for the old kind·2^24|gpu·2^16|block packing: gpu 256
+        // used to collide with the kind field and block 65536 with the gpu
+        // field. Every (kind, gpu, block) at and across the old boundaries
+        // must round-trip exactly now.
+        let kinds = [
+            Kind::FwdParamLoad,
+            Kind::FwdCompute,
+            Kind::ActOffload,
+            Kind::BwdParamLoad,
+            Kind::ActLoad,
+            Kind::BwdCompute,
+            Kind::GradOffload,
+            Kind::Step,
+        ];
+        let gpus = [0usize, 1, 255, 256, 65_535];
+        let blocks = [0usize, 1, 65_535, 65_536, u32::MAX as usize];
+        for &k in &kinds {
+            for &g in &gpus {
+                for &b in &blocks {
+                    let t = tag(k, g, b);
+                    assert_eq!(untag(t), (k, g, b), "tag {t:#x} mangled ({k:?}, {g}, {b})");
+                }
+            }
+        }
+        // distinctness across the old collision pairs
+        assert_ne!(
+            tag(Kind::FwdParamLoad, 256, 0),
+            tag(Kind::FwdCompute, 0, 0),
+            "gpu 256 must not alias the next kind"
+        );
+        assert_ne!(
+            tag(Kind::FwdParamLoad, 0, 65_536),
+            tag(Kind::FwdParamLoad, 1, 0),
+            "block 65536 must not alias gpu 1"
+        );
     }
 
     #[test]

@@ -14,4 +14,4 @@ pub mod sweep;
 pub use iteration::{simulate_iteration, simulate_iteration_traced};
 pub use metrics::PhaseBreakdown;
 pub use plan::{MemoryPlan, PlanError, RunConfig};
-pub use sweep::{sweep_grid, GridPoint, SweepResult};
+pub use sweep::{sweep_grid, sweep_grid_with_threads, GridPoint, SweepResult};

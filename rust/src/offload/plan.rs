@@ -3,31 +3,46 @@
 //! the functional trainer both consume — placement decisions are made once,
 //! here, exactly like the real system pins its arenas at startup.
 
-use crate::mem::{NumaAllocator, Policy, RegionId, RegionRequest, TensorClass};
+use crate::mem::{EngineRef, NumaAllocator, RegionId, RegionRequest, TensorClass};
 use crate::model::footprint::{Footprint, Workload};
 use crate::model::ModelConfig;
 use crate::sim::memmodel::{AccessMode, OptLayout};
 use crate::topology::{GpuId, NodeId, SystemTopology};
 
 /// Everything needed to run (or simulate) one fine-tuning configuration.
-#[derive(Clone, Debug)]
+/// Placement goes through a pluggable [`crate::mem::PlacementEngine`];
+/// `RunConfig::new` accepts anything convertible (a legacy
+/// [`crate::mem::Policy`], [`crate::mem::AdaptiveSpill`], or an existing
+/// [`EngineRef`]).
+#[derive(Clone)]
 pub struct RunConfig {
     pub model: ModelConfig,
     pub workload: Workload,
-    pub policy: Policy,
+    pub engine: EngineRef,
     /// Blocks of parameters prefetched ahead of compute (ZeRO-Offload
     /// overlaps the next block's H2D copy with the current block's kernel).
     pub prefetch_depth: usize,
 }
 
 impl RunConfig {
-    pub fn new(model: ModelConfig, workload: Workload, policy: Policy) -> Self {
+    pub fn new(model: ModelConfig, workload: Workload, engine: impl Into<EngineRef>) -> Self {
         Self {
             model,
             workload,
-            policy,
+            engine: engine.into(),
             prefetch_depth: 2,
         }
+    }
+}
+
+impl std::fmt::Debug for RunConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RunConfig")
+            .field("model", &self.model.name)
+            .field("workload", &self.workload)
+            .field("engine", &self.engine.name())
+            .field("prefetch_depth", &self.prefetch_depth)
+            .finish()
     }
 }
 
@@ -66,10 +81,10 @@ impl<'t> MemoryPlan<'t> {
         cfg: &RunConfig,
     ) -> Result<MemoryPlan<'t>, PlanError> {
         let f = Footprint::compute(&cfg.model, &cfg.workload);
-        let mut alloc = NumaAllocator::new(topo, cfg.policy);
+        let mut alloc = NumaAllocator::new(topo, cfg.engine.clone());
         let mut get = |req: RegionRequest| {
             alloc.alloc(req).map_err(|e| PlanError {
-                message: format!("{} (policy {})", e, cfg.policy.name()),
+                message: format!("{} (policy {})", e, cfg.engine.name()),
             })
         };
         let master = get(RegionRequest::new(
@@ -188,6 +203,7 @@ impl<'t> MemoryPlan<'t> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::Policy;
     use crate::model::presets::{mistral_nemo_12b, qwen25_7b, tiny_2m};
     use crate::topology::presets::{config_a, config_b, dev_tiny, with_dram_capacity};
     use crate::util::units::GIB;
@@ -252,7 +268,7 @@ mod tests {
         assert!(!MemoryPlan::fits(&topo, &cfg));
         // ...but the CXL-aware plan fits using the AIC.
         let cfg2 = RunConfig {
-            policy: Policy::CxlAware { striping: false },
+            engine: Policy::CxlAware { striping: false }.into(),
             ..cfg
         };
         assert!(MemoryPlan::fits(&topo, &cfg2));

@@ -1,23 +1,30 @@
 //! (context, batch) grid sweeps — the machinery behind Figures 9 and 10.
 //!
-//! For each grid cell the sweep simulates one iteration under each policy
-//! and normalizes throughput against the DRAM-only baseline, reproducing
-//! the paper's "% of baseline" bars.
+//! For each grid cell the sweep simulates one iteration under each
+//! placement engine and normalizes throughput against the DRAM-only
+//! baseline, reproducing the paper's "% of baseline" bars.
+//!
+//! Grid points are independent, so the sweep fans them out across
+//! [`crate::util::threadpool::par_map`] — one task per cell, results
+//! collected in deterministic (context-major, batch-minor) order regardless
+//! of worker interleaving. A full Fig. 9 panel (16 cells × 3 engines) drops
+//! from sum-of-cells to max-of-cells wall-clock on a multicore host.
 
 use super::iteration::simulate_iteration;
 use super::metrics::PhaseBreakdown;
 use super::plan::{MemoryPlan, RunConfig};
-use crate::mem::Policy;
+use crate::mem::EngineRef;
 use crate::model::footprint::Workload;
 use crate::model::ModelConfig;
 use crate::topology::SystemTopology;
+use crate::util::threadpool::{default_threads, par_map};
 
 /// One grid cell result.
 #[derive(Clone, Debug)]
 pub struct GridPoint {
     pub context: usize,
     pub batch: usize,
-    /// Breakdown per policy, ordered as the `policies` argument.
+    /// Breakdown per engine, ordered as the `policies` argument.
     pub runs: Vec<Option<PhaseBreakdown>>,
 }
 
@@ -26,7 +33,8 @@ pub struct GridPoint {
 pub struct SweepResult {
     pub model: String,
     pub n_gpus: usize,
-    pub policies: Vec<Policy>,
+    /// Engine names, ordered as the runs inside each [`GridPoint`].
+    pub policies: Vec<String>,
     pub points: Vec<GridPoint>,
 }
 
@@ -56,10 +64,12 @@ impl SweepResult {
     }
 }
 
-/// Run the grid. Baseline runs use `baseline_topo` (all-DRAM host); policy
-/// runs use `policy_topo` (the DRAM-constrained + CXL host). Cells whose
-/// plan does not fit are recorded as `None` — exactly the cells the paper
-/// could not run without CXL.
+/// Run the grid with the default worker count (one task per grid cell).
+///
+/// Baseline engines (`is_baseline()`) run on `baseline_topo` (all-DRAM
+/// host); the rest use `policy_topo` (the DRAM-constrained + CXL host).
+/// Cells whose plan does not fit are recorded as `None` — exactly the cells
+/// the paper could not run without CXL.
 pub fn sweep_grid(
     baseline_topo: &SystemTopology,
     policy_topo: &SystemTopology,
@@ -67,36 +77,65 @@ pub fn sweep_grid(
     n_gpus: usize,
     contexts: &[usize],
     batches: &[usize],
-    policies: &[Policy],
+    policies: &[EngineRef],
 ) -> SweepResult {
-    let mut points = Vec::new();
-    for &c in contexts {
-        for &b in batches {
-            let w = Workload::new(n_gpus, b, c);
-            let mut runs = Vec::with_capacity(policies.len());
-            for &policy in policies {
-                let topo = if policy == Policy::DramOnly {
+    sweep_grid_with_threads(
+        baseline_topo,
+        policy_topo,
+        model,
+        n_gpus,
+        contexts,
+        batches,
+        policies,
+        default_threads(),
+    )
+}
+
+/// [`sweep_grid`] with an explicit worker count (`1` = fully serial; used
+/// by the determinism tests to prove parallel == serial bit-for-bit).
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_grid_with_threads(
+    baseline_topo: &SystemTopology,
+    policy_topo: &SystemTopology,
+    model: &ModelConfig,
+    n_gpus: usize,
+    contexts: &[usize],
+    batches: &[usize],
+    policies: &[EngineRef],
+    nthreads: usize,
+) -> SweepResult {
+    // context-major, batch-minor — the historical serial ordering.
+    let grid: Vec<(usize, usize)> = contexts
+        .iter()
+        .flat_map(|&c| batches.iter().map(move |&b| (c, b)))
+        .collect();
+    let points = par_map(grid.len(), nthreads.max(1), |i| {
+        let (c, b) = grid[i];
+        let w = Workload::new(n_gpus, b, c);
+        let runs = policies
+            .iter()
+            .map(|engine| {
+                let topo = if engine.is_baseline() {
                     baseline_topo
                 } else {
                     policy_topo
                 };
-                let cfg = RunConfig::new(model.clone(), w, policy);
-                let run = MemoryPlan::build(topo, &cfg)
+                let cfg = RunConfig::new(model.clone(), w, engine.clone());
+                MemoryPlan::build(topo, &cfg)
                     .ok()
-                    .map(|plan| simulate_iteration(topo, &cfg, &plan));
-                runs.push(run);
-            }
-            points.push(GridPoint {
-                context: c,
-                batch: b,
-                runs,
-            });
+                    .map(|plan| simulate_iteration(topo, &cfg, &plan))
+            })
+            .collect();
+        GridPoint {
+            context: c,
+            batch: b,
+            runs,
         }
-    }
+    });
     SweepResult {
         model: model.name.clone(),
         n_gpus,
-        policies: policies.to_vec(),
+        policies: policies.iter().map(|p| p.name().to_string()).collect(),
         points,
     }
 }
@@ -104,9 +143,14 @@ pub fn sweep_grid(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::{engine, Policy};
     use crate::model::presets::qwen25_7b;
-    use crate::topology::presets::{config_a, with_dram_capacity};
+    use crate::topology::presets::{config_a, config_b, with_dram_capacity};
     use crate::util::units::GIB;
+
+    fn engines(ps: &[Policy]) -> Vec<EngineRef> {
+        ps.iter().map(|&p| EngineRef::from(p)).collect()
+    }
 
     #[test]
     fn fig9a_band_shape() {
@@ -114,11 +158,11 @@ mod tests {
         // that "ours" lands close to baseline.
         let base = config_a();
         let cxl = with_dram_capacity(config_a(), 128 * GIB);
-        let policies = [
+        let policies = engines(&[
             Policy::DramOnly,
             Policy::NaiveInterleave,
             Policy::CxlAware { striping: false },
-        ];
+        ]);
         let res = sweep_grid(
             &base,
             &cxl,
@@ -148,10 +192,83 @@ mod tests {
             1,
             &[4096],
             &[8],
-            &[Policy::DramOnly, Policy::CxlAware { striping: false }],
+            &engines(&[Policy::DramOnly, Policy::CxlAware { striping: false }]),
         );
         assert!(res.points[0].runs[0].is_none(), "baseline must OOM");
         assert!(res.points[0].runs[1].is_some(), "CXL plan must fit");
         assert!(res.normalized_range(1, 0).is_none());
+    }
+
+    #[test]
+    fn parallel_sweep_is_bit_identical_to_serial_in_same_order() {
+        // The tentpole's contract: fanning grid points across workers
+        // changes neither the results nor their order.
+        let base = config_a();
+        let cxl = with_dram_capacity(config_a(), 128 * GIB);
+        let policies = engines(&[
+            Policy::DramOnly,
+            Policy::NaiveInterleave,
+            Policy::CxlAware { striping: false },
+        ]);
+        let run = |threads| {
+            sweep_grid_with_threads(
+                &base,
+                &cxl,
+                &qwen25_7b(),
+                1,
+                &[4096, 8192, 16384],
+                &[2, 8],
+                &policies,
+                threads,
+            )
+        };
+        let serial = run(1);
+        let parallel = run(4);
+        assert_eq!(serial.points.len(), 6);
+        assert_eq!(serial.policies, parallel.policies);
+        for (s, p) in serial.points.iter().zip(&parallel.points) {
+            assert_eq!((s.context, s.batch), (p.context, p.batch), "order must match");
+            for (rs, rp) in s.runs.iter().zip(&p.runs) {
+                match (rs, rp) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.iter_s.to_bits(), b.iter_s.to_bits());
+                        assert_eq!(a.fwd_s.to_bits(), b.fwd_s.to_bits());
+                        assert_eq!(a.step_s.to_bits(), b.step_s.to_bits());
+                    }
+                    other => panic!("fit/OOM divergence: {other:?}"),
+                }
+            }
+        }
+        // order is context-major, batch-minor
+        let cells: Vec<(usize, usize)> = serial.points.iter().map(|p| (p.context, p.batch)).collect();
+        assert_eq!(
+            cells,
+            vec![(4096, 2), (4096, 8), (8192, 2), (8192, 8), (16384, 2), (16384, 8)]
+        );
+    }
+
+    #[test]
+    fn registry_engines_sweep_end_to_end() {
+        // The adaptive engine flows through the whole sweep machinery by
+        // name, and behaves sanely (at least as good as naive interleave).
+        let base = config_b();
+        let cxl = with_dram_capacity(config_b(), 128 * GIB);
+        let policies: Vec<EngineRef> = vec![
+            engine::by_name("baseline-dram").unwrap(),
+            engine::by_name("naive-cxl").unwrap(),
+            engine::by_name("adaptive-spill").unwrap(),
+        ];
+        let res = sweep_grid(&base, &cxl, &qwen25_7b(), 1, &[4096, 8192], &[8], &policies);
+        assert_eq!(res.policies[2], "adaptive-spill");
+        let (alo, _ahi) = res.normalized_range(2, 0).expect("adaptive range");
+        let (_nlo, nhi) = res.normalized_range(1, 0).expect("naive range");
+        assert!(alo > 0.5, "adaptive floor {alo}");
+        for p in &res.points {
+            if let (Some(n), Some(a)) = (res.normalized(p, 1, 0), res.normalized(p, 2, 0)) {
+                assert!(a >= n - 1e-9, "adaptive ({a:.3}) must not lose to naive ({n:.3})");
+            }
+        }
+        assert!(nhi < 1.0);
     }
 }

@@ -172,6 +172,30 @@ mod tests {
     }
 
     #[test]
+    fn map_utilizes_multiple_threads() {
+        // The parallel-sweep contract: par_map genuinely fans work across
+        // worker threads. Each closure rendezvouses (yielding, bounded)
+        // until a second worker has checked in, so the assertion holds even
+        // on throttled single-core CI runners — one worker cannot satisfy
+        // the rendezvous by draining the queue alone.
+        let arrived = AtomicUsize::new(0);
+        let ids = par_map(4, 4, |_| {
+            arrived.fetch_add(1, Ordering::SeqCst);
+            let t0 = std::time::Instant::now();
+            while arrived.load(Ordering::SeqCst) < 2 && t0.elapsed().as_secs() < 5 {
+                std::thread::yield_now();
+            }
+            std::thread::current().id()
+        });
+        let distinct: std::collections::HashSet<_> = ids.into_iter().collect();
+        assert!(
+            distinct.len() >= 2,
+            "expected ≥2 worker threads, saw {}",
+            distinct.len()
+        );
+    }
+
+    #[test]
     fn map_empty() {
         let out: Vec<u32> = par_map(0, 8, |_| unreachable!());
         assert!(out.is_empty());

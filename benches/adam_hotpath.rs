@@ -4,7 +4,7 @@
 //! and element count — the L3 optimization target of DESIGN.md §8
 //! (≥ 60 % of practical host memory bandwidth at large N).
 
-use cxlfine::optim::{adam_step, AdamHp, AdamState};
+use cxlfine::optim::{adam_step, adam_step_spawning, AdamHp, AdamState};
 use cxlfine::sim::memmodel::ADAM_BYTES_PER_ELEM;
 use cxlfine::trow;
 use cxlfine::util::bench::{points_json, BenchReport};
@@ -81,6 +81,55 @@ fn main() {
         rates2.push(eps);
     }
     report.section("size_sweep", t2, points_json(&xs2, &[("elem_per_s", &rates2)]));
+
+    // ---- small-N per-step overhead: persistent pool vs spawn-per-step
+    // At ≤1M elements the update body is a few hundred µs, so the old
+    // spawn-per-step fan-out (~10–30 µs × threads) was a visible tax; the
+    // persistent pool pays a condvar wakeup instead.
+    let mut t_small = Table::new(&["elements", "pool µs/step", "spawn µs/step", "spawn/pool"]);
+    let (mut xs_s, mut pool_us, mut spawn_us) = (vec![], vec![], vec![]);
+    for &n in &[65_536usize, 262_144, 1_048_576] {
+        let iters = if n <= 262_144 { 200 } else { 50 };
+        let time_step = |use_pool: bool| {
+            let mut p = vec![1.0f32; n];
+            let g: Vec<f32> = (0..n).map(|i| (i as f32 % 5.0) * 0.01).collect();
+            let mut st = AdamState::new(n);
+            let hp = AdamHp::default();
+            let step = |p: &mut [f32], st: &mut AdamState| {
+                if use_pool {
+                    adam_step(p, &g, st, &hp, max_threads);
+                } else {
+                    adam_step_spawning(p, &g, st, &hp, max_threads);
+                }
+            };
+            step(&mut p, &mut st); // warm
+            let t0 = std::time::Instant::now();
+            for _ in 0..iters {
+                step(&mut p, &mut st);
+            }
+            t0.elapsed().as_secs_f64() / iters as f64
+        };
+        let pooled = time_step(true);
+        let spawned = time_step(false);
+        t_small.row(trow![
+            n,
+            format!("{:.1}", pooled * 1e6),
+            format!("{:.1}", spawned * 1e6),
+            format!("{:.2}x", spawned / pooled)
+        ]);
+        xs_s.push(n as f64);
+        pool_us.push(pooled * 1e6);
+        spawn_us.push(spawned * 1e6);
+    }
+    println!(
+        "small-N per-step overhead (pool vs spawn at {} threads): see table",
+        max_threads
+    );
+    report.section(
+        "small_n_step_overhead",
+        t_small,
+        points_json(&xs_s, &[("pool_us", &pool_us), ("spawn_us", &spawn_us)]),
+    );
 
     // ---- §Perf iteration log: serial reference vs the tuned chunk ----
     let n = 20_000_000;

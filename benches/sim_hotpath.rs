@@ -1,0 +1,312 @@
+//! §Perf microbench: the DES hot path — events/sec of the slab/heap
+//! [`FlowSim`] vs the frozen pre-refactor HashMap engine
+//! ([`RefFlowSim`]), at 1e3–1e6 concurrent flows over contended paths and
+//! under timer-heavy mixes (DESIGN.md §7–§8).
+//!
+//! Also records the CPU Adam effective bandwidth so one file tracks both
+//! coordinator hot paths. Results are written to `BENCH_sim.json` (path
+//! override: `CXLFINE_BENCH_SIM_OUT`) — the CI bench-smoke job runs this
+//! with `--smoke` so the perf trajectory is recorded on every push.
+//!
+//! Acceptance bar (ISSUE 2): ≥3× events/sec over the baseline at ≥1e5
+//! flows — asserted in the full (non-smoke) run.
+
+use cxlfine::optim::{adam_step, AdamHp, AdamState};
+use cxlfine::sim::flow::{CapacityModel, FlowSim, ResourceId};
+use cxlfine::sim::memmodel::ADAM_BYTES_PER_ELEM;
+use cxlfine::sim::reference::RefFlowSim;
+use cxlfine::trow;
+use cxlfine::util::bench::{points_json, BenchReport};
+use cxlfine::util::json::{Json, JsonObj};
+use cxlfine::util::prng::Xoshiro256pp;
+use cxlfine::util::table::Table;
+use cxlfine::util::threadpool::default_threads;
+
+const GB: f64 = 1e9;
+
+/// The operations a scenario needs from either engine.
+trait DesBench {
+    fn add_resource(&mut self, name: &str, model: CapacityModel) -> ResourceId;
+    fn start_flow(&mut self, path: &[ResourceId], bytes: f64, setup: f64, tag: u64);
+    fn add_timer(&mut self, delay: f64, tag: u64);
+    fn step(&mut self) -> bool;
+}
+
+impl DesBench for FlowSim {
+    fn add_resource(&mut self, name: &str, model: CapacityModel) -> ResourceId {
+        FlowSim::add_resource(self, name, model)
+    }
+    fn start_flow(&mut self, path: &[ResourceId], bytes: f64, setup: f64, tag: u64) {
+        FlowSim::start_flow(self, path, bytes, setup, tag);
+    }
+    fn add_timer(&mut self, delay: f64, tag: u64) {
+        FlowSim::add_timer(self, delay, tag);
+    }
+    fn step(&mut self) -> bool {
+        FlowSim::next_event(self).is_some()
+    }
+}
+
+impl DesBench for RefFlowSim {
+    fn add_resource(&mut self, name: &str, model: CapacityModel) -> ResourceId {
+        RefFlowSim::add_resource(self, name, model)
+    }
+    fn start_flow(&mut self, path: &[ResourceId], bytes: f64, setup: f64, tag: u64) {
+        RefFlowSim::start_flow(self, path, bytes, setup, tag);
+    }
+    fn add_timer(&mut self, delay: f64, tag: u64) {
+        RefFlowSim::add_timer(self, delay, tag);
+    }
+    fn step(&mut self) -> bool {
+        RefFlowSim::next_event(self).is_some()
+    }
+}
+
+/// Pre-generated workload so both engines replay the identical call
+/// sequence: (path-resource-indices, bytes, setup, tag) per flow.
+struct Scenario {
+    flows: Vec<([usize; 2], f64, f64, u64)>,
+    timers: Vec<(f64, u64)>,
+}
+
+/// The config-B-shaped resource set: 2 DRAM controllers, 2 contended AIC
+/// links, 4 GPU links.
+fn add_resources<S: DesBench>(sim: &mut S) -> Vec<ResourceId> {
+    let mut r = vec![
+        sim.add_resource("dram0", CapacityModel::Fixed(204.0 * GB)),
+        sim.add_resource("dram1", CapacityModel::Fixed(204.0 * GB)),
+    ];
+    for i in 0..2 {
+        r.push(sim.add_resource(
+            &format!("aic{i}"),
+            CapacityModel::Contended {
+                single: 54.0 * GB,
+                contended: 26.0 * GB,
+            },
+        ));
+    }
+    for i in 0..4 {
+        r.push(sim.add_resource(&format!("gpu{i}"), CapacityModel::Fixed(54.0 * GB)));
+    }
+    r
+}
+
+/// Contended mix: every flow is a [host-side, gpu-side] path, ~half of the
+/// host sides on the collapsing AIC links, 25 % with DMA setup latency, one
+/// timer per 8 flows.
+fn contended_scenario(n_flows: usize, seed: u64) -> Scenario {
+    let mut rng = Xoshiro256pp::seeded(seed);
+    let mut flows = Vec::with_capacity(n_flows);
+    for tag in 0..n_flows as u64 {
+        let host = rng.range_usize(0, 3); // dram0, dram1, aic0, aic1
+        let gpu = 4 + rng.range_usize(0, 3);
+        let bytes = rng.range_f64(1e6, 1e9);
+        let setup = if rng.below(4) == 0 {
+            rng.range_f64(10e-6, 1e-3)
+        } else {
+            0.0
+        };
+        flows.push(([host, gpu], bytes, setup, tag));
+    }
+    let timers = (0..n_flows / 8)
+        .map(|i| (rng.range_f64(1e-4, 5e-2), 1_000_000 + i as u64))
+        .collect();
+    Scenario { flows, timers }
+}
+
+/// Timer-heavy mix: a static population of long-lived flows plus a dense
+/// timer train — the pure event-queue/drain path (rates stay clean).
+fn timer_scenario(n_flows: usize, n_timers: usize, seed: u64) -> Scenario {
+    let mut rng = Xoshiro256pp::seeded(seed);
+    let mut flows = Vec::with_capacity(n_flows);
+    for tag in 0..n_flows as u64 {
+        let host = rng.range_usize(0, 1); // DRAM only: no collapse solves
+        let gpu = 4 + rng.range_usize(0, 3);
+        // enormous transfers → no completion lands during the timer train
+        flows.push(([host, gpu], 1e15, 0.0, tag));
+    }
+    let timers = (0..n_timers)
+        .map(|i| (1e-6 * (i as f64 + 1.0), 1_000_000 + i as u64))
+        .collect();
+    Scenario { flows, timers }
+}
+
+/// Apply the scenario, then time `k_events` deliveries. Returns events/sec.
+fn run_events<S: DesBench>(sim: &mut S, sc: &Scenario, k_events: usize) -> f64 {
+    let rids = add_resources(sim);
+    for (path, bytes, setup, tag) in &sc.flows {
+        sim.start_flow(&[rids[path[0]], rids[path[1]]], *bytes, *setup, *tag);
+    }
+    for (delay, tag) in &sc.timers {
+        sim.add_timer(*delay, *tag);
+    }
+    let t0 = std::time::Instant::now();
+    let mut delivered = 0usize;
+    while delivered < k_events {
+        if !sim.step() {
+            break;
+        }
+        delivered += 1;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    assert!(delivered > 0, "scenario produced no events");
+    delivered as f64 / dt
+}
+
+fn speedup_row(label: &str, n: usize, new_eps: f64, ref_eps: f64, t: &mut Table) -> f64 {
+    let speedup = new_eps / ref_eps;
+    t.row(trow![
+        label,
+        n,
+        format!("{:.0}", new_eps),
+        format!("{:.0}", ref_eps),
+        format!("{:.2}x", speedup)
+    ]);
+    speedup
+}
+
+fn adam_gbps(n: usize, iters: usize) -> (f64, f64) {
+    let threads = default_threads();
+    let mut p = vec![1.0f32; n];
+    let g: Vec<f32> = (0..n).map(|i| (i as f32 % 7.0) * 0.01).collect();
+    let mut st = AdamState::new(n);
+    let hp = AdamHp::default();
+    adam_step(&mut p, &g, &mut st, &hp, threads); // warm (also warms the pool)
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        adam_step(&mut p, &g, &mut st, &hp, threads);
+    }
+    let per_step = t0.elapsed().as_secs_f64() / iters as f64;
+    let eps = n as f64 / per_step;
+    (eps * ADAM_BYTES_PER_ELEM / 1e9, per_step)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut report = BenchReport::new("sim_hotpath");
+    let mut json_root = JsonObj::new();
+    json_root.set("smoke", smoke);
+
+    // ---- contended mix: events/sec vs flow count, both engines -------
+    // (flows, k_events, run_reference)
+    let grid: &[(usize, usize, bool)] = if smoke {
+        &[(2_000, 400, true)]
+    } else {
+        &[
+            (1_000, 2_000, true),
+            (10_000, 800, true),
+            (100_000, 120, true),
+            (1_000_000, 60, false), // baseline would take minutes here
+        ]
+    };
+    let mut t = Table::new(&["mix", "flows", "events/s", "ref events/s", "speedup"]).left(0);
+    let (mut xs, mut new_rates, mut ref_rates) = (vec![], vec![], vec![]);
+    let mut json_cells = Vec::new();
+    let mut speedup_at_1e5 = None;
+    for &(n, k, with_ref) in grid {
+        let sc = contended_scenario(n, 42);
+        let new_eps = run_events(&mut FlowSim::new(), &sc, k);
+        let ref_eps = if with_ref {
+            run_events(&mut RefFlowSim::new(), &sc, k)
+        } else {
+            f64::NAN
+        };
+        let mut cell = JsonObj::new();
+        cell.set("flows", n);
+        cell.set("events_per_sec", new_eps);
+        if with_ref {
+            let s = speedup_row("contended", n, new_eps, ref_eps, &mut t);
+            cell.set("ref_events_per_sec", ref_eps);
+            cell.set("speedup", s);
+            if n >= 100_000 {
+                speedup_at_1e5 = Some(s);
+            }
+            ref_rates.push(ref_eps);
+        } else {
+            t.row(trow![
+                "contended",
+                n,
+                format!("{:.0}", new_eps),
+                "-".to_string(),
+                "-".to_string()
+            ]);
+            // no measurement — NaN keeps the persisted series honest
+            // (matches the table's "-" rendering)
+            ref_rates.push(f64::NAN);
+        }
+        xs.push(n as f64);
+        new_rates.push(new_eps);
+        json_cells.push(Json::Obj(cell));
+    }
+    report.section(
+        "contended_mix",
+        t,
+        points_json(&xs, &[("events_per_s", &new_rates), ("ref_events_per_s", &ref_rates)]),
+    );
+    json_root.set("contended", Json::Arr(json_cells));
+
+    // ---- timer-heavy mix ---------------------------------------------
+    let (n_flows, n_timers, k) = if smoke {
+        (2_000, 600, 500)
+    } else {
+        (20_000, 3_000, 1_500)
+    };
+    let sc = timer_scenario(n_flows, n_timers, 7);
+    let new_eps = run_events(&mut FlowSim::new(), &sc, k.min(n_timers));
+    let ref_eps = run_events(&mut RefFlowSim::new(), &sc, k.min(n_timers));
+    let mut t2 = Table::new(&["mix", "flows", "events/s", "ref events/s", "speedup"]).left(0);
+    let timer_speedup = speedup_row("timer-heavy", n_flows, new_eps, ref_eps, &mut t2);
+    report.section(
+        "timer_mix",
+        t2,
+        points_json(
+            &[n_flows as f64],
+            &[("events_per_s", &[new_eps]), ("ref_events_per_s", &[ref_eps])],
+        ),
+    );
+    let mut tm = JsonObj::new();
+    tm.set("flows", n_flows);
+    tm.set("timers", n_timers);
+    tm.set("events_per_sec", new_eps);
+    tm.set("ref_events_per_sec", ref_eps);
+    tm.set("speedup", timer_speedup);
+    json_root.set("timer_mix", tm);
+
+    // ---- CPU Adam bandwidth (the other coordinator hot path) ---------
+    let (adam_n, adam_iters) = if smoke { (2_000_000, 3) } else { (50_000_000, 3) };
+    let (gbps, per_step) = adam_gbps(adam_n, adam_iters);
+    let mut t3 = Table::new(&["elements", "GB/s moved", "s/step"]);
+    t3.row(trow![
+        adam_n,
+        format!("{gbps:.1}"),
+        format!("{per_step:.4}")
+    ]);
+    report.section(
+        "adam_bandwidth",
+        t3,
+        points_json(&[adam_n as f64], &[("gbps", &[gbps])]),
+    );
+    let mut aj = JsonObj::new();
+    aj.set("elements", adam_n);
+    aj.set("gbps", gbps);
+    aj.set("sec_per_step", per_step);
+    json_root.set("adam", aj);
+
+    // ---- persist BENCH_sim.json --------------------------------------
+    let out = std::env::var("CXLFINE_BENCH_SIM_OUT").unwrap_or_else(|_| "BENCH_sim.json".into());
+    let payload = Json::Obj(json_root).to_string_pretty();
+    match std::fs::write(&out, &payload) {
+        Ok(()) => println!("\n[sim_hotpath] wrote {out}"),
+        Err(e) => eprintln!("warn: could not write {out}: {e}"),
+    }
+    report.finish();
+
+    // ---- acceptance gate (full run only) -----------------------------
+    if !smoke {
+        let s = speedup_at_1e5.expect("full run measures the 1e5 cell");
+        assert!(
+            s >= 3.0,
+            "slab/heap DES must be ≥3x the HashMap baseline at 1e5 flows, got {s:.2}x"
+        );
+    }
+}

@@ -251,8 +251,11 @@ pub fn simulate_iteration_traced(
         let now = fab.now();
         let t = match ev {
             Event::FlowDone { id, tag } => {
-                // record the flow's span (stripes become separate spans)
-                if let Some(st) = fab.sim.stats(id) {
+                // record the flow's span (stripes become separate spans),
+                // consuming the stats entry so the finished map stays empty
+                // across arbitrarily long simulations (multi-epoch
+                // `train::loop_` runs issue millions of flows)
+                if let Some(st) = fab.take_stats(id) {
                     let (kind, g, l) = untag(tag);
                     let (name, lane) = span_label(kind, g, l);
                     trace.record(name, lane, st.issued, st.finished);
@@ -375,6 +378,11 @@ pub fn simulate_iteration_traced(
             }
             Kind::Step => {
                 let iter_s = fab.now();
+                debug_assert_eq!(
+                    fab.sim.finished_len(),
+                    0,
+                    "every completed flow's stats must have been consumed"
+                );
                 return (
                     PhaseBreakdown {
                         fwd_s: fwd_phase_end,

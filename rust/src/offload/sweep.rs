@@ -17,6 +17,7 @@ use crate::mem::EngineRef;
 use crate::model::footprint::Workload;
 use crate::model::ModelConfig;
 use crate::topology::SystemTopology;
+use crate::util::digest::Fnv64;
 use crate::util::threadpool::{default_threads, par_map};
 
 /// One grid cell result.
@@ -45,6 +46,42 @@ impl SweepResult {
         let run = point.runs.get(policy_idx)?.as_ref()?;
         let base = point.runs.get(baseline_idx)?.as_ref()?;
         Some(run.relative_to(base))
+    }
+
+    /// Bit-exact FNV-1a digest of the whole grid: cell coordinates, engine
+    /// names, and every breakdown's `to_bits` timings. Two sweeps match iff
+    /// they are bit-identical — this is how the parallel/serial contract
+    /// and the DES determinism contract (DESIGN.md §7) are asserted at the
+    /// full-figure granularity.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_str(&self.model);
+        h.write_u64(self.n_gpus as u64);
+        h.write_u64(self.policies.len() as u64);
+        for p in &self.policies {
+            h.write_str(p);
+        }
+        h.write_u64(self.points.len() as u64);
+        for pt in &self.points {
+            h.write_u64(pt.context as u64);
+            h.write_u64(pt.batch as u64);
+            for run in &pt.runs {
+                match run {
+                    None => {
+                        h.write_u64(0);
+                    }
+                    Some(b) => {
+                        h.write_u64(1);
+                        h.write_f64(b.fwd_s);
+                        h.write_f64(b.bwd_s);
+                        h.write_f64(b.step_s);
+                        h.write_f64(b.iter_s);
+                        h.write_u64(b.tokens);
+                    }
+                }
+            }
+        }
+        h.finish()
     }
 
     /// (min, max) normalized throughput of a policy across all points that
@@ -246,6 +283,24 @@ mod tests {
             cells,
             vec![(4096, 2), (4096, 8), (8192, 2), (8192, 8), (16384, 2), (16384, 8)]
         );
+        // the digest is the one-number form of the same contract
+        assert_eq!(serial.digest(), parallel.digest());
+    }
+
+    #[test]
+    fn digest_locks_the_grid_bitwise() {
+        let base = config_a();
+        let cxl = with_dram_capacity(config_a(), 128 * GIB);
+        let policies = engines(&[Policy::DramOnly, Policy::NaiveInterleave]);
+        let run = || {
+            sweep_grid(&base, &cxl, &qwen25_7b(), 1, &[4096], &[4, 8], &policies)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.digest(), b.digest(), "same grid → same digest");
+        // a different cell set must change the digest
+        let c = sweep_grid(&base, &cxl, &qwen25_7b(), 1, &[4096], &[4], &policies);
+        assert_ne!(a.digest(), c.digest());
     }
 
     #[test]

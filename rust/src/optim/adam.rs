@@ -1,8 +1,16 @@
 //! Real vectorized, multithreaded CPU Adam — the optimizer the coordinator
 //! executes after every iteration (ZeRO-Offload runs exactly this update on
-//! the host; DeepSpeed's version is OpenMP + AVX, ours is chunked
-//! `std::thread::scope` + an unrolled inner loop the compiler
+//! the host; DeepSpeed's version is OpenMP + AVX, ours is chunked fan-out
+//! over the persistent [`Pool`] + an inner loop the compiler
 //! auto-vectorizes).
+//!
+//! [`adam_step`] submits its chunks to the process-wide worker pool rather
+//! than spawning fresh OS threads per step: at small N (≤1M elements) the
+//! update body is a few hundred µs, so `nthreads` × ~10–30 µs of spawn cost
+//! was a measurable per-step tax. The old spawning path is kept as
+//! [`adam_step_spawning`] — `benches/adam_hotpath.rs` reports the small-N
+//! per-step overhead of both so the win stays measured, and the unit tests
+//! pin the two paths (and the serial oracle) bitwise against each other.
 //!
 //! The update, per element:
 //! ```text
@@ -11,7 +19,7 @@
 //! p ← p − lr·( m̂ / (√v̂ + ε) + λ·p )
 //! ```
 
-use crate::util::threadpool::default_threads;
+use crate::util::threadpool::{default_threads, Pool, ScopedTask};
 
 /// Adam hyper-parameters.
 #[derive(Clone, Copy, Debug)]
@@ -133,14 +141,20 @@ pub fn adam_update_chunk(
     }
 }
 
-/// Parallel Adam step: advances `state.step`, updates `params` in place.
-pub fn adam_step(
+/// Shared prologue of both step paths: validates lengths, advances the
+/// step counter, derives the bias-correction reciprocals, clamps the
+/// worker count — and completes the update inline (returning `None`) for
+/// the empty and single-threaded cases. Keeping this in one place is what
+/// keeps [`adam_step`] and [`adam_step_spawning`] bitwise interchangeable
+/// (`pool_path_matches_spawning_path_exactly`): only the fan-out mechanism
+/// differs between them.
+fn step_prologue(
     params: &mut [f32],
     grads: &[f32],
     state: &mut AdamState,
     hp: &AdamHp,
     nthreads: usize,
-) {
+) -> Option<(f32, f32, usize)> {
     assert_eq!(params.len(), grads.len(), "param/grad length mismatch");
     assert_eq!(params.len(), state.len(), "param/state length mismatch");
     state.step += 1;
@@ -151,14 +165,75 @@ pub fn adam_step(
     let inv_bc2 = 1.0 / bc2;
     let n = params.len();
     if n == 0 {
-        return;
+        return None;
     }
     let nthreads = nthreads.max(1).min(n);
     if nthreads == 1 {
         adam_update_chunk(params, grads, &mut state.m, &mut state.v, hp, inv_bc1, inv_bc2);
-        return;
+        return None;
     }
-    // Split all four slices identically and fan out.
+    Some((inv_bc1, inv_bc2, nthreads))
+}
+
+/// Parallel Adam step: advances `state.step`, updates `params` in place.
+///
+/// Chunks fan out over the persistent [`Pool`] (see module docs); the
+/// chunk math is element-local, so the result is bitwise identical to the
+/// serial oracle regardless of worker count or execution order.
+pub fn adam_step(
+    params: &mut [f32],
+    grads: &[f32],
+    state: &mut AdamState,
+    hp: &AdamHp,
+    nthreads: usize,
+) {
+    let Some((inv_bc1, inv_bc2, nthreads)) = step_prologue(params, grads, state, hp, nthreads)
+    else {
+        return;
+    };
+    // Split all four slices identically and fan the chunks out to the pool.
+    let n = params.len();
+    let hp = *hp;
+    let base = n / nthreads;
+    let extra = n % nthreads;
+    let mut tasks: Vec<ScopedTask<'_>> = Vec::with_capacity(nthreads);
+    let mut p_rest = params;
+    let mut g_rest = grads;
+    let mut m_rest = state.m.as_mut_slice();
+    let mut v_rest = state.v.as_mut_slice();
+    for t in 0..nthreads {
+        let len = base + usize::from(t < extra);
+        let (p, pr) = p_rest.split_at_mut(len);
+        let (g, gr) = g_rest.split_at(len);
+        let (m, mr) = m_rest.split_at_mut(len);
+        let (v, vr) = v_rest.split_at_mut(len);
+        p_rest = pr;
+        g_rest = gr;
+        m_rest = mr;
+        v_rest = vr;
+        tasks.push(Box::new(move || {
+            adam_update_chunk(p, g, m, v, &hp, inv_bc1, inv_bc2);
+        }));
+    }
+    Pool::global().run_scoped(tasks);
+}
+
+/// The pre-pool `adam_step`: identical chunking, but spawning fresh scoped
+/// OS threads on every call. Kept as the measured baseline for the pool
+/// (`benches/adam_hotpath.rs` small-N section); results are bitwise
+/// identical to [`adam_step`].
+pub fn adam_step_spawning(
+    params: &mut [f32],
+    grads: &[f32],
+    state: &mut AdamState,
+    hp: &AdamHp,
+    nthreads: usize,
+) {
+    let Some((inv_bc1, inv_bc2, nthreads)) = step_prologue(params, grads, state, hp, nthreads)
+    else {
+        return;
+    };
+    let n = params.len();
     let base = n / nthreads;
     let extra = n % nthreads;
     std::thread::scope(|scope| {
@@ -219,6 +294,44 @@ mod tests {
         assert_eq!(p1, p2);
         assert_eq!(s1.m, s2.m);
         assert_eq!(s1.v, s2.v);
+    }
+
+    #[test]
+    fn pool_path_matches_spawning_path_exactly() {
+        // adam_step (persistent pool) and adam_step_spawning (per-call
+        // scoped threads) must be interchangeable bit-for-bit.
+        let n = 40_009;
+        let hp = AdamHp {
+            weight_decay: 0.003,
+            ..Default::default()
+        };
+        let grads = randv(n, 11);
+        let mut p1 = randv(n, 12);
+        let mut p2 = p1.clone();
+        let mut s1 = AdamState::new(n);
+        let mut s2 = AdamState::new(n);
+        for _ in 0..4 {
+            adam_step(&mut p1, &grads, &mut s1, &hp, 8);
+            adam_step_spawning(&mut p2, &grads, &mut s2, &hp, 8);
+        }
+        assert_eq!(p1, p2);
+        assert_eq!(s1.m, s2.m);
+        assert_eq!(s1.v, s2.v);
+        assert_eq!(s1.step, s2.step);
+    }
+
+    #[test]
+    fn pool_path_handles_more_chunks_than_workers() {
+        // nthreads far above the pool's worker count just queues chunks.
+        let n = 10_007;
+        let grads = randv(n, 21);
+        let mut p1 = randv(n, 22);
+        let mut p2 = p1.clone();
+        let mut s1 = AdamState::new(n);
+        let mut s2 = AdamState::new(n);
+        adam_step(&mut p1, &grads, &mut s1, &AdamHp::default(), 64);
+        adam_update_serial(&mut p2, &grads, &mut s2.m, &mut s2.v, &AdamHp::default(), 1);
+        assert_eq!(p1, p2);
     }
 
     #[test]

@@ -5,5 +5,5 @@
 pub mod adam;
 pub mod group;
 
-pub use adam::{adam_step, adam_step_auto, AdamHp, AdamState};
+pub use adam::{adam_step, adam_step_auto, adam_step_spawning, AdamHp, AdamState};
 pub use group::ParamGroup;

@@ -12,7 +12,7 @@
 //! copy into node *n* traverses `[gpu.tx, n.rx]`. Per-transfer setup time
 //! models DMA descriptor launch plus device latency.
 
-use super::flow::{CapacityModel, Event, FlowId, FlowSim, ResourceId};
+use super::flow::{CapacityModel, Event, FlowId, FlowSim, FlowStats, ResourceId};
 use crate::topology::{GpuId, MemKind, NodeId, SystemTopology};
 
 /// Direction of a host↔GPU DMA relative to the host.
@@ -139,6 +139,14 @@ impl Fabric {
     /// Pure compute delay (GPU kernel, CPU phase) as a timer.
     pub fn compute(&mut self, seconds: f64, tag: u64) -> super::flow::TimerId {
         self.sim.add_timer(seconds, tag)
+    }
+
+    /// Remove and return a completed transfer's stats. Long-running drivers
+    /// must consume stats this way (or via [`FlowSim::drain_finished`]) so
+    /// the per-flow stats map does not grow for the whole run — one entry
+    /// per DMA adds up fast across multi-epoch training loops.
+    pub fn take_stats(&mut self, id: FlowId) -> Option<FlowStats> {
+        self.sim.take_stats(id)
     }
 
     pub fn next_event(&mut self) -> Option<Event> {
@@ -288,6 +296,25 @@ mod tests {
         fab2.sim.run_to_idle();
         let t_solo = fab2.sim.stats(solo).unwrap().finished;
         assert!(t_both < t_solo * 1.2, "duplex broken: {t_both} vs {t_solo}");
+    }
+
+    #[test]
+    fn take_stats_keeps_long_runs_bounded() {
+        // The iteration driver consumes stats per completion event; after a
+        // burst of transfers the finished map must be fully drained.
+        let topo = config_a();
+        let mut fab = Fabric::new(&topo);
+        let mut flows = Vec::new();
+        for i in 0..16u64 {
+            flows.push(fab.transfer(GpuId(0), dram(), Dir::HostToGpu, 1e8, i));
+        }
+        fab.sim.run_to_idle();
+        assert_eq!(fab.sim.finished_len(), 16);
+        for f in &flows {
+            assert!(fab.take_stats(*f).is_some());
+        }
+        assert_eq!(fab.sim.finished_len(), 0, "all stats consumed");
+        assert!(fab.take_stats(flows[0]).is_none(), "take is exactly-once");
     }
 
     #[test]

@@ -11,8 +11,40 @@
 //! and timers, then consumes completion events one at a time, starting
 //! dependent work as each finishes — exactly how the real coordinator
 //! overlaps transfers with compute.
+//!
+//! # Hot-path architecture (DESIGN.md §7)
+//!
+//! Every sweep cell and ablation bottoms out in this event loop, so it is
+//! built for events/sec while holding a hard determinism contract:
+//!
+//! * **Slab flows** — flows live in a dense `Vec<FlowSlot>` with a free
+//!   list; `active` is a small id-sorted index vector, so every per-event
+//!   pass (rate assignment, drain, max-min) is a cache-linear walk with no
+//!   hashing and no per-event id collect+sort.
+//! * **Heap event queues** — pending activations and timers are binary
+//!   heaps keyed `(time, id)`; the tie-break that used to be an O(n)
+//!   `min_by` scan is now encoded in the heap key itself.
+//! * **Earliest-completion index** — the next completion candidate is
+//!   maintained incrementally: refreshed inside the rate-assignment loop
+//!   after each max-min solve and inside the drain loop when time advances,
+//!   so `next_event` never runs a separate scan over all active flows. The
+//!   determinism contract bounds how much more can be cached: completion
+//!   timestamps are defined as `now + remaining/rate` over the *stepwise
+//!   drained* remaining bytes, so any event that moves time must touch
+//!   every active flow anyway — the index rides along in that same pass.
+//! * **Allocation-free max-min** — all progressive-filling state (remaining
+//!   caps, per-resource flow counts, partition lists, per-slot rates) lives
+//!   in [`MaxminScratch`] buffers owned by the sim and reused across calls;
+//!   paths are stored inline ([`PathVec`], spilling to the heap only past 4
+//!   hops) so the drain loop clones nothing.
+//!
+//! The pre-refactor HashMap engine is frozen in [`super::reference`]; the
+//! two are locked together bit-for-bit (ids, tags, `to_bits` timestamps) by
+//! `rust/tests/golden_trace.rs`, and `benches/sim_hotpath.rs` measures the
+//! speedup (≥3× required at ≥1e5 flows).
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
 /// Seconds since simulation start.
 pub type SimTime = f64;
@@ -72,15 +104,78 @@ impl CapacityModel {
 /// Oversubscription slack before a contended resource collapses.
 const COLLAPSE_THRESHOLD: f64 = 1.02;
 
+/// Inline path capacity; real paths here are 1–2 hops (host side + GPU
+/// side), so 4 keeps every practical flow heap-free.
+const PATH_INLINE: usize = 4;
+
+/// A flow's resource path: inline small-vec, heap spill only past
+/// [`PATH_INLINE`] hops. Replaces the `Vec<ResourceId>` whose per-drain
+/// clone was a measurable share of the old engine's event cost.
 #[derive(Clone, Debug)]
-struct Resource {
-    name: String,
-    model: CapacityModel,
+enum PathVec {
+    Inline { len: u8, ids: [ResourceId; PATH_INLINE] },
+    Heap(Box<[ResourceId]>),
+}
+
+impl PathVec {
+    fn new(path: &[ResourceId]) -> Self {
+        if path.len() <= PATH_INLINE {
+            let mut ids = [ResourceId(0); PATH_INLINE];
+            ids[..path.len()].copy_from_slice(path);
+            PathVec::Inline {
+                len: path.len() as u8,
+                ids,
+            }
+        } else {
+            PathVec::Heap(path.to_vec().into_boxed_slice())
+        }
+    }
+
+    #[inline]
+    fn as_slice(&self) -> &[ResourceId] {
+        match self {
+            PathVec::Inline { len, ids } => &ids[..*len as usize],
+            PathVec::Heap(b) => b,
+        }
+    }
+}
+
+/// Total-ordered finite-or-infinite event time for heap keys. Times are
+/// sums/quotients of asserted-nonnegative finite inputs, so NaN is a logic
+/// error — `Ord` panics on it rather than silently reordering events.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct OrdTime(f64);
+
+impl Eq for OrdTime {}
+
+impl PartialOrd for OrdTime {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdTime {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN event time")
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SlotState {
+    Free,
+    /// Setup latency not yet elapsed; queued in the `pending` heap.
+    Pending,
+    /// Transferring; indexed by the id-sorted `active` list.
+    Active,
 }
 
 #[derive(Clone, Debug)]
-struct Flow {
-    path: Vec<ResourceId>,
+struct FlowSlot {
+    /// Stable public id (monotonic, shared counter with timers) — slab slot
+    /// indices are reused, ids never are.
+    id: u64,
+    state: SlotState,
+    path: PathVec,
     bytes: f64,
     remaining: f64,
     rate: f64, // bytes/s, recomputed at each event boundary
@@ -134,19 +229,130 @@ impl FlowStats {
     }
 }
 
+#[derive(Clone, Debug)]
+struct Resource {
+    name: String,
+    model: CapacityModel,
+}
+
+/// Reusable progressive-filling scratch (DESIGN.md §7): owned by the sim so
+/// steady-state rate recomputation performs zero heap allocation.
+#[derive(Default)]
+struct MaxminScratch {
+    base_caps: Vec<f64>,
+    caps: Vec<f64>,
+    rem_cap: Vec<f64>,
+    n_unassigned: Vec<usize>,
+    count: Vec<usize>,
+    collapsed: Vec<bool>,
+    unassigned: Vec<u32>,
+    keep: Vec<u32>,
+    /// Rate per slab slot (only entries for active slots are meaningful).
+    rates: Vec<f64>,
+}
+
+/// Completion time of one flow at instant `now` — the exact expression the
+/// pre-refactor scan used; the determinism contract is defined over it.
+#[inline]
+fn completion_time(now: SimTime, remaining: f64, rate: f64) -> f64 {
+    if remaining <= 0.0 {
+        now
+    } else if rate > 0.0 {
+        now + remaining / rate
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// Progressive filling over the slab, op-for-op equivalent to
+/// `RefFlowSim::maxmin` (flows visited in ascending-id order, identical
+/// arithmetic sequence on `rem_cap`), but writing into reusable buffers.
+#[allow(clippy::too_many_arguments)]
+fn maxmin_fill(
+    slots: &[FlowSlot],
+    active: &[u32],
+    caps: &[f64],
+    rem_cap: &mut Vec<f64>,
+    n_unassigned: &mut Vec<usize>,
+    unassigned: &mut Vec<u32>,
+    keep: &mut Vec<u32>,
+    rates: &mut [f64],
+) {
+    for &si in active {
+        rates[si as usize] = 0.0;
+    }
+    if active.is_empty() {
+        return;
+    }
+    rem_cap.clear();
+    rem_cap.extend_from_slice(caps);
+    unassigned.clear();
+    unassigned.extend_from_slice(active);
+    n_unassigned.clear();
+    n_unassigned.resize(caps.len(), 0);
+    while !unassigned.is_empty() {
+        for c in n_unassigned.iter_mut() {
+            *c = 0;
+        }
+        for &si in unassigned.iter() {
+            for r in slots[si as usize].path.as_slice() {
+                n_unassigned[r.0] += 1;
+            }
+        }
+        // bottleneck resource = min fair share among resources w/ flows
+        let mut best: Option<(usize, f64)> = None;
+        for (ri, &n) in n_unassigned.iter().enumerate() {
+            if n > 0 {
+                let share = (rem_cap[ri] / n as f64).max(0.0);
+                if best.map_or(true, |(_, s)| share < s) {
+                    best = Some((ri, share));
+                }
+            }
+        }
+        let Some((bottleneck, share)) = best else { break };
+        // fix the rate of all unassigned flows through the bottleneck;
+        // non-bottleneck flows are kept for the next round in id order
+        keep.clear();
+        for &si in unassigned.iter() {
+            let s = &slots[si as usize];
+            if s.path.as_slice().iter().any(|r| r.0 == bottleneck) {
+                rates[si as usize] = share;
+                for r in s.path.as_slice() {
+                    rem_cap[r.0] = (rem_cap[r.0] - share).max(0.0);
+                }
+            } else {
+                keep.push(si);
+            }
+        }
+        std::mem::swap(unassigned, keep);
+    }
+}
+
 /// The simulator.
 pub struct FlowSim {
     now: SimTime,
     resources: Vec<Resource>,
-    active: HashMap<u64, Flow>,
-    /// Flows whose setup latency has not elapsed yet: (activate_at, id, flow).
-    pending: Vec<(SimTime, u64, Flow)>,
-    timers: Vec<(SimTime, u64, u64)>, // (fire_at, id, tag)
+    /// Slab: flows in all states; slots are recycled via `free_slots`.
+    slots: Vec<FlowSlot>,
+    free_slots: Vec<u32>,
+    /// Active slot indices, sorted by ascending flow id (the deterministic
+    /// iteration order every per-event pass uses).
+    active: Vec<u32>,
+    /// Flows whose setup latency has not elapsed: keyed (activate_at, id).
+    pending: BinaryHeap<Reverse<(OrdTime, u64, u32)>>,
+    /// Timers: keyed (fire_at, id); payload is the caller tag.
+    timers: BinaryHeap<Reverse<(OrdTime, u64, u64)>>,
     next_id: u64,
     rates_dirty: bool,
+    /// Earliest-completion candidate `(time, slot)` — valid whenever rates
+    /// are clean; refreshed by the rate-assignment and drain passes.
+    cand_t: f64,
+    cand_slot: Option<u32>,
     finished: HashMap<u64, FlowStats>,
     /// Total bytes moved through each resource (utilization accounting).
     resource_bytes: Vec<f64>,
+    events: u64,
+    scratch: MaxminScratch,
 }
 
 impl FlowSim {
@@ -154,13 +360,19 @@ impl FlowSim {
         Self {
             now: 0.0,
             resources: Vec::new(),
-            active: HashMap::new(),
-            pending: Vec::new(),
-            timers: Vec::new(),
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            active: Vec::new(),
+            pending: BinaryHeap::new(),
+            timers: BinaryHeap::new(),
             next_id: 0,
             rates_dirty: true,
+            cand_t: f64::INFINITY,
+            cand_slot: None,
             finished: HashMap::new(),
             resource_bytes: Vec::new(),
+            events: 0,
+            scratch: MaxminScratch::default(),
         }
     }
 
@@ -186,6 +398,17 @@ impl FlowSim {
         self.resource_bytes[id.0]
     }
 
+    /// Insert `si` into the id-sorted active list.
+    fn activate_slot(&mut self, si: u32, id: u64) {
+        self.slots[si as usize].state = SlotState::Active;
+        let pos = self
+            .active
+            .binary_search_by_key(&id, |&a| self.slots[a as usize].id)
+            .unwrap_err();
+        self.active.insert(pos, si);
+        self.rates_dirty = true;
+    }
+
     /// Start a flow of `bytes` over `path`, activating after `setup`
     /// seconds of latency (DMA setup + device latency). `tag` is an opaque
     /// caller token carried back in the completion event.
@@ -200,20 +423,33 @@ impl FlowSim {
         }
         let id = self.next_id;
         self.next_id += 1;
-        let flow = Flow {
-            path: path.to_vec(),
+        let start = self.now + setup;
+        let slot = FlowSlot {
+            id,
+            state: SlotState::Pending,
+            path: PathVec::new(path),
             bytes,
             remaining: bytes,
             rate: 0.0,
-            start: self.now + setup,
+            start,
             issued: self.now,
             tag,
         };
+        let si = match self.free_slots.pop() {
+            Some(si) => {
+                self.slots[si as usize] = slot;
+                si
+            }
+            None => {
+                assert!(self.slots.len() < u32::MAX as usize, "flow slab full");
+                self.slots.push(slot);
+                (self.slots.len() - 1) as u32
+            }
+        };
         if setup > 0.0 {
-            self.pending.push((self.now + setup, id, flow));
+            self.pending.push(Reverse((OrdTime(start), id, si)));
         } else {
-            self.active.insert(id, flow);
-            self.rates_dirty = true;
+            self.activate_slot(si, id);
         }
         FlowId(id)
     }
@@ -223,12 +459,43 @@ impl FlowSim {
         assert!(delay >= 0.0);
         let id = self.next_id;
         self.next_id += 1;
-        self.timers.push((self.now + delay, id, tag));
+        self.timers.push(Reverse((OrdTime(self.now + delay), id, tag)));
         TimerId(id)
     }
 
+    /// Stats of a completed flow, without consuming them (see
+    /// [`FlowSim::take_stats`] for the leak-free variant).
     pub fn stats(&self, id: FlowId) -> Option<FlowStats> {
         self.finished.get(&id.0).copied()
+    }
+
+    /// Remove and return a completed flow's stats. Long-running drivers
+    /// (`offload::iteration`, multi-epoch `train::loop_`) must consume
+    /// stats through this (or [`FlowSim::drain_finished`]) — the finished
+    /// map otherwise accrues one entry per flow forever.
+    pub fn take_stats(&mut self, id: FlowId) -> Option<FlowStats> {
+        self.finished.remove(&id.0)
+    }
+
+    /// Drain all completed-flow stats, ascending by flow id.
+    pub fn drain_finished(&mut self) -> Vec<(FlowId, FlowStats)> {
+        let mut out: Vec<(FlowId, FlowStats)> = self
+            .finished
+            .drain()
+            .map(|(id, st)| (FlowId(id), st))
+            .collect();
+        out.sort_unstable_by_key(|(id, _)| id.0);
+        out
+    }
+
+    /// Number of completed flows whose stats have not been consumed.
+    pub fn finished_len(&self) -> usize {
+        self.finished.len()
+    }
+
+    /// Total events (completions + timer firings) delivered so far.
+    pub fn events_processed(&self) -> u64 {
+        self.events
     }
 
     pub fn n_active(&self) -> usize {
@@ -239,136 +506,136 @@ impl FlowSim {
         self.active.is_empty() && self.pending.is_empty() && self.timers.is_empty()
     }
 
-    /// Pure max-min fair ("progressive filling") given per-resource caps.
-    /// Returns rate per active flow id.
-    fn maxmin(&self, caps: &[f64]) -> HashMap<u64, f64> {
-        let mut rates = HashMap::with_capacity(self.active.len());
-        if self.active.is_empty() {
-            return rates;
-        }
-        let mut rem_cap = caps.to_vec();
-        let mut unassigned: Vec<u64> = {
-            let mut v: Vec<u64> = self.active.keys().copied().collect();
-            v.sort_unstable(); // determinism
-            v
-        };
-        let mut n_unassigned = vec![0usize; self.resources.len()];
-        while !unassigned.is_empty() {
-            for c in n_unassigned.iter_mut() {
-                *c = 0;
-            }
-            for id in &unassigned {
-                for r in &self.active[id].path {
-                    n_unassigned[r.0] += 1;
-                }
-            }
-            // bottleneck resource = min fair share among resources w/ flows
-            let mut best: Option<(usize, f64)> = None;
-            for (ri, &n) in n_unassigned.iter().enumerate() {
-                if n > 0 {
-                    let share = (rem_cap[ri] / n as f64).max(0.0);
-                    if best.map_or(true, |(_, s)| share < s) {
-                        best = Some((ri, share));
-                    }
-                }
-            }
-            let Some((bottleneck, share)) = best else { break };
-            // fix the rate of all unassigned flows through the bottleneck
-            let (through, rest): (Vec<u64>, Vec<u64>) = unassigned
-                .iter()
-                .partition(|id| self.active[id].path.iter().any(|r| r.0 == bottleneck));
-            for id in &through {
-                rates.insert(*id, share);
-                for r in &self.active[id].path {
-                    rem_cap[r.0] = (rem_cap[r.0] - share).max(0.0);
-                }
-            }
-            unassigned = rest;
-        }
-        rates
-    }
-
     /// Rate assignment with the load-dependent CXL collapse: first decide,
     /// per contended resource, whether its offered load (max-min rates with
     /// that resource uncapped) exceeds its base capacity; then solve the
     /// final max-min with collapsed resources at their degraded capacity.
+    ///
+    /// Also refreshes the earliest-completion candidate in the same pass
+    /// that assigns rates. The offered-load solves are skipped entirely
+    /// unless some contended resource carries ≥2 flows (the fast path: a
+    /// single full max-min, no extra solves, no allocation).
     fn recompute_rates(&mut self) {
         if !self.rates_dirty {
             return;
         }
         self.rates_dirty = false;
         if self.active.is_empty() {
+            self.cand_t = f64::INFINITY;
+            self.cand_slot = None;
             return;
         }
-        let base_caps: Vec<f64> = self.resources.iter().map(|r| r.model.base_capacity()).collect();
-        // count flows per contended resource
-        let mut count = vec![0usize; self.resources.len()];
-        for f in self.active.values() {
-            for r in &f.path {
-                count[r.0] += 1;
+        let nr = self.resources.len();
+        let sc = &mut self.scratch;
+        if sc.rates.len() < self.slots.len() {
+            sc.rates.resize(self.slots.len(), 0.0);
+        }
+        sc.base_caps.clear();
+        sc.base_caps
+            .extend(self.resources.iter().map(|r| r.model.base_capacity()));
+        // count flows per resource (collapse decisions + fast path)
+        sc.count.clear();
+        sc.count.resize(nr, 0);
+        for &si in &self.active {
+            for r in self.slots[si as usize].path.as_slice() {
+                sc.count[r.0] += 1;
             }
         }
-        let mut collapsed = vec![false; self.resources.len()];
-        for ri in 0..self.resources.len() {
-            if !self.resources[ri].model.is_contended_model() || count[ri] < 2 {
-                continue;
-            }
-            // offered load = what the flows would pull if this link were free
-            let mut caps_inf = base_caps.clone();
-            caps_inf[ri] = f64::INFINITY;
-            let rates_inf = self.maxmin(&caps_inf);
-            let offered: f64 = self
-                .active
-                .iter()
-                .filter(|(_, f)| f.path.iter().any(|r| r.0 == ri))
-                .map(|(id, _)| rates_inf.get(id).copied().unwrap_or(0.0))
-                .sum();
-            if offered > base_caps[ri] * COLLAPSE_THRESHOLD {
-                collapsed[ri] = true;
-            }
-        }
-        let final_caps: Vec<f64> = self
+        sc.collapsed.clear();
+        sc.collapsed.resize(nr, false);
+        let any_hot = self
             .resources
             .iter()
             .enumerate()
-            .map(|(i, r)| r.model.capacity(collapsed[i]))
-            .collect();
-        let rates = self.maxmin(&final_caps);
-        for (id, f) in self.active.iter_mut() {
-            f.rate = rates.get(id).copied().unwrap_or(0.0);
+            .any(|(ri, r)| r.model.is_contended_model() && sc.count[ri] >= 2);
+        if any_hot {
+            for ri in 0..nr {
+                if !self.resources[ri].model.is_contended_model() || sc.count[ri] < 2 {
+                    continue;
+                }
+                // offered load = what the flows would pull if this link
+                // were free
+                sc.caps.clear();
+                sc.caps.extend_from_slice(&sc.base_caps);
+                sc.caps[ri] = f64::INFINITY;
+                maxmin_fill(
+                    &self.slots,
+                    &self.active,
+                    &sc.caps,
+                    &mut sc.rem_cap,
+                    &mut sc.n_unassigned,
+                    &mut sc.unassigned,
+                    &mut sc.keep,
+                    &mut sc.rates,
+                );
+                let mut offered = 0.0;
+                for &si in &self.active {
+                    let s = &self.slots[si as usize];
+                    if s.path.as_slice().iter().any(|r| r.0 == ri) {
+                        offered += sc.rates[si as usize];
+                    }
+                }
+                if offered > sc.base_caps[ri] * COLLAPSE_THRESHOLD {
+                    sc.collapsed[ri] = true;
+                }
+            }
         }
+        sc.caps.clear();
+        sc.caps.extend(
+            self.resources
+                .iter()
+                .enumerate()
+                .map(|(i, r)| r.model.capacity(sc.collapsed[i])),
+        );
+        maxmin_fill(
+            &self.slots,
+            &self.active,
+            &sc.caps,
+            &mut sc.rem_cap,
+            &mut sc.n_unassigned,
+            &mut sc.unassigned,
+            &mut sc.keep,
+            &mut sc.rates,
+        );
+        // assign rates + refresh the earliest-completion candidate in one
+        // id-ordered pass (ties → smallest id, first-minimum wins)
+        let now = self.now;
+        let mut best_t = f64::INFINITY;
+        let mut best_id = u64::MAX;
+        let mut best_slot: Option<u32> = None;
+        for &si in &self.active {
+            let s = &mut self.slots[si as usize];
+            s.rate = sc.rates[si as usize];
+            let t = completion_time(now, s.remaining, s.rate);
+            if t < best_t || (t == best_t && s.id < best_id) {
+                best_t = t;
+                best_id = s.id;
+                best_slot = Some(si);
+            }
+        }
+        self.cand_t = best_t;
+        self.cand_slot = best_slot;
     }
 
     /// Advance to and return the next event; `None` when idle.
     pub fn next_event(&mut self) -> Option<Event> {
         loop {
             self.recompute_rates();
-            // earliest completion among active flows (ties → smallest id)
-            let mut t_complete = f64::INFINITY;
-            let mut who: Option<u64> = None;
-            for (id, f) in &self.active {
-                let t = if f.remaining <= 0.0 {
-                    self.now
-                } else if f.rate > 0.0 {
-                    self.now + f.remaining / f.rate
-                } else {
-                    f64::INFINITY
-                };
-                if t < t_complete || (t == t_complete && who.map_or(true, |w| *id < w)) {
-                    t_complete = t;
-                    who = Some(*id);
-                }
-            }
-            let t_activate = self
-                .pending
-                .iter()
-                .map(|(t, _, _)| *t)
-                .fold(f64::INFINITY, f64::min);
-            let t_timer = self
-                .timers
-                .iter()
-                .map(|(t, _, _)| *t)
-                .fold(f64::INFINITY, f64::min);
+            // Freeze this iteration's completion candidate before the drain
+            // pass below refreshes the index for the *next* instant — the
+            // event returned now must be the pre-drain winner (the drained
+            // winner's remaining can be an ulp above zero, which would
+            // otherwise re-rank it).
+            let t_complete = self.cand_t;
+            let who = self.cand_slot;
+            let t_activate = match self.pending.peek() {
+                Some(&Reverse((t, _, _))) => t.0,
+                None => f64::INFINITY,
+            };
+            let t_timer = match self.timers.peek() {
+                Some(&Reverse((t, _, _))) => t.0,
+                None => f64::INFINITY,
+            };
 
             let t_next = t_complete.min(t_activate).min(t_timer);
             if !t_next.is_finite() {
@@ -379,38 +646,42 @@ impl FlowSim {
                 return None;
             }
 
-            // Drain transferred bytes up to t_next.
+            // Drain transferred bytes up to t_next, refreshing the
+            // earliest-completion candidate at the new instant in the same
+            // pass. A zero-width step is a bitwise no-op (moved = 0), so it
+            // is skipped outright — same-instant event bursts (striped
+            // arrivals, simultaneous timers) cost no flow pass at all.
             let dt = (t_next - self.now).max(0.0);
             if dt > 0.0 {
-                let ids: Vec<u64> = self.active.keys().copied().collect();
-                for id in ids {
-                    let (moved, path) = {
-                        let f = &self.active[&id];
-                        (f.rate * dt, f.path.clone())
-                    };
-                    let f = self.active.get_mut(&id).unwrap();
-                    f.remaining = (f.remaining - moved).max(0.0);
-                    for r in path {
-                        self.resource_bytes[r.0] += moved;
+                let slots = &mut self.slots;
+                let resource_bytes = &mut self.resource_bytes;
+                let mut best_t = f64::INFINITY;
+                let mut best_id = u64::MAX;
+                let mut best_slot: Option<u32> = None;
+                for &si in &self.active {
+                    let s = &mut slots[si as usize];
+                    let moved = s.rate * dt;
+                    s.remaining = (s.remaining - moved).max(0.0);
+                    for r in s.path.as_slice() {
+                        resource_bytes[r.0] += moved;
+                    }
+                    let t = completion_time(t_next, s.remaining, s.rate);
+                    if t < best_t || (t == best_t && s.id < best_id) {
+                        best_t = t;
+                        best_id = s.id;
+                        best_slot = Some(si);
                     }
                 }
+                self.cand_t = best_t;
+                self.cand_slot = best_slot;
             }
             self.now = t_next;
 
             // Activations first (internal — loop again for a visible event).
             if t_activate <= t_timer && t_activate <= t_complete && t_activate.is_finite() {
-                let idx = self
-                    .pending
-                    .iter()
-                    .enumerate()
-                    .min_by(|(_, (ta, ia, _)), (_, (tb, ib, _))| {
-                        (*ta, *ia).partial_cmp(&(*tb, *ib)).unwrap()
-                    })
-                    .map(|(i, _)| i)
-                    .unwrap();
-                let (_, id, flow) = self.pending.swap_remove(idx);
-                self.active.insert(id, flow);
-                self.rates_dirty = true;
+                let Reverse((_, id, si)) = self.pending.pop().unwrap();
+                debug_assert_eq!(self.slots[si as usize].id, id);
+                self.activate_slot(si, id);
                 continue;
             }
 
@@ -418,33 +689,38 @@ impl FlowSim {
             // the same instant a transfer ends should observe the pre-completion
             // state; deterministic either way, this order is just fixed).
             if t_timer <= t_complete && t_timer.is_finite() {
-                let idx = self
-                    .timers
-                    .iter()
-                    .enumerate()
-                    .min_by(|(_, (ta, ia, _)), (_, (tb, ib, _))| {
-                        (*ta, *ia).partial_cmp(&(*tb, *ib)).unwrap()
-                    })
-                    .map(|(i, _)| i)
-                    .unwrap();
-                let (_, id, tag) = self.timers.swap_remove(idx);
+                let Reverse((_, id, tag)) = self.timers.pop().unwrap();
+                self.events += 1;
                 return Some(Event::TimerFired { id: TimerId(id), tag });
             }
 
             // Completion.
-            let id = who.expect("completion without candidate flow");
-            let f = self.active.remove(&id).unwrap();
+            let si = who.expect("completion without candidate flow");
+            let (id, tag, stats) = {
+                let s = &self.slots[si as usize];
+                debug_assert_eq!(s.state, SlotState::Active);
+                (
+                    s.id,
+                    s.tag,
+                    FlowStats {
+                        issued: s.issued,
+                        started: s.start,
+                        finished: self.now,
+                        bytes: s.bytes,
+                    },
+                )
+            };
+            let pos = self
+                .active
+                .binary_search_by_key(&id, |&a| self.slots[a as usize].id)
+                .expect("candidate not in active list");
+            self.active.remove(pos);
+            self.slots[si as usize].state = SlotState::Free;
+            self.free_slots.push(si);
             self.rates_dirty = true;
-            self.finished.insert(
-                id,
-                FlowStats {
-                    issued: f.issued,
-                    started: f.start,
-                    finished: self.now,
-                    bytes: f.bytes,
-                },
-            );
-            return Some(Event::FlowDone { id: FlowId(id), tag: f.tag });
+            self.finished.insert(id, stats);
+            self.events += 1;
+            return Some(Event::FlowDone { id: FlowId(id), tag });
         }
     }
 
@@ -573,7 +849,6 @@ mod tests {
         let mut sim = FlowSim::new();
         let l1 = sim.add_resource("l1", CapacityModel::Fixed(10.0));
         let l2 = sim.add_resource("l2", CapacityModel::Fixed(4.0));
-        // Use huge byte counts and inspect instantaneous rates via first completion
         let a = sim.start_flow(&[l1], 8.0, 0.0, 0);
         let b = sim.start_flow(&[l1, l2], 2.0, 0.0, 1);
         let c = sim.start_flow(&[l2], 2.0, 0.0, 2);
@@ -653,5 +928,156 @@ mod tests {
     fn empty_path_rejected() {
         let mut sim = FlowSim::new();
         sim.start_flow(&[], 1.0, 0.0, 0);
+    }
+
+    // ---- slab/heap-specific behavior --------------------------------
+
+    #[test]
+    fn slots_are_recycled_but_ids_are_stable() {
+        let mut sim = FlowSim::new();
+        let l = sim.add_resource("l", CapacityModel::Fixed(1.0));
+        let a = sim.start_flow(&[l], 1.0, 0.0, 0);
+        assert_eq!(sim.run_to_idle().len(), 1);
+        // slab has exactly one slot now; the next flow must reuse it while
+        // getting a fresh id
+        let b = sim.start_flow(&[l], 1.0, 0.0, 1);
+        assert_ne!(a, b, "ids must never be reused");
+        assert_eq!(sim.slots.len(), 1, "slot must be recycled");
+        sim.run_to_idle();
+        // both flows' stats are independently retrievable
+        assert!(sim.stats(a).is_some() && sim.stats(b).is_some());
+    }
+
+    #[test]
+    fn take_stats_consumes_exactly_once() {
+        let mut sim = FlowSim::new();
+        let l = sim.add_resource("l", CapacityModel::Fixed(2.0));
+        let f = sim.start_flow(&[l], 2.0, 0.0, 7);
+        sim.run_to_idle();
+        assert_eq!(sim.finished_len(), 1);
+        let st = sim.take_stats(f).expect("stats present");
+        assert!((st.finished - 1.0).abs() < 1e-12);
+        assert!(sim.take_stats(f).is_none(), "second take must be empty");
+        assert_eq!(sim.finished_len(), 0);
+        assert!(sim.stats(f).is_none(), "stats() sees the drained map");
+    }
+
+    #[test]
+    fn drain_finished_is_id_sorted_and_empties() {
+        let mut sim = FlowSim::new();
+        let l = sim.add_resource("l", CapacityModel::Fixed(10.0));
+        let ids: Vec<FlowId> = (0..5).map(|i| sim.start_flow(&[l], 1.0 + i as f64, 0.0, i)).collect();
+        sim.run_to_idle();
+        let drained = sim.drain_finished();
+        assert_eq!(drained.len(), 5);
+        let order: Vec<u64> = drained.iter().map(|(id, _)| id.0).collect();
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(order, sorted, "drain must be ascending by id");
+        assert_eq!(sim.finished_len(), 0);
+        for id in ids {
+            assert!(sim.stats(id).is_none());
+        }
+    }
+
+    #[test]
+    fn events_processed_counts_flows_and_timers() {
+        let mut sim = FlowSim::new();
+        let l = sim.add_resource("l", CapacityModel::Fixed(1.0));
+        sim.start_flow(&[l], 1.0, 0.0, 0);
+        sim.start_flow(&[l], 2.0, 0.25, 1);
+        sim.add_timer(0.125, 2);
+        let n = sim.run_to_idle().len();
+        assert_eq!(n, 3);
+        assert_eq!(sim.events_processed(), 3);
+    }
+
+    #[test]
+    fn simultaneous_timers_fire_in_id_order() {
+        // Same-instant bursts take the no-drain fast path; ordering must
+        // still be (time, id) exactly.
+        let mut sim = FlowSim::new();
+        let l = sim.add_resource("l", CapacityModel::Fixed(1.0));
+        sim.start_flow(&[l], 1.0, 0.0, 99);
+        let t0 = sim.add_timer(0.5, 10);
+        let t1 = sim.add_timer(0.5, 11);
+        let t2 = sim.add_timer(0.5, 12);
+        let events = sim.run_to_idle();
+        let tags: Vec<u64> = events.iter().map(|e| e.tag()).collect();
+        assert_eq!(tags, vec![10, 11, 12, 99]);
+        assert!(t0.0 < t1.0 && t1.0 < t2.0);
+    }
+
+    #[test]
+    fn long_path_spills_to_heap() {
+        let mut sim = FlowSim::new();
+        let rs: Vec<ResourceId> = (0..6)
+            .map(|i| sim.add_resource(&format!("r{i}"), CapacityModel::Fixed(6.0)))
+            .collect();
+        let f = sim.start_flow(&rs, 6.0, 0.0, 0);
+        sim.run_to_idle();
+        assert!((sim.stats(f).unwrap().finished - 1.0).abs() < 1e-9);
+        for r in rs {
+            assert!((sim.resource_bytes(r) - 6.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn pending_activation_order_is_time_then_id() {
+        let mut sim = FlowSim::new();
+        let l = sim.add_resource("l", CapacityModel::Fixed(1.0));
+        // equal setup latencies → activation (internal) order by id; both
+        // then share the link and the smaller transfer finishes first
+        sim.start_flow(&[l], 0.3, 0.5, 1);
+        sim.start_flow(&[l], 0.1, 0.5, 2);
+        let tags: Vec<u64> = sim.run_to_idle().iter().map(|e| e.tag()).collect();
+        assert_eq!(tags, vec![2, 1]);
+    }
+
+    #[test]
+    fn matches_reference_engine_bitwise_on_contended_mix() {
+        // Close-to-home differential check (the broad randomized version
+        // lives in rust/tests/golden_trace.rs): identical call sequence →
+        // identical events and bit-identical timestamps.
+        use crate::sim::reference::RefFlowSim;
+        let mut a = FlowSim::new();
+        let mut b = RefFlowSim::new();
+        let build_new = |s: &mut FlowSim| {
+            (
+                s.add_resource("dram", CapacityModel::Fixed(204.0 * GB)),
+                s.add_resource("aic", CapacityModel::Contended { single: 54.0 * GB, contended: 26.0 * GB }),
+                s.add_resource("g0", CapacityModel::Fixed(54.0 * GB)),
+                s.add_resource("g1", CapacityModel::Fixed(54.0 * GB)),
+            )
+        };
+        let (d0, x0, g00, g10) = build_new(&mut a);
+        let d1 = b.add_resource("dram", CapacityModel::Fixed(204.0 * GB));
+        let x1 = b.add_resource("aic", CapacityModel::Contended { single: 54.0 * GB, contended: 26.0 * GB });
+        let g01 = b.add_resource("g0", CapacityModel::Fixed(54.0 * GB));
+        let g11 = b.add_resource("g1", CapacityModel::Fixed(54.0 * GB));
+        assert_eq!((d0, x0, g00, g10), (d1, x1, g01, g11));
+        let drive_a = {
+            a.start_flow(&[x0, g00], 3.0 * GB, 10e-6, 1);
+            a.start_flow(&[x0, g10], 2.0 * GB, 10e-6, 2);
+            a.start_flow(&[d0, g00], 5.0 * GB, 0.0, 3);
+            a.add_timer(0.01, 4);
+            let mut ev = Vec::new();
+            while let Some(e) = a.next_event() {
+                ev.push((e, a.now().to_bits()));
+            }
+            ev
+        };
+        let drive_b = {
+            b.start_flow(&[x1, g01], 3.0 * GB, 10e-6, 1);
+            b.start_flow(&[x1, g11], 2.0 * GB, 10e-6, 2);
+            b.start_flow(&[d1, g01], 5.0 * GB, 0.0, 3);
+            b.add_timer(0.01, 4);
+            let mut ev = Vec::new();
+            while let Some(e) = b.next_event() {
+                ev.push((e, b.now().to_bits()));
+            }
+            ev
+        };
+        assert_eq!(drive_a, drive_b);
     }
 }

@@ -12,6 +12,7 @@
 pub mod fabric;
 pub mod flow;
 pub mod memmodel;
+pub mod reference;
 pub mod trace;
 
 pub use fabric::{Dir, Fabric, DMA_SETUP_S};

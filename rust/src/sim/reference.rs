@@ -1,0 +1,412 @@
+//! The **pre-refactor** flow simulator, frozen verbatim as a reference
+//! oracle and benchmark baseline.
+//!
+//! [`RefFlowSim`] is the HashMap/linear-scan engine the optimized
+//! [`super::flow::FlowSim`] replaced: `active`/`finished` are HashMaps,
+//! `pending`/`timers` are Vecs with O(n) min-scans, `maxmin` allocates and
+//! sorts fresh id vectors per call, and the drain loop clones every flow's
+//! path. It is kept (not deleted) for two reasons:
+//!
+//! 1. **Determinism contract** — `rust/tests/golden_trace.rs` drives both
+//!    engines through identical scenarios and asserts bit-identical event
+//!    sequences (ids, tags, `now()` timestamps compared via `to_bits`).
+//!    The refactor is only legal because it preserves this contract.
+//! 2. **Benchmark baseline** — `benches/sim_hotpath.rs` reports the
+//!    events/sec speedup of the slab engine over this one (the acceptance
+//!    bar is ≥3× at ≥1e5 flows).
+//!
+//! One known container-order dependence, preserved as-is: the offered-load
+//! sum in `recompute_rates` accumulates in HashMap iteration order, so its
+//! low bits may differ run-to-run. It only feeds a 2 % threshold compare,
+//! which is why the old engine was observably deterministic anyway; the new
+//! engine sums in id order instead (deterministic by construction).
+//!
+//! Do not optimize or "clean up" this module — its value is being frozen.
+
+use std::collections::HashMap;
+
+use super::flow::{CapacityModel, Event, FlowId, FlowStats, ResourceId, SimTime, TimerId};
+
+/// Oversubscription slack before a contended resource collapses (must match
+/// `flow::COLLAPSE_THRESHOLD`).
+const COLLAPSE_THRESHOLD: f64 = 1.02;
+
+#[derive(Clone, Debug)]
+struct Resource {
+    name: String,
+    model: CapacityModel,
+}
+
+#[derive(Clone, Debug)]
+struct Flow {
+    path: Vec<ResourceId>,
+    bytes: f64,
+    remaining: f64,
+    rate: f64, // bytes/s, recomputed at each event boundary
+    start: SimTime,
+    issued: SimTime,
+    tag: u64,
+}
+
+/// The pre-refactor simulator (see module docs).
+pub struct RefFlowSim {
+    now: SimTime,
+    resources: Vec<Resource>,
+    active: HashMap<u64, Flow>,
+    /// Flows whose setup latency has not elapsed yet: (activate_at, id, flow).
+    pending: Vec<(SimTime, u64, Flow)>,
+    timers: Vec<(SimTime, u64, u64)>, // (fire_at, id, tag)
+    next_id: u64,
+    rates_dirty: bool,
+    finished: HashMap<u64, FlowStats>,
+    /// Total bytes moved through each resource (utilization accounting).
+    resource_bytes: Vec<f64>,
+}
+
+impl RefFlowSim {
+    pub fn new() -> Self {
+        Self {
+            now: 0.0,
+            resources: Vec::new(),
+            active: HashMap::new(),
+            pending: Vec::new(),
+            timers: Vec::new(),
+            next_id: 0,
+            rates_dirty: true,
+            finished: HashMap::new(),
+            resource_bytes: Vec::new(),
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn add_resource(&mut self, name: &str, model: CapacityModel) -> ResourceId {
+        self.resources.push(Resource {
+            name: name.to_string(),
+            model,
+        });
+        self.resource_bytes.push(0.0);
+        ResourceId(self.resources.len() - 1)
+    }
+
+    pub fn resource_name(&self, id: ResourceId) -> &str {
+        &self.resources[id.0].name
+    }
+
+    /// Total bytes that traversed a resource so far.
+    pub fn resource_bytes(&self, id: ResourceId) -> f64 {
+        self.resource_bytes[id.0]
+    }
+
+    /// Start a flow of `bytes` over `path`, activating after `setup`
+    /// seconds of latency.
+    pub fn start_flow(&mut self, path: &[ResourceId], bytes: f64, setup: f64, tag: u64) -> FlowId {
+        assert!(
+            !path.is_empty(),
+            "flows need ≥1 resource; use timers for pure delays"
+        );
+        assert!(bytes >= 0.0 && setup >= 0.0);
+        for r in path {
+            assert!(r.0 < self.resources.len(), "dangling resource id");
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let flow = Flow {
+            path: path.to_vec(),
+            bytes,
+            remaining: bytes,
+            rate: 0.0,
+            start: self.now + setup,
+            issued: self.now,
+            tag,
+        };
+        if setup > 0.0 {
+            self.pending.push((self.now + setup, id, flow));
+        } else {
+            self.active.insert(id, flow);
+            self.rates_dirty = true;
+        }
+        FlowId(id)
+    }
+
+    /// Schedule a timer `delay` seconds from now.
+    pub fn add_timer(&mut self, delay: f64, tag: u64) -> TimerId {
+        assert!(delay >= 0.0);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.timers.push((self.now + delay, id, tag));
+        TimerId(id)
+    }
+
+    pub fn stats(&self, id: FlowId) -> Option<FlowStats> {
+        self.finished.get(&id.0).copied()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.len() + self.pending.len()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.active.is_empty() && self.pending.is_empty() && self.timers.is_empty()
+    }
+
+    /// Pure max-min fair ("progressive filling") given per-resource caps.
+    /// Returns rate per active flow id.
+    fn maxmin(&self, caps: &[f64]) -> HashMap<u64, f64> {
+        let mut rates = HashMap::with_capacity(self.active.len());
+        if self.active.is_empty() {
+            return rates;
+        }
+        let mut rem_cap = caps.to_vec();
+        let mut unassigned: Vec<u64> = {
+            let mut v: Vec<u64> = self.active.keys().copied().collect();
+            v.sort_unstable(); // determinism
+            v
+        };
+        let mut n_unassigned = vec![0usize; self.resources.len()];
+        while !unassigned.is_empty() {
+            for c in n_unassigned.iter_mut() {
+                *c = 0;
+            }
+            for id in &unassigned {
+                for r in &self.active[id].path {
+                    n_unassigned[r.0] += 1;
+                }
+            }
+            // bottleneck resource = min fair share among resources w/ flows
+            let mut best: Option<(usize, f64)> = None;
+            for (ri, &n) in n_unassigned.iter().enumerate() {
+                if n > 0 {
+                    let share = (rem_cap[ri] / n as f64).max(0.0);
+                    if best.map_or(true, |(_, s)| share < s) {
+                        best = Some((ri, share));
+                    }
+                }
+            }
+            let Some((bottleneck, share)) = best else { break };
+            // fix the rate of all unassigned flows through the bottleneck
+            let (through, rest): (Vec<u64>, Vec<u64>) = unassigned
+                .iter()
+                .partition(|id| self.active[id].path.iter().any(|r| r.0 == bottleneck));
+            for id in &through {
+                rates.insert(*id, share);
+                for r in &self.active[id].path {
+                    rem_cap[r.0] = (rem_cap[r.0] - share).max(0.0);
+                }
+            }
+            unassigned = rest;
+        }
+        rates
+    }
+
+    /// Rate assignment with the load-dependent CXL collapse.
+    fn recompute_rates(&mut self) {
+        if !self.rates_dirty {
+            return;
+        }
+        self.rates_dirty = false;
+        if self.active.is_empty() {
+            return;
+        }
+        let base_caps: Vec<f64> = self.resources.iter().map(|r| r.model.base_capacity()).collect();
+        // count flows per contended resource
+        let mut count = vec![0usize; self.resources.len()];
+        for f in self.active.values() {
+            for r in &f.path {
+                count[r.0] += 1;
+            }
+        }
+        let mut collapsed = vec![false; self.resources.len()];
+        for ri in 0..self.resources.len() {
+            if !self.resources[ri].model.is_contended_model() || count[ri] < 2 {
+                continue;
+            }
+            // offered load = what the flows would pull if this link were free
+            let mut caps_inf = base_caps.clone();
+            caps_inf[ri] = f64::INFINITY;
+            let rates_inf = self.maxmin(&caps_inf);
+            let offered: f64 = self
+                .active
+                .iter()
+                .filter(|(_, f)| f.path.iter().any(|r| r.0 == ri))
+                .map(|(id, _)| rates_inf.get(id).copied().unwrap_or(0.0))
+                .sum();
+            if offered > base_caps[ri] * COLLAPSE_THRESHOLD {
+                collapsed[ri] = true;
+            }
+        }
+        let final_caps: Vec<f64> = self
+            .resources
+            .iter()
+            .enumerate()
+            .map(|(i, r)| r.model.capacity(collapsed[i]))
+            .collect();
+        let rates = self.maxmin(&final_caps);
+        for (id, f) in self.active.iter_mut() {
+            f.rate = rates.get(id).copied().unwrap_or(0.0);
+        }
+    }
+
+    /// Advance to and return the next event; `None` when idle.
+    pub fn next_event(&mut self) -> Option<Event> {
+        loop {
+            self.recompute_rates();
+            // earliest completion among active flows (ties → smallest id)
+            let mut t_complete = f64::INFINITY;
+            let mut who: Option<u64> = None;
+            for (id, f) in &self.active {
+                let t = if f.remaining <= 0.0 {
+                    self.now
+                } else if f.rate > 0.0 {
+                    self.now + f.remaining / f.rate
+                } else {
+                    f64::INFINITY
+                };
+                if t < t_complete || (t == t_complete && who.map_or(true, |w| *id < w)) {
+                    t_complete = t;
+                    who = Some(*id);
+                }
+            }
+            let t_activate = self
+                .pending
+                .iter()
+                .map(|(t, _, _)| *t)
+                .fold(f64::INFINITY, f64::min);
+            let t_timer = self
+                .timers
+                .iter()
+                .map(|(t, _, _)| *t)
+                .fold(f64::INFINITY, f64::min);
+
+            let t_next = t_complete.min(t_activate).min(t_timer);
+            if !t_next.is_finite() {
+                assert!(
+                    self.active.is_empty(),
+                    "deadlock: active flows with zero rate and nothing pending"
+                );
+                return None;
+            }
+
+            // Drain transferred bytes up to t_next.
+            let dt = (t_next - self.now).max(0.0);
+            if dt > 0.0 {
+                let ids: Vec<u64> = self.active.keys().copied().collect();
+                for id in ids {
+                    let (moved, path) = {
+                        let f = &self.active[&id];
+                        (f.rate * dt, f.path.clone())
+                    };
+                    let f = self.active.get_mut(&id).unwrap();
+                    f.remaining = (f.remaining - moved).max(0.0);
+                    for r in path {
+                        self.resource_bytes[r.0] += moved;
+                    }
+                }
+            }
+            self.now = t_next;
+
+            // Activations first (internal — loop again for a visible event).
+            if t_activate <= t_timer && t_activate <= t_complete && t_activate.is_finite() {
+                let idx = self
+                    .pending
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, (ta, ia, _)), (_, (tb, ib, _))| {
+                        (*ta, *ia).partial_cmp(&(*tb, *ib)).unwrap()
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap();
+                let (_, id, flow) = self.pending.swap_remove(idx);
+                self.active.insert(id, flow);
+                self.rates_dirty = true;
+                continue;
+            }
+
+            // Timers before completions at equal timestamps.
+            if t_timer <= t_complete && t_timer.is_finite() {
+                let idx = self
+                    .timers
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, (ta, ia, _)), (_, (tb, ib, _))| {
+                        (*ta, *ia).partial_cmp(&(*tb, *ib)).unwrap()
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap();
+                let (_, id, tag) = self.timers.swap_remove(idx);
+                return Some(Event::TimerFired { id: TimerId(id), tag });
+            }
+
+            // Completion.
+            let id = who.expect("completion without candidate flow");
+            let f = self.active.remove(&id).unwrap();
+            self.rates_dirty = true;
+            self.finished.insert(
+                id,
+                FlowStats {
+                    issued: f.issued,
+                    started: f.start,
+                    finished: self.now,
+                    bytes: f.bytes,
+                },
+            );
+            return Some(Event::FlowDone { id: FlowId(id), tag: f.tag });
+        }
+    }
+
+    /// Run until idle, returning all events in order.
+    pub fn run_to_idle(&mut self) -> Vec<Event> {
+        let mut out = Vec::new();
+        while let Some(e) = self.next_event() {
+            out.push(e);
+        }
+        out
+    }
+}
+
+impl Default for RefFlowSim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GB: f64 = 1e9;
+
+    // A couple of smoke tests so a regression in the frozen oracle itself
+    // (e.g. a bad merge) is caught close to home; the heavy coverage lives
+    // in `flow.rs` (new engine) and `rust/tests/golden_trace.rs` (both).
+    #[test]
+    fn reference_single_flow_exact_time() {
+        let mut sim = RefFlowSim::new();
+        let link = sim.add_resource("link", CapacityModel::Fixed(10.0 * GB));
+        let f = sim.start_flow(&[link], 5.0 * GB, 0.0, 1);
+        let events = sim.run_to_idle();
+        assert_eq!(events, vec![Event::FlowDone { id: f, tag: 1 }]);
+        assert!((sim.now() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reference_contended_collapse() {
+        let mut sim = RefFlowSim::new();
+        let aic = sim.add_resource(
+            "aic",
+            CapacityModel::Contended {
+                single: 54.0 * GB,
+                contended: 26.0 * GB,
+            },
+        );
+        let g0 = sim.add_resource("gpu0", CapacityModel::Fixed(54.0 * GB));
+        let g1 = sim.add_resource("gpu1", CapacityModel::Fixed(54.0 * GB));
+        let a = sim.start_flow(&[aic, g0], 13.0 * GB, 0.0, 0);
+        let b = sim.start_flow(&[aic, g1], 13.0 * GB, 0.0, 1);
+        sim.run_to_idle();
+        assert!((sim.stats(a).unwrap().finished - 1.0).abs() < 1e-9);
+        assert!((sim.stats(b).unwrap().finished - 1.0).abs() < 1e-9);
+    }
+}

@@ -4,6 +4,7 @@
 //! per-GPU compute, the STEP tail — and how contention stretches them.
 
 use crate::jobj;
+use crate::util::digest::Fnv64;
 use crate::util::json::{Json, JsonObj};
 
 /// One completed span.
@@ -51,6 +52,24 @@ impl TraceRecorder {
 
     pub fn is_empty(&self) -> bool {
         self.spans.is_empty()
+    }
+
+    /// Bit-exact FNV-1a digest of the full span sequence (names, lanes,
+    /// and `to_bits` timestamps, in recording order). This is the
+    /// golden-trace lock of DESIGN.md §7: two simulator builds emit the
+    /// same digest iff their event sequences are byte-identical —
+    /// `rust/tests/golden_trace.rs` uses it to pin Fig. 6/7/9 cells across
+    /// the slab/heap DES refactor and across debug/release profiles.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_u64(self.spans.len() as u64);
+        for s in &self.spans {
+            h.write_str(&s.name);
+            h.write_str(&s.lane);
+            h.write_f64(s.start_s);
+            h.write_f64(s.end_s);
+        }
+        h.finish()
     }
 
     /// Total span time per lane (utilization summary).
@@ -129,6 +148,64 @@ mod tests {
         // parses back
         let text = j.to_string_pretty();
         assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn digest_is_stable_and_order_sensitive() {
+        let mut a = TraceRecorder::new();
+        a.record("x", "lane", 0.0, 1.0);
+        a.record("y", "lane", 1.0, 2.0);
+        let mut b = TraceRecorder::new();
+        b.record("x", "lane", 0.0, 1.0);
+        b.record("y", "lane", 1.0, 2.0);
+        assert_eq!(a.digest(), b.digest(), "same spans → same digest");
+        let mut c = TraceRecorder::new();
+        c.record("y", "lane", 1.0, 2.0);
+        c.record("x", "lane", 0.0, 1.0);
+        assert_ne!(a.digest(), c.digest(), "recording order is part of the lock");
+    }
+
+    #[test]
+    fn digest_sees_last_ulp_timestamp_changes() {
+        let t = 1.0f64;
+        let t_next = f64::from_bits(t.to_bits() + 1);
+        let mut a = TraceRecorder::new();
+        a.record("x", "lane", 0.0, t);
+        let mut b = TraceRecorder::new();
+        b.record("x", "lane", 0.0, t_next);
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn digest_separates_name_and_lane() {
+        // length-prefixing must keep ("ab","c") distinct from ("a","bc")
+        let mut a = TraceRecorder::new();
+        a.record("ab", "c", 0.0, 1.0);
+        let mut b = TraceRecorder::new();
+        b.record("a", "bc", 0.0, 1.0);
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn empty_recorder_behaves() {
+        let tr = TraceRecorder::new();
+        assert!(tr.is_empty());
+        assert_eq!(tr.spans().len(), 0);
+        assert!(tr.lane_busy().is_empty());
+        let j = tr.to_chrome_trace();
+        assert_eq!(j.as_arr().unwrap().len(), 0);
+        // digest of the empty trace is the length-0 prefix, reproducibly
+        assert_eq!(tr.digest(), TraceRecorder::new().digest());
+    }
+
+    #[test]
+    fn zero_width_spans_are_legal() {
+        let mut tr = TraceRecorder::new();
+        tr.record("instant", "lane", 1.5, 1.5);
+        assert_eq!(tr.spans()[0].duration(), 0.0);
+        let busy = tr.lane_busy();
+        assert_eq!(busy.len(), 1);
+        assert_eq!(busy[0].1, 0.0);
     }
 
     #[test]

@@ -1,0 +1,96 @@
+//! FNV-1a 64-bit digests for golden-trace locking.
+//!
+//! The simulator's determinism contract (DESIGN.md §7) is enforced by
+//! comparing *digests* of full event/span sequences: floating-point
+//! timestamps are folded in via their IEEE-754 bit patterns, so two runs
+//! match iff they are bit-identical — a tolerance-free lock that survives
+//! refactors only when the arithmetic is genuinely unchanged.
+//!
+//! FNV-1a is used because the goal is a stable, dependency-free fingerprint
+//! of a deterministic byte stream, not collision resistance against an
+//! adversary.
+
+/// Incremental FNV-1a (64-bit).
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Self(FNV_OFFSET)
+    }
+
+    #[inline]
+    pub fn write(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) -> &mut Self {
+        self.write(&v.to_le_bytes())
+    }
+
+    /// Fold in an `f64` by bit pattern (bit-identity, not tolerance).
+    #[inline]
+    pub fn write_f64(&mut self, v: f64) -> &mut Self {
+        self.write_u64(v.to_bits())
+    }
+
+    /// Length-prefixed string write, so `("ab","c")` ≠ `("a","bc")`.
+    #[inline]
+    pub fn write_str(&mut self, s: &str) -> &mut Self {
+        self.write_u64(s.len() as u64);
+        self.write(s.as_bytes())
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // FNV-1a 64 reference values
+        assert_eq!(Fnv64::new().finish(), 0xcbf29ce484222325);
+        assert_eq!(Fnv64::new().write(b"a").finish(), 0xaf63dc4c8601ec8c);
+        assert_eq!(Fnv64::new().write(b"foobar").finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn f64_folds_bit_pattern() {
+        let mut a = Fnv64::new();
+        a.write_f64(0.1 + 0.2);
+        let mut b = Fnv64::new();
+        b.write_f64(0.3);
+        // 0.1+0.2 != 0.3 bitwise — the digest must see the difference
+        assert_ne!(a.finish(), b.finish());
+        let mut c = Fnv64::new();
+        c.write_f64(0.1 + 0.2);
+        assert_eq!(a.finish(), c.finish());
+    }
+
+    #[test]
+    fn string_length_prefix_disambiguates() {
+        let mut a = Fnv64::new();
+        a.write_str("ab").write_str("c");
+        let mut b = Fnv64::new();
+        b.write_str("a").write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+}

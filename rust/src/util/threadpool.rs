@@ -1,18 +1,24 @@
-//! Data-parallel helpers over `std::thread::scope` (no `rayon` offline).
+//! Data-parallel helpers (no `rayon` offline).
 //!
-//! The optimizer hot path and the bench harness need exactly two shapes of
-//! parallelism:
-//!   * [`par_chunks_mut`] — split a mutable slice into near-equal chunks and
-//!     run a closure per chunk on its own thread (the ZeRO-Offload
-//!     OpenMP-parallel-for equivalent),
+//! Three shapes of parallelism:
+//!   * [`Pool`] — a persistent worker pool with a scoped batch API; the
+//!     per-step optimizer hot path ([`crate::optim::adam_step`]) submits
+//!     its chunks here instead of spawning fresh OS threads every step
+//!     (spawn cost is ~10–30 µs/thread — pure overhead at small N, where a
+//!     1M-element Adam step itself is only a few hundred µs).
+//!   * [`par_chunks_mut`] — split a mutable slice into near-equal chunks
+//!     and run a closure per chunk on its own scoped thread.
 //!   * [`par_map`] — map a closure over indexed work items with a bounded
-//!     worker count and collect results in order.
+//!     worker count and collect results in order (the sweep fan-out).
 //!
-//! Threads are spawned per call; for the multi-millisecond optimizer
-//! chunks this cost (~10 µs/thread) is noise, and it keeps the code free of
-//! global state.
+//! `par_chunks_mut`/`par_map` deliberately stay on `std::thread::scope`:
+//! their callers (sweep cells, property tests) are multi-millisecond tasks
+//! where spawn cost is noise, and scoped spawning guarantees real OS
+//! threads for tests that assert genuine multi-threading.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use by default: physical parallelism,
 /// clamped to something sane.
@@ -21,6 +27,153 @@ pub fn default_threads() -> usize {
         .map(|n| n.get())
         .unwrap_or(4)
         .clamp(1, 128)
+}
+
+/// A task whose borrows are scoped to one [`Pool::run_scoped`] call.
+pub type ScopedTask<'s> = Box<dyn FnOnce() + Send + 's>;
+
+type StaticTask = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion state of one submitted batch.
+struct BatchState {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<(Arc<BatchState>, StaticTask)>>,
+    work_ready: Condvar,
+}
+
+/// A persistent worker pool with a *scoped* batch API.
+///
+/// Workers are spawned once and parked on a condvar between batches, so a
+/// caller that fans out every few hundred microseconds (the CPU Adam step)
+/// pays a wakeup instead of `nthreads` × thread-spawn per call.
+///
+/// [`Pool::run_scoped`] accepts non-`'static` tasks: their lifetimes are
+/// erased for the trip through the worker queue, which is sound because
+/// the call blocks until every task in the batch has finished executing —
+/// no borrow can outlive the stack frame that owns it (the same contract
+/// `std::thread::scope` enforces, minus the per-call spawns).
+///
+/// Deadlock-freedom: the submitting thread *helps* — it drains the shared
+/// queue itself until empty, then waits only for tasks other threads are
+/// actively running. Nested `run_scoped` calls (a pool task that itself
+/// submits a batch) therefore always make progress, even on a pool with
+/// zero idle workers.
+pub struct Pool {
+    shared: Arc<PoolShared>,
+    workers: usize,
+}
+
+impl Pool {
+    /// Spawn a pool with `workers` daemon worker threads (they idle-park
+    /// forever; the process exits without joining them).
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            work_ready: Condvar::new(),
+        });
+        for i in 0..workers {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("cxlfine-pool-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawn pool worker");
+        }
+        Self { shared, workers }
+    }
+
+    /// The process-wide pool (sized by [`default_threads`]), created on
+    /// first use.
+    pub fn global() -> &'static Pool {
+        static POOL: OnceLock<Pool> = OnceLock::new();
+        POOL.get_or_init(|| Pool::new(default_threads()))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run every task in `tasks` to completion, in parallel across the
+    /// pool's workers plus the calling thread. Panics (after the whole
+    /// batch has settled) if any task panicked.
+    pub fn run_scoped<'s>(&self, tasks: Vec<ScopedTask<'s>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        let batch = Arc::new(BatchState {
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for t in tasks {
+                // SAFETY: every queued task is executed (by a worker or by
+                // the help-loop below) and counted down in `remaining`
+                // before this function returns; the borrows inside `t`
+                // therefore never outlive the caller's scope.
+                let t: StaticTask = unsafe { erase_task_lifetime(t) };
+                q.push_back((Arc::clone(&batch), t));
+            }
+        }
+        self.shared.work_ready.notify_all();
+        // Help: drain the shared queue on the submitting thread too.
+        loop {
+            let next = self.shared.queue.lock().unwrap().pop_front();
+            match next {
+                Some((b, task)) => run_task(&b, task),
+                None => break,
+            }
+        }
+        // Wait for stragglers currently running on workers.
+        let mut rem = batch.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = batch.done.wait(rem).unwrap();
+        }
+        drop(rem);
+        if batch.panicked.load(Ordering::SeqCst) {
+            panic!("threadpool task panicked");
+        }
+    }
+}
+
+/// SAFETY: caller must guarantee the task finishes executing before the
+/// lifetime `'s` ends (see [`Pool::run_scoped`]). `Box<dyn ...>` fat
+/// pointers are layout-identical across trait-object lifetimes.
+unsafe fn erase_task_lifetime<'s>(t: ScopedTask<'s>) -> StaticTask {
+    std::mem::transmute::<ScopedTask<'s>, StaticTask>(t)
+}
+
+fn run_task(batch: &Arc<BatchState>, task: StaticTask) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+    if result.is_err() {
+        batch.panicked.store(true, Ordering::SeqCst);
+    }
+    let mut rem = batch.remaining.lock().unwrap();
+    *rem -= 1;
+    if *rem == 0 {
+        batch.done.notify_all();
+    }
+}
+
+fn worker_loop(sh: &PoolShared) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                q = sh.work_ready.wait(q).unwrap();
+            }
+        };
+        run_task(&job.0, job.1);
+    }
 }
 
 /// Split `data` into `nthreads` near-equal contiguous chunks and invoke
@@ -199,6 +352,136 @@ mod tests {
     fn map_empty() {
         let out: Vec<u32> = par_map(0, 8, |_| unreachable!());
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_runs_every_task_exactly_once() {
+        let pool = Pool::new(4);
+        let counters: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        let tasks: Vec<ScopedTask<'_>> = counters
+            .iter()
+            .map(|c| Box::new(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            }) as ScopedTask<'_>)
+            .collect();
+        pool.run_scoped(tasks);
+        assert!(counters.iter().all(|c| c.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn pool_scoped_borrows_mutate_local_state() {
+        // The adam_step shape: disjoint &mut chunks of a stack-owned vec.
+        let pool = Pool::new(3);
+        let mut v = vec![0u64; 10_001];
+        {
+            let tasks: Vec<ScopedTask<'_>> = v
+                .chunks_mut(997)
+                .map(|chunk| {
+                    Box::new(move || {
+                        for x in chunk {
+                            *x += 2;
+                        }
+                    }) as ScopedTask<'_>
+                })
+                .collect();
+            pool.run_scoped(tasks);
+        }
+        assert!(v.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn pool_reuses_threads_across_batches() {
+        // The whole point of the pool: consecutive batches run on the same
+        // worker set, not freshly spawned threads.
+        let pool = Pool::new(2);
+        let collect_ids = |pool: &Pool| {
+            let ids = std::sync::Mutex::new(std::collections::HashSet::new());
+            let barrier = std::sync::Barrier::new(3);
+            let tasks: Vec<ScopedTask<'_>> = (0..3)
+                .map(|_| {
+                    let ids = &ids;
+                    let barrier = &barrier;
+                    Box::new(move || {
+                        ids.lock().unwrap().insert(std::thread::current().id());
+                        barrier.wait();
+                    }) as ScopedTask<'_>
+                })
+                .collect();
+            pool.run_scoped(tasks);
+            ids.into_inner().unwrap()
+        };
+        let first = collect_ids(&pool);
+        let second = collect_ids(&pool);
+        // 3 tasks, 2 workers + submitter, barrier forces all three threads
+        assert_eq!(first.len(), 3);
+        assert_eq!(second, first, "same worker threads must serve both batches");
+    }
+
+    #[test]
+    fn pool_zero_workers_degrades_to_inline() {
+        let pool = Pool::new(0);
+        let mut total = 0u64;
+        {
+            let total = &mut total;
+            pool.run_scoped(vec![Box::new(move || {
+                *total = 41;
+            }) as ScopedTask<'_>]);
+        }
+        assert_eq!(total, 41);
+    }
+
+    #[test]
+    fn pool_nested_batches_make_progress() {
+        let pool = Pool::new(1);
+        let hits = AtomicUsize::new(0);
+        {
+            let hits = &hits;
+            let pool_ref = &pool;
+            let outer: Vec<ScopedTask<'_>> = (0..2)
+                .map(|_| {
+                    Box::new(move || {
+                        let inner: Vec<ScopedTask<'_>> = (0..4)
+                            .map(|_| {
+                                Box::new(move || {
+                                    hits.fetch_add(1, Ordering::SeqCst);
+                                }) as ScopedTask<'_>
+                            })
+                            .collect();
+                        pool_ref.run_scoped(inner);
+                    }) as ScopedTask<'_>
+                })
+                .collect();
+            pool.run_scoped(outer);
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn pool_propagates_panics_after_batch_settles() {
+        let pool = Pool::new(2);
+        let survivors = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let survivors = &survivors;
+            let mut tasks: Vec<ScopedTask<'_>> = vec![Box::new(|| panic!("boom"))];
+            for _ in 0..7 {
+                tasks.push(Box::new(move || {
+                    survivors.fetch_add(1, Ordering::SeqCst);
+                }));
+            }
+            pool.run_scoped(tasks);
+        }));
+        assert!(result.is_err(), "panic must propagate to the submitter");
+        assert_eq!(
+            survivors.load(Ordering::SeqCst),
+            7,
+            "all sibling tasks still ran to completion"
+        );
+    }
+
+    #[test]
+    fn pool_empty_batch_is_noop() {
+        Pool::new(1).run_scoped(Vec::new());
+        Pool::global().run_scoped(Vec::new());
     }
 
     #[test]

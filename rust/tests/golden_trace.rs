@@ -1,0 +1,558 @@
+//! Golden event-trace tests: the determinism contract of the slab/heap DES
+//! refactor (DESIGN.md §7).
+//!
+//! Two independent locks:
+//!
+//! 1. **Differential (refactor-proof)** — [`cxlfine::sim::flow::FlowSim`]
+//!    (slab/heap engine) and [`cxlfine::sim::reference::RefFlowSim`] (the
+//!    frozen pre-refactor HashMap engine) are driven through identical call
+//!    sequences — Fig. 6-shaped contention scenarios, a Fig. 1-style
+//!    prefetch workflow, and seeded randomized scenarios — and must emit
+//!    **byte-identical** event streams: same ids, same tags, same order,
+//!    and `now()` timestamps equal under `to_bits`.
+//!
+//! 2. **Golden digests (version-proof)** — full Fig. 6/7/9/10 cell traces
+//!    are FNV-1a digested (names, lanes, bit-pattern timestamps) and pinned
+//!    in `rust/tests/golden/*.digest`. The first run on a toolchain host
+//!    blesses the files; every later run — debug or release, the digest is
+//!    pure IEEE-754 arithmetic and container-order-free — must reproduce
+//!    them exactly. Delete a file to re-bless after an *intentional*
+//!    behavior change.
+
+use std::path::Path;
+
+use cxlfine::mem::Policy;
+use cxlfine::model::footprint::Workload;
+use cxlfine::model::presets::{mistral_nemo_12b, qwen25_7b};
+use cxlfine::offload::{simulate_iteration_traced, MemoryPlan, RunConfig};
+use cxlfine::sim::flow::{CapacityModel, Event, FlowId, FlowSim, FlowStats, ResourceId, TimerId};
+use cxlfine::sim::reference::RefFlowSim;
+use cxlfine::topology::presets::{config_a, config_b, with_dram_capacity};
+use cxlfine::util::digest::Fnv64;
+use cxlfine::util::prng::Xoshiro256pp;
+use cxlfine::util::units::GIB;
+
+const GB: f64 = 1e9;
+
+// ---------------------------------------------------------------------
+// A minimal common surface over the two engines so every scenario is
+// written once and replayed verbatim against both.
+// ---------------------------------------------------------------------
+
+trait Des {
+    fn add_resource(&mut self, name: &str, model: CapacityModel) -> ResourceId;
+    fn start_flow(&mut self, path: &[ResourceId], bytes: f64, setup: f64, tag: u64) -> FlowId;
+    fn add_timer(&mut self, delay: f64, tag: u64) -> TimerId;
+    fn next_event(&mut self) -> Option<Event>;
+    fn now(&self) -> f64;
+    fn stats(&self, id: FlowId) -> Option<FlowStats>;
+}
+
+impl Des for FlowSim {
+    fn add_resource(&mut self, name: &str, model: CapacityModel) -> ResourceId {
+        FlowSim::add_resource(self, name, model)
+    }
+    fn start_flow(&mut self, path: &[ResourceId], bytes: f64, setup: f64, tag: u64) -> FlowId {
+        FlowSim::start_flow(self, path, bytes, setup, tag)
+    }
+    fn add_timer(&mut self, delay: f64, tag: u64) -> TimerId {
+        FlowSim::add_timer(self, delay, tag)
+    }
+    fn next_event(&mut self) -> Option<Event> {
+        FlowSim::next_event(self)
+    }
+    fn now(&self) -> f64 {
+        FlowSim::now(self)
+    }
+    fn stats(&self, id: FlowId) -> Option<FlowStats> {
+        FlowSim::stats(self, id)
+    }
+}
+
+impl Des for RefFlowSim {
+    fn add_resource(&mut self, name: &str, model: CapacityModel) -> ResourceId {
+        RefFlowSim::add_resource(self, name, model)
+    }
+    fn start_flow(&mut self, path: &[ResourceId], bytes: f64, setup: f64, tag: u64) -> FlowId {
+        RefFlowSim::start_flow(self, path, bytes, setup, tag)
+    }
+    fn add_timer(&mut self, delay: f64, tag: u64) -> TimerId {
+        RefFlowSim::add_timer(self, delay, tag)
+    }
+    fn next_event(&mut self) -> Option<Event> {
+        RefFlowSim::next_event(self)
+    }
+    fn now(&self) -> f64 {
+        RefFlowSim::now(self)
+    }
+    fn stats(&self, id: FlowId) -> Option<FlowStats> {
+        RefFlowSim::stats(self, id)
+    }
+}
+
+/// One recorded step of an event stream: the event plus the bit pattern of
+/// the simulator clock at delivery. `to_bits` makes equality byte-exact.
+type Recorded = (Event, u64);
+
+/// Bit-exact digest of a recorded event stream (also locks ids and tags).
+fn stream_digest(events: &[Recorded]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_u64(events.len() as u64);
+    for (e, now_bits) in events {
+        match e {
+            Event::FlowDone { id, tag } => {
+                h.write_u64(0).write_u64(id.0).write_u64(*tag);
+            }
+            Event::TimerFired { id, tag } => {
+                h.write_u64(1).write_u64(id.0).write_u64(*tag);
+            }
+        }
+        h.write_u64(*now_bits);
+    }
+    h.finish()
+}
+
+/// Assert two engines produced literally the same stream.
+fn assert_streams_identical(new: &[Recorded], reference: &[Recorded], what: &str) {
+    assert_eq!(
+        new.len(),
+        reference.len(),
+        "{what}: event counts diverge (new {} vs reference {})",
+        new.len(),
+        reference.len()
+    );
+    for (i, (n, r)) in new.iter().zip(reference.iter()).enumerate() {
+        assert_eq!(
+            n, r,
+            "{what}: event #{i} diverges — new {:?} @ {} vs reference {:?} @ {}",
+            n.0,
+            f64::from_bits(n.1),
+            r.0,
+            f64::from_bits(r.1)
+        );
+    }
+}
+
+/// Assert the final per-flow stats match bit-for-bit for ids `0..n_ids`
+/// (ids are monotonic and shared with timers, so probing the full range
+/// covers every flow; timer ids simply return `None` in both).
+fn assert_stats_identical<A: Des, B: Des>(a: &A, b: &B, n_ids: u64, what: &str) {
+    for id in 0..n_ids {
+        let (sa, sb) = (a.stats(FlowId(id)), b.stats(FlowId(id)));
+        match (sa, sb) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert_eq!(
+                    (
+                        x.issued.to_bits(),
+                        x.started.to_bits(),
+                        x.finished.to_bits(),
+                        x.bytes.to_bits()
+                    ),
+                    (
+                        y.issued.to_bits(),
+                        y.started.to_bits(),
+                        y.finished.to_bits(),
+                        y.bytes.to_bits()
+                    ),
+                    "{what}: stats for flow {id} diverge"
+                );
+            }
+            other => panic!("{what}: stats presence diverges for id {id}: {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Golden-digest persistence (self-blessing).
+// ---------------------------------------------------------------------
+
+fn golden_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+/// Compare `digest` against `rust/tests/golden/<name>.digest`; bless the
+/// file on first run. Blessed files make the sequence a hard regression
+/// gate for every later build, including across debug/release profiles
+/// (the digest contains only IEEE-754-deterministic arithmetic).
+fn assert_golden_digest(name: &str, digest: u64) {
+    let dir = golden_dir();
+    let path = dir.join(format!("{name}.digest"));
+    let hex = format!("{digest:016x}");
+    match std::fs::read_to_string(&path) {
+        Ok(recorded) => {
+            assert_eq!(
+                recorded.trim(),
+                hex,
+                "golden trace digest changed for '{name}' — the simulator's \
+                 event sequence is no longer byte-identical to the recorded \
+                 one. If the change is intentional, delete {} and re-run to \
+                 re-bless.",
+                path.display()
+            );
+        }
+        Err(_) => {
+            std::fs::create_dir_all(&dir).ok();
+            std::fs::write(&path, format!("{hex}\n"))
+                .unwrap_or_else(|e| panic!("cannot bless golden digest {}: {e}", path.display()));
+            eprintln!("[golden_trace] blessed '{name}' = {hex}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scenario scripts: generated once, replayed verbatim on both engines.
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum Op {
+    Flow { path: Vec<usize>, bytes: f64, setup: f64, tag: u64 },
+    Timer { delay: f64, tag: u64 },
+}
+
+#[derive(Clone, Debug)]
+struct Script {
+    /// Resource table shared by every flow path (indices into it).
+    resources: Vec<(String, CapacityModel)>,
+    /// Ops issued before the first event is consumed.
+    initial: Vec<Op>,
+    /// Follow-up ops: `followups[k]` is issued right after the k-th event.
+    followups: Vec<Vec<Op>>,
+}
+
+impl Script {
+    /// Replay on an engine, interleaving follow-up ops with the event loop
+    /// exactly as the workflow engine does.
+    fn replay<S: Des>(&self, sim: &mut S) -> Vec<Recorded> {
+        let rids: Vec<ResourceId> = self
+            .resources
+            .iter()
+            .map(|(name, model)| sim.add_resource(name, model.clone()))
+            .collect();
+        let issue = |sim: &mut S, op: &Op| match op {
+            Op::Flow { path, bytes, setup, tag } => {
+                let p: Vec<ResourceId> = path.iter().map(|&i| rids[i]).collect();
+                sim.start_flow(&p, *bytes, *setup, *tag);
+            }
+            Op::Timer { delay, tag } => {
+                sim.add_timer(*delay, *tag);
+            }
+        };
+        for op in &self.initial {
+            issue(sim, op);
+        }
+        let mut recorded = Vec::new();
+        while let Some(e) = sim.next_event() {
+            recorded.push((e, sim.now().to_bits()));
+            let k = recorded.len() - 1;
+            if let Some(ops) = self.followups.get(k) {
+                for op in ops {
+                    issue(sim, op);
+                }
+            }
+        }
+        recorded
+    }
+
+    /// Total ids consumed (flows + timers), for stats probing.
+    fn n_ids(&self) -> u64 {
+        (self.initial.len() + self.followups.iter().map(Vec::len).sum::<usize>()) as u64
+    }
+
+    /// Run on both engines; assert byte-identical streams and stats.
+    /// Returns the (shared) stream digest.
+    fn assert_engines_agree(&self, what: &str) -> u64 {
+        let mut new_sim = FlowSim::new();
+        let mut ref_sim = RefFlowSim::new();
+        let new_stream = self.replay(&mut new_sim);
+        let ref_stream = self.replay(&mut ref_sim);
+        assert_streams_identical(&new_stream, &ref_stream, what);
+        assert_stats_identical(&new_sim, &ref_sim, self.n_ids(), what);
+        stream_digest(&new_stream)
+    }
+}
+
+/// The Fig. 6b scenario: two GPUs pulling page-locked copies from one AIC
+/// (collapse), then a third flow from DRAM, with DMA setup latencies and a
+/// poll timer — the exact resource shapes `Fabric::new` instantiates.
+fn fig6_script() -> Script {
+    let resources = vec![
+        ("dram-ctrl".to_string(), CapacityModel::Fixed(204.0 * GB)),
+        (
+            "aic-tx".to_string(),
+            CapacityModel::Contended { single: 54.0 * GB, contended: 26.0 * GB },
+        ),
+        ("gpu0-rx".to_string(), CapacityModel::Fixed(54.0 * GB)),
+        ("gpu1-rx".to_string(), CapacityModel::Fixed(54.0 * GB)),
+    ];
+    let setup = 10e-6 + 210e-9; // DMA_SETUP_S + CXL load-to-use latency
+    let initial = vec![
+        Op::Flow { path: vec![1, 2], bytes: 4.0 * GIB as f64, setup, tag: 0 },
+        Op::Flow { path: vec![1, 3], bytes: 4.0 * GIB as f64, setup, tag: 1 },
+        Op::Flow { path: vec![0, 2], bytes: 1.0 * GIB as f64, setup: 10e-6 + 105e-9, tag: 2 },
+        Op::Timer { delay: 0.05, tag: 3 },
+    ];
+    // after the first completion, issue a solo AIC flow (uncollapsed regime)
+    let followups = vec![
+        vec![Op::Flow { path: vec![1, 3], bytes: 2.0 * GIB as f64, setup, tag: 4 }],
+    ];
+    Script { resources, initial, followups }
+}
+
+/// A Fig. 1-style miniature of the iteration workflow: block-by-block
+/// parameter prefetch with compute timers and checkpoint offloads chained
+/// off completions — the event pattern `offload::iteration` generates,
+/// shrunk to flow level so the frozen engine can run it too.
+fn workflow_script() -> Script {
+    let resources = vec![
+        ("dram-ctrl".to_string(), CapacityModel::Fixed(204.0 * GB)),
+        (
+            "aic-tx".to_string(),
+            CapacityModel::Contended { single: 54.0 * GB, contended: 26.0 * GB },
+        ),
+        (
+            "aic-rx".to_string(),
+            CapacityModel::Contended { single: 54.0 * GB, contended: 26.0 * GB },
+        ),
+        ("gpu0-rx".to_string(), CapacityModel::Fixed(54.0 * GB)),
+        ("gpu0-tx".to_string(), CapacityModel::Fixed(54.0 * GB)),
+        ("gpu1-rx".to_string(), CapacityModel::Fixed(54.0 * GB)),
+        ("gpu1-tx".to_string(), CapacityModel::Fixed(54.0 * GB)),
+    ];
+    let setup = 10e-6 + 210e-9;
+    let param = 0.4 * GB;
+    let ckpt = 0.25 * GB;
+    // two GPUs, four "blocks" each: prefetch depth 2, per-block compute
+    // timer, checkpoint offload after compute
+    let mut initial = Vec::new();
+    for g in 0..2usize {
+        let rx = 3 + 2 * g;
+        for block in 0..2u64 {
+            initial.push(Op::Flow {
+                path: vec![1, rx],
+                bytes: param,
+                setup,
+                tag: 100 * (g as u64 + 1) + block,
+            });
+        }
+    }
+    // follow-ups keyed on event index: a rolling pattern of compute timers,
+    // further prefetches, and d2h checkpoint offloads (even/odd split the
+    // two directions so tx and rx both see contention windows)
+    let mut followups = Vec::new();
+    for k in 0..24usize {
+        let mut ops = Vec::new();
+        if k % 2 == 0 {
+            ops.push(Op::Timer { delay: 0.8e-3 + 0.05e-3 * k as f64, tag: 1000 + k as u64 });
+        }
+        if k % 3 == 0 {
+            let g = k % 2;
+            ops.push(Op::Flow {
+                path: vec![1, 3 + 2 * g],
+                bytes: param,
+                setup,
+                tag: 2000 + k as u64,
+            });
+        }
+        if k % 4 == 1 {
+            let g = k % 2;
+            ops.push(Op::Flow {
+                path: vec![4 + 2 * g, 2],
+                bytes: ckpt,
+                setup,
+                tag: 3000 + k as u64,
+            });
+        }
+        followups.push(ops);
+    }
+    Script { resources, initial, followups }
+}
+
+/// Seeded random scenario: mixed fixed/contended resources, random paths
+/// (1–3 hops), zero-byte flows, duplicate timer deadlines, interactive
+/// follow-ups — fuzzes the corner cases the structured scripts miss.
+fn random_script(seed: u64) -> Script {
+    let mut rng = Xoshiro256pp::seeded(seed);
+    let n_res = rng.range_usize(3, 8);
+    let mut resources = Vec::new();
+    for i in 0..n_res {
+        let model = if i > 0 && rng.below(3) == 0 {
+            let single = rng.range_f64(20.0, 60.0) * GB;
+            CapacityModel::Contended { single, contended: single * rng.range_f64(0.3, 0.7) }
+        } else {
+            CapacityModel::Fixed(rng.range_f64(10.0, 210.0) * GB)
+        };
+        resources.push((format!("r{i}"), model));
+    }
+    let mut tag = 0u64;
+    let mk_flow = |rng: &mut Xoshiro256pp, tag: &mut u64| {
+        let hops = rng.range_usize(1, n_res.min(3));
+        let mut path = Vec::with_capacity(hops);
+        for _ in 0..hops {
+            let r = rng.range_usize(0, n_res - 1);
+            if !path.contains(&r) {
+                path.push(r);
+            }
+        }
+        if path.is_empty() {
+            path.push(rng.range_usize(0, n_res - 1));
+        }
+        let bytes = match rng.below(8) {
+            0 => 0.0, // zero-byte flow (completes at activation)
+            _ => rng.range_f64(1e6, 3e9),
+        };
+        let setup = match rng.below(3) {
+            0 => 0.0,
+            1 => 10e-6,              // identical setups → same-instant bursts
+            _ => rng.range_f64(1e-6, 5e-3),
+        };
+        *tag += 1;
+        Op::Flow { path, bytes, setup, tag: *tag }
+    };
+    let n_initial = rng.range_usize(5, 25);
+    let mut initial = Vec::new();
+    for _ in 0..n_initial {
+        if rng.below(5) == 0 {
+            tag += 1;
+            let delay = if rng.below(2) == 0 { 1e-3 } else { rng.range_f64(0.0, 0.05) };
+            initial.push(Op::Timer { delay, tag });
+        } else {
+            initial.push(mk_flow(&mut rng, &mut tag));
+        }
+    }
+    let mut followups = Vec::new();
+    for _ in 0..rng.range_usize(4, 16) {
+        let mut ops = Vec::new();
+        if rng.below(2) == 0 {
+            ops.push(mk_flow(&mut rng, &mut tag));
+        }
+        if rng.below(4) == 0 {
+            tag += 1;
+            ops.push(Op::Timer { delay: rng.range_f64(0.0, 0.01), tag });
+        }
+        followups.push(ops);
+    }
+    Script { resources, initial, followups }
+}
+
+// ---------------------------------------------------------------------
+// Differential tests: new engine vs frozen pre-refactor engine.
+// ---------------------------------------------------------------------
+
+#[test]
+fn fig6_contention_scenario_bit_identical_to_reference() {
+    let digest = fig6_script().assert_engines_agree("fig6");
+    assert_golden_digest("fig6_contention_events", digest);
+}
+
+#[test]
+fn workflow_scenario_bit_identical_to_reference() {
+    let digest = workflow_script().assert_engines_agree("workflow");
+    assert_golden_digest("workflow_events", digest);
+}
+
+#[test]
+fn randomized_scenarios_bit_identical_to_reference() {
+    for seed in 0..32u64 {
+        random_script(seed).assert_engines_agree(&format!("random seed {seed}"));
+    }
+}
+
+#[test]
+fn replay_is_deterministic_across_runs() {
+    // Same engine, two fresh instances: the stream digest cannot depend on
+    // any container iteration order or allocation address.
+    for seed in [3u64, 17, 29] {
+        let script = random_script(seed);
+        let mut a = FlowSim::new();
+        let mut b = FlowSim::new();
+        let da = stream_digest(&script.replay(&mut a));
+        let db = stream_digest(&script.replay(&mut b));
+        assert_eq!(da, db, "seed {seed} replay must be bit-stable");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Golden full-figure traces: lock complete Fig. 7/9/10 cells.
+// ---------------------------------------------------------------------
+
+fn cell_trace_digest(
+    topo: &cxlfine::topology::SystemTopology,
+    model: cxlfine::model::ModelConfig,
+    w: Workload,
+    policy: Policy,
+) -> u64 {
+    let cfg = RunConfig::new(model, w, policy);
+    let plan = MemoryPlan::build(topo, &cfg).expect("cell must fit");
+    let (_, trace) = simulate_iteration_traced(topo, &cfg, &plan);
+    assert!(!trace.is_empty());
+    trace.digest()
+}
+
+#[test]
+fn golden_fig9_cell_cxl_aware() {
+    // Fig. 9a cell: Qwen-7B, 1 GPU, B=8, C=4096, CXL-aware placement.
+    let topo = with_dram_capacity(config_a(), 128 * GIB);
+    let d = cell_trace_digest(
+        &topo,
+        qwen25_7b(),
+        Workload::new(1, 8, 4096),
+        Policy::CxlAware { striping: false },
+    );
+    // a second run in-process must agree before we compare to disk
+    let d2 = cell_trace_digest(
+        &topo,
+        qwen25_7b(),
+        Workload::new(1, 8, 4096),
+        Policy::CxlAware { striping: false },
+    );
+    assert_eq!(d, d2, "fig9 cell trace must be run-to-run deterministic");
+    assert_golden_digest("fig9_cell_qwen7b_c4096_b8_cxl_aware", d);
+}
+
+#[test]
+fn golden_fig7_cell_naive_breakdown() {
+    // Fig. 7a cell: Mistral-NeMo-12B, 1 GPU, B=16, C=4096, naive interleave.
+    let topo = with_dram_capacity(config_a(), 128 * GIB);
+    let d = cell_trace_digest(
+        &topo,
+        mistral_nemo_12b(),
+        Workload::new(1, 16, 4096),
+        Policy::NaiveInterleave,
+    );
+    assert_golden_digest("fig7_cell_nemo12b_c4096_b16_naive", d);
+}
+
+#[test]
+fn golden_fig10_cell_dual_aic_striping() {
+    // Fig. 10 cell: Mistral-NeMo-12B, 2 GPUs, B=16, C=4096, striping over
+    // both AICs (Config B).
+    let topo = with_dram_capacity(config_b(), 128 * GIB);
+    let d = cell_trace_digest(
+        &topo,
+        mistral_nemo_12b(),
+        Workload::new(2, 16, 4096),
+        Policy::CxlAware { striping: true },
+    );
+    assert_golden_digest("fig10_cell_nemo12b_c4096_b16_striped", d);
+}
+
+#[test]
+fn golden_digests_distinguish_policies() {
+    // Sanity on the lock itself: different placements produce different
+    // event sequences, so the digests cannot be trivially colliding.
+    let topo = with_dram_capacity(config_a(), 128 * GIB);
+    let naive = cell_trace_digest(
+        &topo,
+        qwen25_7b(),
+        Workload::new(1, 8, 4096),
+        Policy::NaiveInterleave,
+    );
+    let ours = cell_trace_digest(
+        &topo,
+        qwen25_7b(),
+        Workload::new(1, 8, 4096),
+        Policy::CxlAware { striping: false },
+    );
+    assert_ne!(naive, ours);
+}

@@ -1,0 +1,178 @@
+//! §Schedule ablation: the engine × schedule matrix the schedule-graph IR
+//! unlocked (ISSUE 3). For each fine-tuning scenario — full ZeRO-Offload,
+//! gradient accumulation, LoRA, and the no-activation-offload ablation —
+//! one iteration is simulated under the DRAM baseline, naive interleave,
+//! and the CXL-aware policy, quantifying *which* traffic class each
+//! placement decision actually prices:
+//!
+//! * `lora` collapses the optimizer working set → STEP becomes placement-
+//!   insensitive (Fig. 5's left region) and only bulk streams remain;
+//! * `grad-accum:K` multiplies bulk streams while STEP runs once → the
+//!   opposite corner;
+//! * `no-act-offload` deletes checkpoint round-trips → isolates activation
+//!   traffic's share of the CXL sensitivity.
+//!
+//! Results land in `bench_out/schedule_ablation/` and — like
+//! `sim_hotpath`'s `BENCH_sim.json` — in `BENCH_sched.json` (override:
+//! `CXLFINE_BENCH_SCHED_OUT`), which the CI bench-smoke job uploads on
+//! every push (`--smoke` preset) so the schedule-level perf trajectory is
+//! recorded alongside the DES one.
+
+use std::collections::BTreeMap;
+
+use cxlfine::mem::{EngineRef, Policy};
+use cxlfine::model::footprint::Workload;
+use cxlfine::model::presets::qwen25_7b;
+use cxlfine::offload::{schedules, simulate_iteration_report, MemoryPlan, PhaseReport, RunConfig};
+use cxlfine::topology::presets::{config_a, with_dram_capacity};
+use cxlfine::trow;
+use cxlfine::util::bench::BenchReport;
+use cxlfine::util::json::{Json, JsonObj};
+use cxlfine::util::table::Table;
+use cxlfine::util::units::GIB;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut report = BenchReport::new("schedule_ablation");
+    let base_topo = config_a();
+    let cxl_topo = with_dram_capacity(config_a(), 128 * GIB);
+    let model = qwen25_7b();
+
+    let sched_names: Vec<&str> = if smoke {
+        vec!["zero-offload", "grad-accum:2", "lora", "no-act-offload"]
+    } else {
+        vec![
+            "zero-offload",
+            "grad-accum:2",
+            "grad-accum:4",
+            "lora",
+            "lora:64",
+            "no-act-offload",
+        ]
+    };
+    let engines: Vec<EngineRef> = vec![
+        Policy::DramOnly.into(),
+        Policy::NaiveInterleave.into(),
+        Policy::CxlAware { striping: false }.into(),
+    ];
+    let batches: Vec<usize> = if smoke { vec![4] } else { vec![1, 8, 16] };
+    let context = 4096usize;
+
+    // (schedule, engine, batch) → report
+    let mut results: BTreeMap<(String, String, usize), PhaseReport> = BTreeMap::new();
+    let mut json_scheds = Vec::new();
+
+    for sched_name in &sched_names {
+        let sched = schedules::by_name(sched_name).expect("registered schedule");
+        let mut t = Table::new(&["engine", "batch", "iter s", "tok/s", "fwd s", "bwd s", "step s"])
+            .left(0);
+        let mut cells = Vec::new();
+        for engine in &engines {
+            let topo = if engine.is_baseline() {
+                &base_topo
+            } else {
+                &cxl_topo
+            };
+            for &b in &batches {
+                let cfg = RunConfig::new(
+                    model.clone(),
+                    Workload::new(1, b, context),
+                    engine.clone(),
+                )
+                .with_schedule(sched.clone());
+                let plan = MemoryPlan::build(topo, &cfg).expect("cell fits");
+                let (rep, _) = simulate_iteration_report(topo, &cfg, &plan);
+                let bd = rep.to_breakdown();
+                t.row(trow![
+                    engine.name(),
+                    b,
+                    format!("{:.3}", bd.iter_s),
+                    format!("{:.0}", rep.tokens_per_sec()),
+                    format!("{:.3}", bd.fwd_s),
+                    format!("{:.3}", bd.bwd_s),
+                    format!("{:.3}", bd.step_s)
+                ]);
+                let mut cell = JsonObj::new();
+                cell.set("engine", engine.name());
+                cell.set("batch", b);
+                cell.set("context", context);
+                cell.set("breakdown", bd.to_json());
+                cell.set("tokens_per_sec", rep.tokens_per_sec());
+                cells.push(Json::Obj(cell));
+                results.insert((sched_name.to_string(), engine.name().to_string(), b), rep);
+            }
+        }
+        // dots break bench_out filenames' readability; keep series simple
+        let series = sched_name.replace(':', "_");
+        report.section(&series, t, Json::Arr(cells.clone()));
+        let mut js = JsonObj::new();
+        js.set("schedule", *sched_name);
+        js.set("cells", Json::Arr(cells));
+        json_scheds.push(Json::Obj(js));
+    }
+
+    // ---- cross-schedule sanity gates ---------------------------------
+    let get = |sched: &str, engine: &str, b: usize| {
+        results
+            .get(&(sched.to_string(), engine.to_string(), b))
+            .unwrap_or_else(|| panic!("missing cell {sched}/{engine}/{b}"))
+    };
+    for engine in ["baseline-dram", "naive-cxl", "cxl-aware"] {
+        for &b in &batches {
+            let zo = get("zero-offload", engine, b).to_breakdown();
+            let ga = get("grad-accum:2", engine, b);
+            let lo = get("lora", engine, b).to_breakdown();
+            let na = get("no-act-offload", engine, b).to_breakdown();
+            assert!(
+                ga.iter_s > zo.iter_s && ga.iter_s < 2.0 * zo.iter_s,
+                "{engine}/b{b}: accum must amortize the step ({} vs {})",
+                ga.iter_s,
+                zo.iter_s
+            );
+            assert!(
+                ga.tokens_per_sec() > zo.tokens_per_sec(),
+                "{engine}/b{b}: accum must raise throughput"
+            );
+            assert!(
+                lo.step_s < 0.15 * zo.step_s,
+                "{engine}/b{b}: lora step {} vs full {}",
+                lo.step_s,
+                zo.step_s
+            );
+            assert!(
+                na.iter_s <= zo.iter_s * 1.001,
+                "{engine}/b{b}: dropping checkpoint traffic cannot slow the run"
+            );
+        }
+    }
+    // The headline: LoRA shrinks the naive-CXL penalty because STEP (the
+    // phase naive placement hurts most, Fig. 7a) nearly vanishes.
+    for &b in &batches {
+        let full_pen = get("zero-offload", "naive-cxl", b).iter_s
+            / get("zero-offload", "baseline-dram", b).iter_s;
+        let lora_pen =
+            get("lora", "naive-cxl", b).iter_s / get("lora", "baseline-dram", b).iter_s;
+        println!(
+            "b{b}: naive-CXL slowdown — full FT {full_pen:.3}x, lora {lora_pen:.3}x"
+        );
+        assert!(
+            lora_pen < full_pen,
+            "b{b}: lora must be less placement-sensitive ({lora_pen:.3} vs {full_pen:.3})"
+        );
+    }
+
+    // ---- persist BENCH_sched.json ------------------------------------
+    let mut root = JsonObj::new();
+    root.set("bench", "schedule_ablation");
+    root.set("smoke", smoke);
+    root.set("model", model.name.as_str());
+    root.set("schedules", Json::Arr(json_scheds));
+    let out =
+        std::env::var("CXLFINE_BENCH_SCHED_OUT").unwrap_or_else(|_| "BENCH_sched.json".into());
+    let payload = Json::Obj(root).to_string_pretty();
+    match std::fs::write(&out, &payload) {
+        Ok(()) => println!("\n[schedule_ablation] wrote {out}"),
+        Err(e) => eprintln!("warn: could not write {out}: {e}"),
+    }
+    report.finish();
+}

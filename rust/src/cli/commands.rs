@@ -6,7 +6,9 @@ use super::{parse, CliDone};
 use crate::mem::{engine, EngineRef, Policy};
 use crate::model::footprint::{Footprint, Workload};
 use crate::model::{presets as mpresets, ModelConfig};
-use crate::offload::{simulate_iteration, sweep_grid, MemoryPlan, RunConfig};
+use crate::offload::{
+    schedules, simulate_iteration_report, sweep_grid_matrix, MemoryPlan, RunConfig, ScheduleRef,
+};
 use crate::optim::{adam_step, AdamHp, AdamState};
 use crate::sim::memmodel::{OptLayout, OptimizerMemModel};
 use crate::sim::{Dir, Fabric};
@@ -38,6 +40,15 @@ fn get_engine(name: &str) -> Result<EngineRef, CliDone> {
         CliDone::Bad(format!(
             "unknown policy {name:?} ({})",
             engine::known_names().join("|")
+        ))
+    })
+}
+
+fn get_schedule(name: &str) -> Result<ScheduleRef, CliDone> {
+    schedules::by_name(name).ok_or_else(|| {
+        CliDone::Bad(format!(
+            "unknown schedule {name:?} ({})",
+            schedules::known_names().join("|")
         ))
     })
 }
@@ -113,20 +124,27 @@ pub fn simulate(args: &[String]) -> Result<(), CliDone> {
         .opt("batch", "16", "per-GPU batch")
         .opt("context", "4096", "context length")
         .opt("policy", "cxl-aware", "placement policy")
+        .opt(
+            "schedule",
+            "zero-offload",
+            "fine-tuning schedule (zero-offload|grad-accum[:K]|lora[:R]|no-act-offload)",
+        )
         .opt("prefetch", "2", "parameter prefetch depth (blocks)");
     let a = parse(spec, args)?;
     let topo = get_topo(a.get("preset").unwrap(), a.get("dram").filter(|s| !s.is_empty()))?;
     let model = get_model(a.get("model").unwrap())?;
     let policy = get_engine(a.get("policy").unwrap())?;
+    let schedule = get_schedule(a.get("schedule").unwrap())?;
     let w = Workload::new(
         a.parse_usize("gpus")?,
         a.parse_usize("batch")?,
         a.parse_usize("context")?,
     );
-    let mut cfg = RunConfig::new(model, w, policy.clone());
+    let mut cfg = RunConfig::new(model, w, policy.clone()).with_schedule(schedule.clone());
     cfg.prefetch_depth = a.parse_usize("prefetch")?;
     let plan = MemoryPlan::build(&topo, &cfg).map_err(|e| anyhow!("{e}"))?;
-    let b = simulate_iteration(&topo, &cfg, &plan);
+    let (report, _) = simulate_iteration_report(&topo, &cfg, &plan);
+    let b = report.to_breakdown();
     let mut t = Table::new(&["phase", "seconds", "share"]).left(0);
     let (sf, sb, ss) = b.shares();
     t.row(trow!["FWD", fmt_secs(b.fwd_s), format!("{:.1}%", 100.0 * sf)]);
@@ -134,12 +152,26 @@ pub fn simulate(args: &[String]) -> Result<(), CliDone> {
     t.row(trow!["STEP", fmt_secs(b.step_s), format!("{:.1}%", 100.0 * ss)]);
     t.row(trow!["iteration", fmt_secs(b.iter_s), "100%"]);
     println!(
-        "policy {} on {}: {:.0} tokens/s",
+        "policy {} × schedule {} on {}: {:.0} tokens/s",
         policy.name(),
+        schedule.name(),
         topo.name,
         b.tokens_per_sec()
     );
     print!("{}", t.render());
+    // Generalized phase extents: phases may overlap (grad accumulation
+    // interleaves fwd/bwd windows), so extents are reported per phase
+    // instead of pretending the triple above partitions the iteration.
+    let mut te = Table::new(&["phase (extent)", "start", "end", "busy"]).left(0);
+    for p in &report.phases {
+        te.row(trow![
+            p.name.clone(),
+            fmt_secs(p.start_s),
+            fmt_secs(p.end_s),
+            fmt_secs(p.busy_s)
+        ]);
+    }
+    print!("{}", te.render());
     Ok(())
 }
 
@@ -156,6 +188,12 @@ pub fn sweep(args: &[String]) -> Result<(), CliDone> {
             "",
             "engine for the 'ours' column (any registered policy, e.g. adaptive-spill)",
         )
+        .opt(
+            "schedule",
+            "zero-offload",
+            "comma list of fine-tuning schedules to sweep (engine × schedule matrix)",
+        )
+        .opt("json", "", "also write the full sweep (with digest) to this JSON file")
         .flag("striping", "use the striped CXL-aware policy as 'ours'");
     let a = parse(spec, args)?;
     let base_topo = get_topo(a.get("preset").unwrap(), None)?;
@@ -188,25 +226,49 @@ pub fn sweep(args: &[String]) -> Result<(), CliDone> {
         }
         .into(),
     };
+    let schedules: Vec<ScheduleRef> = a
+        .get("schedule")
+        .unwrap()
+        .split(',')
+        .map(|s| get_schedule(s.trim()))
+        .collect::<Result<_, _>>()?;
     let policies: Vec<EngineRef> =
         vec![Policy::DramOnly.into(), Policy::NaiveInterleave.into(), ours];
-    let res = sweep_grid(&base_topo, &cxl_topo, &model, gpus, &contexts, &batches, &policies);
-    let ours_col = format!("{} %", res.policies[2]);
-    let mut t = Table::new(&["context", "batch", "baseline tok/s", "naive %", &ours_col]);
+    let res = sweep_grid_matrix(
+        &base_topo,
+        &cxl_topo,
+        &model,
+        gpus,
+        &contexts,
+        &batches,
+        &policies,
+        &schedules,
+        crate::util::threadpool::default_threads(),
+    );
+    // Column 0 (DRAM baseline × first schedule) is the normalization root;
+    // every other engine × schedule column reports % of it.
+    let mut headers: Vec<String> = vec!["context".into(), "batch".into()];
+    headers.push(format!("{} tok/s", res.policies[0]));
+    for name in res.policies.iter().skip(1) {
+        headers.push(format!("{name} %"));
+    }
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&header_refs);
     for p in &res.points {
         let base = p.runs[0].as_ref();
-        let fmt_norm = |i: usize| match res.normalized(p, i, 0) {
-            Some(r) => format!("{:.1}%", 100.0 * r),
-            None => "OOM".into(),
-        };
-        t.row(trow![
-            p.context,
-            p.batch,
+        let mut row = vec![
+            p.context.to_string(),
+            p.batch.to_string(),
             base.map(|b| format!("{:.0}", b.tokens_per_sec()))
                 .unwrap_or_else(|| "OOM".into()),
-            fmt_norm(1),
-            fmt_norm(2)
-        ]);
+        ];
+        for i in 1..res.policies.len() {
+            row.push(match res.normalized(p, i, 0) {
+                Some(r) => format!("{:.1}%", 100.0 * r),
+                None => "OOM".into(),
+            });
+        }
+        t.row(row);
     }
     println!(
         "{} × {} GPU(s) on {} (CXL policies get {} DRAM)",
@@ -216,11 +278,20 @@ pub fn sweep(args: &[String]) -> Result<(), CliDone> {
         a.get("dram").unwrap()
     );
     print!("{}", t.render());
-    if let Some((lo, hi)) = res.normalized_range(1, 0) {
-        println!("naive range: {:.0}%–{:.0}%", lo * 100.0, hi * 100.0);
+    for i in 1..res.policies.len() {
+        if let Some((lo, hi)) = res.normalized_range(i, 0) {
+            println!(
+                "{:<28} range: {:.0}%–{:.0}%",
+                res.policies[i],
+                lo * 100.0,
+                hi * 100.0
+            );
+        }
     }
-    if let Some((lo, hi)) = res.normalized_range(2, 0) {
-        println!("ours  range: {:.0}%–{:.0}%", lo * 100.0, hi * 100.0);
+    if let Some(path) = a.get("json").filter(|s| !s.is_empty()) {
+        std::fs::write(path, res.to_json().to_string_pretty())
+            .map_err(|e| anyhow!("writing {path}: {e}"))?;
+        println!("wrote {path}");
     }
     Ok(())
 }
@@ -351,17 +422,23 @@ pub fn trace(args: &[String]) -> Result<(), CliDone> {
     .opt("batch", "16", "per-GPU batch")
     .opt("context", "4096", "context length")
     .opt("policy", "cxl-aware", "placement policy")
+    .opt(
+        "schedule",
+        "zero-offload",
+        "fine-tuning schedule (zero-offload|grad-accum[:K]|lora[:R]|no-act-offload)",
+    )
     .opt("out", "trace.json", "output path");
     let a = parse(spec, args)?;
     let topo = get_topo(a.get("preset").unwrap(), a.get("dram").filter(|s| !s.is_empty()))?;
     let model = get_model(a.get("model").unwrap())?;
     let policy = get_engine(a.get("policy").unwrap())?;
+    let schedule = get_schedule(a.get("schedule").unwrap())?;
     let w = Workload::new(
         a.parse_usize("gpus")?,
         a.parse_usize("batch")?,
         a.parse_usize("context")?,
     );
-    let cfg = RunConfig::new(model, w, policy);
+    let cfg = RunConfig::new(model, w, policy).with_schedule(schedule);
     let plan = MemoryPlan::build(&topo, &cfg).map_err(|e| anyhow!("{e}"))?;
     let (bd, trace) = crate::offload::simulate_iteration_traced(&topo, &cfg, &plan);
     let out = a.get("out").unwrap();

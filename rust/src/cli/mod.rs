@@ -62,8 +62,8 @@ fn usage() -> String {
      COMMANDS:\n  \
        topo       print a hardware preset (config-a | config-b | dev-tiny)\n  \
        plan       Table-I memory footprint + placement for a run\n  \
-       simulate   one training iteration's FWD/BWD/STEP breakdown\n  \
-       sweep      (context, batch) policy grid vs baseline (Fig. 9/10)\n  \
+       simulate   one iteration's phase breakdown (--schedule picks the scenario)\n  \
+       sweep      (context, batch) engine x schedule grid vs baseline (Fig. 9/10)\n  \
        optimizer  CPU Adam time vs element count, DRAM vs CXL (Fig. 5)\n  \
        bandwidth  host->GPU DMA bandwidth matrix (Fig. 6)\n  \
        train      run the functional fine-tuning loop on AOT artifacts\n  \

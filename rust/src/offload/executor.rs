@@ -1,0 +1,579 @@
+//! The generic schedule executor: walks any [`Schedule`] DAG over the
+//! fabric simulator and reports per-phase timing plus a full trace.
+//!
+//! This one loop subsumes everything the legacy per-GPU state machine
+//! (`offload::iteration`, kept as a frozen differential oracle) did by
+//! hand: stripe-completion tracking, event-tag packing, readiness
+//! bookkeeping, phase accounting and trace recording.
+//!
+//! Dispatch rule (the determinism contract, DESIGN.md §9): a node is
+//! *runnable* once all its `deps` completed; whenever several nodes become
+//! runnable from one completion event they are issued in ascending node
+//! index order. Event tags are node indices, so no bit-packing scheme can
+//! overflow. Barriers complete the instant they become runnable (no fabric
+//! event) and may cascade further nodes within the same dispatch round.
+//!
+//! Pricing: `Compute` nodes are charged against **their own GPU's**
+//! effective FLOP rating — a slow card lengthens its own lane, not the
+//! whole fleet (the legacy engine priced every GPU at `gpus[0]`, which the
+//! heterogeneous-fleet regression tests in `rust/tests/schedule_parity.rs`
+//! now pin down).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::metrics::{PhaseReport, PhaseSpan};
+use super::schedule::{Op, OpId, Schedule};
+use crate::sim::fabric::Fabric;
+use crate::sim::flow::Event;
+use crate::sim::memmodel::OptimizerMemModel;
+use crate::sim::trace::TraceRecorder;
+use crate::topology::SystemTopology;
+
+/// Everything one executor run produces.
+pub struct Execution {
+    pub report: PhaseReport,
+    pub trace: TraceRecorder,
+    /// Node completion order (the contract tests assert it respects edges).
+    pub completion_order: Vec<OpId>,
+    /// Completion timestamp per node, indexed by `OpId.0`.
+    pub completion_s: Vec<f64>,
+}
+
+/// Per-phase accumulators while the run is in flight.
+struct PhaseAcc {
+    span_start: f64,
+    span_end: f64,
+    busy: f64,
+    boundary: f64,
+    has_boundary_mark: bool,
+    has_span: bool,
+}
+
+impl PhaseAcc {
+    fn new() -> Self {
+        Self {
+            span_start: f64::INFINITY,
+            span_end: 0.0,
+            busy: 0.0,
+            boundary: 0.0,
+            has_boundary_mark: false,
+            has_span: false,
+        }
+    }
+}
+
+/// Execute `sched` on `topo`. Panics on an invalid schedule (use
+/// [`Schedule::validate`] first for a `Result`).
+pub fn execute(topo: &SystemTopology, sched: &Schedule) -> Execution {
+    // Validation hands back the dependency bookkeeping it had to build
+    // anyway (indegrees + dependents), so the adjacency is walked once.
+    let (mut remaining_deps, dependents) = sched
+        .validated_adjacency(topo)
+        .unwrap_or_else(|e| panic!("invalid schedule: {e}"));
+
+    let n = sched.nodes.len();
+    let mut fab = Fabric::new(topo);
+    let mm = OptimizerMemModel::new(topo);
+    let mut trace = TraceRecorder::new();
+
+    // Per-node runtime state.
+    let mut remaining_stripes: Vec<u32> = vec![0; n];
+    let mut started_at: Vec<f64> = vec![0.0; n];
+    let mut done: Vec<bool> = vec![false; n];
+    let mut completion_s: Vec<f64> = vec![0.0; n];
+    let mut completion_order: Vec<OpId> = Vec::with_capacity(n);
+
+    let mut phase_acc: Vec<PhaseAcc> = sched.phases.iter().map(|_| PhaseAcc::new()).collect();
+
+    // Min-heap of runnable node indices: ascending-index dispatch.
+    let mut ready: BinaryHeap<Reverse<u32>> = (0..n as u32)
+        .filter(|&i| remaining_deps[i as usize] == 0)
+        .map(Reverse)
+        .collect();
+
+    let mut completed = 0usize;
+
+    // Split borrows so the closures below don't fight: completion updates
+    // are a small fn over the bookkeeping vectors.
+    #[allow(clippy::too_many_arguments)]
+    fn complete_node(
+        i: usize,
+        now: f64,
+        sched: &Schedule,
+        remaining_deps: &mut [u32],
+        dependents: &[Vec<u32>],
+        done: &mut [bool],
+        completion_s: &mut [f64],
+        completion_order: &mut Vec<OpId>,
+        phase_acc: &mut [PhaseAcc],
+        ready: &mut BinaryHeap<Reverse<u32>>,
+        completed: &mut usize,
+    ) {
+        debug_assert!(!done[i], "node {i} completed twice");
+        done[i] = true;
+        completion_s[i] = now;
+        completion_order.push(OpId(i as u32));
+        *completed += 1;
+        let node = &sched.nodes[i];
+        if node.ends_phase {
+            let acc = &mut phase_acc[node.phase];
+            acc.boundary = acc.boundary.max(now);
+            acc.has_boundary_mark = true;
+        }
+        for &j in &dependents[i] {
+            let r = &mut remaining_deps[j as usize];
+            debug_assert!(*r > 0);
+            *r -= 1;
+            if *r == 0 {
+                ready.push(Reverse(j));
+            }
+        }
+    }
+
+    macro_rules! complete {
+        ($i:expr, $now:expr) => {
+            complete_node(
+                $i,
+                $now,
+                sched,
+                &mut remaining_deps,
+                &dependents,
+                &mut done,
+                &mut completion_s,
+                &mut completion_order,
+                &mut phase_acc,
+                &mut ready,
+                &mut completed,
+            )
+        };
+    }
+
+    macro_rules! record_span {
+        ($i:expr, $start:expr, $end:expr) => {{
+            let node = &sched.nodes[$i];
+            trace.record(node.name.as_str(), node.lane.as_str(), $start, $end);
+            let acc = &mut phase_acc[node.phase];
+            acc.span_start = acc.span_start.min($start);
+            acc.span_end = acc.span_end.max($end);
+            acc.busy += $end - $start;
+            acc.has_span = true;
+        }};
+    }
+
+    // Issue every runnable node in ascending index order; barriers resolve
+    // inline and may push more work onto the heap mid-round.
+    macro_rules! dispatch {
+        () => {
+            while let Some(Reverse(idx)) = ready.pop() {
+                let i = idx as usize;
+                let node = &sched.nodes[i];
+                match &node.op {
+                    Op::Transfer {
+                        gpu,
+                        stripes,
+                        dir,
+                        bytes,
+                    } => {
+                        let flows = fab.transfer_striped(*gpu, stripes, *dir, *bytes, i as u64);
+                        remaining_stripes[i] = flows.len() as u32;
+                    }
+                    Op::Compute { gpu, work } => {
+                        let eff = topo.gpus[gpu.0].effective_flops();
+                        let mut secs = 0.0;
+                        for t in work {
+                            secs += (t.flops / eff) * t.scale;
+                        }
+                        started_at[i] = fab.now();
+                        fab.compute(secs, i as u64);
+                    }
+                    Op::CpuStep {
+                        adam_elements,
+                        adam_layout,
+                        streams,
+                    } => {
+                        let mut stream_s = 0.0;
+                        for (bytes, layout) in streams {
+                            stream_s += mm.stream_time(*bytes, layout);
+                        }
+                        let secs = mm.step_time(*adam_elements, adam_layout) + stream_s;
+                        started_at[i] = fab.now();
+                        fab.compute(secs, i as u64);
+                    }
+                    Op::Barrier => {
+                        complete!(i, fab.now());
+                    }
+                }
+            }
+        };
+    }
+
+    dispatch!();
+
+    while completed < n {
+        let Some(ev) = fab.next_event() else {
+            panic!(
+                "schedule wedged: {completed}/{n} ops completed but the fabric \
+                 has no pending events"
+            );
+        };
+        let now = fab.now();
+        match ev {
+            Event::FlowDone { id, tag } => {
+                let i = tag as usize;
+                // Record each stripe's span as it lands, consuming its
+                // stats so the finished map stays empty over long runs.
+                let st = fab.take_stats(id).expect("completed flow has stats");
+                record_span!(i, st.issued, st.finished);
+                debug_assert!(remaining_stripes[i] > 0, "unexpected stripe for node {i}");
+                remaining_stripes[i] -= 1;
+                if remaining_stripes[i] == 0 {
+                    complete!(i, now);
+                }
+            }
+            Event::TimerFired { tag, .. } => {
+                let i = tag as usize;
+                record_span!(i, started_at[i], now);
+                complete!(i, now);
+            }
+        }
+        dispatch!();
+    }
+
+    debug_assert_eq!(
+        fab.sim.finished_len(),
+        0,
+        "every completed flow's stats must have been consumed"
+    );
+
+    let iter_s = completion_s.iter().fold(0.0f64, |a, &b| a.max(b));
+    let phases = sched
+        .phases
+        .iter()
+        .zip(phase_acc)
+        .map(|(name, acc)| {
+            let start_s = if acc.has_span { acc.span_start } else { 0.0 };
+            let end_s = acc.span_end;
+            let boundary_s = if acc.has_boundary_mark {
+                acc.boundary
+            } else {
+                end_s
+            };
+            PhaseSpan {
+                name: name.clone(),
+                start_s,
+                end_s,
+                busy_s: acc.busy,
+                boundary_s,
+            }
+        })
+        .collect();
+
+    Execution {
+        report: PhaseReport {
+            phases,
+            iter_s,
+            tokens: sched.tokens,
+        },
+        trace,
+        completion_order,
+        completion_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offload::schedule::{FlopsTerm, OpNode};
+    use crate::sim::fabric::Dir;
+    use crate::sim::memmodel::OptLayout;
+    use crate::topology::presets::dev_tiny;
+    use crate::topology::{GpuId, NodeId};
+    use crate::util::proptest_lite::{forall, Gen};
+    use crate::util::prng::Xoshiro256pp;
+
+    fn node(op: Op, deps: Vec<OpId>, phase: usize) -> OpNode {
+        OpNode {
+            op,
+            deps,
+            name: "op".into(),
+            lane: "lane".into(),
+            phase,
+            ends_phase: false,
+        }
+    }
+
+    fn xfer(gpu: usize, bytes: f64, deps: Vec<OpId>, phase: usize) -> OpNode {
+        node(
+            Op::Transfer {
+                gpu: GpuId(gpu),
+                stripes: vec![(NodeId(0), 1.0)],
+                dir: Dir::HostToGpu,
+                bytes,
+            },
+            deps,
+            phase,
+        )
+    }
+
+    fn kern(gpu: usize, flops: f64, deps: Vec<OpId>, phase: usize) -> OpNode {
+        node(
+            Op::Compute {
+                gpu: GpuId(gpu),
+                work: vec![FlopsTerm::new(flops)],
+            },
+            deps,
+            phase,
+        )
+    }
+
+    #[test]
+    fn chain_completes_in_edge_order() {
+        let topo = dev_tiny();
+        let mut s = Schedule::new(10);
+        let p = s.phase("only");
+        let a = s.push(xfer(0, 1e8, vec![], p));
+        let b = s.push(kern(0, 1e12, vec![a], p));
+        let c = s.push(xfer(0, 1e8, vec![b], p));
+        let ex = execute(&topo, &s);
+        assert_eq!(ex.completion_order, vec![a, b, c]);
+        assert!(ex.completion_s[a.0 as usize] <= ex.completion_s[b.0 as usize]);
+        assert!(ex.completion_s[b.0 as usize] <= ex.completion_s[c.0 as usize]);
+        assert_eq!(ex.trace.spans().len(), 3);
+        assert!(ex.report.iter_s > 0.0);
+        assert_eq!(ex.report.tokens, 10);
+    }
+
+    #[test]
+    fn barrier_cascades_without_fabric_events() {
+        let topo = dev_tiny();
+        let mut s = Schedule::new(0);
+        let p = s.phase("only");
+        let a = s.push(xfer(0, 1e8, vec![], p));
+        let bar = s.push(node(Op::Barrier, vec![a], p));
+        let after = s.push(xfer(1, 1e8, vec![bar], p));
+        let ex = execute(&topo, &s);
+        assert_eq!(ex.completion_order, vec![a, bar, after]);
+        // the barrier completes at the same instant as its dep and emits no span
+        assert_eq!(
+            ex.completion_s[bar.0 as usize].to_bits(),
+            ex.completion_s[a.0 as usize].to_bits()
+        );
+        assert_eq!(ex.trace.spans().len(), 2);
+    }
+
+    #[test]
+    fn barrier_only_schedule_runs() {
+        let topo = dev_tiny();
+        let mut s = Schedule::new(0);
+        let p = s.phase("only");
+        let a = s.push(node(Op::Barrier, vec![], p));
+        s.push(node(Op::Barrier, vec![a], p));
+        let ex = execute(&topo, &s);
+        assert_eq!(ex.completion_order.len(), 2);
+        assert_eq!(ex.report.iter_s, 0.0);
+    }
+
+    #[test]
+    fn compute_priced_with_own_gpu_rating() {
+        // dev_tiny GPUs are identical; slow gpu1 down 2× and check only its
+        // kernel stretches.
+        let mut topo = dev_tiny();
+        topo.gpus[1].mfu /= 2.0;
+        let mut s = Schedule::new(0);
+        let p = s.phase("only");
+        s.push(kern(0, 1e12, vec![], p));
+        s.push(kern(1, 1e12, vec![], p));
+        let ex = execute(&topo, &s);
+        let d0 = ex.completion_s[0];
+        let d1 = ex.completion_s[1];
+        assert!(
+            (d1 / d0 - 2.0).abs() < 1e-9,
+            "slow GPU must run its own kernel 2x longer: {d0} vs {d1}"
+        );
+    }
+
+    #[test]
+    fn cpu_step_matches_memmodel() {
+        let topo = dev_tiny();
+        let mm = OptimizerMemModel::new(&topo);
+        let elements = 50_000_000u64;
+        let layout = OptLayout::dram_only();
+        let cast = 1e9f64;
+        let expect =
+            mm.step_time(elements, &layout) + mm.stream_time(cast, &OptLayout::dram_only());
+        let mut s = Schedule::new(0);
+        let p = s.phase("step");
+        s.push(node(
+            Op::CpuStep {
+                adam_elements: elements,
+                adam_layout: layout,
+                streams: vec![(cast, OptLayout::dram_only())],
+            },
+            vec![],
+            p,
+        ));
+        let ex = execute(&topo, &s);
+        assert_eq!(ex.report.iter_s.to_bits(), expect.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid schedule")]
+    fn invalid_schedule_panics() {
+        let topo = dev_tiny();
+        let mut s = Schedule::new(0);
+        s.phase("x");
+        s.push(xfer(0, 1e6, vec![OpId(9)], 0));
+        execute(&topo, &s);
+    }
+
+    // ------------------------------------------------------------------
+    // Executor contract property tests (ISSUE 3 satellite): random DAGs
+    // are acyclic by construction, validate, run every node exactly once,
+    // and complete in an order that respects every edge.
+    // ------------------------------------------------------------------
+
+    /// Generates a random schedule seed; the schedule itself is derived
+    /// deterministically from it so shrinking stays meaningful.
+    struct DagSeed;
+
+    impl Gen for DagSeed {
+        type Value = u64;
+        fn generate(&self, rng: &mut Xoshiro256pp) -> u64 {
+            rng.next_u64()
+        }
+    }
+
+    fn random_schedule(seed: u64) -> Schedule {
+        let mut rng = Xoshiro256pp::seeded(seed);
+        let n = rng.range_usize(1, 40);
+        let mut s = Schedule::new(rng.range_u64(0, 1 << 20));
+        let n_phases = rng.range_usize(1, 3);
+        for p in 0..n_phases {
+            s.phase(&format!("phase{p}"));
+        }
+        for i in 0..n {
+            // deps point strictly backwards → acyclic by construction
+            let mut deps = Vec::new();
+            if i > 0 {
+                let n_deps = rng.range_usize(0, 3.min(i));
+                for _ in 0..n_deps {
+                    let d = OpId(rng.range_usize(0, i - 1) as u32);
+                    if !deps.contains(&d) {
+                        deps.push(d);
+                    }
+                }
+            }
+            let phase = rng.range_usize(0, n_phases - 1);
+            let gpu = rng.range_usize(0, 1);
+            let op = match rng.below(8) {
+                0 => Op::Barrier,
+                1 => Op::CpuStep {
+                    adam_elements: rng.range_u64(1_000, 1_000_000),
+                    adam_layout: OptLayout::dram_only(),
+                    streams: vec![(rng.range_f64(1e5, 1e8), OptLayout::dram_only())],
+                },
+                2 | 3 => Op::Compute {
+                    gpu: GpuId(gpu),
+                    work: vec![FlopsTerm::new(rng.range_f64(1e9, 1e12))],
+                },
+                _ => Op::Transfer {
+                    gpu: GpuId(gpu),
+                    stripes: if rng.below(2) == 0 {
+                        vec![(NodeId(0), 1.0)]
+                    } else {
+                        vec![(NodeId(1), 0.5), (NodeId(2), 0.5)]
+                    },
+                    dir: if rng.below(2) == 0 {
+                        Dir::HostToGpu
+                    } else {
+                        Dir::GpuToHost
+                    },
+                    bytes: rng.range_f64(1e4, 1e8),
+                },
+            };
+            s.push(OpNode {
+                op,
+                deps,
+                name: format!("op{i}"),
+                lane: format!("gpu{gpu}/rand"),
+                phase,
+                ends_phase: rng.below(5) == 0,
+            });
+        }
+        s
+    }
+
+    #[test]
+    fn prop_random_dags_validate_and_run_every_node_once() {
+        let topo = dev_tiny();
+        forall("executor-contract", 0xC0FFEE, 60, &DagSeed, |&seed| {
+            let s = random_schedule(seed);
+            s.validate(&topo)
+                .map_err(|e| format!("seed {seed}: generated DAG invalid: {e}"))?;
+            let ex = execute(&topo, &s);
+            if ex.completion_order.len() != s.len() {
+                return Err(format!(
+                    "seed {seed}: {} of {} nodes completed",
+                    ex.completion_order.len(),
+                    s.len()
+                ));
+            }
+            // exactly once: completion order is a permutation
+            let mut seen = vec![false; s.len()];
+            for id in &ex.completion_order {
+                if seen[id.0 as usize] {
+                    return Err(format!("seed {seed}: node {} completed twice", id.0));
+                }
+                seen[id.0 as usize] = true;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_completion_order_respects_edges() {
+        let topo = dev_tiny();
+        forall("executor-edge-order", 0xBEEF, 60, &DagSeed, |&seed| {
+            let s = random_schedule(seed);
+            let ex = execute(&topo, &s);
+            let mut pos = vec![0usize; s.len()];
+            for (k, id) in ex.completion_order.iter().enumerate() {
+                pos[id.0 as usize] = k;
+            }
+            for (i, node) in s.nodes.iter().enumerate() {
+                for d in &node.deps {
+                    let (di, dd) = (d.0 as usize, i);
+                    if pos[di] >= pos[dd] {
+                        return Err(format!(
+                            "seed {seed}: node {dd} completed before its dep {di}"
+                        ));
+                    }
+                    if ex.completion_s[di] > ex.completion_s[dd] {
+                        return Err(format!(
+                            "seed {seed}: dep {di} completed later in time than {dd}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_execution_is_deterministic() {
+        let topo = dev_tiny();
+        forall("executor-determinism", 0xFEED, 20, &DagSeed, |&seed| {
+            let s = random_schedule(seed);
+            let a = execute(&topo, &s);
+            let b = execute(&topo, &s);
+            if a.trace.digest() != b.trace.digest() {
+                return Err(format!("seed {seed}: two runs diverged"));
+            }
+            if a.completion_order != b.completion_order {
+                return Err(format!("seed {seed}: completion order diverged"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,3 +1,12 @@
+//! **FROZEN differential oracle** — the pre-IR hand-woven iteration
+//! engine, kept verbatim so `rust/tests/schedule_parity.rs` can assert
+//! that the schedule-graph executor (`offload::schedule` +
+//! `offload::executor`, the path behind [`crate::offload::
+//! simulate_iteration`] since ISSUE 3) reproduces it **byte-for-byte** on
+//! the paper's cells. Do not modify this file except to delete it once
+//! the parity lock has outlived its usefulness; new behavior goes into
+//! schedule builders.
+//!
 //! One training iteration of the Figure-1 workflow, simulated over the
 //! fabric with full transfer/compute overlap.
 //!
@@ -159,13 +168,15 @@ impl StripeTracker {
     }
 }
 
-/// Simulate one iteration; returns the phase breakdown.
-pub fn simulate_iteration(
+/// Simulate one iteration on the FROZEN legacy engine; returns the phase
+/// breakdown. Production callers use [`crate::offload::simulate_iteration`]
+/// (the schedule-graph executor) — this remains only as the parity oracle.
+pub fn legacy_simulate_iteration(
     topo: &SystemTopology,
     cfg: &RunConfig,
     plan: &MemoryPlan<'_>,
 ) -> PhaseBreakdown {
-    simulate_iteration_traced(topo, cfg, plan).0
+    legacy_simulate_iteration_traced(topo, cfg, plan).0
 }
 
 fn span_label(kind: Kind, g: usize, l: usize) -> (String, String) {
@@ -181,9 +192,10 @@ fn span_label(kind: Kind, g: usize, l: usize) -> (String, String) {
     }
 }
 
-/// Simulate one iteration, additionally recording a full execution trace
-/// (exportable as Chrome trace JSON via `TraceRecorder::to_chrome_trace`).
-pub fn simulate_iteration_traced(
+/// Simulate one iteration on the FROZEN legacy engine, additionally
+/// recording a full execution trace (exportable as Chrome trace JSON via
+/// `TraceRecorder::to_chrome_trace`).
+pub fn legacy_simulate_iteration_traced(
     topo: &SystemTopology,
     cfg: &RunConfig,
     plan: &MemoryPlan<'_>,
@@ -510,7 +522,7 @@ mod tests {
     ) -> PhaseBreakdown {
         let cfg = RunConfig::new(model, w, policy);
         let plan = MemoryPlan::build(topo, &cfg).unwrap();
-        simulate_iteration(topo, &cfg, &plan)
+        legacy_simulate_iteration(topo, &cfg, &plan)
     }
 
     #[test]

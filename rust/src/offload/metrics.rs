@@ -29,6 +29,14 @@ impl PhaseBreakdown {
     }
 
     /// Phase share of the iteration, (fwd, bwd, step) fractions.
+    ///
+    /// Only meaningful when the three phases *partition* the iteration
+    /// (`fwd_s + bwd_s + step_s == iter_s`), which the boundary-based
+    /// legacy decomposition guarantees by construction. Generalized
+    /// schedules (gradient accumulation, overlapping micro-batches) break
+    /// that assumption — use [`PhaseReport::shares`], which measures each
+    /// phase's trace extent and is explicit about overlap, instead of
+    /// assuming these three fractions sum to one.
     pub fn shares(&self) -> (f64, f64, f64) {
         (
             self.fwd_s / self.iter_s,
@@ -37,11 +45,125 @@ impl PhaseBreakdown {
         )
     }
 
+    /// Whether the triple actually partitions the iteration (the premise
+    /// of [`PhaseBreakdown::shares`]).
+    pub fn is_partition(&self) -> bool {
+        ((self.fwd_s + self.bwd_s + self.step_s) - self.iter_s).abs() <= 1e-9 * self.iter_s.abs()
+    }
+
     pub fn to_json(&self) -> Json {
         jobj! {
             "fwd_s" => self.fwd_s,
             "bwd_s" => self.bwd_s,
             "step_s" => self.step_s,
+            "iter_s" => self.iter_s,
+            "tokens" => self.tokens,
+            "tokens_per_sec" => self.tokens_per_sec(),
+        }
+    }
+}
+
+/// One named phase of a generalized schedule, measured from the executed
+/// trace rather than assumed boundaries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseSpan {
+    pub name: String,
+    /// Earliest span start attributed to the phase (0 if it emitted none).
+    pub start_s: f64,
+    /// Latest span end attributed to the phase.
+    pub end_s: f64,
+    /// Sum of span durations attributed to the phase. Spans inside one
+    /// phase overlap freely (transfer/compute overlap is the whole point),
+    /// so this can exceed `extent_s`.
+    pub busy_s: f64,
+    /// Completion time of the phase's designated boundary nodes (the
+    /// legacy FWD/BWD/STEP semantics); falls back to `end_s` when the
+    /// schedule marks none.
+    pub boundary_s: f64,
+}
+
+impl PhaseSpan {
+    /// Wall-clock window the phase was active, `end - start`.
+    pub fn extent_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
+/// Generalized per-phase timing of one executed schedule: named phases
+/// (not hardwired fwd/bwd/step), measured from trace extents so phases may
+/// overlap — gradient accumulation interleaves `fwd` and `bwd` windows,
+/// and `Σ extent > iter_s` is then expected, not an accounting bug.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseReport {
+    /// Phases in schedule declaration order.
+    pub phases: Vec<PhaseSpan>,
+    /// End-to-end schedule time (last node completion).
+    pub iter_s: f64,
+    /// Tokens processed (all GPUs, all micro-batches).
+    pub tokens: u64,
+}
+
+impl PhaseReport {
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.iter_s
+    }
+
+    pub fn phase(&self, name: &str) -> Option<&PhaseSpan> {
+        self.phases.iter().find(|p| p.name == name)
+    }
+
+    /// Per-phase extent share of the iteration. Unlike
+    /// [`PhaseBreakdown::shares`] this does NOT assume phases partition the
+    /// iteration: overlapping phases each report their full extent and the
+    /// total may exceed 1.
+    pub fn shares(&self) -> Vec<(String, f64)> {
+        self.phases
+            .iter()
+            .map(|p| (p.name.clone(), p.extent_s() / self.iter_s))
+            .collect()
+    }
+
+    /// Do two named phases overlap in wall-clock time?
+    pub fn overlaps(&self, a: &str, b: &str) -> bool {
+        match (self.phase(a), self.phase(b)) {
+            (Some(x), Some(y)) => x.start_s < y.end_s && y.start_s < x.end_s,
+            _ => false,
+        }
+    }
+
+    /// Legacy triple view via phase *boundaries*: exact for schedules whose
+    /// `fwd`/`bwd`/`step` boundary nodes partition time (the ZeRO-Offload
+    /// builder reproduces the pre-IR engine bit-for-bit through this), and
+    /// a boundary-ordered approximation for anything else.
+    pub fn to_breakdown(&self) -> PhaseBreakdown {
+        let b_fwd = self.phase("fwd").map(|p| p.boundary_s).unwrap_or(0.0);
+        let b_bwd = self.phase("bwd").map(|p| p.boundary_s).unwrap_or(b_fwd);
+        PhaseBreakdown {
+            fwd_s: b_fwd,
+            bwd_s: b_bwd - b_fwd,
+            step_s: self.iter_s - b_bwd,
+            iter_s: self.iter_s,
+            tokens: self.tokens,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let phases: Vec<Json> = self
+            .phases
+            .iter()
+            .map(|p| {
+                jobj! {
+                    "name" => p.name.as_str(),
+                    "start_s" => p.start_s,
+                    "end_s" => p.end_s,
+                    "extent_s" => p.extent_s(),
+                    "busy_s" => p.busy_s,
+                    "boundary_s" => p.boundary_s,
+                }
+            })
+            .collect();
+        jobj! {
+            "phases" => Json::Arr(phases),
             "iter_s" => self.iter_s,
             "tokens" => self.tokens,
             "tokens_per_sec" => self.tokens_per_sec(),
@@ -84,5 +206,84 @@ mod tests {
         let j = b.to_json();
         assert_eq!(j.path(&["tokens"]).unwrap().as_u64(), Some(42));
         assert!(j.path(&["tokens_per_sec"]).unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    fn span(name: &str, start: f64, end: f64, boundary: f64) -> PhaseSpan {
+        PhaseSpan {
+            name: name.into(),
+            start_s: start,
+            end_s: end,
+            busy_s: end - start,
+            boundary_s: boundary,
+        }
+    }
+
+    #[test]
+    fn report_shares_do_not_assume_a_partition() {
+        // fwd and bwd extents overlap (a grad-accum-like interleave): the
+        // extent shares exceed 1 in total, and overlaps() sees it.
+        let r = PhaseReport {
+            phases: vec![
+                span("fwd", 0.0, 6.0, 6.0),
+                span("bwd", 2.0, 9.0, 9.0),
+                span("step", 9.0, 10.0, 10.0),
+            ],
+            iter_s: 10.0,
+            tokens: 100,
+        };
+        assert!(r.overlaps("fwd", "bwd"));
+        assert!(!r.overlaps("fwd", "step"));
+        let total: f64 = r.shares().iter().map(|(_, s)| s).sum();
+        assert!(total > 1.0, "overlapping extents must exceed 1: {total}");
+        // the naive triple view built from the same report would claim a
+        // partition — is_partition() exposes that it still sums by
+        // construction, while the extent view reports the real overlap
+        let bd = r.to_breakdown();
+        assert!(bd.is_partition());
+        assert!((bd.fwd_s - 6.0).abs() < 1e-12);
+        assert!((bd.bwd_s - 3.0).abs() < 1e-12);
+        assert!((bd.step_s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_breakdown_handles_missing_phases() {
+        let r = PhaseReport {
+            phases: vec![span("warmup", 0.0, 4.0, 4.0)],
+            iter_s: 4.0,
+            tokens: 8,
+        };
+        let bd = r.to_breakdown();
+        assert_eq!(bd.fwd_s, 0.0);
+        assert_eq!(bd.bwd_s, 0.0);
+        assert!((bd.step_s - 4.0).abs() < 1e-12);
+        assert_eq!(bd.tokens, 8);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let r = PhaseReport {
+            phases: vec![span("fwd", 0.0, 1.0, 1.0), span("step", 1.0, 2.0, 2.0)],
+            iter_s: 2.0,
+            tokens: 10,
+        };
+        let j = r.to_json();
+        let phases = j.path(&["phases"]).unwrap().as_arr().unwrap();
+        assert_eq!(phases.len(), 2);
+        assert_eq!(phases[0].path(&["name"]).unwrap().as_str(), Some("fwd"));
+        assert_eq!(phases[1].path(&["extent_s"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.path(&["tokens"]).unwrap().as_u64(), Some(10));
+    }
+
+    #[test]
+    fn partition_detector() {
+        assert!(bd(1.0, 2.0, 1.0, 1).is_partition());
+        let skew = PhaseBreakdown {
+            fwd_s: 1.0,
+            bwd_s: 2.0,
+            step_s: 1.0,
+            iter_s: 3.5, // overlapping phases: triple no longer partitions
+            tokens: 1,
+        };
+        assert!(!skew.is_partition());
     }
 }

@@ -1,17 +1,74 @@
-//! The CPU-offloading coordinator: the paper's Figure-1 workflow.
+//! The CPU-offloading coordinator: the paper's Figure-1 workflow, and —
+//! since the schedule-graph IR landed — any fine-tuning scenario
+//! expressible as a task DAG.
 //!
 //! * [`plan`] — Table-I region allocation under a placement policy,
-//! * [`iteration`] — one simulated training iteration with full
-//!   transfer/compute overlap over the fabric,
-//! * [`metrics`] — phase breakdowns and throughput reports,
-//! * [`sweep`] — (C, B) grid sweeps producing the Fig. 9/10 matrices.
+//! * [`schedule`] — the schedule-graph IR: typed ops + dependency edges,
+//! * [`schedules`] — named scenario builders (`zero-offload`,
+//!   `grad-accum`, `lora`, `no-act-offload`) and their registry,
+//! * [`executor`] — the generic DAG executor over the fabric simulator,
+//! * [`iteration`] — the FROZEN pre-IR engine, kept as a differential
+//!   parity oracle (`rust/tests/schedule_parity.rs`),
+//! * [`metrics`] — legacy phase breakdowns and generalized phase reports,
+//! * [`sweep`] — (C, B) grid sweeps over engine × schedule matrices
+//!   producing the Fig. 9/10 matrices and the ablation grids.
 
+pub mod executor;
 pub mod iteration;
 pub mod metrics;
 pub mod plan;
+pub mod schedule;
+pub mod schedules;
 pub mod sweep;
 
-pub use iteration::{simulate_iteration, simulate_iteration_traced};
-pub use metrics::PhaseBreakdown;
+pub use executor::{execute, Execution};
+pub use iteration::{legacy_simulate_iteration, legacy_simulate_iteration_traced};
+pub use metrics::{PhaseBreakdown, PhaseReport, PhaseSpan};
 pub use plan::{MemoryPlan, PlanError, RunConfig};
-pub use sweep::{sweep_grid, sweep_grid_with_threads, GridPoint, SweepResult};
+pub use schedule::{FlopsTerm, Op, OpId, OpNode, Schedule};
+pub use schedules::{ScheduleBuilder, ScheduleRef};
+pub use sweep::{
+    sweep_grid, sweep_grid_matrix, sweep_grid_with_threads, GridPoint, SweepResult,
+};
+
+use crate::sim::trace::TraceRecorder;
+use crate::topology::SystemTopology;
+
+/// Simulate one iteration of `cfg.schedule`, returning the generalized
+/// per-phase report plus the full execution trace.
+pub fn simulate_iteration_report(
+    topo: &SystemTopology,
+    cfg: &RunConfig,
+    plan: &MemoryPlan<'_>,
+) -> (PhaseReport, TraceRecorder) {
+    assert!(
+        cfg.workload.n_gpus <= topo.gpus.len(),
+        "workload wants {} GPUs, topology has {}",
+        cfg.workload.n_gpus,
+        topo.gpus.len()
+    );
+    let sched = cfg.schedule.build(topo, cfg, plan);
+    let ex = executor::execute(topo, &sched);
+    (ex.report, ex.trace)
+}
+
+/// Simulate one iteration; returns the legacy-style phase breakdown
+/// (boundary-based FWD/BWD/STEP view of [`simulate_iteration_report`]).
+pub fn simulate_iteration(
+    topo: &SystemTopology,
+    cfg: &RunConfig,
+    plan: &MemoryPlan<'_>,
+) -> PhaseBreakdown {
+    simulate_iteration_traced(topo, cfg, plan).0
+}
+
+/// Simulate one iteration, additionally recording a full execution trace
+/// (exportable as Chrome trace JSON via `TraceRecorder::to_chrome_trace`).
+pub fn simulate_iteration_traced(
+    topo: &SystemTopology,
+    cfg: &RunConfig,
+    plan: &MemoryPlan<'_>,
+) -> (PhaseBreakdown, TraceRecorder) {
+    let (report, trace) = simulate_iteration_report(topo, cfg, plan);
+    (report.to_breakdown(), trace)
+}

@@ -3,6 +3,7 @@
 //! the functional trainer both consume — placement decisions are made once,
 //! here, exactly like the real system pins its arenas at startup.
 
+use super::schedules::{self, ScheduleRef};
 use crate::mem::{EngineRef, NumaAllocator, RegionId, RegionRequest, TensorClass};
 use crate::model::footprint::{Footprint, Workload};
 use crate::model::ModelConfig;
@@ -13,7 +14,9 @@ use crate::topology::{GpuId, NodeId, SystemTopology};
 /// Placement goes through a pluggable [`crate::mem::PlacementEngine`];
 /// `RunConfig::new` accepts anything convertible (a legacy
 /// [`crate::mem::Policy`], [`crate::mem::AdaptiveSpill`], or an existing
-/// [`EngineRef`]).
+/// [`EngineRef`]). The iteration *schedule* is pluggable the same way: a
+/// [`ScheduleRef`] resolved from the `offload::schedules` registry
+/// (default: the paper's `zero-offload` workflow).
 #[derive(Clone)]
 pub struct RunConfig {
     pub model: ModelConfig,
@@ -22,6 +25,8 @@ pub struct RunConfig {
     /// Blocks of parameters prefetched ahead of compute (ZeRO-Offload
     /// overlaps the next block's H2D copy with the current block's kernel).
     pub prefetch_depth: usize,
+    /// The fine-tuning scenario simulated for this run.
+    pub schedule: ScheduleRef,
 }
 
 impl RunConfig {
@@ -31,7 +36,14 @@ impl RunConfig {
             workload,
             engine: engine.into(),
             prefetch_depth: 2,
+            schedule: schedules::zero_offload(),
         }
+    }
+
+    /// Builder-style schedule override.
+    pub fn with_schedule(mut self, schedule: ScheduleRef) -> Self {
+        self.schedule = schedule;
+        self
     }
 }
 
@@ -42,6 +54,7 @@ impl std::fmt::Debug for RunConfig {
             .field("workload", &self.workload)
             .field("engine", &self.engine.name())
             .field("prefetch_depth", &self.prefetch_depth)
+            .field("schedule", &self.schedule.name())
             .finish()
     }
 }

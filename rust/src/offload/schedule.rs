@@ -1,0 +1,391 @@
+//! The schedule-graph IR: a fine-tuning iteration as a declarative task
+//! DAG instead of a hand-woven state machine.
+//!
+//! A [`Schedule`] is a list of typed [`OpNode`]s — host↔GPU transfers, GPU
+//! kernels, CPU optimizer phases, and barriers — joined by explicit
+//! dependency edges and grouped under named phases. The nodes carry *model*
+//! quantities (bytes, FLOPs, element counts), never wall-clock times: the
+//! [`crate::offload::executor`] prices them against a [`crate::topology::
+//! SystemTopology`] when it walks the graph over the fabric.
+//!
+//! Determinism contract (DESIGN.md §9): node indices are the executor's
+//! dispatch priority — whenever several nodes become runnable from the same
+//! completion event they are issued in ascending [`OpId`] order, so a
+//! builder that lists nodes in the legacy engine's issuance order
+//! reproduces the legacy event stream byte-for-byte. Builders for new
+//! scenarios only need *some* fixed order; parity-critical builders
+//! (`schedules::zero_offload`) document theirs.
+
+use crate::sim::fabric::Dir;
+use crate::sim::memmodel::OptLayout;
+use crate::topology::{GpuId, NodeId, SystemTopology};
+
+/// Index of a node inside one [`Schedule`] (also its dispatch priority and
+/// its event tag in the executor).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct OpId(pub u32);
+
+/// One FLOPs contribution to a GPU kernel: `scale · (flops / gpu_flops)`
+/// seconds. Kernels are sums of terms so builders can express the legacy
+/// engine's exact arithmetic (e.g. "block forward plus half an LM-head")
+/// and the executor can price each term against *that node's own GPU*.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlopsTerm {
+    pub flops: f64,
+    pub scale: f64,
+}
+
+impl FlopsTerm {
+    pub fn new(flops: f64) -> Self {
+        Self { flops, scale: 1.0 }
+    }
+    pub fn scaled(flops: f64, scale: f64) -> Self {
+        Self { flops, scale }
+    }
+}
+
+/// The typed operations a schedule node can perform.
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// A host↔GPU DMA striped over memory nodes (fractions sum to 1).
+    /// Becomes one flow per positive stripe; the node completes when the
+    /// last stripe lands.
+    Transfer {
+        gpu: GpuId,
+        stripes: Vec<(NodeId, f64)>,
+        dir: Dir,
+        bytes: f64,
+    },
+    /// A GPU kernel: Σ scaleᵢ·(flopsᵢ / gpu-effective-FLOPs) seconds,
+    /// priced with the *owning GPU's* rating (a slow card lengthens its
+    /// own lane only).
+    Compute { gpu: GpuId, work: Vec<FlopsTerm> },
+    /// A CPU phase timed by the calibrated memory model: one Adam update
+    /// over `adam_elements` placed as `adam_layout`, plus pure streaming
+    /// passes (the fp32→bf16 casts) summed in order.
+    CpuStep {
+        adam_elements: u64,
+        adam_layout: OptLayout,
+        streams: Vec<(f64, OptLayout)>,
+    },
+    /// Pure synchronization: completes the instant its deps complete, emits
+    /// no fabric event and no trace span.
+    Barrier,
+}
+
+/// A schedule node: the op, its dependency edges, and its reporting labels.
+#[derive(Clone, Debug)]
+pub struct OpNode {
+    pub op: Op,
+    /// All of these must complete before the node is issued.
+    pub deps: Vec<OpId>,
+    /// Trace span label, e.g. `"param-load b3"`.
+    pub name: String,
+    /// Trace lane, e.g. `"gpu0/h2d"`.
+    pub lane: String,
+    /// Index into [`Schedule::phases`].
+    pub phase: usize,
+    /// Marks a phase *boundary* node: the phase's boundary time is the max
+    /// completion over its marked nodes (legacy FWD/BWD/STEP semantics).
+    pub ends_phase: bool,
+}
+
+/// A whole iteration as a task DAG.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    /// Phase names in declaration order (`PhaseReport` preserves it).
+    pub phases: Vec<String>,
+    pub nodes: Vec<OpNode>,
+    /// Tokens processed by one execution of this schedule (all GPUs, all
+    /// micro-batches).
+    pub tokens: u64,
+}
+
+impl Schedule {
+    pub fn new(tokens: u64) -> Self {
+        Self {
+            phases: Vec::new(),
+            nodes: Vec::new(),
+            tokens,
+        }
+    }
+
+    /// Intern a phase name, returning its index.
+    pub fn phase(&mut self, name: &str) -> usize {
+        if let Some(i) = self.phases.iter().position(|p| p == name) {
+            return i;
+        }
+        self.phases.push(name.to_string());
+        self.phases.len() - 1
+    }
+
+    /// Append a node; its index is its dispatch priority.
+    pub fn push(&mut self, node: OpNode) -> OpId {
+        assert!(
+            self.nodes.len() < u32::MAX as usize,
+            "schedule node count overflows OpId"
+        );
+        self.nodes.push(node);
+        OpId(self.nodes.len() as u32 - 1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Structural validation: in-bounds edges, an acyclic graph, sane op
+    /// payloads, and (given the topology) valid GPU / memory-node indices.
+    /// Returns a human-readable description of the first violation.
+    pub fn validate(&self, topo: &SystemTopology) -> Result<(), String> {
+        self.validated_adjacency(topo).map(|_| ())
+    }
+
+    /// [`Schedule::validate`] that additionally hands back the dependency
+    /// bookkeeping it had to build anyway — `(indegree, dependents)` per
+    /// node — so the executor does not rebuild the O(V+E) adjacency.
+    pub(crate) fn validated_adjacency(
+        &self,
+        topo: &SystemTopology,
+    ) -> Result<(Vec<u32>, Vec<Vec<u32>>), String> {
+        if self.nodes.is_empty() {
+            return Err("schedule has no nodes".into());
+        }
+        let n = self.nodes.len();
+        for (i, node) in self.nodes.iter().enumerate() {
+            if node.phase >= self.phases.len() {
+                return Err(format!(
+                    "node {i} ({}) references phase {} but only {} are declared",
+                    node.name,
+                    node.phase,
+                    self.phases.len()
+                ));
+            }
+            for d in &node.deps {
+                if d.0 as usize >= n {
+                    return Err(format!(
+                        "node {i} ({}) depends on out-of-range node {}",
+                        node.name, d.0
+                    ));
+                }
+                if d.0 as usize == i {
+                    return Err(format!("node {i} ({}) depends on itself", node.name));
+                }
+            }
+            match &node.op {
+                Op::Transfer {
+                    gpu,
+                    stripes,
+                    bytes,
+                    ..
+                } => {
+                    if gpu.0 >= topo.gpus.len() {
+                        return Err(format!(
+                            "node {i} ({}) targets gpu {} but topology has {}",
+                            node.name,
+                            gpu.0,
+                            topo.gpus.len()
+                        ));
+                    }
+                    if stripes.is_empty() {
+                        return Err(format!("node {i} ({}) has no stripes", node.name));
+                    }
+                    let total: f64 = stripes.iter().map(|(_, f)| *f).sum();
+                    if (total - 1.0).abs() > 1e-6 {
+                        return Err(format!(
+                            "node {i} ({}) stripe fractions sum to {total}",
+                            node.name
+                        ));
+                    }
+                    for (mem, _) in stripes {
+                        if mem.0 >= topo.mem_nodes.len() {
+                            return Err(format!(
+                                "node {i} ({}) stripes onto unknown memory node {}",
+                                node.name, mem.0
+                            ));
+                        }
+                    }
+                    if !bytes.is_finite() || *bytes < 0.0 {
+                        return Err(format!("node {i} ({}) has bad byte count {bytes}", node.name));
+                    }
+                }
+                Op::Compute { gpu, work } => {
+                    if gpu.0 >= topo.gpus.len() {
+                        return Err(format!(
+                            "node {i} ({}) computes on gpu {} but topology has {}",
+                            node.name,
+                            gpu.0,
+                            topo.gpus.len()
+                        ));
+                    }
+                    if work.is_empty() {
+                        return Err(format!("node {i} ({}) has no FLOPs terms", node.name));
+                    }
+                    for t in work {
+                        if !t.flops.is_finite() || t.flops < 0.0 || !t.scale.is_finite() {
+                            return Err(format!(
+                                "node {i} ({}) has bad FLOPs term {t:?}",
+                                node.name
+                            ));
+                        }
+                    }
+                }
+                Op::CpuStep { streams, .. } => {
+                    for (bytes, _) in streams {
+                        if !bytes.is_finite() || *bytes < 0.0 {
+                            return Err(format!(
+                                "node {i} ({}) has bad stream byte count {bytes}",
+                                node.name
+                            ));
+                        }
+                    }
+                }
+                Op::Barrier => {}
+            }
+        }
+        // Kahn's algorithm: every node must be reachable through the edge
+        // partial order, otherwise there is a cycle.
+        let mut indeg: Vec<u32> = vec![0; n];
+        let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (i, node) in self.nodes.iter().enumerate() {
+            indeg[i] = node.deps.len() as u32;
+            for d in &node.deps {
+                dependents[d.0 as usize].push(i as u32);
+            }
+        }
+        let mut scratch = indeg.clone();
+        let mut queue: Vec<u32> = (0..n as u32).filter(|&i| scratch[i as usize] == 0).collect();
+        let mut seen = 0usize;
+        while let Some(i) = queue.pop() {
+            seen += 1;
+            for &j in &dependents[i as usize] {
+                scratch[j as usize] -= 1;
+                if scratch[j as usize] == 0 {
+                    queue.push(j);
+                }
+            }
+        }
+        if seen != n {
+            return Err(format!(
+                "schedule graph has a cycle ({} of {n} nodes reachable)",
+                seen
+            ));
+        }
+        Ok((indeg, dependents))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets::dev_tiny;
+
+    fn transfer(deps: Vec<OpId>, phase: usize) -> OpNode {
+        OpNode {
+            op: Op::Transfer {
+                gpu: GpuId(0),
+                stripes: vec![(NodeId(0), 1.0)],
+                dir: Dir::HostToGpu,
+                bytes: 1e6,
+            },
+            deps,
+            name: "t".into(),
+            lane: "gpu0/h2d".into(),
+            phase,
+            ends_phase: false,
+        }
+    }
+
+    #[test]
+    fn phases_intern_stably() {
+        let mut s = Schedule::new(0);
+        assert_eq!(s.phase("fwd"), 0);
+        assert_eq!(s.phase("bwd"), 1);
+        assert_eq!(s.phase("fwd"), 0, "re-interning returns the same index");
+        assert_eq!(s.phases, vec!["fwd".to_string(), "bwd".to_string()]);
+    }
+
+    #[test]
+    fn valid_chain_passes() {
+        let topo = dev_tiny();
+        let mut s = Schedule::new(128);
+        s.phase("fwd");
+        let a = s.push(transfer(vec![], 0));
+        let b = s.push(transfer(vec![a], 0));
+        s.push(transfer(vec![a, b], 0));
+        assert!(s.validate(&topo).is_ok());
+    }
+
+    #[test]
+    fn cycle_is_rejected() {
+        let topo = dev_tiny();
+        let mut s = Schedule::new(0);
+        s.phase("fwd");
+        // 0 → 1 → 0 (forward reference then back-edge)
+        s.push(transfer(vec![OpId(1)], 0));
+        s.push(transfer(vec![OpId(0)], 0));
+        let err = s.validate(&topo).unwrap_err();
+        assert!(err.contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn self_dep_is_rejected() {
+        let topo = dev_tiny();
+        let mut s = Schedule::new(0);
+        s.phase("fwd");
+        s.push(transfer(vec![OpId(0)], 0));
+        assert!(s.validate(&topo).unwrap_err().contains("itself"));
+    }
+
+    #[test]
+    fn out_of_range_dep_is_rejected() {
+        let topo = dev_tiny();
+        let mut s = Schedule::new(0);
+        s.phase("fwd");
+        s.push(transfer(vec![OpId(7)], 0));
+        assert!(s.validate(&topo).unwrap_err().contains("out-of-range"));
+    }
+
+    #[test]
+    fn bad_stripes_and_phase_are_rejected() {
+        let topo = dev_tiny();
+        let mut s = Schedule::new(0);
+        s.phase("fwd");
+        let mut n = transfer(vec![], 0);
+        if let Op::Transfer { stripes, .. } = &mut n.op {
+            stripes[0].1 = 0.5; // does not sum to 1
+        }
+        s.push(n);
+        assert!(s.validate(&topo).unwrap_err().contains("stripe fractions"));
+
+        let mut s2 = Schedule::new(0);
+        s2.phase("fwd");
+        let mut n2 = transfer(vec![], 0);
+        n2.phase = 3; // never declared
+        s2.push(n2);
+        assert!(s2.validate(&topo).unwrap_err().contains("phase 3"));
+    }
+
+    #[test]
+    fn unknown_gpu_is_rejected() {
+        let topo = dev_tiny(); // 2 GPUs
+        let mut s = Schedule::new(0);
+        s.phase("fwd");
+        let mut n = transfer(vec![], 0);
+        if let Op::Transfer { gpu, .. } = &mut n.op {
+            *gpu = GpuId(5);
+        }
+        s.push(n);
+        assert!(s.validate(&topo).unwrap_err().contains("gpu 5"));
+    }
+
+    #[test]
+    fn empty_schedule_is_rejected() {
+        let topo = dev_tiny();
+        let s = Schedule::new(0);
+        assert!(s.validate(&topo).is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! Gradient accumulation: K micro-batches stream through the Fig. 1
+//! forward+backward pipeline before a single CPU optimizer step — the
+//! schedule the legacy state machine could not express (its phase flags
+//! were single-shot per GPU).
+//!
+//! Why it matters for the paper's question: accumulation multiplies the
+//! *transfer* phases (params re-stream and checkpoints round-trip every
+//! micro-batch) while the latency-critical STEP runs once, so the
+//! CXL-vs-DRAM placement trade-off tilts toward bulk-bandwidth — the
+//! opposite corner from `lora`. `benches/schedule_ablation.rs` quantifies
+//! both against `zero-offload`.
+
+use super::super::plan::{MemoryPlan, RunConfig};
+use super::super::schedule::Schedule;
+use super::zero_offload::{build_fig1_passes, full_model_cpu_step, Fig1Shape};
+use super::ScheduleBuilder;
+use crate::topology::SystemTopology;
+
+/// Default K when the registry name carries no `:K` parameter.
+pub const DEFAULT_MICRO_BATCHES: usize = 4;
+
+pub struct GradAccum {
+    micro_batches: usize,
+    name: String,
+}
+
+impl GradAccum {
+    pub fn new(micro_batches: usize) -> Self {
+        assert!(micro_batches >= 1);
+        Self {
+            micro_batches,
+            name: format!("grad-accum:{micro_batches}"),
+        }
+    }
+}
+
+impl ScheduleBuilder for GradAccum {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn build(&self, _topo: &SystemTopology, cfg: &RunConfig, plan: &MemoryPlan<'_>) -> Schedule {
+        // Micro-batches chain on the previous one's last backward kernel:
+        // the GPU is busy until then, but gradient offloads may still
+        // drain while the next micro-batch's parameter prefetch begins
+        // (transfer/compute overlap across the seam). One optimizer step
+        // per K micro-batches → K× the tokens.
+        let (mut s, all_grads, step) = build_fig1_passes(
+            cfg,
+            plan,
+            &Fig1Shape {
+                micro_batches: self.micro_batches,
+                micro_labels: true,
+                ..Fig1Shape::default()
+            },
+        );
+        s.push(full_model_cpu_step(cfg, plan, all_grads, step));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Policy;
+    use crate::model::footprint::Workload;
+    use crate::model::presets::tiny_2m;
+    use crate::offload::executor::execute;
+    use crate::offload::schedules::zero_offload::ZeroOffload;
+    use crate::topology::presets::dev_tiny;
+
+    #[test]
+    fn k_micro_batches_multiply_tokens_and_amortize_the_step() {
+        let topo = dev_tiny();
+        let cfg = RunConfig::new(tiny_2m(), Workload::new(1, 2, 256), Policy::DramOnly);
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+
+        let zo = execute(&topo, &ZeroOffload.build(&topo, &cfg, &plan));
+        let ga = execute(&topo, &GradAccum::new(3).build(&topo, &cfg, &plan));
+
+        assert_eq!(ga.report.tokens, 3 * zo.report.tokens);
+        // 3 fwd+bwd passes but a single step: strictly between 1× and 3×
+        // the single-micro iteration, and never slower per token.
+        assert!(ga.report.iter_s > zo.report.iter_s * 1.5);
+        assert!(ga.report.iter_s < zo.report.iter_s * 3.0);
+        assert!(ga.report.tokens_per_sec() >= zo.report.tokens_per_sec() * 0.999);
+    }
+
+    #[test]
+    fn phases_overlap_across_micro_batch_seams() {
+        // The generalized-breakdown satellite: micro-batch m+1's forward
+        // begins while m's gradient offloads (phase "bwd") still drain, so
+        // the fwd/bwd extents overlap and extent shares exceed 1 in total —
+        // exactly what PhaseBreakdown::shares() could never report.
+        let topo = dev_tiny();
+        let cfg = RunConfig::new(tiny_2m(), Workload::new(1, 2, 256), Policy::DramOnly);
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        let ex = execute(&topo, &GradAccum::new(3).build(&topo, &cfg, &plan));
+        let r = &ex.report;
+        assert!(r.overlaps("fwd", "bwd"), "accumulation must interleave phases");
+        let total: f64 = r.shares().iter().map(|(_, sh)| sh).sum();
+        assert!(total > 1.0, "extent shares must expose the overlap: {total}");
+        // the boundary-based triple still partitions by construction
+        assert!(r.to_breakdown().is_partition());
+    }
+
+    #[test]
+    fn schedule_validates_and_scales_linearly_in_k() {
+        let topo = dev_tiny();
+        let cfg = RunConfig::new(tiny_2m(), Workload::new(2, 2, 256), Policy::DramOnly);
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        let l = cfg.model.layers;
+        for k in [1, 2, 4] {
+            let s = GradAccum::new(k).build(&topo, &cfg, &plan);
+            s.validate(&topo).unwrap();
+            assert_eq!(s.len(), 2 * k * 7 * l + 1);
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! LoRA fine-tuning: the base model is frozen, only rank-R adapter
+//! matrices train. The forward/backward streaming structure is unchanged
+//! (base parameters still stream block-by-block, checkpoints still
+//! round-trip), but the gradient offloads and the CPU optimizer shrink by
+//! orders of magnitude.
+//!
+//! This is the schedule that stresses the *latency-critical-in-DRAM* side
+//! of the paper's allocator: with the Adam working set far below the LLC
+//! knee (Fig. 5's left region), even a naive CXL placement barely hurts
+//! STEP — the remaining sensitivity is all bulk transfer traffic. Compare
+//! against `zero-offload` (full fine-tuning, STEP-dominated inflation) in
+//! `benches/schedule_ablation.rs`.
+
+use super::super::plan::{MemoryPlan, RunConfig};
+use super::super::schedule::{Op, OpNode, Schedule};
+use super::zero_offload::{build_fig1_passes, Fig1Shape};
+use super::ScheduleBuilder;
+use crate::topology::SystemTopology;
+
+/// Default adapter rank when the registry name carries no `:R` parameter.
+pub const DEFAULT_RANK: usize = 16;
+
+pub struct Lora {
+    rank: usize,
+    name: String,
+}
+
+impl Lora {
+    pub fn new(rank: usize) -> Self {
+        assert!(rank >= 1);
+        Self {
+            rank,
+            name: format!("lora:{rank}"),
+        }
+    }
+
+    /// Trainable adapter elements per block: A (h×r) + B (r×h) pairs on
+    /// the attention q and v projections — the standard LoRA target set.
+    fn adapter_elems_per_block(&self, cfg: &RunConfig) -> u64 {
+        4 * self.rank as u64 * cfg.model.hidden as u64
+    }
+}
+
+impl ScheduleBuilder for Lora {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn build(&self, _topo: &SystemTopology, cfg: &RunConfig, plan: &MemoryPlan<'_>) -> Schedule {
+        let adapter_per_block = self.adapter_elems_per_block(cfg);
+        let adapter_total = adapter_per_block * cfg.model.layers as u64;
+
+        // Frozen base → only bf16 adapter grads leave the GPU per block.
+        let (mut s, all_grads, step) = build_fig1_passes(
+            cfg,
+            plan,
+            &Fig1Shape {
+                grad_block_bytes: Some(2.0 * adapter_per_block as f64),
+                ..Fig1Shape::default()
+            },
+        );
+        // Tiny optimizer: Adam over the adapters only, casting only the
+        // adapter copies. The placement layouts still come from the plan,
+        // so a policy that interleaved the optimizer regions onto CXL is
+        // charged accordingly — it just barely matters below the LLC knee.
+        s.push(OpNode {
+            op: Op::CpuStep {
+                adam_elements: adapter_total,
+                adam_layout: plan.opt_layout(),
+                streams: vec![
+                    (4.0 * adapter_total as f64, plan.region_layout(plan.master)),
+                    (2.0 * adapter_total as f64, plan.region_layout(plan.params16)),
+                ],
+            },
+            deps: all_grads,
+            name: "optimizer step".into(),
+            lane: "cpu/step".into(),
+            phase: step,
+            ends_phase: true,
+        });
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Policy;
+    use crate::model::footprint::Workload;
+    use crate::model::presets::tiny_2m;
+    use crate::offload::executor::execute;
+    use crate::offload::schedules::zero_offload::ZeroOffload;
+    use crate::topology::presets::dev_tiny;
+
+    #[test]
+    fn lora_step_is_orders_of_magnitude_cheaper() {
+        let topo = dev_tiny();
+        let cfg = RunConfig::new(tiny_2m(), Workload::new(1, 2, 256), Policy::DramOnly);
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        let zo = execute(&topo, &ZeroOffload.build(&topo, &cfg, &plan))
+            .report
+            .to_breakdown();
+        let lo = execute(&topo, &Lora::new(8).build(&topo, &cfg, &plan))
+            .report
+            .to_breakdown();
+        assert!(
+            lo.step_s < zo.step_s * 0.5,
+            "adapter-only step must be far cheaper: {} vs {}",
+            lo.step_s,
+            zo.step_s
+        );
+        // compute and activation traffic unchanged → fwd identical
+        assert_eq!(lo.fwd_s.to_bits(), zo.fwd_s.to_bits());
+        assert!(lo.iter_s < zo.iter_s);
+    }
+
+    #[test]
+    fn adapter_count_scales_with_rank() {
+        let topo = dev_tiny();
+        let cfg = RunConfig::new(tiny_2m(), Workload::new(1, 2, 256), Policy::DramOnly);
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        let s8 = Lora::new(8).build(&topo, &cfg, &plan);
+        let s64 = Lora::new(64).build(&topo, &cfg, &plan);
+        s8.validate(&topo).unwrap();
+        let step_elems = |s: &Schedule| {
+            s.nodes
+                .iter()
+                .find_map(|n| match &n.op {
+                    Op::CpuStep { adam_elements, .. } => Some(*adam_elements),
+                    _ => None,
+                })
+                .unwrap()
+        };
+        assert_eq!(step_elems(&s64), 8 * step_elems(&s8));
+    }
+}

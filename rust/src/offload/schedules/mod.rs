@@ -1,0 +1,108 @@
+//! Schedule builders: named fine-tuning scenarios expressed as
+//! [`Schedule`] DAGs, plus the registry the CLI / sweeps resolve them
+//! through (the schedule analogue of `mem::engine`).
+//!
+//! Registered schedules (`by_name` / `known_names`, all CLI `--schedule`
+//! values):
+//!
+//! | Name | Scenario |
+//! |---|---|
+//! | `zero-offload` | the paper's Fig. 1 workflow; reproduces the legacy engine byte-for-byte |
+//! | `grad-accum[:K]` | K micro-batches per optimizer step (default 4) |
+//! | `lora[:R]` | frozen base model, rank-R adapters (default 16): tiny optimizer working set |
+//! | `no-act-offload` | checkpoints stay in GPU HBM: the activation-traffic ablation |
+//!
+//! Adding a scenario = write a builder (usually by composing
+//! [`zero_offload::build_fig1_passes`] with a [`zero_offload::Fig1Shape`],
+//! or [`zero_offload::emit_pass`] for novel pass structures) + one arm
+//! in [`by_name`].
+
+pub mod grad_accum;
+pub mod lora;
+pub mod no_act_offload;
+pub mod zero_offload;
+
+use std::sync::Arc;
+
+use super::plan::{MemoryPlan, RunConfig};
+use super::schedule::Schedule;
+use crate::topology::SystemTopology;
+
+/// An object-safe schedule builder. Builders are pure functions of
+/// `(topology, run config, memory plan)` — all byte counts come from the
+/// plan's regions, so placement decisions show up only through stripe
+/// fractions and the optimizer layout, exactly like the legacy engine.
+pub trait ScheduleBuilder: Send + Sync {
+    /// Registry / CLI name, e.g. `"grad-accum:4"`.
+    fn name(&self) -> &str;
+
+    fn build(&self, topo: &SystemTopology, cfg: &RunConfig, plan: &MemoryPlan<'_>) -> Schedule;
+}
+
+/// Shared handle to a builder — what `RunConfig` and the sweeps thread.
+pub type ScheduleRef = Arc<dyn ScheduleBuilder>;
+
+/// The default schedule: the paper's Fig. 1 ZeRO-Offload workflow.
+pub fn zero_offload() -> ScheduleRef {
+    Arc::new(zero_offload::ZeroOffload)
+}
+
+/// Resolve a registry name, with an optional `:N` parameter where the
+/// scenario takes one (`grad-accum:8`, `lora:64`).
+pub fn by_name(name: &str) -> Option<ScheduleRef> {
+    if let Some(rest) = name.strip_prefix("grad-accum") {
+        let k = parse_param(rest, grad_accum::DEFAULT_MICRO_BATCHES)?;
+        return Some(Arc::new(grad_accum::GradAccum::new(k)));
+    }
+    if let Some(rest) = name.strip_prefix("lora") {
+        let r = parse_param(rest, lora::DEFAULT_RANK)?;
+        return Some(Arc::new(lora::Lora::new(r)));
+    }
+    match name {
+        "zero-offload" => Some(zero_offload()),
+        "no-act-offload" => Some(Arc::new(no_act_offload::NoActOffload)),
+        _ => None,
+    }
+}
+
+/// Registry names for CLI help (parameterized entries show their syntax).
+pub fn known_names() -> Vec<&'static str> {
+    vec!["zero-offload", "grad-accum[:K]", "lora[:R]", "no-act-offload"]
+}
+
+fn parse_param(rest: &str, default: usize) -> Option<usize> {
+    if rest.is_empty() {
+        return Some(default);
+    }
+    rest.strip_prefix(':')?.parse().ok().filter(|&v| v >= 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_known_names() {
+        assert_eq!(by_name("zero-offload").unwrap().name(), "zero-offload");
+        assert_eq!(by_name("no-act-offload").unwrap().name(), "no-act-offload");
+        assert_eq!(
+            by_name("grad-accum").unwrap().name(),
+            format!("grad-accum:{}", grad_accum::DEFAULT_MICRO_BATCHES)
+        );
+        assert_eq!(by_name("grad-accum:8").unwrap().name(), "grad-accum:8");
+        assert_eq!(
+            by_name("lora").unwrap().name(),
+            format!("lora:{}", lora::DEFAULT_RANK)
+        );
+        assert_eq!(by_name("lora:64").unwrap().name(), "lora:64");
+    }
+
+    #[test]
+    fn registry_rejects_garbage() {
+        assert!(by_name("nope").is_none());
+        assert!(by_name("grad-accum:0").is_none());
+        assert!(by_name("grad-accum:x").is_none());
+        assert!(by_name("lora:").is_none());
+        assert!(by_name("grad-accumx").is_none());
+    }
+}

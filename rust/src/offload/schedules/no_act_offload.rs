@@ -1,0 +1,77 @@
+//! Ablation: activation checkpoints stay in GPU HBM — no D2H offload
+//! after each forward block and no H2D reload before each backward block.
+//!
+//! This isolates how much of a policy's win/loss comes from *activation*
+//! traffic placement versus parameter streams and the optimizer step: the
+//! paper's CXL-aware policy routes checkpoints to per-GPU AIC affinity
+//! (or stripes them), and comparing `zero-offload` vs `no-act-offload`
+//! under the same engine prices exactly that traffic. On real hardware
+//! this trades HBM capacity for PCIe bandwidth; the simulator assumes the
+//! checkpoints fit.
+
+use super::super::plan::{MemoryPlan, RunConfig};
+use super::super::schedule::Schedule;
+use super::zero_offload::{build_fig1_passes, full_model_cpu_step, Fig1Shape};
+use super::ScheduleBuilder;
+use crate::topology::SystemTopology;
+
+pub struct NoActOffload;
+
+impl ScheduleBuilder for NoActOffload {
+    fn name(&self) -> &str {
+        "no-act-offload"
+    }
+
+    fn build(&self, _topo: &SystemTopology, cfg: &RunConfig, plan: &MemoryPlan<'_>) -> Schedule {
+        let (mut s, all_grads, step) = build_fig1_passes(
+            cfg,
+            plan,
+            &Fig1Shape {
+                offload_activations: false,
+                ..Fig1Shape::default()
+            },
+        );
+        s.push(full_model_cpu_step(cfg, plan, all_grads, step));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Policy;
+    use crate::model::footprint::Workload;
+    use crate::model::presets::tiny_2m;
+    use crate::offload::executor::execute;
+    use crate::offload::schedules::zero_offload::ZeroOffload;
+    use crate::topology::presets::dev_tiny;
+
+    #[test]
+    fn no_checkpoint_traffic_and_never_slower() {
+        let topo = dev_tiny();
+        // DRAM-only placement → one stripe per logical transfer, so span
+        // counts are exact; removing the checkpoint round-trips can only
+        // relieve the shared DRAM controller.
+        let cfg = RunConfig::new(tiny_2m(), Workload::new(2, 2, 256), Policy::DramOnly);
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        let zo = execute(&topo, &ZeroOffload.build(&topo, &cfg, &plan));
+        let na = execute(&topo, &NoActOffload.build(&topo, &cfg, &plan));
+        assert!(
+            !na.trace
+                .spans()
+                .iter()
+                .any(|sp| sp.name.starts_with("ckpt-")),
+            "ablation must emit no checkpoint spans"
+        );
+        assert!(zo
+            .trace
+            .spans()
+            .iter()
+            .any(|sp| sp.name.starts_with("ckpt-offload")));
+        // removing traffic can only help (same kernels, fewer flows)
+        assert!(na.report.iter_s <= zo.report.iter_s * (1.0 + 1e-9));
+        // per GPU: L loads + L fwd + L reloads + L bwd + L grads = 5L + step
+        let l = cfg.model.layers;
+        assert_eq!(na.trace.spans().len(), 2 * 5 * l + 1);
+    }
+}

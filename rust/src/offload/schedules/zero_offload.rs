@@ -1,0 +1,483 @@
+//! The Fig. 1 ZeRO-Offload iteration as a schedule DAG — the parity
+//! builder that must reproduce the legacy hand-woven engine
+//! (`offload::iteration`, now a frozen oracle) **byte-for-byte**.
+//!
+//! Parity hinges on two things (see `rust/tests/schedule_parity.rs` for
+//! the differential lock):
+//!
+//! 1. **Node construction order = legacy issuance order.** The executor
+//!    dispatches simultaneously-runnable nodes in ascending index order,
+//!    so nodes are pushed exactly as the legacy state machine issued them:
+//!    per GPU the initial prefetch window, then per forward block
+//!    `compute → checkpoint-offload → next prefetch`, then the backward
+//!    prefetch window, then per backward block `compute → grad-offload →
+//!    next reload/ckpt-load`, and the CPU step last. Flow/timer ids — the
+//!    DES tie-breakers — then match the legacy stream exactly.
+//! 2. **Identical arithmetic.** Kernels carry FLOPs terms in the legacy
+//!    operation order (`block + 0.5·head`), transfers carry the plan's
+//!    byte counts, and the CPU step carries `(elements, layout)` plus the
+//!    cast streams — the executor prices each with the same expressions
+//!    the legacy engine inlined.
+//!
+//! One deliberate cleanup, pinned by the same differential tests as
+//! *behavior-preserving on every paper cell*: a checkpoint load is gated
+//! on `{its offload, its prefetch-window trigger}` as a pure AND-edge set,
+//! where the legacy engine would also start it straight from a
+//! late-landing offload completion slightly *before* its window. That
+//! path requires an offload still in flight ≥ `depth` whole block-kernels
+//! after it was issued — an order of magnitude away from any calibrated
+//! configuration.
+
+use super::super::plan::{MemoryPlan, RunConfig};
+use super::super::schedule::{FlopsTerm, Op, OpId, OpNode, Schedule};
+use super::ScheduleBuilder;
+use crate::model::flops;
+use crate::sim::fabric::Dir;
+use crate::topology::{GpuId, NodeId, SystemTopology};
+
+/// Everything one forward+backward pass of one GPU needs; shared by the
+/// `grad-accum`, `lora` and `no-act-offload` builders so every scenario
+/// keeps the exact streaming structure of Fig. 1.
+pub struct PassShape<'a> {
+    pub gpu: usize,
+    pub layers: usize,
+    /// Prefetch depth (already clamped ≥ 1).
+    pub depth: usize,
+    /// Host stripe fractions for bf16 parameter streams.
+    pub p16: &'a [(NodeId, f64)],
+    /// Host stripe fractions for bf16 gradient offloads.
+    pub g16: &'a [(NodeId, f64)],
+    /// Host stripe fractions for this GPU's activation checkpoints.
+    pub acts: &'a [(NodeId, f64)],
+    pub param_block_bytes: f64,
+    pub act_block_bytes: f64,
+    pub grad_block_bytes: f64,
+    /// FLOPs of one block forward / backward(+recompute) / embed+head fwd.
+    pub f_fwd_block: f64,
+    pub f_bwd_block: f64,
+    pub f_head: f64,
+    /// When false, checkpoints stay in HBM: no offload and no reload
+    /// (the `no-act-offload` ablation).
+    pub offload_activations: bool,
+    /// Span-name suffix, e.g. `" m2"` for micro-batch 2 (`""` = legacy
+    /// names, required for byte-parity).
+    pub label: String,
+    /// The pass starts only after this node (micro-batch chaining).
+    pub entry_dep: Option<OpId>,
+}
+
+/// Node ids a pass hands back to its caller.
+pub struct PassOut {
+    /// One gradient offload per block; the optimizer step depends on all.
+    pub grads: Vec<OpId>,
+    /// The last backward kernel (block 0) — the chain point for the next
+    /// micro-batch.
+    pub last_bwd: OpId,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn transfer(
+    gpu: usize,
+    stripes: &[(NodeId, f64)],
+    dir: Dir,
+    bytes: f64,
+    deps: Vec<OpId>,
+    name: String,
+    lane: String,
+    phase: usize,
+    ends_phase: bool,
+) -> OpNode {
+    OpNode {
+        op: Op::Transfer {
+            gpu: GpuId(gpu),
+            stripes: stripes.to_vec(),
+            dir,
+            bytes,
+        },
+        deps,
+        name,
+        lane,
+        phase,
+        ends_phase,
+    }
+}
+
+/// Emit one GPU's forward+backward pass in legacy issuance order.
+pub fn emit_pass(s: &mut Schedule, p: &PassShape<'_>, fwd: usize, bwd: usize) -> PassOut {
+    let g = p.gpu;
+    let layers = p.layers;
+    let depth = p.depth;
+    let lab = &p.label;
+    let h2d = format!("gpu{g}/h2d");
+    let d2h = format!("gpu{g}/d2h");
+    let compute = format!("gpu{g}/compute");
+    let entry: Vec<OpId> = p.entry_dep.into_iter().collect();
+
+    let mut fwd_load: Vec<Option<OpId>> = vec![None; layers];
+    let mut fwd_compute: Vec<Option<OpId>> = vec![None; layers];
+    let mut act_off: Vec<Option<OpId>> = vec![None; layers];
+
+    // Initial prefetch window: the first `depth` blocks' parameters.
+    for l in 0..depth.min(layers) {
+        fwd_load[l] = Some(s.push(transfer(
+            g,
+            p.p16,
+            Dir::HostToGpu,
+            p.param_block_bytes,
+            entry.clone(),
+            format!("param-load{lab} b{l}"),
+            h2d.clone(),
+            fwd,
+            false,
+        )));
+    }
+
+    // Forward: per block, kernel → checkpoint offload → next prefetch.
+    for l in 0..layers {
+        let mut deps = vec![fwd_load[l].expect("prefetch covered every block")];
+        if l > 0 {
+            deps.push(fwd_compute[l - 1].unwrap());
+        }
+        let mut work = vec![FlopsTerm::new(p.f_fwd_block)];
+        if l == 0 || l == layers - 1 {
+            // embedding on the first block, LM head + loss on the last
+            work.push(FlopsTerm::scaled(p.f_head, 0.5));
+        }
+        let fc = s.push(OpNode {
+            op: Op::Compute {
+                gpu: GpuId(g),
+                work,
+            },
+            deps,
+            name: format!("fwd{lab} b{l}"),
+            lane: compute.clone(),
+            phase: fwd,
+            ends_phase: l == layers - 1,
+        });
+        fwd_compute[l] = Some(fc);
+        if p.offload_activations {
+            act_off[l] = Some(s.push(transfer(
+                g,
+                p.acts,
+                Dir::GpuToHost,
+                p.act_block_bytes,
+                vec![fc],
+                format!("ckpt-offload{lab} b{l}"),
+                d2h.clone(),
+                fwd,
+                false,
+            )));
+        }
+        let nxt = l + depth;
+        if nxt < layers {
+            fwd_load[nxt] = Some(s.push(transfer(
+                g,
+                p.p16,
+                Dir::HostToGpu,
+                p.param_block_bytes,
+                vec![fc],
+                format!("param-load{lab} b{nxt}"),
+                h2d.clone(),
+                fwd,
+                false,
+            )));
+        }
+    }
+    let last_fwd = fwd_compute[layers - 1].unwrap();
+
+    // Backward prefetch window, descending from the top block.
+    let mut bwd_load: Vec<Option<OpId>> = vec![None; layers];
+    let mut act_load: Vec<Option<OpId>> = vec![None; layers];
+    for k in 0..depth.min(layers) {
+        let l = layers - 1 - k;
+        bwd_load[l] = Some(s.push(transfer(
+            g,
+            p.p16,
+            Dir::HostToGpu,
+            p.param_block_bytes,
+            vec![last_fwd],
+            format!("param-reload{lab} b{l}"),
+            h2d.clone(),
+            bwd,
+            false,
+        )));
+        if p.offload_activations {
+            act_load[l] = Some(s.push(transfer(
+                g,
+                p.acts,
+                Dir::HostToGpu,
+                p.act_block_bytes,
+                vec![act_off[l].unwrap(), last_fwd],
+                format!("ckpt-load{lab} b{l}"),
+                h2d.clone(),
+                bwd,
+                false,
+            )));
+        }
+    }
+
+    // Backward: per block (top down), kernel → grad offload → next
+    // reload + checkpoint load `depth` below.
+    let mut grads = Vec::with_capacity(layers);
+    let mut prev_bwd: Option<OpId> = None;
+    for l in (0..layers).rev() {
+        let mut deps = vec![bwd_load[l].expect("reload covered every block")];
+        if let Some(al) = act_load[l] {
+            deps.push(al);
+        }
+        if let Some(pb) = prev_bwd {
+            deps.push(pb);
+        }
+        let mut work = vec![FlopsTerm::new(p.f_bwd_block)];
+        if l == layers - 1 {
+            // head backward ≈ 2× its fwd, recompute ≈ fwd; fold as 1×
+            work.push(FlopsTerm::new(p.f_head));
+        }
+        let bc = s.push(OpNode {
+            op: Op::Compute {
+                gpu: GpuId(g),
+                work,
+            },
+            deps,
+            name: format!("bwd{lab} b{l}"),
+            lane: compute.clone(),
+            phase: bwd,
+            ends_phase: false,
+        });
+        grads.push(s.push(transfer(
+            g,
+            p.g16,
+            Dir::GpuToHost,
+            p.grad_block_bytes,
+            vec![bc],
+            format!("grad-offload{lab} b{l}"),
+            d2h.clone(),
+            bwd,
+            true,
+        )));
+        if l >= depth {
+            let t = l - depth;
+            bwd_load[t] = Some(s.push(transfer(
+                g,
+                p.p16,
+                Dir::HostToGpu,
+                p.param_block_bytes,
+                vec![bc],
+                format!("param-reload{lab} b{t}"),
+                h2d.clone(),
+                bwd,
+                false,
+            )));
+            if p.offload_activations {
+                act_load[t] = Some(s.push(transfer(
+                    g,
+                    p.acts,
+                    Dir::HostToGpu,
+                    p.act_block_bytes,
+                    vec![act_off[t].unwrap(), bc],
+                    format!("ckpt-load{lab} b{t}"),
+                    h2d.clone(),
+                    bwd,
+                    false,
+                )));
+            }
+        }
+        prev_bwd = Some(bc);
+    }
+
+    PassOut {
+        grads,
+        last_bwd: prev_bwd.unwrap(),
+    }
+}
+
+/// Per-block/model quantities every Fig.-1-shaped builder starts from.
+pub struct IterQuantities {
+    pub layers: usize,
+    pub depth: usize,
+    pub param_block_bytes: f64,
+    pub act_block_bytes: f64,
+    pub grad_block_bytes: f64,
+    pub f_fwd_block: f64,
+    pub f_bwd_block: f64,
+    pub f_head: f64,
+}
+
+impl IterQuantities {
+    pub fn compute(cfg: &RunConfig, plan: &MemoryPlan<'_>) -> Self {
+        let layers = cfg.model.layers;
+        let b = cfg.workload.batch;
+        let c = cfg.workload.context;
+        Self {
+            layers,
+            depth: cfg.prefetch_depth.max(1),
+            param_block_bytes: plan.footprint.params_bf16 as f64 / layers as f64,
+            act_block_bytes: 2.0 * (b as f64) * (c as f64) * (cfg.model.hidden as f64),
+            grad_block_bytes: plan.footprint.grads_bf16 as f64 / layers as f64,
+            f_fwd_block: flops::block_fwd_flops(&cfg.model, b, c),
+            f_bwd_block: flops::block_bwd_flops(&cfg.model, b, c, true),
+            f_head: flops::head_fwd_flops(&cfg.model, b, c),
+        }
+    }
+}
+
+/// The full-model CPU optimizer step + bf16 re-cast, as the legacy engine
+/// priced it: one Adam pass over all parameters in the plan's merged
+/// layout, plus streaming the fp32 master (read) and bf16 copy (write).
+pub fn full_model_cpu_step(
+    cfg: &RunConfig,
+    plan: &MemoryPlan<'_>,
+    deps: Vec<OpId>,
+    phase: usize,
+) -> OpNode {
+    OpNode {
+        op: Op::CpuStep {
+            adam_elements: cfg.model.params(),
+            adam_layout: plan.opt_layout(),
+            streams: vec![
+                (
+                    plan.footprint.params_fp32 as f64,
+                    plan.region_layout(plan.master),
+                ),
+                (
+                    plan.footprint.params_bf16 as f64,
+                    plan.region_layout(plan.params16),
+                ),
+            ],
+        },
+        deps,
+        name: "optimizer step".into(),
+        lane: "cpu/step".into(),
+        phase,
+        ends_phase: true,
+    }
+}
+
+/// Knobs the Fig.-1-shaped builders vary on top of the shared scaffold.
+pub struct Fig1Shape {
+    /// Micro-batches per optimizer step (chained on the previous
+    /// micro-batch's last backward kernel); tokens scale with it.
+    pub micro_batches: usize,
+    /// When false, checkpoints stay in HBM (`no-act-offload`).
+    pub offload_activations: bool,
+    /// Suffix span names with `" m{m}"` (multi-micro-batch traces).
+    pub micro_labels: bool,
+    /// Override the per-block gradient offload size (`lora` shrinks it to
+    /// the adapters); `None` = the plan's full bf16 gradient block.
+    pub grad_block_bytes: Option<f64>,
+}
+
+impl Default for Fig1Shape {
+    fn default() -> Self {
+        Self {
+            micro_batches: 1,
+            offload_activations: true,
+            micro_labels: false,
+            grad_block_bytes: None,
+        }
+    }
+}
+
+/// Shared scaffold for every Fig.-1-shaped builder: emit all GPUs'
+/// (micro-batched) forward+backward passes into a fresh schedule.
+/// Returns the schedule, every gradient-offload node (the CPU step's
+/// dependency set), and the interned `"step"` phase index — the caller
+/// appends its own optimizer-step node. With `Fig1Shape::default()` the
+/// node construction order is exactly the legacy engine's issuance order
+/// (the byte-parity contract documented at the top of this file).
+pub fn build_fig1_passes(
+    cfg: &RunConfig,
+    plan: &MemoryPlan<'_>,
+    shape: &Fig1Shape,
+) -> (Schedule, Vec<OpId>, usize) {
+    let q = IterQuantities::compute(cfg, plan);
+    let k = shape.micro_batches;
+    let n_gpus = cfg.workload.n_gpus;
+    let p16 = plan.params16_fractions();
+    let g16 = plan.grads16_fractions();
+    let grad_block_bytes = shape.grad_block_bytes.unwrap_or(q.grad_block_bytes);
+
+    let mut s = Schedule::new(cfg.workload.tokens_per_iter() * k as u64);
+    let fwd = s.phase("fwd");
+    let bwd = s.phase("bwd");
+    let step = s.phase("step");
+
+    let mut all_grads = Vec::with_capacity(n_gpus * k * q.layers);
+    for g in 0..n_gpus {
+        let acts = plan.activation_fractions(GpuId(g));
+        let mut entry = None;
+        for m in 0..k {
+            let out = emit_pass(
+                &mut s,
+                &PassShape {
+                    gpu: g,
+                    layers: q.layers,
+                    depth: q.depth,
+                    p16: &p16,
+                    g16: &g16,
+                    acts: &acts,
+                    param_block_bytes: q.param_block_bytes,
+                    act_block_bytes: q.act_block_bytes,
+                    grad_block_bytes,
+                    f_fwd_block: q.f_fwd_block,
+                    f_bwd_block: q.f_bwd_block,
+                    f_head: q.f_head,
+                    offload_activations: shape.offload_activations,
+                    label: if shape.micro_labels {
+                        format!(" m{m}")
+                    } else {
+                        String::new()
+                    },
+                    entry_dep: entry,
+                },
+                fwd,
+                bwd,
+            );
+            entry = Some(out.last_bwd);
+            all_grads.extend(out.grads);
+        }
+    }
+    (s, all_grads, step)
+}
+
+/// The registry entry.
+pub struct ZeroOffload;
+
+impl ScheduleBuilder for ZeroOffload {
+    fn name(&self) -> &str {
+        "zero-offload"
+    }
+
+    fn build(&self, _topo: &SystemTopology, cfg: &RunConfig, plan: &MemoryPlan<'_>) -> Schedule {
+        let (mut s, all_grads, step) = build_fig1_passes(cfg, plan, &Fig1Shape::default());
+        s.push(full_model_cpu_step(cfg, plan, all_grads, step));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Policy;
+    use crate::model::footprint::Workload;
+    use crate::model::presets::tiny_2m;
+    use crate::topology::presets::dev_tiny;
+
+    #[test]
+    fn builds_a_valid_dag_with_expected_shape() {
+        let topo = dev_tiny();
+        let cfg = RunConfig::new(tiny_2m(), Workload::new(2, 2, 256), Policy::DramOnly);
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        let s = ZeroOffload.build(&topo, &cfg, &plan);
+        s.validate(&topo).unwrap();
+        // per GPU: L loads + L fwd + L ckpt-offloads + L reloads +
+        // L ckpt-loads + L bwd + L grads = 7L, plus one CPU step
+        let l = cfg.model.layers;
+        assert_eq!(s.len(), 2 * 7 * l + 1);
+        assert_eq!(s.phases, vec!["fwd", "bwd", "step"]);
+        // the step node is last and depends on every grad offload
+        let last = &s.nodes[s.len() - 1];
+        assert!(matches!(last.op, Op::CpuStep { .. }));
+        assert_eq!(last.deps.len(), 2 * l);
+    }
+}

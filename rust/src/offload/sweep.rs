@@ -10,14 +10,17 @@
 //! of worker interleaving. A full Fig. 9 panel (16 cells × 3 engines) drops
 //! from sum-of-cells to max-of-cells wall-clock on a multicore host.
 
-use super::iteration::simulate_iteration;
 use super::metrics::PhaseBreakdown;
 use super::plan::{MemoryPlan, RunConfig};
+use super::schedules::{self, ScheduleRef};
+use super::simulate_iteration;
+use crate::jobj;
 use crate::mem::EngineRef;
 use crate::model::footprint::Workload;
 use crate::model::ModelConfig;
 use crate::topology::SystemTopology;
 use crate::util::digest::Fnv64;
+use crate::util::json::Json;
 use crate::util::threadpool::{default_threads, par_map};
 
 /// One grid cell result.
@@ -84,6 +87,40 @@ impl SweepResult {
         h.finish()
     }
 
+    /// Machine-readable form of the whole sweep (written by `cxlfine sweep
+    /// --json`): cell coordinates, per-column breakdowns (`null` for OOM
+    /// cells), and the bitwise digest so perf-trajectory files are
+    /// self-certifying.
+    pub fn to_json(&self) -> Json {
+        let policies: Vec<Json> = self.policies.iter().map(|p| Json::Str(p.clone())).collect();
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|pt| {
+                let runs: Vec<Json> = pt
+                    .runs
+                    .iter()
+                    .map(|r| match r {
+                        None => Json::Null,
+                        Some(b) => b.to_json(),
+                    })
+                    .collect();
+                jobj! {
+                    "context" => pt.context,
+                    "batch" => pt.batch,
+                    "runs" => Json::Arr(runs),
+                }
+            })
+            .collect();
+        jobj! {
+            "model" => self.model.as_str(),
+            "n_gpus" => self.n_gpus,
+            "policies" => Json::Arr(policies),
+            "digest" => format!("{:016x}", self.digest()),
+            "points" => Json::Arr(points),
+        }
+    }
+
     /// (min, max) normalized throughput of a policy across all points that
     /// have both runs — the paper's "X %–Y % of baseline" ranges.
     pub fn normalized_range(&self, policy_idx: usize, baseline_idx: usize) -> Option<(f64, f64)> {
@@ -141,6 +178,40 @@ pub fn sweep_grid_with_threads(
     policies: &[EngineRef],
     nthreads: usize,
 ) -> SweepResult {
+    sweep_grid_matrix(
+        baseline_topo,
+        policy_topo,
+        model,
+        n_gpus,
+        contexts,
+        batches,
+        policies,
+        &[schedules::zero_offload()],
+        nthreads,
+    )
+}
+
+/// The full engine × schedule sweep: every grid cell runs every
+/// combination, columns ordered engine-major, schedule-minor. A
+/// single-schedule `zero-offload` sweep keeps plain engine labels
+/// (bit-compatible with pre-IR sweep digests); any other schedule set
+/// labels **every** column `engine@schedule`, so the normalization root
+/// (column 0) is always unambiguous. Per cell the memory plan is built
+/// once per engine and shared by its schedules — placement is
+/// schedule-independent.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_grid_matrix(
+    baseline_topo: &SystemTopology,
+    policy_topo: &SystemTopology,
+    model: &ModelConfig,
+    n_gpus: usize,
+    contexts: &[usize],
+    batches: &[usize],
+    policies: &[EngineRef],
+    schedules: &[ScheduleRef],
+    nthreads: usize,
+) -> SweepResult {
+    assert!(!schedules.is_empty(), "need at least one schedule");
     // context-major, batch-minor — the historical serial ordering.
     let grid: Vec<(usize, usize)> = contexts
         .iter()
@@ -149,30 +220,45 @@ pub fn sweep_grid_with_threads(
     let points = par_map(grid.len(), nthreads.max(1), |i| {
         let (c, b) = grid[i];
         let w = Workload::new(n_gpus, b, c);
-        let runs = policies
-            .iter()
-            .map(|engine| {
-                let topo = if engine.is_baseline() {
-                    baseline_topo
-                } else {
-                    policy_topo
-                };
-                let cfg = RunConfig::new(model.clone(), w, engine.clone());
-                MemoryPlan::build(topo, &cfg)
-                    .ok()
-                    .map(|plan| simulate_iteration(topo, &cfg, &plan))
-            })
-            .collect();
+        let mut runs = Vec::with_capacity(policies.len() * schedules.len());
+        for engine in policies {
+            let topo = if engine.is_baseline() {
+                baseline_topo
+            } else {
+                policy_topo
+            };
+            let cfg = RunConfig::new(model.clone(), w, engine.clone());
+            let plan = MemoryPlan::build(topo, &cfg).ok();
+            for sched in schedules {
+                runs.push(plan.as_ref().map(|plan| {
+                    let cfg = cfg.clone().with_schedule(sched.clone());
+                    simulate_iteration(topo, &cfg, plan)
+                }));
+            }
+        }
         GridPoint {
             context: c,
             batch: b,
             runs,
         }
     });
+    let plain_labels = schedules.len() == 1 && schedules[0].name() == "zero-offload";
+    let labels = policies
+        .iter()
+        .flat_map(|p| {
+            schedules.iter().map(move |s| {
+                if plain_labels {
+                    p.name().to_string()
+                } else {
+                    format!("{}@{}", p.name(), s.name())
+                }
+            })
+        })
+        .collect();
     SweepResult {
         model: model.name.clone(),
         n_gpus,
-        policies: policies.iter().map(|p| p.name().to_string()).collect(),
+        policies: labels,
         points,
     }
 }
@@ -301,6 +387,95 @@ mod tests {
         // a different cell set must change the digest
         let c = sweep_grid(&base, &cxl, &qwen25_7b(), 1, &[4096], &[4], &policies);
         assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn schedule_matrix_sweeps_engine_by_schedule() {
+        let base = config_a();
+        let cxl = with_dram_capacity(config_a(), 128 * GIB);
+        let policies = engines(&[Policy::DramOnly, Policy::CxlAware { striping: false }]);
+        let scheds = vec![
+            crate::offload::schedules::by_name("zero-offload").unwrap(),
+            crate::offload::schedules::by_name("lora").unwrap(),
+            crate::offload::schedules::by_name("no-act-offload").unwrap(),
+        ];
+        let res = sweep_grid_matrix(
+            &base,
+            &cxl,
+            &qwen25_7b(),
+            1,
+            &[4096],
+            &[4],
+            &policies,
+            &scheds,
+            2,
+        );
+        // engine-major, schedule-minor columns; multi-schedule sweeps
+        // label every column explicitly so the normalization root is
+        // never ambiguous
+        assert_eq!(
+            res.policies,
+            vec![
+                "baseline-dram@zero-offload",
+                "baseline-dram@lora:16",
+                "baseline-dram@no-act-offload",
+                "cxl-aware@zero-offload",
+                "cxl-aware@lora:16",
+                "cxl-aware@no-act-offload",
+            ]
+        );
+        let runs = &res.points[0].runs;
+        assert_eq!(runs.len(), 6);
+        for r in runs {
+            assert!(r.is_some(), "every cell fits");
+        }
+        // same tokens, strictly less work → lora and the ablation beat the
+        // full schedule under the same engine
+        let (zo, lora, noact) = (
+            runs[3].as_ref().unwrap(),
+            runs[4].as_ref().unwrap(),
+            runs[5].as_ref().unwrap(),
+        );
+        assert!(lora.iter_s < zo.iter_s, "lora must be faster than full FT");
+        assert!(noact.iter_s <= zo.iter_s * 1.001);
+        // matrix with only zero-offload matches the legacy sweep bitwise
+        let plain = sweep_grid(&base, &cxl, &qwen25_7b(), 1, &[4096], &[4], &policies);
+        let matrix_zo = sweep_grid_matrix(
+            &base,
+            &cxl,
+            &qwen25_7b(),
+            1,
+            &[4096],
+            &[4],
+            &policies,
+            &[crate::offload::schedules::zero_offload()],
+            1,
+        );
+        assert_eq!(plain.digest(), matrix_zo.digest());
+    }
+
+    #[test]
+    fn sweep_json_is_parseable_and_self_certifying() {
+        let cxl = with_dram_capacity(config_a(), 128 * GIB);
+        let tiny_base = with_dram_capacity(config_a(), 8 * GIB); // forces an OOM null
+        let policies = engines(&[Policy::DramOnly, Policy::NaiveInterleave]);
+        let res = sweep_grid(&tiny_base, &cxl, &qwen25_7b(), 1, &[4096], &[4], &policies);
+        let j = res.to_json();
+        let text = j.to_string_pretty();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.path(&["digest"]).unwrap().as_str(),
+            Some(format!("{:016x}", res.digest()).as_str())
+        );
+        let points = parsed.path(&["points"]).unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 1);
+        let runs = points[0].path(&["runs"]).unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert!(
+            matches!(runs[0], crate::util::json::Json::Null),
+            "OOM cell must serialize as null"
+        );
+        assert!(runs[1].path(&["iter_s"]).unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

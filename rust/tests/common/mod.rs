@@ -1,0 +1,38 @@
+//! Shared helpers for the golden-digest suites (`golden_trace.rs`,
+//! `schedule_parity.rs`); each test binary compiles this module
+//! independently via `mod common;`.
+
+use std::path::{Path, PathBuf};
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+/// Compare `digest` against `rust/tests/golden/<name>.digest`, blessing
+/// the file on first run (see `rust/tests/golden/README.md`). Blessed
+/// files make the sequence a hard regression gate for every later build,
+/// including across debug/release profiles (digests contain only
+/// IEEE-754-deterministic arithmetic). `suite` labels the blessing log.
+pub fn assert_golden_digest(suite: &str, name: &str, digest: u64) {
+    let dir = golden_dir();
+    let path = dir.join(format!("{name}.digest"));
+    let hex = format!("{digest:016x}");
+    match std::fs::read_to_string(&path) {
+        Ok(recorded) => {
+            assert_eq!(
+                recorded.trim(),
+                hex,
+                "golden trace digest changed for '{name}' — the recorded \
+                 event sequence is no longer byte-identical. If the change \
+                 is intentional, delete {} and re-run to re-bless.",
+                path.display()
+            );
+        }
+        Err(_) => {
+            std::fs::create_dir_all(&dir).ok();
+            std::fs::write(&path, format!("{hex}\n"))
+                .unwrap_or_else(|e| panic!("cannot bless golden digest {}: {e}", path.display()));
+            eprintln!("[{suite}] blessed '{name}' = {hex}");
+        }
+    }
+}

@@ -19,7 +19,7 @@
 //!    them exactly. Delete a file to re-bless after an *intentional*
 //!    behavior change.
 
-use std::path::Path;
+mod common;
 
 use cxlfine::mem::Policy;
 use cxlfine::model::footprint::Workload;
@@ -167,37 +167,9 @@ fn assert_stats_identical<A: Des, B: Des>(a: &A, b: &B, n_ids: u64, what: &str) 
 // Golden-digest persistence (self-blessing).
 // ---------------------------------------------------------------------
 
-fn golden_dir() -> std::path::PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
-}
-
-/// Compare `digest` against `rust/tests/golden/<name>.digest`; bless the
-/// file on first run. Blessed files make the sequence a hard regression
-/// gate for every later build, including across debug/release profiles
-/// (the digest contains only IEEE-754-deterministic arithmetic).
+/// Compare-or-bless via the shared helper (`rust/tests/common/mod.rs`).
 fn assert_golden_digest(name: &str, digest: u64) {
-    let dir = golden_dir();
-    let path = dir.join(format!("{name}.digest"));
-    let hex = format!("{digest:016x}");
-    match std::fs::read_to_string(&path) {
-        Ok(recorded) => {
-            assert_eq!(
-                recorded.trim(),
-                hex,
-                "golden trace digest changed for '{name}' — the simulator's \
-                 event sequence is no longer byte-identical to the recorded \
-                 one. If the change is intentional, delete {} and re-run to \
-                 re-bless.",
-                path.display()
-            );
-        }
-        Err(_) => {
-            std::fs::create_dir_all(&dir).ok();
-            std::fs::write(&path, format!("{hex}\n"))
-                .unwrap_or_else(|e| panic!("cannot bless golden digest {}: {e}", path.display()));
-            eprintln!("[golden_trace] blessed '{name}' = {hex}");
-        }
-    }
+    common::assert_golden_digest("golden_trace", name, digest);
 }
 
 // ---------------------------------------------------------------------

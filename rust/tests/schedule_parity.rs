@@ -1,0 +1,333 @@
+//! The schedule-IR parity lock (ISSUE 3): the declarative `zero-offload`
+//! schedule run through the generic executor must reproduce the FROZEN
+//! legacy iteration engine (`offload::iteration`) **byte-for-byte** —
+//! span-for-span identical traces (names, lanes, `to_bits` timestamps, in
+//! recording order) and bitwise-equal phase breakdowns — across the
+//! paper's Fig. 7/9/10 cells, both topologies, every placement policy and
+//! several prefetch depths.
+//!
+//! New-schedule behavior is locked the same way the DES refactor was:
+//! golden digests under `rust/tests/golden/` (self-blessing on the first
+//! toolchain run — this repo is authored in a container without cargo),
+//! plus semantic assertions that do not depend on blessed files.
+
+mod common;
+
+use cxlfine::mem::Policy;
+use cxlfine::model::footprint::Workload;
+use cxlfine::model::presets::{mistral_nemo_12b, qwen25_7b};
+use cxlfine::model::ModelConfig;
+use cxlfine::offload::{
+    legacy_simulate_iteration_traced, schedules, simulate_iteration_report,
+    simulate_iteration_traced, MemoryPlan, RunConfig,
+};
+use cxlfine::topology::presets::{config_a, config_b, with_dram_capacity};
+use cxlfine::topology::SystemTopology;
+use cxlfine::util::units::GIB;
+
+// ---------------------------------------------------------------------
+// Differential lock: schedule executor vs the frozen legacy engine.
+// ---------------------------------------------------------------------
+
+fn assert_parity(
+    what: &str,
+    topo: &SystemTopology,
+    model: ModelConfig,
+    w: Workload,
+    policy: Policy,
+    prefetch_depth: usize,
+) {
+    let mut cfg = RunConfig::new(model, w, policy);
+    cfg.prefetch_depth = prefetch_depth;
+    let plan = MemoryPlan::build(topo, &cfg).expect("cell must fit");
+
+    let (legacy_bd, legacy_trace) = legacy_simulate_iteration_traced(topo, &cfg, &plan);
+    let (new_bd, new_trace) = simulate_iteration_traced(topo, &cfg, &plan);
+
+    // Span-for-span equality with a pinpointing error message before the
+    // digest (which would only say "something differs").
+    assert_eq!(
+        new_trace.spans().len(),
+        legacy_trace.spans().len(),
+        "{what}: span counts diverge"
+    );
+    for (i, (n, l)) in new_trace
+        .spans()
+        .iter()
+        .zip(legacy_trace.spans())
+        .enumerate()
+    {
+        assert!(
+            n.name == l.name
+                && n.lane == l.lane
+                && n.start_s.to_bits() == l.start_s.to_bits()
+                && n.end_s.to_bits() == l.end_s.to_bits(),
+            "{what}: span #{i} diverges — new {n:?} vs legacy {l:?}"
+        );
+    }
+    assert_eq!(
+        new_trace.digest(),
+        legacy_trace.digest(),
+        "{what}: trace digests diverge"
+    );
+
+    for (field, a, b) in [
+        ("fwd_s", new_bd.fwd_s, legacy_bd.fwd_s),
+        ("bwd_s", new_bd.bwd_s, legacy_bd.bwd_s),
+        ("step_s", new_bd.step_s, legacy_bd.step_s),
+        ("iter_s", new_bd.iter_s, legacy_bd.iter_s),
+    ] {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{what}: breakdown {field} diverges ({a} vs {b})"
+        );
+    }
+    assert_eq!(new_bd.tokens, legacy_bd.tokens, "{what}: tokens diverge");
+}
+
+#[test]
+fn parity_fig9_cell_cxl_aware() {
+    let topo = with_dram_capacity(config_a(), 128 * GIB);
+    assert_parity(
+        "fig9 qwen7b 1x8x4096 cxl-aware",
+        &topo,
+        qwen25_7b(),
+        Workload::new(1, 8, 4096),
+        Policy::CxlAware { striping: false },
+        2,
+    );
+}
+
+#[test]
+fn parity_fig7_cell_naive_breakdown() {
+    let topo = with_dram_capacity(config_a(), 128 * GIB);
+    assert_parity(
+        "fig7a nemo12b 1x16x4096 naive",
+        &topo,
+        mistral_nemo_12b(),
+        Workload::new(1, 16, 4096),
+        Policy::NaiveInterleave,
+        2,
+    );
+}
+
+#[test]
+fn parity_fig7b_transfer_bound_dual_gpu() {
+    // B=1 is the most transfer-bound cell the paper probes — the hardest
+    // case for issuance-order parity because kernels barely hide flows.
+    let topo = with_dram_capacity(config_a(), 128 * GIB);
+    assert_parity(
+        "fig7b nemo12b 2x1x4096 naive",
+        &topo,
+        mistral_nemo_12b(),
+        Workload::new(2, 1, 4096),
+        Policy::NaiveInterleave,
+        2,
+    );
+}
+
+#[test]
+fn parity_fig10_cell_dual_aic_striping() {
+    let topo = with_dram_capacity(config_b(), 128 * GIB);
+    assert_parity(
+        "fig10 nemo12b 2x16x4096 striped",
+        &topo,
+        mistral_nemo_12b(),
+        Workload::new(2, 16, 4096),
+        Policy::CxlAware { striping: true },
+        2,
+    );
+}
+
+#[test]
+fn parity_dram_baseline_dual_gpu() {
+    let topo = config_a();
+    assert_parity(
+        "baseline qwen7b 2x4x4096 dram",
+        &topo,
+        qwen25_7b(),
+        Workload::new(2, 4, 4096),
+        Policy::DramOnly,
+        2,
+    );
+}
+
+#[test]
+fn parity_across_prefetch_depths() {
+    // Depth changes the prefetch-window shape (and therefore the whole
+    // issuance interleave); the builder must track the legacy engine at
+    // every depth, including depth > layers on the shallow 7B model.
+    let topo = with_dram_capacity(config_a(), 128 * GIB);
+    for depth in [1, 3, 64] {
+        assert_parity(
+            &format!("qwen7b 1x8x4096 cxl-aware depth={depth}"),
+            &topo,
+            qwen25_7b(),
+            Workload::new(1, 8, 4096),
+            Policy::CxlAware { striping: false },
+            depth,
+        );
+    }
+}
+
+#[test]
+fn parity_adaptive_spill_engine() {
+    // A post-paper engine exercises different stripe fractions through the
+    // same schedule.
+    let topo = with_dram_capacity(config_b(), 128 * GIB);
+    let mut cfg = RunConfig::new(
+        qwen25_7b(),
+        Workload::new(2, 8, 4096),
+        cxlfine::mem::engine::by_name("adaptive-spill").unwrap(),
+    );
+    cfg.prefetch_depth = 2;
+    let plan = MemoryPlan::build(&topo, &cfg).expect("fits");
+    let (legacy_bd, legacy_trace) = legacy_simulate_iteration_traced(&topo, &cfg, &plan);
+    let (new_bd, new_trace) = simulate_iteration_traced(&topo, &cfg, &plan);
+    assert_eq!(new_trace.digest(), legacy_trace.digest());
+    assert_eq!(new_bd.iter_s.to_bits(), legacy_bd.iter_s.to_bits());
+}
+
+// ---------------------------------------------------------------------
+// Satellite: per-GPU kernel pricing (heterogeneous fleets).
+// ---------------------------------------------------------------------
+
+#[test]
+fn heterogeneous_fleet_slow_gpu_lengthens_only_its_lane() {
+    // The legacy engine priced every GPU at gpus[0]'s rating; the executor
+    // prices each kernel with its own GPU. Halve GPU 1's MFU and check the
+    // slowdown stays in its lane.
+    let mut topo = config_a();
+    topo.gpus[1].mfu /= 2.0;
+    let cfg = RunConfig::new(qwen25_7b(), Workload::new(2, 4, 4096), Policy::DramOnly);
+    let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+    let (report, trace) = simulate_iteration_report(&topo, &cfg, &plan);
+
+    let busy = |lane: &str| {
+        trace
+            .lane_busy()
+            .into_iter()
+            .find(|(l, _)| l == lane)
+            .map(|(_, b)| b)
+            .unwrap_or_else(|| panic!("lane {lane} missing"))
+    };
+    let fast = busy("gpu0/compute");
+    let slow = busy("gpu1/compute");
+    assert!(
+        (slow / fast - 2.0).abs() < 1e-9,
+        "halved MFU must exactly double gpu1's compute time: {fast} vs {slow}"
+    );
+
+    // gpu0's kernels are priced identically to the homogeneous machine
+    let homo = config_a();
+    let plan_h = MemoryPlan::build(&homo, &cfg).unwrap();
+    let (_, trace_h) = simulate_iteration_report(&homo, &cfg, &plan_h);
+    let fast_h = trace_h
+        .lane_busy()
+        .into_iter()
+        .find(|(l, _)| l == "gpu0/compute")
+        .map(|(_, b)| b)
+        .unwrap();
+    assert_eq!(
+        fast.to_bits(),
+        fast_h.to_bits(),
+        "the fast GPU's own kernel time must be untouched"
+    );
+
+    // ...and the legacy engine demonstrably got this wrong: it priced the
+    // slow GPU at gpu0's rating, finishing impossibly early.
+    let (legacy_bd, _) = legacy_simulate_iteration_traced(&topo, &cfg, &plan);
+    assert!(
+        report.iter_s > legacy_bd.iter_s,
+        "executor must charge the slow GPU honestly (new {} vs legacy {})",
+        report.iter_s,
+        legacy_bd.iter_s
+    );
+}
+
+// ---------------------------------------------------------------------
+// Golden digests for the new schedules (self-blessing, like PR 2's).
+// ---------------------------------------------------------------------
+
+fn assert_golden_digest(name: &str, digest: u64) {
+    common::assert_golden_digest("schedule_parity", name, digest);
+}
+
+fn schedule_cell_digest(schedule: &str) -> u64 {
+    let topo = with_dram_capacity(config_a(), 128 * GIB);
+    let cfg = RunConfig::new(
+        qwen25_7b(),
+        Workload::new(1, 4, 4096),
+        Policy::CxlAware { striping: false },
+    )
+    .with_schedule(schedules::by_name(schedule).unwrap());
+    let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+    let (_, trace) = simulate_iteration_report(&topo, &cfg, &plan);
+    assert!(!trace.is_empty());
+    trace.digest()
+}
+
+#[test]
+fn golden_schedule_grad_accum() {
+    assert_golden_digest("sched_grad_accum2_qwen7b_c4096_b4", schedule_cell_digest("grad-accum:2"));
+}
+
+#[test]
+fn golden_schedule_lora() {
+    assert_golden_digest("sched_lora16_qwen7b_c4096_b4", schedule_cell_digest("lora:16"));
+}
+
+#[test]
+fn golden_schedule_no_act_offload() {
+    assert_golden_digest(
+        "sched_no_act_offload_qwen7b_c4096_b4",
+        schedule_cell_digest("no-act-offload"),
+    );
+}
+
+// ---------------------------------------------------------------------
+// Cross-schedule semantics at paper scale.
+// ---------------------------------------------------------------------
+
+#[test]
+fn new_schedules_relate_sanely_at_paper_scale() {
+    let topo = with_dram_capacity(config_a(), 128 * GIB);
+    let mk = |sched: &str| {
+        let cfg = RunConfig::new(
+            qwen25_7b(),
+            Workload::new(1, 4, 4096),
+            Policy::CxlAware { striping: false },
+        )
+        .with_schedule(schedules::by_name(sched).unwrap());
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        simulate_iteration_report(&topo, &cfg, &plan).0
+    };
+    let zo = mk("zero-offload");
+    let ga = mk("grad-accum:2");
+    let lo = mk("lora");
+    let na = mk("no-act-offload");
+
+    // grad accumulation: 2× tokens, one step → better tokens/s than two
+    // separate iterations, never better than 2× the work in 1× the time
+    assert_eq!(ga.tokens, 2 * zo.tokens);
+    assert!(ga.iter_s > zo.iter_s && ga.iter_s < 2.0 * zo.iter_s);
+    assert!(ga.tokens_per_sec() > zo.tokens_per_sec());
+    // accumulation interleaves phases — the overlap satellite at scale
+    assert!(ga.overlaps("fwd", "bwd"));
+    assert!(!zo.overlaps("bwd", "step"));
+
+    // LoRA: the optimizer's working set collapses, STEP nearly vanishes
+    let zo_bd = zo.to_breakdown();
+    let lo_bd = lo.to_breakdown();
+    assert!(
+        lo_bd.step_s < 0.1 * zo_bd.step_s,
+        "lora step {} vs full {}",
+        lo_bd.step_s,
+        zo_bd.step_s
+    );
+    assert!(lo_bd.iter_s < zo_bd.iter_s);
+
+    // the activation ablation only removes traffic
+    assert!(na.iter_s <= zo.iter_s * (1.0 + 1e-9));
+}

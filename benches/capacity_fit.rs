@@ -1,0 +1,146 @@
+//! Capacity fit: the largest (model, context) cell each placement engine
+//! can fit under a constrained DRAM budget, with **static** (whole-run
+//! sum) versus **lifetime-aware** (per-phase peak) capacity accounting.
+//!
+//! This is the memory-side headline of the tensor-lifetime IR: activation
+//! checkpoints are dead during the optimizer step and the fp32 working
+//! set is dead until it, so the per-phase peak is far below the static
+//! sum — timeline accounting admits contexts the static check rejects as
+//! OOM (most dramatically for the DRAM-only baseline, where every byte
+//! competes for the same node).
+//!
+//! Results land in `bench_out/capacity_fit/` and in `BENCH_mem.json`
+//! (override: `CXLFINE_BENCH_MEM_OUT`), which the CI bench-smoke job
+//! uploads on every push (`--smoke` preset) so the capacity trajectory is
+//! recorded alongside the DES and schedule ones.
+
+use cxlfine::mem::engine;
+use cxlfine::model::footprint::Workload;
+use cxlfine::model::presets::{mistral_nemo_12b, qwen25_7b};
+use cxlfine::model::ModelConfig;
+use cxlfine::offload::{MemoryPlan, RunConfig};
+use cxlfine::topology::presets::{config_a, with_dram_capacity};
+use cxlfine::topology::SystemTopology;
+use cxlfine::trow;
+use cxlfine::util::bench::BenchReport;
+use cxlfine::util::json::{Json, JsonObj};
+use cxlfine::util::table::Table;
+use cxlfine::util::units::{fmt_bytes, GIB};
+
+/// Largest ladder context that fits (0 = not even the smallest rung).
+fn largest_fitting_context(
+    topo: &SystemTopology,
+    model: &ModelConfig,
+    batch: usize,
+    engine: &cxlfine::mem::EngineRef,
+    lifetime_aware: bool,
+    ladder: &[usize],
+) -> usize {
+    let mut best = 0;
+    for &c in ladder {
+        let cfg = RunConfig::new(model.clone(), Workload::new(1, batch, c), engine.clone());
+        let fits = if lifetime_aware {
+            MemoryPlan::fits_lifetime_aware(topo, &cfg)
+        } else {
+            MemoryPlan::fits(topo, &cfg)
+        };
+        if fits {
+            best = c;
+        } else {
+            // fit is monotone in context (activations only grow)
+            break;
+        }
+    }
+    best
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut report = BenchReport::new("capacity_fit");
+
+    // (model, DRAM budget that makes capacity bind without starving the
+    // fp32 working set at batch 8)
+    let cells: Vec<(ModelConfig, u64)> = if smoke {
+        vec![(qwen25_7b(), 192 * GIB)]
+    } else {
+        vec![(qwen25_7b(), 192 * GIB), (mistral_nemo_12b(), 320 * GIB)]
+    };
+    let step = if smoke { 8192 } else { 4096 };
+    let ladder: Vec<usize> = (1..=(131072 / step)).map(|i| i * step).collect();
+    let batch = 8usize;
+
+    let mut json_cells = Vec::new();
+    for (model, dram) in &cells {
+        let topo = with_dram_capacity(config_a(), *dram);
+        let mut t = Table::new(&[
+            "engine",
+            "static max ctx",
+            "lifetime max ctx",
+            "admitted extra",
+        ])
+        .left(0);
+        let mut raws = Vec::new();
+        for eng in engine::registry() {
+            let stat = largest_fitting_context(&topo, model, batch, &eng, false, &ladder);
+            let life = largest_fitting_context(&topo, model, batch, &eng, true, &ladder);
+            assert!(
+                life >= stat,
+                "{}/{}: lifetime accounting must never fit less (static {stat}, lifetime {life})",
+                model.name,
+                eng.name()
+            );
+            if eng.name() == "baseline-dram" {
+                // Every byte competes for DRAM, so the dead-window overlay
+                // must admit strictly longer contexts.
+                assert!(
+                    life > stat,
+                    "{}: baseline-dram must gain context from lifetime accounting \
+                     (static {stat}, lifetime {life})",
+                    model.name
+                );
+            }
+            let gain = if stat > 0 {
+                format!("{:+.0}%", 100.0 * (life as f64 / stat as f64 - 1.0))
+            } else if life > 0 {
+                "inf".into()
+            } else {
+                "-".into()
+            };
+            t.row(trow![eng.name(), stat, life, gain]);
+            let mut cell = JsonObj::new();
+            cell.set("engine", eng.name());
+            cell.set("static_max_context", stat);
+            cell.set("lifetime_max_context", life);
+            raws.push(Json::Obj(cell));
+        }
+        println!(
+            "{} @ batch {batch}, DRAM {} (ladder step {step}, max {})",
+            model.name,
+            fmt_bytes(*dram),
+            ladder.last().unwrap()
+        );
+        let series = model.name.replace('.', "_");
+        report.section(&series, t, Json::Arr(raws.clone()));
+        json_cells.push(Json::Obj({
+            let mut js = JsonObj::new();
+            js.set("model", model.name.as_str());
+            js.set("dram_bytes", *dram);
+            js.set("batch", batch);
+            js.set("engines", Json::Arr(raws));
+            js
+        }));
+    }
+
+    let mut root = JsonObj::new();
+    root.set("bench", "capacity_fit");
+    root.set("smoke", smoke);
+    root.set("ladder_step", step);
+    root.set("cells", Json::Arr(json_cells));
+    let out = std::env::var("CXLFINE_BENCH_MEM_OUT").unwrap_or_else(|_| "BENCH_mem.json".into());
+    let payload = Json::Obj(root).to_string_pretty();
+    match std::fs::write(&out, &payload) {
+        Ok(()) => println!("\n[capacity_fit] wrote {out}"),
+        Err(e) => eprintln!("warn: could not write {out}: {e}"),
+    }
+    report.finish();
+}

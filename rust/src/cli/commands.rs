@@ -65,7 +65,7 @@ pub fn topo(args: &[String]) -> Result<(), CliDone> {
 }
 
 pub fn plan(args: &[String]) -> Result<(), CliDone> {
-    let spec = CliSpec::new("cxlfine plan", "memory footprint + placement")
+    let spec = CliSpec::new("cxlfine plan", "memory footprint + placement + tensor table")
         .opt("model", "12b", "7b | 12b | tiny | tiny-2m")
         .opt("preset", "config-a", "hardware preset")
         .opt("dram", "", "override DRAM capacity (e.g. 128GiB)")
@@ -75,12 +75,28 @@ pub fn plan(args: &[String]) -> Result<(), CliDone> {
         .opt(
             "policy",
             "cxl-aware",
-            "placement policy (baseline|naive|cxl-aware|cxl-aware+striping|adaptive-spill)",
+            "placement policy (baseline|naive|cxl-aware|cxl-aware+striping|adaptive-spill|profile-aware)",
+        )
+        .opt(
+            "schedule",
+            "zero-offload",
+            "schedule the tensor profiles are measured from",
+        )
+        .opt(
+            "json",
+            "",
+            "write the tensor table (profile + placement + lifetime per region) to this JSON file",
+        )
+        .flag(
+            "lifetime",
+            "lifetime-aware capacity accounting: fit per-phase peak occupancy, not the static sum",
         );
     let a = parse(spec, args)?;
     let topo = get_topo(a.get("preset").unwrap(), a.get("dram").filter(|s| !s.is_empty()))?;
     let model = get_model(a.get("model").unwrap())?;
     let policy = get_engine(a.get("policy").unwrap())?;
+    let schedule = get_schedule(a.get("schedule").unwrap())?;
+    let lifetime = a.flag("lifetime");
     let w = Workload::new(
         a.parse_usize("gpus")?,
         a.parse_usize("batch")?,
@@ -104,15 +120,141 @@ pub fn plan(args: &[String]) -> Result<(), CliDone> {
         w.context
     );
     print!("{}", t.render());
-    let cfg = RunConfig::new(model, w, policy);
-    match MemoryPlan::build(&topo, &cfg) {
+    let cfg = RunConfig::new(model, w, policy).with_schedule(schedule.clone());
+    let built = if lifetime {
+        MemoryPlan::build_lifetime_aware(&topo, &cfg)
+    } else {
+        MemoryPlan::build(&topo, &cfg)
+    };
+    match built {
         Ok(plan) => {
+            // The tensor table wants profiles even under engines that don't
+            // consume them for placement; reuse the plan's own pass when it
+            // already ran one (lifetime mode / profile-aware engine).
+            let profiles = match &plan.profiles {
+                Some(p) => p.clone(),
+                None => MemoryPlan::profile_run(&topo, &cfg).map_err(|e| anyhow!("{e}"))?,
+            };
             println!();
             print!("{}", plan.alloc.describe());
+            println!();
+            println!(
+                "tensor table (schedule {}, phases: {}):",
+                schedule.name(),
+                profiles.phases.join(" → ")
+            );
+            let mut tt = Table::new(&[
+                "region",
+                "class",
+                "bytes",
+                "H2D/iter",
+                "D2H/iter",
+                "RMW elems",
+                "live",
+                "placement",
+            ])
+            .left(0)
+            .left(1)
+            .left(7);
+            for r in plan.alloc.regions() {
+                let p = profiles.get(&r.name);
+                let parts: Vec<String> = r
+                    .placement
+                    .parts
+                    .iter()
+                    .map(|(n, b)| format!("{}={}", topo.node(*n).name, fmt_bytes(*b)))
+                    .collect();
+                tt.row(trow![
+                    r.name.clone(),
+                    r.class.name(),
+                    fmt_bytes(r.bytes),
+                    p.map(|p| fmt_bytes(p.h2d_bytes as u64)).unwrap_or_else(|| "-".into()),
+                    p.map(|p| fmt_bytes(p.d2h_bytes as u64)).unwrap_or_else(|| "-".into()),
+                    p.map(|p| p.cpu_rmw_elements.to_string()).unwrap_or_else(|| "-".into()),
+                    p.map(|p| p.lifetime.to_string()).unwrap_or_else(|| "-".into()),
+                    parts.join(" + ")
+                ]);
+            }
+            print!("{}", tt.render());
+            if let Some(path) = a.get("json").filter(|s| !s.is_empty()) {
+                let json = tensor_table_json(&topo, &cfg, &plan, &profiles, lifetime);
+                std::fs::write(path, json.to_string_pretty())
+                    .map_err(|e| anyhow!("writing {path}: {e}"))?;
+                println!("wrote {path}");
+            }
         }
         Err(e) => println!("\nplan does NOT fit: {e}"),
     }
     Ok(())
+}
+
+/// The machine-readable tensor table `plan --json` emits: one entry per
+/// region with its measured profile, committed placement, and lifetime —
+/// what sweeps and notebooks consume.
+fn tensor_table_json(
+    topo: &SystemTopology,
+    cfg: &RunConfig,
+    plan: &MemoryPlan<'_>,
+    profiles: &crate::offload::RunProfiles,
+    lifetime: bool,
+) -> crate::util::json::Json {
+    use crate::jobj;
+    use crate::util::json::Json;
+    let phases: Vec<Json> = profiles.phases.iter().map(|p| Json::Str(p.clone())).collect();
+    let regions: Vec<Json> = plan
+        .alloc
+        .regions()
+        .map(|r| {
+            let placement: Vec<Json> = r
+                .placement
+                .parts
+                .iter()
+                .map(|(n, b)| {
+                    jobj! {
+                        "node" => n.0,
+                        "name" => topo.node(*n).name.as_str(),
+                        "bytes" => *b,
+                    }
+                })
+                .collect();
+            let profile = match profiles.get(&r.name) {
+                Some(p) => jobj! {
+                    "h2d_bytes" => p.h2d_bytes,
+                    "d2h_bytes" => p.d2h_bytes,
+                    "cpu_rmw_elements" => p.cpu_rmw_elements,
+                    "cpu_stream_bytes" => p.cpu_stream_bytes,
+                    "touches" => p.touches as u64,
+                    "birth_phase" => p.lifetime.birth_phase as u64,
+                    "death_phase" => p.lifetime.death_phase as u64,
+                },
+                None => Json::Null,
+            };
+            let committed_lifetime = match r.lifetime {
+                Some(l) => jobj! {
+                    "birth_phase" => l.birth_phase as u64,
+                    "death_phase" => l.death_phase as u64,
+                },
+                None => Json::Null,
+            };
+            jobj! {
+                "name" => r.name.as_str(),
+                "class" => r.class.name(),
+                "bytes" => r.bytes,
+                "profile" => profile,
+                "lifetime" => committed_lifetime,
+                "placement" => Json::Arr(placement),
+            }
+        })
+        .collect();
+    jobj! {
+        "model" => cfg.model.name.as_str(),
+        "policy" => cfg.engine.name(),
+        "schedule" => cfg.schedule.name(),
+        "topology" => topo.name.as_str(),
+        "lifetime_accounting" => lifetime,
+        "phases" => Json::Arr(phases),
+        "regions" => Json::Arr(regions),
+    }
 }
 
 pub fn simulate(args: &[String]) -> Result<(), CliDone> {
@@ -186,7 +328,7 @@ pub fn sweep(args: &[String]) -> Result<(), CliDone> {
         .opt(
             "ours",
             "",
-            "engine for the 'ours' column (any registered policy, e.g. adaptive-spill)",
+            "engine for the 'ours' column (any registered policy, e.g. adaptive-spill or profile-aware)",
         )
         .opt(
             "schedule",

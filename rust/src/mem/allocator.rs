@@ -2,20 +2,50 @@
 //! computed by a [`PlacementEngine`], and reports utilization. This is the
 //! library's stand-in for `libnuma`/`numactl` in the real system — plus the
 //! paper's CXL-aware logic layered on top.
+//!
+//! Capacity is accounted on a **timeline**: each node carries one usage
+//! counter per schedule phase, and a region with a scoped
+//! [`Lifetime`] occupies only the phases of its liveness window. The fit
+//! check is therefore *per-phase peak* occupancy, not the static sum —
+//! activations dead during the optimizer step no longer count against the
+//! step-phase peak, which lets configurations fit that static accounting
+//! rejects as OOM. The default single-phase allocator
+//! ([`NumaAllocator::new`]) degenerates to exactly the legacy static
+//! arithmetic: one phase, every region eternal, `free = capacity − Σ
+//! committed` — byte-identical to the pre-timeline code.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::engine::{EngineRef, PlacementEngine};
-use super::region::{Placement, Region, RegionId, RegionRequest};
+use super::profile::AccessProfile;
+use super::region::{Lifetime, Placement, Region, RegionId, RegionRequest};
 use crate::topology::{NodeId, SystemTopology};
 use crate::util::units::fmt_bytes;
 
-/// Allocation failure.
+/// Per-node view of an allocation failure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeShortfall {
+    pub node: NodeId,
+    /// Bytes available on the node during the request's liveness window.
+    pub free: u64,
+    /// Bytes the request tried to put there (the whole region when the
+    /// engine refused to place, the node's shard when commit overflowed).
+    pub requested: u64,
+    /// Missing bytes on this node.
+    pub shortfall: u64,
+}
+
+/// Allocation failure, with the per-node breakdown the satellite asks for.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AllocError {
     pub request: String,
     pub bytes: u64,
     pub shortfall: u64,
+    /// `(node, free, requested, shortfall)` breakdown at failure time.
+    pub nodes: Vec<NodeShortfall>,
+    /// Phase at which peak occupancy was exceeded (timeline accounting;
+    /// `None` when the engine itself refused the placement).
+    pub phase: Option<usize>,
 }
 
 impl std::fmt::Display for AllocError {
@@ -26,7 +56,24 @@ impl std::fmt::Display for AllocError {
             self.request,
             fmt_bytes(self.bytes),
             fmt_bytes(self.shortfall)
-        )
+        )?;
+        if let Some(ph) = self.phase {
+            write!(f, " at phase {ph} peak")?;
+        }
+        // Nodes with zero shortfall had room for the whole request — the
+        // engine declined them for placement-rule reasons, not capacity —
+        // so only truly-short nodes make the diagnostic line.
+        for n in self.nodes.iter().filter(|n| n.shortfall > 0) {
+            write!(
+                f,
+                "; node{} free {} < requested {} (short {})",
+                n.node.0,
+                fmt_bytes(n.free),
+                fmt_bytes(n.requested),
+                fmt_bytes(n.shortfall)
+            )?;
+        }
+        Ok(())
     }
 }
 impl std::error::Error for AllocError {}
@@ -35,18 +82,35 @@ impl std::error::Error for AllocError {}
 pub struct NumaAllocator<'t> {
     topo: &'t SystemTopology,
     engine: EngineRef,
-    free: Vec<u64>,
-    regions: HashMap<usize, Region>,
+    /// `used[node][phase]` — committed bytes live on the node during the
+    /// phase. Single-phase allocators reproduce static accounting.
+    used: Vec<Vec<u64>>,
+    n_phases: usize,
+    regions: BTreeMap<usize, Region>,
     next_id: usize,
 }
 
 impl<'t> NumaAllocator<'t> {
+    /// Static accounting: one phase, every region live for the whole run.
     pub fn new(topo: &'t SystemTopology, engine: impl Into<EngineRef>) -> Self {
+        Self::with_phases(topo, engine, 1)
+    }
+
+    /// Timeline accounting over `n_phases` schedule phases: regions with a
+    /// [`Lifetime`] occupy only their window, and the fit check is the
+    /// per-phase peak.
+    pub fn with_phases(
+        topo: &'t SystemTopology,
+        engine: impl Into<EngineRef>,
+        n_phases: usize,
+    ) -> Self {
+        let n_phases = n_phases.max(1);
         Self {
             topo,
             engine: engine.into(),
-            free: topo.mem_nodes.iter().map(|n| n.capacity).collect(),
-            regions: HashMap::new(),
+            used: topo.mem_nodes.iter().map(|_| vec![0; n_phases]).collect(),
+            n_phases,
+            regions: BTreeMap::new(),
             next_id: 0,
         }
     }
@@ -60,25 +124,90 @@ impl<'t> NumaAllocator<'t> {
         self.topo
     }
 
-    /// Free bytes on a node.
+    /// Number of timeline phases (1 = static accounting).
+    pub fn n_phases(&self) -> usize {
+        self.n_phases
+    }
+
+    /// A request's effective phase window, clamped to the timeline.
+    fn window(&self, lifetime: Option<Lifetime>) -> (usize, usize) {
+        let last = self.n_phases - 1;
+        match lifetime {
+            Some(l) => ((l.birth_phase as usize).min(last), (l.death_phase as usize).min(last)),
+            None => (0, last),
+        }
+    }
+
+    /// Peak committed bytes on a node across all phases.
+    fn peak_used(&self, node: usize) -> u64 {
+        self.used[node].iter().copied().max().unwrap_or(0)
+    }
+
+    /// Free bytes on a node (against its peak-phase occupancy).
     pub fn free_on(&self, node: NodeId) -> u64 {
-        self.free[node.0]
+        self.topo.node(node).capacity - self.peak_used(node.0)
     }
 
-    /// Used bytes on a node.
+    /// Used bytes on a node (peak across phases).
     pub fn used_on(&self, node: NodeId) -> u64 {
-        self.topo.node(node).capacity - self.free[node.0]
+        self.peak_used(node.0)
     }
 
-    /// Place and commit a region.
+    /// Committed bytes on a node during one phase.
+    pub fn used_on_at(&self, node: NodeId, phase: usize) -> u64 {
+        self.used[node.0][phase.min(self.n_phases - 1)]
+    }
+
+    /// Free bytes per node during `[lo, hi]` — what a request with that
+    /// liveness window can actually claim.
+    fn window_free(&self, lo: usize, hi: usize) -> Vec<u64> {
+        self.topo
+            .mem_nodes
+            .iter()
+            .enumerate()
+            .map(|(n, spec)| {
+                let peak = self.used[n][lo..=hi].iter().copied().max().unwrap_or(0);
+                spec.capacity - peak
+            })
+            .collect()
+    }
+
+    /// Place and commit a region (no profile context: legacy engines see
+    /// exactly the pre-refactor inputs).
     pub fn alloc(&mut self, req: RegionRequest) -> Result<RegionId, AllocError> {
+        self.alloc_profiled(req, None)
+    }
+
+    /// Place and commit a region, handing the engine its measured
+    /// [`AccessProfile`] when one exists. Every allocation — profiled or
+    /// not — routes through [`PlacementEngine::place_profiled`]; the
+    /// default implementation delegates to `place`, so legacy engines stay
+    /// byte-identical.
+    pub fn alloc_profiled(
+        &mut self,
+        req: RegionRequest,
+        profile: Option<&AccessProfile>,
+    ) -> Result<RegionId, AllocError> {
+        let (lo, hi) = self.window(req.lifetime);
+        let free = self.window_free(lo, hi);
         let placement = self
             .engine
-            .place(self.topo, &req, &self.free)
+            .place_profiled(self.topo, &req, profile, &free)
             .map_err(|shortfall| AllocError {
                 request: req.name.clone(),
                 bytes: req.bytes,
                 shortfall,
+                nodes: free
+                    .iter()
+                    .enumerate()
+                    .map(|(n, &f)| NodeShortfall {
+                        node: NodeId(n),
+                        free: f,
+                        requested: req.bytes,
+                        shortfall: req.bytes.saturating_sub(f),
+                    })
+                    .collect(),
+                phase: None,
             })?;
         placement.validate(req.bytes);
         self.commit(req, placement)
@@ -91,20 +220,37 @@ impl<'t> NumaAllocator<'t> {
         req: RegionRequest,
         placement: Placement,
     ) -> Result<RegionId, AllocError> {
+        let (lo, hi) = self.window(req.lifetime);
         for (n, b) in &placement.parts {
-            if *b > self.free[n.0] {
-                return Err(AllocError {
-                    request: req.name.clone(),
-                    bytes: req.bytes,
-                    shortfall: *b - self.free[n.0],
-                });
+            for ph in lo..=hi {
+                let cap = self.topo.node(*n).capacity;
+                let free = cap - self.used[n.0][ph];
+                if *b > free {
+                    return Err(AllocError {
+                        request: req.name.clone(),
+                        bytes: req.bytes,
+                        shortfall: *b - free,
+                        nodes: vec![NodeShortfall {
+                            node: *n,
+                            free,
+                            requested: *b,
+                            shortfall: *b - free,
+                        }],
+                        phase: Some(ph),
+                    });
+                }
             }
         }
         for (n, b) in &placement.parts {
-            self.free[n.0] -= *b;
+            for ph in lo..=hi {
+                self.used[n.0][ph] += *b;
+            }
         }
         let id = RegionId(self.next_id);
         self.next_id += 1;
+        let lifetime = req
+            .lifetime
+            .map(|_| Lifetime::spanning(lo as u32, hi as u32));
         self.regions.insert(
             id.0,
             Region {
@@ -114,18 +260,23 @@ impl<'t> NumaAllocator<'t> {
                 bytes: req.bytes,
                 gpu: req.gpu,
                 placement,
+                lifetime,
             },
         );
         Ok(id)
     }
 
-    /// Release a region, returning its bytes to the nodes.
+    /// Release a region, returning its bytes to the nodes (across every
+    /// phase of its committed window).
     pub fn release(&mut self, id: RegionId) -> bool {
         match self.regions.remove(&id.0) {
             Some(r) => {
+                let (lo, hi) = self.window(r.lifetime);
                 for (n, b) in &r.placement.parts {
-                    self.free[n.0] += *b;
-                    debug_assert!(self.free[n.0] <= self.topo.node(*n).capacity);
+                    for ph in lo..=hi {
+                        debug_assert!(self.used[n.0][ph] >= *b, "release underflow");
+                        self.used[n.0][ph] -= *b;
+                    }
                 }
                 true
             }
@@ -137,6 +288,8 @@ impl<'t> NumaAllocator<'t> {
         self.regions.get(&id.0)
     }
 
+    /// Regions in ascending [`RegionId`] order (a `BTreeMap` underneath,
+    /// so reports and digests over the table are stable across runs).
     pub fn regions(&self) -> impl Iterator<Item = &Region> {
         self.regions.values()
     }
@@ -145,7 +298,7 @@ impl<'t> NumaAllocator<'t> {
         self.regions.len()
     }
 
-    /// Total bytes allocated across all nodes.
+    /// Total bytes allocated across all nodes (peak-phase view).
     pub fn total_used(&self) -> u64 {
         self.topo
             .all_nodes()
@@ -162,7 +315,7 @@ impl<'t> NumaAllocator<'t> {
         for n in self.topo.all_nodes() {
             let spec = self.topo.node(n);
             let used = self.used_on(n);
-            let _ = writeln!(
+            let _ = write!(
                 s,
                 "  {}: {} / {} used ({:.1}%)",
                 spec.name,
@@ -170,17 +323,22 @@ impl<'t> NumaAllocator<'t> {
                 fmt_bytes(spec.capacity),
                 100.0 * used as f64 / spec.capacity as f64
             );
+            if self.n_phases > 1 {
+                let peaks: Vec<String> = (0..self.n_phases)
+                    .map(|ph| fmt_bytes(self.used[n.0][ph]))
+                    .collect();
+                let _ = write!(s, " — per-phase [{}]", peaks.join(", "));
+            }
+            let _ = writeln!(s);
         }
-        let mut regions: Vec<&Region> = self.regions.values().collect();
-        regions.sort_by_key(|r| r.id.0);
-        for r in regions {
+        for r in self.regions.values() {
             let parts: Vec<String> = r
                 .placement
                 .parts
                 .iter()
                 .map(|(n, b)| format!("{}={}", self.topo.node(*n).name, fmt_bytes(*b)))
                 .collect();
-            let _ = writeln!(
+            let _ = write!(
                 s,
                 "  region {} [{}] {}: {}",
                 r.name,
@@ -188,6 +346,10 @@ impl<'t> NumaAllocator<'t> {
                 fmt_bytes(r.bytes),
                 parts.join(" + ")
             );
+            if let Some(l) = r.lifetime {
+                let _ = write!(s, " live {l}");
+            }
+            let _ = writeln!(s);
         }
         s
     }
@@ -225,6 +387,49 @@ mod tests {
             .unwrap_err();
         assert_eq!(err.shortfall, 92 * GIB);
         assert!(err.to_string().contains("short"));
+    }
+
+    #[test]
+    fn oom_error_breaks_down_per_node() {
+        let topo = dev_tiny(); // 8 GiB DRAM + 2 × 4 GiB CXL
+        let mut a = NumaAllocator::new(&topo, Policy::CxlAware { striping: true });
+        let err = a
+            .alloc(RegionRequest::new("big", TensorClass::MasterParams, 100 * GIB))
+            .unwrap_err();
+        assert_eq!(err.nodes.len(), 3, "one entry per node");
+        assert_eq!(err.nodes[0].node, NodeId(0));
+        assert_eq!(err.nodes[0].free, 8 * GIB);
+        assert_eq!(err.nodes[0].requested, 100 * GIB);
+        assert_eq!(err.nodes[0].shortfall, 92 * GIB);
+        assert_eq!(err.phase, None, "engine refusal carries no phase");
+        let msg = err.to_string();
+        assert!(msg.contains("node0") && msg.contains("node2"), "{msg}");
+    }
+
+    #[test]
+    fn commit_overflow_reports_node_and_phase() {
+        let topo = dev_tiny();
+        let mut a = NumaAllocator::with_phases(&topo, Policy::DramOnly, 3);
+        // phase 1 already holds 6 GiB
+        a.commit(
+            RegionRequest::new("r0", TensorClass::Activations, 6 * GIB)
+                .with_lifetime(Lifetime::spanning(1, 1)),
+            Placement::single(NodeId(0), 6 * GIB),
+        )
+        .unwrap();
+        // 4 GiB across phases 0..=1 overflows at phase 1 only
+        let err = a
+            .commit(
+                RegionRequest::new("r1", TensorClass::Activations, 4 * GIB)
+                    .with_lifetime(Lifetime::spanning(0, 1)),
+                Placement::single(NodeId(0), 4 * GIB),
+            )
+            .unwrap_err();
+        assert_eq!(err.phase, Some(1));
+        assert_eq!(err.nodes.len(), 1);
+        assert_eq!(err.nodes[0].free, 2 * GIB);
+        assert_eq!(err.nodes[0].shortfall, 2 * GIB);
+        assert!(err.to_string().contains("phase 1"), "{err}");
     }
 
     #[test]
@@ -301,6 +506,24 @@ mod tests {
     }
 
     #[test]
+    fn regions_iterate_in_id_order() {
+        let topo = config_a();
+        let mut a = NumaAllocator::new(&topo, Policy::DramOnly);
+        for i in 0..16 {
+            a.alloc(RegionRequest::new(
+                format!("r{i}"),
+                TensorClass::Activations,
+                GIB,
+            ))
+            .unwrap();
+        }
+        let ids: Vec<usize> = a.regions().map(|r| r.id.0).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted, "region table must iterate by ascending id");
+    }
+
+    #[test]
     fn describe_lists_regions() {
         let topo = config_a();
         let mut a = NumaAllocator::new(&topo, Policy::CxlAware { striping: false });
@@ -309,5 +532,204 @@ mod tests {
         let d = a.describe();
         assert!(d.contains("opt"));
         assert!(d.contains("optimizer-states-fp32"));
+    }
+
+    #[test]
+    fn describe_shows_lifetimes_and_phase_peaks() {
+        let topo = dev_tiny();
+        let mut a = NumaAllocator::with_phases(&topo, Policy::DramOnly, 3);
+        a.alloc(
+            RegionRequest::new("acts", TensorClass::Activations, GIB)
+                .with_lifetime(Lifetime::spanning(0, 1)),
+        )
+        .unwrap();
+        let d = a.describe();
+        assert!(d.contains("live [0..1]"), "{d}");
+        assert!(d.contains("per-phase"), "{d}");
+    }
+
+    // ------------------------------------------------------------------
+    // Timeline (lifetime) accounting.
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn disjoint_lifetimes_share_capacity() {
+        let topo = dev_tiny(); // 8 GiB DRAM
+        let mut a = NumaAllocator::with_phases(&topo, Policy::DramOnly, 3);
+        // 6 GiB live in phases 0..1 + 6 GiB live in phase 2 → static sum
+        // (12 GiB) exceeds DRAM, but the per-phase peak (6 GiB) fits.
+        let acts = a
+            .alloc(
+                RegionRequest::new("acts", TensorClass::Activations, 6 * GIB)
+                    .with_lifetime(Lifetime::spanning(0, 1)),
+            )
+            .unwrap();
+        let opt = a
+            .alloc(
+                RegionRequest::new("opt", TensorClass::OptimizerStates, 6 * GIB)
+                    .with_lifetime(Lifetime::spanning(2, 2)),
+            )
+            .unwrap();
+        assert_eq!(a.used_on_at(NodeId(0), 0), 6 * GIB);
+        assert_eq!(a.used_on_at(NodeId(0), 1), 6 * GIB);
+        assert_eq!(a.used_on_at(NodeId(0), 2), 6 * GIB);
+        assert_eq!(a.used_on(NodeId(0)), 6 * GIB, "peak, not sum");
+        // an eternal region must fit against the peak in EVERY phase
+        let err = a
+            .alloc(RegionRequest::new("x", TensorClass::MasterParams, 3 * GIB))
+            .unwrap_err();
+        assert_eq!(err.shortfall, GIB);
+        a.release(acts);
+        a.release(opt);
+        assert_eq!(a.free_on(NodeId(0)), 8 * GIB);
+    }
+
+    #[test]
+    fn static_allocator_ignores_windows_gracefully() {
+        // In single-phase mode a scoped lifetime clamps to phase 0 and the
+        // arithmetic is the legacy static sum.
+        let topo = dev_tiny();
+        let mut a = NumaAllocator::new(&topo, Policy::DramOnly);
+        a.alloc(
+            RegionRequest::new("a", TensorClass::Activations, 5 * GIB)
+                .with_lifetime(Lifetime::spanning(0, 1)),
+        )
+        .unwrap();
+        let err = a
+            .alloc(
+                RegionRequest::new("b", TensorClass::OptimizerStates, 5 * GIB)
+                    .with_lifetime(Lifetime::spanning(2, 2)),
+            )
+            .unwrap_err();
+        assert_eq!(err.shortfall, 2 * GIB, "static mode must still sum");
+    }
+
+    #[test]
+    fn prop_release_restores_every_phase_exactly() {
+        use crate::util::proptest_lite::*;
+        let topo = dev_tiny();
+        let gen = VecOf {
+            inner: PairOf(
+                U64Range { lo: 1, hi: GIB },
+                PairOf(UsizeRange { lo: 0, hi: 3 }, UsizeRange { lo: 0, hi: 3 }),
+            ),
+            min_len: 1,
+            max_len: 10,
+        };
+        forall("lifetime-release-restores", 33, 80, &gen, |ops| {
+            let mut a = NumaAllocator::with_phases(&topo, Policy::DramOnly, 4);
+            let mut ids = Vec::new();
+            for (bytes, (p1, p2)) in ops {
+                let (lo, hi) = (*p1.min(p2) as u32, *p1.max(p2) as u32);
+                let req = RegionRequest::new("r", TensorClass::Activations, *bytes)
+                    .with_lifetime(Lifetime::spanning(lo, hi));
+                if let Ok(id) = a.alloc(req) {
+                    ids.push(id);
+                }
+            }
+            for id in ids.drain(..) {
+                if !a.release(id) {
+                    return Err("live region failed to release".into());
+                }
+                if a.release(id) {
+                    return Err("double-release accepted".into());
+                }
+            }
+            for n in a.topo().all_nodes() {
+                for ph in 0..a.n_phases() {
+                    if a.used_on_at(n, ph) != 0 {
+                        return Err(format!("node {} phase {ph} not restored", n.0));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_phase_peak_never_exceeds_static_sum() {
+        use crate::util::proptest_lite::*;
+        let topo = dev_tiny();
+        let gen = VecOf {
+            inner: PairOf(
+                U64Range { lo: 1, hi: GIB },
+                PairOf(UsizeRange { lo: 0, hi: 4 }, UsizeRange { lo: 0, hi: 4 }),
+            ),
+            min_len: 1,
+            max_len: 12,
+        };
+        forall("peak<=static-sum", 35, 80, &gen, |ops| {
+            let mut a = NumaAllocator::with_phases(&topo, Policy::CxlAware { striping: true }, 5);
+            let mut static_sum = vec![0u64; a.topo().all_nodes().len()];
+            for (bytes, (p1, p2)) in ops {
+                let (lo, hi) = (*p1.min(p2) as u32, *p1.max(p2) as u32);
+                let req = RegionRequest::new("r", TensorClass::Activations, *bytes)
+                    .with_lifetime(Lifetime::spanning(lo, hi));
+                if let Ok(id) = a.alloc(req) {
+                    for (n, b) in &a.region(id).unwrap().placement.parts {
+                        static_sum[n.0] += *b;
+                    }
+                }
+                for n in a.topo().all_nodes() {
+                    if a.used_on(n) > static_sum[n.0] {
+                        return Err(format!(
+                            "node {} peak {} exceeds static sum {}",
+                            n.0,
+                            a.used_on(n),
+                            static_sum[n.0]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_phase_peak_fit_implies_commit_succeeds() {
+        use crate::util::proptest_lite::*;
+        let topo = dev_tiny(); // DRAM capacity 8 GiB
+        let cap = topo.node(NodeId(0)).capacity;
+        let gen = VecOf {
+            inner: PairOf(
+                U64Range { lo: 1, hi: 2 * GIB },
+                PairOf(UsizeRange { lo: 0, hi: 3 }, UsizeRange { lo: 0, hi: 3 }),
+            ),
+            min_len: 1,
+            max_len: 10,
+        };
+        forall("peak-fit=>commit", 37, 80, &gen, |ops| {
+            // Predict per-phase occupancy by hand; the allocator must agree
+            // on every commit verdict.
+            let mut a = NumaAllocator::with_phases(&topo, Policy::DramOnly, 4);
+            let mut predicted = vec![0u64; 4];
+            for (bytes, (p1, p2)) in ops {
+                let (lo, hi) = (*p1.min(p2), *p1.max(p2));
+                let fits = (lo..=hi).all(|ph| predicted[ph] + bytes <= cap);
+                let res = a.commit(
+                    RegionRequest::new("r", TensorClass::Activations, *bytes)
+                        .with_lifetime(Lifetime::spanning(lo as u32, hi as u32)),
+                    Placement::single(NodeId(0), *bytes),
+                );
+                match (fits, &res) {
+                    (true, Err(e)) => {
+                        return Err(format!("phase-peak fits but commit failed: {e}"))
+                    }
+                    (false, Ok(_)) => return Err("overfull commit accepted".into()),
+                    _ => {}
+                }
+                if res.is_ok() {
+                    for ph in lo..=hi {
+                        predicted[ph] += bytes;
+                    }
+                }
+                for (ph, want) in predicted.iter().enumerate() {
+                    if a.used_on_at(NodeId(0), ph) != *want {
+                        return Err(format!("phase {ph} occupancy diverged"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -19,6 +19,7 @@
 use std::sync::Arc;
 
 use super::policy::Policy;
+use super::profile::AccessProfile;
 use super::region::{Placement, RegionRequest};
 use super::striping;
 use crate::sim::memmodel::AccessMode;
@@ -41,6 +42,29 @@ pub trait PlacementEngine: Send + Sync {
         req: &RegionRequest,
         free: &[u64],
     ) -> Result<Placement, u64>;
+
+    /// Context-carrying placement: the region's measured
+    /// [`AccessProfile`] (when the plan computed one) rides along with the
+    /// request. The default ignores the profile and delegates to
+    /// [`PlacementEngine::place`], so every legacy engine is byte-identical
+    /// through this path — the allocator routes *all* allocations here.
+    fn place_profiled(
+        &self,
+        topo: &SystemTopology,
+        req: &RegionRequest,
+        profile: Option<&AccessProfile>,
+        free: &[u64],
+    ) -> Result<Placement, u64> {
+        let _ = profile;
+        self.place(topo, req, free)
+    }
+
+    /// Does this engine consume [`AccessProfile`]s? The plan builder only
+    /// pays for the profiling pass (probe plan + schedule walk) when an
+    /// engine asks for it or lifetime accounting needs the windows.
+    fn uses_profiles(&self) -> bool {
+        false
+    }
 
     /// Baseline engines run against the all-DRAM host in grid sweeps
     /// (the paper's "DRAM-only" comparison column).
@@ -181,6 +205,150 @@ impl From<AdaptiveSpill> for EngineRef {
     }
 }
 
+/// The paper's §IV allocator, driven by *measured* traffic instead of the
+/// `TensorClass` taxonomy.
+///
+/// Placement is a function of each region's [`AccessProfile`]:
+///
+/// * **Hot** profiles (any CPU RMW element traffic — the optimizer's
+///   read-modify-write inner loop) are latency-critical: DRAM first, and
+///   any spill is partitioned across the AICs weighted by
+///   `cpu_stream_bw × free-fraction`, so spilled optimizer shards land on
+///   the coldest (least-occupied) cards first.
+/// * **Cold** profiles (DMA-only traffic) are bandwidth-bound: striped
+///   across the AICs proportionally to each card's *DMA* bandwidth
+///   (`peak_bw`, the link rate — not the much lower CPU-stream rate),
+///   overflowing to DRAM only when every AIC is full.
+///
+/// Evict-by-coldness, statically: a one-shot planner cannot evict after
+/// commit, so the rule appears as admission order — the plan requests the
+/// hottest regions (highest [`AccessProfile::heat`]) first, which is
+/// exactly the state an evicting allocator converges to: whenever DRAM is
+/// contended, the bytes that end up on CXL are the coldest ones.
+///
+/// Without a profile (a region the schedule never touches, or a caller on
+/// the plain `place` path) it falls back to the class taxonomy via
+/// `cxl-aware+striping` — the measured and declared notions of
+/// latency-criticality coincide on every Table-I region, which is what
+/// keeps the fallback honest.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProfileAware;
+
+impl ProfileAware {
+    pub const NAME: &'static str = "profile-aware";
+
+    /// Coldness-ranked spill weights: stream bandwidth × free fraction.
+    fn spill_weights(topo: &SystemTopology, nodes: &[NodeId], free: &[u64]) -> Vec<f64> {
+        nodes
+            .iter()
+            .map(|&n| {
+                let spec = topo.node(n);
+                let cap = spec.capacity as f64;
+                let free_frac = if cap > 0.0 { free[n.0] as f64 / cap } else { 0.0 };
+                spec.cpu_stream_bw * free_frac
+            })
+            .collect()
+    }
+
+    /// DMA-bandwidth stripe weights (the link rate each AIC can sustain).
+    fn dma_weights(topo: &SystemTopology, nodes: &[NodeId]) -> Vec<f64> {
+        nodes.iter().map(|&n| topo.node(n).peak_bw).collect()
+    }
+}
+
+impl PlacementEngine for ProfileAware {
+    fn name(&self) -> &str {
+        Self::NAME
+    }
+
+    fn uses_profiles(&self) -> bool {
+        true
+    }
+
+    /// Profile-less fallback: the class taxonomy (§IV-A/B).
+    fn place(
+        &self,
+        topo: &SystemTopology,
+        req: &RegionRequest,
+        free: &[u64],
+    ) -> Result<Placement, u64> {
+        Policy::CxlAware { striping: true }.place(topo, req, free)
+    }
+
+    fn place_profiled(
+        &self,
+        topo: &SystemTopology,
+        req: &RegionRequest,
+        profile: Option<&AccessProfile>,
+        free: &[u64],
+    ) -> Result<Placement, u64> {
+        let Some(p) = profile else {
+            return self.place(topo, req, free);
+        };
+        if req.bytes == 0 {
+            return Ok(Placement {
+                parts: vec![],
+                mode: AccessMode::Partitioned,
+            });
+        }
+        let dram = NodeId(0);
+        let cxl = topo.cxl_nodes();
+        if p.latency_critical() {
+            // Measured RMW traffic → pin in DRAM; spill coldness-ranked.
+            if free[0] >= req.bytes {
+                return Ok(Placement::single(dram, req.bytes));
+            }
+            let dram_take = free[0];
+            let rest = req.bytes - dram_take;
+            if cxl.is_empty() {
+                return Err(rest);
+            }
+            let weights = Self::spill_weights(topo, &cxl, free);
+            let (mut parts, unplaced) = striping::weighted_split(rest, &cxl, &weights, free);
+            if unplaced > 0 {
+                return Err(unplaced);
+            }
+            if dram_take > 0 {
+                parts.insert(0, (dram, dram_take));
+            }
+            Ok(Placement {
+                parts,
+                mode: AccessMode::Partitioned,
+            })
+        } else {
+            // DMA-bound (or untouched) → stripe by link bandwidth,
+            // overflow to DRAM last.
+            let (mut parts, unplaced) = if cxl.is_empty() {
+                striping::sequential_fill(req.bytes, &[dram], free)
+            } else {
+                let weights = Self::dma_weights(topo, &cxl);
+                striping::weighted_split(req.bytes, &cxl, &weights, free)
+            };
+            let mut rest = unplaced;
+            if rest > 0 && !cxl.is_empty() {
+                let take = rest.min(free[0]);
+                if take > 0 {
+                    parts.push((dram, take));
+                    rest -= take;
+                }
+            }
+            if rest > 0 {
+                return Err(rest);
+            }
+            Ok(Placement {
+                parts,
+                mode: AccessMode::Partitioned,
+            })
+        }
+    }
+}
+
+impl From<ProfileAware> for EngineRef {
+    fn from(e: ProfileAware) -> Self {
+        Arc::new(e)
+    }
+}
+
 /// Canonical names of every registered engine (CLI help text).
 pub fn known_names() -> Vec<&'static str> {
     vec![
@@ -189,6 +357,7 @@ pub fn known_names() -> Vec<&'static str> {
         "cxl-aware",
         "cxl-aware+striping",
         AdaptiveSpill::NAME,
+        ProfileAware::NAME,
     ]
 }
 
@@ -201,6 +370,7 @@ pub fn by_name(name: &str) -> Option<EngineRef> {
     }
     match name {
         AdaptiveSpill::NAME | "adaptive" | "bw-adaptive" => Some(AdaptiveSpill.into()),
+        ProfileAware::NAME | "profiled" | "paper-iv" => Some(ProfileAware.into()),
         _ => None,
     }
 }
@@ -240,6 +410,209 @@ mod tests {
         for alias in ["adaptive-spill", "adaptive", "bw-adaptive"] {
             assert_eq!(by_name(alias).unwrap().name(), AdaptiveSpill::NAME);
         }
+    }
+
+    #[test]
+    fn profile_aware_aliases_resolve() {
+        for alias in ["profile-aware", "profiled", "paper-iv"] {
+            assert_eq!(by_name(alias).unwrap().name(), ProfileAware::NAME);
+        }
+    }
+
+    #[test]
+    fn only_profile_aware_uses_profiles() {
+        for e in registry() {
+            assert_eq!(
+                e.uses_profiles(),
+                e.name() == ProfileAware::NAME,
+                "{}",
+                e.name()
+            );
+        }
+    }
+
+    fn hot_profile() -> AccessProfile {
+        AccessProfile {
+            h2d_bytes: 0.0,
+            d2h_bytes: 0.0,
+            cpu_rmw_elements: 1_000_000,
+            cpu_stream_bytes: 4e6,
+            touches: 1,
+            lifetime: crate::mem::Lifetime::spanning(2, 2),
+        }
+    }
+
+    fn cold_profile() -> AccessProfile {
+        AccessProfile {
+            h2d_bytes: 1e9,
+            d2h_bytes: 1e9,
+            cpu_rmw_elements: 0,
+            cpu_stream_bytes: 0.0,
+            touches: 64,
+            lifetime: crate::mem::Lifetime::spanning(0, 1),
+        }
+    }
+
+    /// `place_profiled`'s default path must be byte-identical to `place`
+    /// for every registered engine — and for the legacy engines the
+    /// profile must be ignored entirely (they keep the trait default).
+    #[test]
+    fn place_profiled_parity_for_all_registered_engines() {
+        let topos = [config_a(), config_b(), with_dram_capacity(config_b(), 16 * GIB)];
+        for topo in &topos {
+            for engine in registry() {
+                for class in TensorClass::all() {
+                    for bytes in [0u64, 1, GIB - 1, 10 * GIB, 300 * GIB] {
+                        let req = RegionRequest::new("r", class, bytes);
+                        let mut tight = free_of(topo);
+                        for f in tight.iter_mut() {
+                            *f /= 3;
+                        }
+                        for free in [free_of(topo), tight] {
+                            let direct = engine.place(topo, &req, &free);
+                            let profiled_none =
+                                engine.place_profiled(topo, &req, None, &free);
+                            assert_eq!(
+                                direct, profiled_none,
+                                "{}: place_profiled(None) must delegate to place \
+                                 ({class:?}, {bytes}B)",
+                                engine.name()
+                            );
+                            if !engine.uses_profiles() {
+                                for prof in [hot_profile(), cold_profile()] {
+                                    let with_prof = engine
+                                        .place_profiled(topo, &req, Some(&prof), &free);
+                                    assert_eq!(
+                                        direct,
+                                        with_prof,
+                                        "{}: legacy engine must ignore profiles",
+                                        engine.name()
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn profile_aware_pins_hot_profiles_in_dram() {
+        // The class says "latency-tolerant" but the measured traffic says
+        // RMW → the profile wins and the region is pinned in DRAM.
+        let topo = config_a();
+        let free = free_of(&topo);
+        let req = RegionRequest::new("x", TensorClass::Activations, 40 * GIB);
+        let p = ProfileAware
+            .place_profiled(&topo, &req, Some(&hot_profile()), &free)
+            .unwrap();
+        assert_eq!(p.parts, vec![(NodeId(0), 40 * GIB)]);
+    }
+
+    #[test]
+    fn profile_aware_stripes_cold_profiles_by_dma_bandwidth() {
+        // The class says "latency-critical" but the measured traffic is
+        // DMA-only → striped across the AICs (equal link bw → equal halves),
+        // DRAM untouched.
+        let topo = config_b();
+        let free = free_of(&topo);
+        let req = RegionRequest::new("x", TensorClass::OptimizerStates, 64 * GIB);
+        let p = ProfileAware
+            .place_profiled(&topo, &req, Some(&cold_profile()), &free)
+            .unwrap();
+        assert_eq!(p.bytes_on(NodeId(1)), 32 * GIB);
+        assert_eq!(p.bytes_on(NodeId(2)), 32 * GIB);
+        assert!(!p.touches(NodeId(0)));
+    }
+
+    #[test]
+    fn profile_aware_spills_hot_data_to_coldest_aic_first() {
+        // DRAM full; cxl0 75 % occupied, cxl1 empty → the spill weights
+        // (stream bw × free fraction) send 4× more to cxl1.
+        let topo = with_dram_capacity(config_b(), GIB);
+        let mut free = free_of(&topo);
+        free[0] = 0;
+        free[1] = 64 * GIB;
+        free[2] = 256 * GIB;
+        let req = RegionRequest::new("o", TensorClass::OptimizerStates, 50 * GIB);
+        let p = ProfileAware
+            .place_profiled(&topo, &req, Some(&hot_profile()), &free)
+            .unwrap();
+        let on1 = p.bytes_on(NodeId(1)) as i64;
+        let on2 = p.bytes_on(NodeId(2)) as i64;
+        assert!((on1 - (10 * GIB) as i64).abs() <= 8, "cxl0 share {on1}");
+        assert!((on2 - (40 * GIB) as i64).abs() <= 8, "cxl1 share {on2}");
+        assert_eq!(p.total_bytes(), 50 * GIB);
+    }
+
+    #[test]
+    fn profile_aware_cold_overflows_to_dram_and_reports_shortfall() {
+        let topo = config_a();
+        let mut free = free_of(&topo);
+        free[1] = GIB;
+        let req = RegionRequest::new("a", TensorClass::Activations, 3 * GIB);
+        let p = ProfileAware
+            .place_profiled(&topo, &req, Some(&cold_profile()), &free)
+            .unwrap();
+        assert_eq!(p.bytes_on(NodeId(1)), GIB);
+        assert_eq!(p.bytes_on(NodeId(0)), 2 * GIB);
+
+        let tiny = vec![GIB, GIB];
+        let err = ProfileAware
+            .place_profiled(&topo, &req, Some(&cold_profile()), &tiny)
+            .unwrap_err();
+        assert_eq!(err, GIB);
+    }
+
+    #[test]
+    fn profile_aware_fallback_matches_cxl_aware_striping() {
+        let topo = config_b();
+        let free = free_of(&topo);
+        for class in TensorClass::all() {
+            for bytes in [1u64, GIB, 100 * GIB] {
+                let req = RegionRequest::new("r", class, bytes);
+                assert_eq!(
+                    ProfileAware.place(&topo, &req, &free),
+                    Policy::CxlAware { striping: true }.place(&topo, &req, &free),
+                    "{class:?} {bytes}B"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn profile_aware_conserves_bytes_property() {
+        use crate::util::proptest_lite::*;
+        let topo = config_b();
+        let gen = PairOf(
+            U64Range {
+                lo: 1,
+                hi: 900 * GIB,
+            },
+            UsizeRange { lo: 0, hi: 1 },
+        );
+        forall("profile-aware-conserves", 23, 200, &gen, |(bytes, hot)| {
+            let prof = if *hot == 1 { hot_profile() } else { cold_profile() };
+            let free = free_of(&topo);
+            let req = RegionRequest::new("r", TensorClass::Activations, *bytes);
+            match ProfileAware.place_profiled(&topo, &req, Some(&prof), &free) {
+                Ok(p) => {
+                    if p.total_bytes() != *bytes {
+                        return Err(format!("placed {} of {bytes}", p.total_bytes()));
+                    }
+                    for (n, b) in &p.parts {
+                        if *b > free[n.0] {
+                            return Err(format!("node {} over cap", n.0));
+                        }
+                    }
+                    p.validate(*bytes);
+                    Ok(())
+                }
+                Err(0) => Err("zero shortfall".into()),
+                Err(_) => Ok(()),
+            }
+        });
     }
 
     #[test]

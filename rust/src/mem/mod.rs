@@ -7,16 +7,21 @@
 //! * [`engine`] — the pluggable [`PlacementEngine`] trait + name registry
 //!   every layer above consumes (the legacy policies implement it, plans
 //!   byte-identical; new strategies plug in without enum edits),
+//! * [`profile`] — the tensor-access IR: per-region [`AccessProfile`]s
+//!   measured from a schedule DAG, consumed by profile-driven engines and
+//!   the allocator's timeline accounting,
 //! * [`allocator`] — NUMA capacity tracking and region lifecycle (the
-//!   `libnuma` stand-in).
+//!   `libnuma` stand-in), with per-phase timeline accounting.
 
 pub mod allocator;
 pub mod engine;
 pub mod policy;
+pub mod profile;
 pub mod region;
 pub mod striping;
 
-pub use allocator::{AllocError, NumaAllocator};
-pub use engine::{AdaptiveSpill, EngineRef, PlacementEngine};
+pub use allocator::{AllocError, NodeShortfall, NumaAllocator};
+pub use engine::{AdaptiveSpill, EngineRef, PlacementEngine, ProfileAware};
 pub use policy::Policy;
-pub use region::{Placement, Region, RegionId, RegionRequest, TensorClass};
+pub use profile::{profile_schedule, AccessProfile, ScheduleProfiles};
+pub use region::{Lifetime, Placement, Region, RegionId, RegionRequest, TensorClass};

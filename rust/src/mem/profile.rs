@@ -1,0 +1,241 @@
+//! The tensor-access IR: per-region traffic/liveness profiles measured
+//! from a schedule DAG.
+//!
+//! The paper's §IV allocator reasons about *what the workload does to each
+//! tensor* — how many bytes ride DMA engines per iteration, how much CPU
+//! read-modify-write traffic the optimizer issues, and when in the
+//! iteration the tensor is live at all. Before this pass, those facts were
+//! approximated by a hard-coded boolean on six
+//! [`crate::mem::TensorClass`] variants;
+//! now they are *derived*: [`profile_schedule`] walks any
+//! [`crate::offload::Schedule`] and folds every [`RegionTouch`] annotation
+//! into one [`AccessProfile`] per region. Placement engines consume the
+//! profiles through [`crate::mem::PlacementEngine::place_profiled`], and
+//! the allocator's timeline accounting consumes the liveness windows.
+//!
+//! Profiles are **placement-independent**: every quantity comes from op
+//! payloads (byte counts, element counts, phase indices), never from
+//! stripe fractions or layouts — so a schedule built against a throwaway
+//! all-DRAM probe plan yields the same profiles as the final schedule
+//! (pinned by tests in `offload/plan.rs`). That is what breaks the
+//! profile→placement→schedule cycle: profile first against the probe,
+//! place with the profiles, then build the real schedule.
+
+use std::collections::BTreeMap;
+
+use super::region::{Lifetime, RegionId};
+use crate::offload::schedule::{Op, RegionTouch, Schedule};
+use crate::sim::fabric::Dir;
+
+/// Measured per-iteration access behaviour of one memory region.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AccessProfile {
+    /// Bytes DMA'd host→GPU per iteration (parameter streams, reloads).
+    pub h2d_bytes: f64,
+    /// Bytes DMA'd GPU→host per iteration (checkpoint/gradient offloads).
+    pub d2h_bytes: f64,
+    /// Elements read-modify-written by the CPU optimizer per iteration.
+    pub cpu_rmw_elements: u64,
+    /// Bytes moved by pure CPU streaming passes (fp32→bf16 casts).
+    pub cpu_stream_bytes: f64,
+    /// Number of schedule ops that move traffic for this region
+    /// (keepalive touches extend the lifetime but do not count).
+    pub touches: u32,
+    /// Phases of the schedule during which the region is live.
+    pub lifetime: Lifetime,
+}
+
+impl AccessProfile {
+    fn at_phase(phase: u32) -> Self {
+        Self {
+            h2d_bytes: 0.0,
+            d2h_bytes: 0.0,
+            cpu_rmw_elements: 0,
+            cpu_stream_bytes: 0.0,
+            touches: 0,
+            lifetime: Lifetime::spanning(phase, phase),
+        }
+    }
+
+    /// Total DMA traffic per iteration, both directions.
+    pub fn dma_bytes(&self) -> f64 {
+        self.h2d_bytes + self.d2h_bytes
+    }
+
+    /// Is the region on the CPU optimizer's critical path? This is the
+    /// *measured* replacement for
+    /// [`crate::mem::TensorClass::latency_critical`]: any RMW element
+    /// traffic means the region eats the CXL latency penalty (§III-A),
+    /// regardless of what class the request claimed.
+    pub fn latency_critical(&self) -> bool {
+        self.cpu_rmw_elements > 0
+    }
+
+    /// Hotness rank used for spill ordering: RMW bytes dominate (they are
+    /// latency-bound), then CPU stream bytes, then DMA bytes (bandwidth-
+    /// bound, most tolerant of CXL placement).
+    pub fn heat(&self) -> f64 {
+        use crate::sim::memmodel::ADAM_BYTES_PER_ELEM;
+        self.cpu_rmw_elements as f64 * ADAM_BYTES_PER_ELEM * 4.0
+            + self.cpu_stream_bytes * 2.0
+            + self.dma_bytes()
+    }
+}
+
+/// Everything [`profile_schedule`] learns about one schedule.
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleProfiles {
+    /// Phase names of the profiled schedule, in declaration order (the
+    /// index space every [`Lifetime`] lives in).
+    pub phases: Vec<String>,
+    /// One profile per region the schedule touches, keyed by the region
+    /// ids the builder annotated.
+    pub by_region: BTreeMap<RegionId, AccessProfile>,
+}
+
+impl ScheduleProfiles {
+    pub fn n_phases(&self) -> usize {
+        self.phases.len()
+    }
+
+    pub fn get(&self, region: RegionId) -> Option<&AccessProfile> {
+        self.by_region.get(&region)
+    }
+}
+
+/// Walk a schedule DAG and compute one [`AccessProfile`] per region its
+/// nodes touch. Nodes are visited in index order, so byte totals are
+/// bit-deterministic. Ops without touch annotations contribute nothing.
+pub fn profile_schedule(sched: &Schedule) -> ScheduleProfiles {
+    let mut by_region: BTreeMap<RegionId, AccessProfile> = BTreeMap::new();
+    for node in &sched.nodes {
+        let phase = node.phase as u32;
+        for touch in &node.touches {
+            let p = by_region
+                .entry(touch.region())
+                .or_insert_with(|| AccessProfile::at_phase(phase));
+            p.lifetime.cover(phase);
+            match touch {
+                RegionTouch::Dma(_) => {
+                    if let Op::Transfer { dir, bytes, .. } = &node.op {
+                        match dir {
+                            Dir::HostToGpu => p.h2d_bytes += bytes,
+                            Dir::GpuToHost => p.d2h_bytes += bytes,
+                        }
+                        p.touches += 1;
+                    }
+                }
+                RegionTouch::CpuRmw(_) => {
+                    if let Op::CpuStep { adam_elements, .. } = &node.op {
+                        p.cpu_rmw_elements += adam_elements;
+                        p.touches += 1;
+                    }
+                }
+                RegionTouch::CpuStream { stream, .. } => {
+                    if let Op::CpuStep { streams, .. } = &node.op {
+                        p.cpu_stream_bytes += streams[*stream].0;
+                        p.touches += 1;
+                    }
+                }
+                RegionTouch::Keepalive(_) => {}
+            }
+        }
+    }
+    ScheduleProfiles {
+        phases: sched.phases.clone(),
+        by_region,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offload::schedule::OpNode;
+    use crate::sim::memmodel::OptLayout;
+    use crate::topology::presets::dev_tiny;
+    use crate::topology::{GpuId, NodeId};
+
+    fn xfer(dir: Dir, bytes: f64, phase: usize, touches: Vec<RegionTouch>) -> OpNode {
+        OpNode {
+            op: Op::Transfer {
+                gpu: GpuId(0),
+                stripes: vec![(NodeId(0), 1.0)],
+                dir,
+                bytes,
+            },
+            deps: vec![],
+            name: "t".into(),
+            lane: "gpu0/h2d".into(),
+            phase,
+            ends_phase: false,
+            touches,
+        }
+    }
+
+    #[test]
+    fn profiles_fold_traffic_per_region_and_direction() {
+        let r0 = RegionId(0);
+        let r1 = RegionId(1);
+        let mut s = Schedule::new(0);
+        let fwd = s.phase("fwd");
+        let bwd = s.phase("bwd");
+        let step = s.phase("step");
+        s.push(xfer(Dir::HostToGpu, 100.0, fwd, vec![RegionTouch::Dma(r0)]));
+        s.push(xfer(Dir::HostToGpu, 50.0, bwd, vec![RegionTouch::Dma(r0)]));
+        s.push(xfer(Dir::GpuToHost, 30.0, bwd, vec![RegionTouch::Dma(r1)]));
+        s.push(OpNode {
+            op: Op::CpuStep {
+                adam_elements: 1000,
+                adam_layout: OptLayout::dram_only(),
+                streams: vec![(400.0, OptLayout::dram_only()), (200.0, OptLayout::dram_only())],
+            },
+            deps: vec![],
+            name: "step".into(),
+            lane: "cpu/step".into(),
+            phase: step,
+            ends_phase: true,
+            touches: vec![
+                RegionTouch::CpuRmw(RegionId(2)),
+                RegionTouch::CpuStream {
+                    region: r0,
+                    stream: 1,
+                },
+                RegionTouch::Keepalive(r1),
+            ],
+        });
+        s.validate(&dev_tiny()).unwrap();
+        let prof = profile_schedule(&s);
+        assert_eq!(prof.n_phases(), 3);
+        assert_eq!(prof.by_region.len(), 3);
+
+        let p0 = prof.get(r0).unwrap();
+        assert_eq!(p0.h2d_bytes, 150.0);
+        assert_eq!(p0.d2h_bytes, 0.0);
+        assert_eq!(p0.cpu_stream_bytes, 200.0);
+        assert_eq!(p0.touches, 3);
+        assert_eq!(p0.lifetime, Lifetime::spanning(0, 2));
+        assert!(!p0.latency_critical());
+
+        // keepalive extends r1's lifetime into step without traffic
+        let p1 = prof.get(r1).unwrap();
+        assert_eq!(p1.d2h_bytes, 30.0);
+        assert_eq!(p1.touches, 1, "keepalive must not count as a touch");
+        assert_eq!(p1.lifetime, Lifetime::spanning(1, 2));
+
+        let p2 = prof.get(RegionId(2)).unwrap();
+        assert_eq!(p2.cpu_rmw_elements, 1000);
+        assert!(p2.latency_critical());
+        assert_eq!(p2.lifetime, Lifetime::spanning(2, 2));
+        assert!(p2.heat() > p1.heat(), "RMW traffic must outrank DMA");
+    }
+
+    #[test]
+    fn unannotated_schedule_profiles_empty() {
+        let mut s = Schedule::new(0);
+        s.phase("fwd");
+        s.push(xfer(Dir::HostToGpu, 100.0, 0, vec![]));
+        let prof = profile_schedule(&s);
+        assert!(prof.by_region.is_empty());
+        assert_eq!(prof.n_phases(), 1);
+    }
+}

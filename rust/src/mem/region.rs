@@ -122,6 +122,69 @@ impl Placement {
     }
 }
 
+/// The phases of a schedule during which a region's bytes must be
+/// resident — its liveness window, in [`crate::offload::Schedule`] phase
+/// indices (inclusive on both ends).
+///
+/// Derived by [`crate::mem::profile::profile_schedule`] from the ops that
+/// actually touch the region. A region with no lifetime (the static
+/// default) is treated as live for the whole run; a scoped lifetime lets
+/// the allocator's timeline accounting overlay it with regions whose
+/// windows do not intersect (activations dead during the optimizer step
+/// no longer count against the step-phase peak). Contents of a dead
+/// region are assumed demotable (MemAscend-style swap space), not lost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Lifetime {
+    /// First phase (inclusive) in which the region is touched.
+    pub birth_phase: u32,
+    /// Last phase (inclusive) in which the region is touched.
+    pub death_phase: u32,
+}
+
+impl Lifetime {
+    pub fn spanning(birth_phase: u32, death_phase: u32) -> Self {
+        assert!(
+            birth_phase <= death_phase,
+            "lifetime dies ({death_phase}) before it is born ({birth_phase})"
+        );
+        Self {
+            birth_phase,
+            death_phase,
+        }
+    }
+
+    /// Grow the window to cover `phase`.
+    pub fn cover(&mut self, phase: u32) {
+        self.birth_phase = self.birth_phase.min(phase);
+        self.death_phase = self.death_phase.max(phase);
+    }
+
+    /// Is the region live during `phase`?
+    pub fn contains(&self, phase: u32) -> bool {
+        self.birth_phase <= phase && phase <= self.death_phase
+    }
+
+    /// Do two windows share at least one phase?
+    pub fn overlaps(&self, other: &Lifetime) -> bool {
+        self.birth_phase <= other.death_phase && other.birth_phase <= self.death_phase
+    }
+
+    /// Number of phases covered.
+    pub fn span(&self) -> u32 {
+        self.death_phase - self.birth_phase + 1
+    }
+}
+
+impl std::fmt::Display for Lifetime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.birth_phase == self.death_phase {
+            write!(f, "[{}]", self.birth_phase)
+        } else {
+            write!(f, "[{}..{}]", self.birth_phase, self.death_phase)
+        }
+    }
+}
+
 /// A named allocation request.
 #[derive(Clone, Debug)]
 pub struct RegionRequest {
@@ -131,6 +194,9 @@ pub struct RegionRequest {
     /// Owning GPU for per-GPU data (activation checkpoints, bf16 staging);
     /// lets policies give each GPU an AIC affinity when not striping.
     pub gpu: Option<GpuId>,
+    /// Liveness window for the allocator's timeline accounting; `None`
+    /// (the static default) means live for the whole run.
+    pub lifetime: Option<Lifetime>,
 }
 
 impl RegionRequest {
@@ -140,6 +206,7 @@ impl RegionRequest {
             class,
             bytes,
             gpu: None,
+            lifetime: None,
         }
     }
 
@@ -147,10 +214,15 @@ impl RegionRequest {
         self.gpu = Some(gpu);
         self
     }
+
+    pub fn with_lifetime(mut self, lifetime: Lifetime) -> Self {
+        self.lifetime = Some(lifetime);
+        self
+    }
 }
 
 /// Identifier of a committed region.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct RegionId(pub usize);
 
 /// A committed region.
@@ -162,6 +234,8 @@ pub struct Region {
     pub bytes: u64,
     pub gpu: Option<GpuId>,
     pub placement: Placement,
+    /// Liveness window the region was committed under (`None` = whole run).
+    pub lifetime: Option<Lifetime>,
 }
 
 #[cfg(test)]
@@ -206,6 +280,34 @@ mod tests {
     #[should_panic(expected = "bytes mismatch")]
     fn validate_rejects_wrong_total() {
         Placement::single(NodeId(0), 10).validate(11);
+    }
+
+    #[test]
+    fn lifetime_window_arithmetic() {
+        let mut l = Lifetime::spanning(1, 1);
+        assert!(l.contains(1) && !l.contains(0) && !l.contains(2));
+        l.cover(3);
+        l.cover(0);
+        assert_eq!(l, Lifetime::spanning(0, 3));
+        assert_eq!(l.span(), 4);
+        assert!(l.overlaps(&Lifetime::spanning(3, 9)));
+        assert!(!Lifetime::spanning(0, 1).overlaps(&Lifetime::spanning(2, 2)));
+        assert_eq!(Lifetime::spanning(2, 2).to_string(), "[2]");
+        assert_eq!(Lifetime::spanning(0, 2).to_string(), "[0..2]");
+    }
+
+    #[test]
+    #[should_panic(expected = "before it is born")]
+    fn lifetime_rejects_inverted_window() {
+        Lifetime::spanning(3, 1);
+    }
+
+    #[test]
+    fn request_builder_carries_lifetime() {
+        let r = RegionRequest::new("r", TensorClass::Activations, 10)
+            .with_lifetime(Lifetime::spanning(0, 1));
+        assert_eq!(r.lifetime, Some(Lifetime::spanning(0, 1)));
+        assert_eq!(RegionRequest::new("r", TensorClass::Activations, 10).lifetime, None);
     }
 
     #[test]

@@ -20,15 +20,32 @@
 //! now pin down).
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, BinaryHeap};
 
 use super::metrics::{PhaseReport, PhaseSpan};
-use super::schedule::{Op, OpId, Schedule};
+use super::schedule::{Op, OpId, RegionTouch, Schedule};
+use crate::mem::RegionId;
 use crate::sim::fabric::Fabric;
 use crate::sim::flow::Event;
 use crate::sim::memmodel::OptimizerMemModel;
 use crate::sim::trace::TraceRecorder;
 use crate::topology::SystemTopology;
+
+/// DMA traffic the executor actually moved for one plan region, summed
+/// over the run's completed `Op::Transfer` nodes (via their
+/// [`RegionTouch::Dma`] annotations). This is the simulated-side ledger
+/// that validates [`crate::mem::AccessProfile`]s: every node runs exactly
+/// once (pinned by the executor contract proptests), so for an annotated
+/// schedule these totals must equal the profile pass's predictions.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RegionTraffic {
+    /// Bytes moved host→GPU for the region.
+    pub h2d_bytes: f64,
+    /// Bytes moved GPU→host for the region.
+    pub d2h_bytes: f64,
+    /// Completed transfer nodes attributed to the region.
+    pub touches: u32,
+}
 
 /// Everything one executor run produces.
 pub struct Execution {
@@ -38,6 +55,9 @@ pub struct Execution {
     pub completion_order: Vec<OpId>,
     /// Completion timestamp per node, indexed by `OpId.0`.
     pub completion_s: Vec<f64>,
+    /// Per-region DMA ledger, accumulated as transfer nodes complete
+    /// (empty for schedules without touch annotations).
+    pub region_traffic: BTreeMap<RegionId, RegionTraffic>,
 }
 
 /// Per-phase accumulators while the run is in flight.
@@ -93,6 +113,7 @@ pub fn execute(topo: &SystemTopology, sched: &Schedule) -> Execution {
         .collect();
 
     let mut completed = 0usize;
+    let mut region_traffic: BTreeMap<RegionId, RegionTraffic> = BTreeMap::new();
 
     // Split borrows so the closures below don't fight: completion updates
     // are a small fn over the bookkeeping vectors.
@@ -109,6 +130,7 @@ pub fn execute(topo: &SystemTopology, sched: &Schedule) -> Execution {
         phase_acc: &mut [PhaseAcc],
         ready: &mut BinaryHeap<Reverse<u32>>,
         completed: &mut usize,
+        region_traffic: &mut BTreeMap<RegionId, RegionTraffic>,
     ) {
         debug_assert!(!done[i], "node {i} completed twice");
         done[i] = true;
@@ -116,6 +138,18 @@ pub fn execute(topo: &SystemTopology, sched: &Schedule) -> Execution {
         completion_order.push(OpId(i as u32));
         *completed += 1;
         let node = &sched.nodes[i];
+        if let Op::Transfer { dir, bytes, .. } = &node.op {
+            for t in &node.touches {
+                if let RegionTouch::Dma(region) = t {
+                    let ledger = region_traffic.entry(*region).or_default();
+                    match dir {
+                        crate::sim::fabric::Dir::HostToGpu => ledger.h2d_bytes += bytes,
+                        crate::sim::fabric::Dir::GpuToHost => ledger.d2h_bytes += bytes,
+                    }
+                    ledger.touches += 1;
+                }
+            }
+        }
         if node.ends_phase {
             let acc = &mut phase_acc[node.phase];
             acc.boundary = acc.boundary.max(now);
@@ -145,6 +179,7 @@ pub fn execute(topo: &SystemTopology, sched: &Schedule) -> Execution {
                 &mut phase_acc,
                 &mut ready,
                 &mut completed,
+                &mut region_traffic,
             )
         };
     }
@@ -278,6 +313,7 @@ pub fn execute(topo: &SystemTopology, sched: &Schedule) -> Execution {
         trace,
         completion_order,
         completion_s,
+        region_traffic,
     }
 }
 
@@ -300,6 +336,7 @@ mod tests {
             lane: "lane".into(),
             phase,
             ends_phase: false,
+            touches: vec![],
         }
     }
 
@@ -391,6 +428,43 @@ mod tests {
             (d1 / d0 - 2.0).abs() < 1e-9,
             "slow GPU must run its own kernel 2x longer: {d0} vs {d1}"
         );
+    }
+
+    #[test]
+    fn region_ledger_sums_annotated_transfers() {
+        let topo = dev_tiny();
+        let r0 = RegionId(0);
+        let r1 = RegionId(1);
+        let mut s = Schedule::new(0);
+        let p = s.phase("only");
+        let mut a = xfer(0, 1e8, vec![], p);
+        a.touches = vec![RegionTouch::Dma(r0)];
+        let a = s.push(a);
+        let mut b = xfer(0, 2e8, vec![a], p);
+        b.touches = vec![RegionTouch::Dma(r0)];
+        let b = s.push(b);
+        let mut c = node(
+            Op::Transfer {
+                gpu: GpuId(1),
+                stripes: vec![(NodeId(0), 1.0)],
+                dir: Dir::GpuToHost,
+                bytes: 5e7,
+            },
+            vec![b],
+            p,
+        );
+        c.touches = vec![RegionTouch::Dma(r1)];
+        s.push(c);
+        s.push(kern(0, 1e12, vec![], p)); // unannotated: no ledger entry
+        let ex = execute(&topo, &s);
+        assert_eq!(ex.region_traffic.len(), 2);
+        let t0 = &ex.region_traffic[&r0];
+        assert_eq!(t0.h2d_bytes, 3e8);
+        assert_eq!(t0.d2h_bytes, 0.0);
+        assert_eq!(t0.touches, 2);
+        let t1 = &ex.region_traffic[&r1];
+        assert_eq!(t1.d2h_bytes, 5e7);
+        assert_eq!(t1.touches, 1);
     }
 
     #[test]
@@ -499,6 +573,7 @@ mod tests {
                 lane: format!("gpu{gpu}/rand"),
                 phase,
                 ends_phase: rng.below(5) == 0,
+                touches: vec![],
             });
         }
         s

@@ -21,11 +21,11 @@ pub mod schedule;
 pub mod schedules;
 pub mod sweep;
 
-pub use executor::{execute, Execution};
+pub use executor::{execute, Execution, RegionTraffic};
 pub use iteration::{legacy_simulate_iteration, legacy_simulate_iteration_traced};
 pub use metrics::{PhaseBreakdown, PhaseReport, PhaseSpan};
-pub use plan::{MemoryPlan, PlanError, RunConfig};
-pub use schedule::{FlopsTerm, Op, OpId, OpNode, Schedule};
+pub use plan::{MemoryPlan, PlanError, RunConfig, RunProfiles};
+pub use schedule::{FlopsTerm, Op, OpId, OpNode, RegionTouch, Schedule};
 pub use schedules::{ScheduleBuilder, ScheduleRef};
 pub use sweep::{
     sweep_grid, sweep_grid_matrix, sweep_grid_with_threads, GridPoint, SweepResult,

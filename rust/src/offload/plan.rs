@@ -2,12 +2,30 @@
 //! chosen placement policy. The plan is what the iteration simulator and
 //! the functional trainer both consume — placement decisions are made once,
 //! here, exactly like the real system pins its arenas at startup.
+//!
+//! Since the tensor-lifetime IR landed, the plan closes the loop between
+//! the schedule and the memory subsystem: when the engine asks for
+//! profiles (`uses_profiles`) or the caller wants timeline accounting
+//! ([`MemoryPlan::build_lifetime_aware`]), the builder first *profiles*
+//! the run — it builds the schedule against a throwaway unconstrained
+//! all-DRAM probe plan (profiles are placement-independent, so the probe
+//! is exact; pinned by tests below), walks it with
+//! [`crate::mem::profile_schedule`], and then threads each region's
+//! measured [`AccessProfile`] through
+//! [`crate::mem::PlacementEngine::place_profiled`] and its liveness
+//! window into the allocator's per-phase timeline.
+
+use std::collections::BTreeMap;
 
 use super::schedules::{self, ScheduleRef};
-use crate::mem::{EngineRef, NumaAllocator, RegionId, RegionRequest, TensorClass};
+use crate::mem::{
+    profile_schedule, AccessProfile, EngineRef, NumaAllocator, Policy, RegionId, RegionRequest,
+    TensorClass,
+};
 use crate::model::footprint::{Footprint, Workload};
 use crate::model::ModelConfig;
 use crate::sim::memmodel::{AccessMode, OptLayout};
+use crate::topology::presets::with_dram_capacity;
 use crate::topology::{GpuId, NodeId, SystemTopology};
 
 /// Everything needed to run (or simulate) one fine-tuning configuration.
@@ -59,6 +77,25 @@ impl std::fmt::Debug for RunConfig {
     }
 }
 
+/// Measured access profiles of one run, keyed by region name (names are
+/// stable across plans of the same config, region ids need not be).
+#[derive(Clone, Debug, Default)]
+pub struct RunProfiles {
+    /// Schedule phase names — the index space of every profile lifetime.
+    pub phases: Vec<String>,
+    pub by_name: BTreeMap<String, AccessProfile>,
+}
+
+impl RunProfiles {
+    pub fn n_phases(&self) -> usize {
+        self.phases.len()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&AccessProfile> {
+        self.by_name.get(name)
+    }
+}
+
 /// The committed regions of one run.
 pub struct MemoryPlan<'t> {
     pub alloc: NumaAllocator<'t>,
@@ -70,6 +107,10 @@ pub struct MemoryPlan<'t> {
     pub grads16: RegionId,
     /// One checkpointed-activation region per GPU.
     pub activations: Vec<RegionId>,
+    /// The measured profiles placement was driven by, when the builder
+    /// computed them (profile-consuming engine or lifetime accounting);
+    /// `None` on the plain static path.
+    pub profiles: Option<RunProfiles>,
 }
 
 /// Why a plan could not be built.
@@ -86,17 +127,61 @@ impl std::fmt::Display for PlanError {
 impl std::error::Error for PlanError {}
 
 impl<'t> MemoryPlan<'t> {
-    /// Allocate all regions. Latency-critical regions are requested first
-    /// so the CXL-aware policy reserves DRAM for them before bulk data
-    /// arrives (the real allocator pins arenas in the same order).
+    /// Allocate all regions under static (whole-run) capacity accounting.
+    /// Latency-critical regions are requested first so the CXL-aware
+    /// policy reserves DRAM for them before bulk data arrives (the real
+    /// allocator pins arenas in the same order) — and, for the
+    /// profile-aware engine, hot-first admission is the static analogue of
+    /// evict-by-coldness: whenever DRAM is contended, the coldest bytes
+    /// are the ones that end up on CXL.
     pub fn build(
         topo: &'t SystemTopology,
         cfg: &RunConfig,
     ) -> Result<MemoryPlan<'t>, PlanError> {
+        Self::build_inner(topo, cfg, false)
+    }
+
+    /// [`MemoryPlan::build`] with lifetime-aware timeline accounting: each
+    /// region is committed only over its measured liveness window, so the
+    /// fit check is per-phase *peak* occupancy per node instead of the
+    /// static sum — activations dead during the optimizer step no longer
+    /// count against it, which fits cells that [`MemoryPlan::build`]
+    /// rejects as OOM.
+    pub fn build_lifetime_aware(
+        topo: &'t SystemTopology,
+        cfg: &RunConfig,
+    ) -> Result<MemoryPlan<'t>, PlanError> {
+        Self::build_inner(topo, cfg, true)
+    }
+
+    fn build_inner(
+        topo: &'t SystemTopology,
+        cfg: &RunConfig,
+        lifetime_aware: bool,
+    ) -> Result<MemoryPlan<'t>, PlanError> {
         let f = Footprint::compute(&cfg.model, &cfg.workload);
-        let mut alloc = NumaAllocator::new(topo, cfg.engine.clone());
+        // The profiling pass costs a probe plan + schedule walk; only pay
+        // for it when something consumes the result (this also keeps the
+        // legacy engines' static path work-identical, not just
+        // byte-identical).
+        let profiles = if lifetime_aware || cfg.engine.uses_profiles() {
+            Some(Self::profile_run(topo, cfg)?)
+        } else {
+            None
+        };
+        let n_phases = profiles.as_ref().map(|p| p.n_phases()).unwrap_or(1);
+        let mut alloc = if lifetime_aware {
+            NumaAllocator::with_phases(topo, cfg.engine.clone(), n_phases)
+        } else {
+            NumaAllocator::new(topo, cfg.engine.clone())
+        };
         let mut get = |req: RegionRequest| {
-            alloc.alloc(req).map_err(|e| PlanError {
+            let prof = profiles.as_ref().and_then(|p| p.get(&req.name));
+            let req = match prof {
+                Some(p) if lifetime_aware => req.with_lifetime(p.lifetime),
+                _ => req,
+            };
+            alloc.alloc_profiled(req, prof).map_err(|e| PlanError {
                 message: format!("{} (policy {})", e, cfg.engine.name()),
             })
         };
@@ -134,6 +219,7 @@ impl<'t> MemoryPlan<'t> {
             )
             .for_gpu(GpuId(g)))?);
         }
+        drop(get);
         Ok(MemoryPlan {
             alloc,
             footprint: f,
@@ -143,12 +229,57 @@ impl<'t> MemoryPlan<'t> {
             params16,
             grads16,
             activations,
+            profiles,
+        })
+    }
+
+    /// Compute the run's per-region [`AccessProfile`]s *before* placement.
+    ///
+    /// Chicken-and-egg: the schedule builder needs a plan (for byte counts
+    /// and stripe fractions), but placement wants the profiles. The knot is
+    /// cut by profiling against a **probe**: the same config planned with
+    /// `baseline-dram` on an unconstrained-DRAM clone of the topology.
+    /// Every profiled quantity (bytes, element counts, phase windows,
+    /// touch counts) comes from op payloads that are placement-independent
+    /// — only stripe fractions differ between probe and final schedule —
+    /// so the probe profiles are exact (pinned by
+    /// `profiles_are_placement_independent` below).
+    pub fn profile_run(topo: &SystemTopology, cfg: &RunConfig) -> Result<RunProfiles, PlanError> {
+        // Big enough that any Table-I footprint fits in DRAM alone; small
+        // enough that node-capacity sums stay far from u64 overflow.
+        const PROBE_DRAM: u64 = 1 << 61;
+        let probe_topo = with_dram_capacity(topo.clone(), PROBE_DRAM);
+        let probe_cfg = RunConfig {
+            engine: Policy::DramOnly.into(),
+            ..cfg.clone()
+        };
+        let probe_plan = MemoryPlan::build(&probe_topo, &probe_cfg)?;
+        let sched = cfg.schedule.build(&probe_topo, &probe_cfg, &probe_plan);
+        let sp = profile_schedule(&sched);
+        let mut by_name = BTreeMap::new();
+        for (rid, prof) in sp.by_region {
+            let name = probe_plan
+                .alloc
+                .region(rid)
+                .expect("touch annotations must reference plan regions")
+                .name
+                .clone();
+            by_name.insert(name, prof);
+        }
+        Ok(RunProfiles {
+            phases: sp.phases,
+            by_name,
         })
     }
 
     /// Does this configuration fit at all (used by capacity sweeps)?
     pub fn fits(topo: &SystemTopology, cfg: &RunConfig) -> bool {
         MemoryPlan::build(topo, cfg).is_ok()
+    }
+
+    /// [`MemoryPlan::fits`] under lifetime-aware timeline accounting.
+    pub fn fits_lifetime_aware(topo: &SystemTopology, cfg: &RunConfig) -> bool {
+        MemoryPlan::build_lifetime_aware(topo, cfg).is_ok()
     }
 
     /// Merged placement of the optimizer's working set (fp32 P, G, O) as an
@@ -356,6 +487,254 @@ mod tests {
             assert_eq!(plan.activations.len(), 2);
             let total_expected = plan.footprint.total();
             assert_eq!(plan.alloc.total_used(), total_expected);
+            assert!(plan.profiles.is_none(), "static legacy path must not profile");
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // The tensor-lifetime IR: profiles, timeline accounting, and the
+    // profile-aware engine through the whole plan stack.
+    // ------------------------------------------------------------------
+
+    use crate::mem::{engine, Lifetime, ProfileAware};
+    use crate::offload::simulate_iteration;
+
+    #[test]
+    fn profiles_are_placement_independent() {
+        // The probe plan is all-DRAM; the real plan stripes over CXL. The
+        // profiles extracted from either schedule must be identical — that
+        // is the contract `profile_run` rests on.
+        let topo = with_dram_capacity(config_b(), 128 * GIB);
+        let cfg = RunConfig::new(
+            qwen25_7b(),
+            Workload::new(2, 8, 4096),
+            Policy::CxlAware { striping: true },
+        );
+        let via_probe = MemoryPlan::profile_run(&topo, &cfg).unwrap();
+
+        let real_plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        let real_sched = cfg.schedule.build(&topo, &cfg, &real_plan);
+        let sp = crate::mem::profile_schedule(&real_sched);
+        let mut via_real = std::collections::BTreeMap::new();
+        for (rid, prof) in sp.by_region {
+            let name = real_plan.alloc.region(rid).unwrap().name.clone();
+            via_real.insert(name, prof);
+        }
+        assert_eq!(via_probe.phases, sp.phases);
+        assert_eq!(via_probe.by_name, via_real);
+    }
+
+    #[test]
+    fn zero_offload_profiles_match_taxonomy_and_windows() {
+        let topo = config_a();
+        let cfg = RunConfig::new(qwen25_7b(), Workload::new(1, 8, 4096), Policy::DramOnly);
+        let prof = MemoryPlan::profile_run(&topo, &cfg).unwrap();
+        let f = Footprint::compute(&cfg.model, &cfg.workload);
+        assert_eq!(prof.phases, vec!["fwd", "bwd", "step"]);
+        assert_eq!(prof.by_name.len(), 6, "all Table-I regions touched");
+
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * b.abs().max(1.0);
+
+        // Optimizer working set: RMW-hot, live only during the step.
+        for name in ["master-params", "grads-fp32", "optimizer-states"] {
+            let p = prof.get(name).unwrap();
+            assert!(p.latency_critical(), "{name} must be RMW-hot");
+            assert_eq!(p.lifetime, Lifetime::spanning(2, 2), "{name}");
+            assert_eq!(p.cpu_rmw_elements, cfg.model.params(), "{name}");
+        }
+        // bf16 params stream in twice (fwd load + bwd reload), cast once.
+        let p16 = prof.get("params-bf16").unwrap();
+        assert!(!p16.latency_critical());
+        assert_eq!(p16.lifetime, Lifetime::spanning(0, 2));
+        assert!(close(p16.h2d_bytes, 2.0 * f.params_bf16 as f64), "{}", p16.h2d_bytes);
+        assert!(close(p16.cpu_stream_bytes, f.params_bf16 as f64));
+        // bf16 grads offload during bwd and are kept alive through the step.
+        let g16 = prof.get("grads-bf16").unwrap();
+        assert_eq!(g16.lifetime, Lifetime::spanning(1, 2));
+        assert!(close(g16.d2h_bytes, f.grads_bf16 as f64));
+        assert_eq!(g16.h2d_bytes, 0.0);
+        // Activations round-trip and die before the step — the capacity win.
+        let acts = prof.get("activations-gpu0").unwrap();
+        assert_eq!(acts.lifetime, Lifetime::spanning(0, 1));
+        assert!(close(acts.d2h_bytes, f.activations_bf16 as f64));
+        assert!(close(acts.h2d_bytes, acts.d2h_bytes));
+        assert!(!acts.latency_critical());
+        // The master stream (read) shows up as CPU stream traffic.
+        let master = prof.get("master-params").unwrap();
+        assert!(close(master.cpu_stream_bytes, f.params_fp32 as f64));
+    }
+
+    #[test]
+    fn lora_profiles_shrink_the_rmw_working_set() {
+        let topo = config_a();
+        let cfg = RunConfig::new(qwen25_7b(), Workload::new(1, 8, 4096), Policy::DramOnly)
+            .with_schedule(crate::offload::schedules::by_name("lora:16").unwrap());
+        let prof = MemoryPlan::profile_run(&topo, &cfg).unwrap();
+        let opt = prof.get("optimizer-states").unwrap();
+        assert!(opt.latency_critical());
+        assert!(
+            opt.cpu_rmw_elements < cfg.model.params() / 1000,
+            "adapter-only RMW must be orders of magnitude below full FT: {}",
+            opt.cpu_rmw_elements
+        );
+    }
+
+    #[test]
+    fn executor_ledger_validates_profiles() {
+        // The loop closed: traffic the executor actually moves per region
+        // must equal what the profile pass predicted from the DAG.
+        let topo = with_dram_capacity(config_a(), 128 * GIB);
+        for sched_name in ["zero-offload", "grad-accum:2", "lora:16"] {
+            let cfg = RunConfig::new(
+                qwen25_7b(),
+                Workload::new(1, 4, 4096),
+                Policy::CxlAware { striping: false },
+            )
+            .with_schedule(crate::offload::schedules::by_name(sched_name).unwrap());
+            let prof = MemoryPlan::profile_run(&topo, &cfg).unwrap();
+            let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+            let sched = cfg.schedule.build(&topo, &cfg, &plan);
+            let ex = crate::offload::execute(&topo, &sched);
+            let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * b.abs().max(1.0);
+            let mut dma_regions = 0;
+            for r in plan.alloc.regions() {
+                let p = prof
+                    .get(&r.name)
+                    .unwrap_or_else(|| panic!("{sched_name}: no profile for {}", r.name));
+                match ex.region_traffic.get(&r.id) {
+                    Some(t) => {
+                        dma_regions += 1;
+                        assert!(
+                            close(t.h2d_bytes, p.h2d_bytes) && close(t.d2h_bytes, p.d2h_bytes),
+                            "{sched_name}/{}: executor moved ({}, {}) but profile says ({}, {})",
+                            r.name,
+                            t.h2d_bytes,
+                            t.d2h_bytes,
+                            p.h2d_bytes,
+                            p.d2h_bytes
+                        );
+                        let dma_touches = p.touches
+                            - u32::from(p.cpu_rmw_elements > 0)
+                            - u32::from(p.cpu_stream_bytes > 0.0);
+                        assert_eq!(t.touches, dma_touches, "{sched_name}/{}", r.name);
+                    }
+                    None => assert_eq!(
+                        p.dma_bytes(),
+                        0.0,
+                        "{sched_name}/{}: profiled DMA but no ledger entry",
+                        r.name
+                    ),
+                }
+            }
+            assert!(dma_regions >= 3, "{sched_name}: params/grads/acts must appear");
+        }
+    }
+
+    /// The acceptance regression: lifetime accounting fits a (model,
+    /// context, capacity) cell that static accounting rejects as OOM.
+    #[test]
+    fn lifetime_accounting_fits_cell_static_rejects() {
+        let model = qwen25_7b();
+        let w = Workload::new(1, 8, 4096);
+        let f = Footprint::compute(&model, &w);
+        // Per-phase peaks of the zero-offload liveness windows (DRAM-only
+        // placement): activations die before the step, the fp32 working
+        // set is dead until it.
+        let peak_bwd = f.params_bf16 + f.grads_bf16 + f.activations_bf16;
+        let peak_step =
+            f.params_fp32 + f.grads_fp32 + f.optimizer_fp32 + f.params_bf16 + f.grads_bf16;
+        let peak = peak_bwd.max(peak_step);
+        let total = f.total();
+        assert!(peak < total, "windows must actually overlap-free some bytes");
+        // A DRAM budget strictly between the peak and the static sum.
+        let cap = peak + (total - peak) / 2;
+        let topo = with_dram_capacity(config_a(), cap);
+        let cfg = RunConfig::new(model, w, Policy::DramOnly);
+        assert!(
+            !MemoryPlan::fits(&topo, &cfg),
+            "static accounting must reject the cell"
+        );
+        assert!(
+            MemoryPlan::fits_lifetime_aware(&topo, &cfg),
+            "per-phase peak accounting must fit it"
+        );
+        // And the lifetime plan's committed windows are the profiled ones.
+        let plan = MemoryPlan::build_lifetime_aware(&topo, &cfg).unwrap();
+        assert_eq!(plan.alloc.n_phases(), 3);
+        let acts = plan.alloc.region(plan.activations[0]).unwrap();
+        assert_eq!(acts.lifetime, Some(Lifetime::spanning(0, 1)));
+        let opt = plan.alloc.region(plan.optstates).unwrap();
+        assert_eq!(opt.lifetime, Some(Lifetime::spanning(2, 2)));
+    }
+
+    #[test]
+    fn lifetime_build_matches_static_placements_on_ample_capacity() {
+        // With no capacity pressure the timeline never changes a placement
+        // decision — only the accounting differs.
+        let topo = config_b();
+        let cfg = RunConfig::new(
+            qwen25_7b(),
+            Workload::new(2, 8, 4096),
+            Policy::CxlAware { striping: true },
+        );
+        let a = MemoryPlan::build(&topo, &cfg).unwrap();
+        let b = MemoryPlan::build_lifetime_aware(&topo, &cfg).unwrap();
+        let pa: Vec<_> = a.alloc.regions().map(|r| (r.name.clone(), r.placement.clone())).collect();
+        let pb: Vec<_> = b.alloc.regions().map(|r| (r.name.clone(), r.placement.clone())).collect();
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn profile_aware_plan_pins_hot_in_dram_and_strides_cold_on_cxl() {
+        // 12B under the §V-B DRAM budget: the fp32 working set overflows
+        // 128 GiB, so profile-aware pins what fits and spills the rest to
+        // CXL partitioned; every DMA-only region stays off DRAM entirely.
+        let topo = with_dram_capacity(config_a(), 128 * GIB);
+        let cfg = RunConfig::new(
+            mistral_nemo_12b(),
+            Workload::new(1, 16, 4096),
+            ProfileAware,
+        );
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        assert!(plan.profiles.is_some(), "profile engine must trigger the pass");
+        let master = plan.alloc.region(plan.master).unwrap();
+        assert_eq!(
+            master.placement.parts,
+            vec![(NodeId(0), plan.footprint.params_fp32)],
+            "hottest region fills DRAM first"
+        );
+        let opt = plan.alloc.region(plan.optstates).unwrap();
+        assert!(opt.placement.touches(NodeId(1)), "overflow spills to the AIC");
+        for id in [plan.params16, plan.grads16, plan.activations[0]] {
+            let r = plan.alloc.region(id).unwrap();
+            assert!(
+                !r.placement.touches(NodeId(0)),
+                "{}: DMA-bound data must stay off DRAM",
+                r.name
+            );
+        }
+    }
+
+    #[test]
+    fn profile_aware_not_slower_than_naive_on_fig7_cells() {
+        // Acceptance gate: on the Fig. 7 grid the profile-aware engine
+        // never loses to naive interleave.
+        let cxl_topo = with_dram_capacity(config_a(), 128 * GIB);
+        let naive = engine::by_name("naive-cxl").unwrap();
+        let ours = engine::by_name("profile-aware").unwrap();
+        for (gpus, batch) in [(1usize, 16usize), (2, 1)] {
+            let w = Workload::new(gpus, batch, 4096);
+            let run = |e: &crate::mem::EngineRef| {
+                let cfg = RunConfig::new(mistral_nemo_12b(), w, e.clone());
+                let plan = MemoryPlan::build(&cxl_topo, &cfg).unwrap();
+                simulate_iteration(&cxl_topo, &cfg, &plan).tokens_per_sec()
+            };
+            let tn = run(&naive);
+            let tp = run(&ours);
+            assert!(
+                tp >= tn * (1.0 - 1e-9),
+                "fig7 {gpus}x{batch}: profile-aware {tp:.1} tok/s lost to naive {tn:.1}"
+            );
         }
     }
 }

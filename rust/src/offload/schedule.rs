@@ -16,6 +16,7 @@
 //! scenarios only need *some* fixed order; parity-critical builders
 //! (`schedules::zero_offload`) document theirs.
 
+use crate::mem::RegionId;
 use crate::sim::fabric::Dir;
 use crate::sim::memmodel::OptLayout;
 use crate::topology::{GpuId, NodeId, SystemTopology};
@@ -73,6 +74,43 @@ pub enum Op {
     Barrier,
 }
 
+/// Which memory-plan region a node's traffic is attributed to.
+///
+/// Touch annotations are *descriptive*: the executor prices ops from their
+/// payloads alone and ignores touches entirely, so a builder that omits
+/// them changes nothing about simulated time. They exist for the
+/// tensor-access profiling pass ([`crate::mem::profile::profile_schedule`])
+/// and the executor's per-region traffic ledger, which together close the
+/// loop between the schedule and the memory subsystem.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegionTouch {
+    /// The node's `Op::Transfer` bytes move to/from this region.
+    Dma(RegionId),
+    /// The node's `Op::CpuStep` Adam pass read-modify-writes this region
+    /// (each listed region carries the node's full `adam_elements`).
+    CpuRmw(RegionId),
+    /// The `stream`-th entry of the node's `Op::CpuStep` streams
+    /// reads/writes this region.
+    CpuStream { region: RegionId, stream: usize },
+    /// Liveness-only: the node consumes the region's contents without
+    /// modeled traffic (e.g. the optimizer reading bf16 gradients, which
+    /// the calibrated STEP model folds into the Adam pass). Extends the
+    /// region's lifetime window but not its traffic counters.
+    Keepalive(RegionId),
+}
+
+impl RegionTouch {
+    /// The region this touch refers to.
+    pub fn region(&self) -> RegionId {
+        match self {
+            RegionTouch::Dma(r)
+            | RegionTouch::CpuRmw(r)
+            | RegionTouch::Keepalive(r)
+            | RegionTouch::CpuStream { region: r, .. } => *r,
+        }
+    }
+}
+
 /// A schedule node: the op, its dependency edges, and its reporting labels.
 #[derive(Clone, Debug)]
 pub struct OpNode {
@@ -88,6 +126,9 @@ pub struct OpNode {
     /// Marks a phase *boundary* node: the phase's boundary time is the max
     /// completion over its marked nodes (legacy FWD/BWD/STEP semantics).
     pub ends_phase: bool,
+    /// Plan regions whose traffic/liveness this node represents (may be
+    /// empty for unattributed ops; never affects executor timing).
+    pub touches: Vec<RegionTouch>,
 }
 
 /// A whole iteration as a task DAG.
@@ -245,6 +286,45 @@ impl Schedule {
                 }
                 Op::Barrier => {}
             }
+            for t in &node.touches {
+                match t {
+                    RegionTouch::Dma(_) => {
+                        if !matches!(node.op, Op::Transfer { .. }) {
+                            return Err(format!(
+                                "node {i} ({}) has a Dma touch on a non-Transfer op",
+                                node.name
+                            ));
+                        }
+                    }
+                    RegionTouch::CpuRmw(_) => {
+                        if !matches!(node.op, Op::CpuStep { .. }) {
+                            return Err(format!(
+                                "node {i} ({}) has a CpuRmw touch on a non-CpuStep op",
+                                node.name
+                            ));
+                        }
+                    }
+                    RegionTouch::CpuStream { stream, .. } => match &node.op {
+                        Op::CpuStep { streams, .. } => {
+                            if *stream >= streams.len() {
+                                return Err(format!(
+                                    "node {i} ({}) stream touch {} out of range ({} streams)",
+                                    node.name,
+                                    stream,
+                                    streams.len()
+                                ));
+                            }
+                        }
+                        _ => {
+                            return Err(format!(
+                                "node {i} ({}) has a CpuStream touch on a non-CpuStep op",
+                                node.name
+                            ));
+                        }
+                    },
+                    RegionTouch::Keepalive(_) => {}
+                }
+            }
         }
         // Kahn's algorithm: every node must be reachable through the edge
         // partial order, otherwise there is a cycle.
@@ -296,6 +376,7 @@ mod tests {
             lane: "gpu0/h2d".into(),
             phase,
             ends_phase: false,
+            touches: vec![],
         }
     }
 
@@ -387,5 +468,61 @@ mod tests {
         let topo = dev_tiny();
         let s = Schedule::new(0);
         assert!(s.validate(&topo).is_err());
+    }
+
+    #[test]
+    fn touch_kind_must_match_op_kind() {
+        use crate::mem::RegionId;
+        let topo = dev_tiny();
+        // Dma touch on a Transfer: fine.
+        let mut s = Schedule::new(0);
+        s.phase("fwd");
+        let mut n = transfer(vec![], 0);
+        n.touches = vec![RegionTouch::Dma(RegionId(0)), RegionTouch::Keepalive(RegionId(1))];
+        s.push(n);
+        assert!(s.validate(&topo).is_ok());
+        // CpuRmw touch on a Transfer: rejected.
+        let mut s2 = Schedule::new(0);
+        s2.phase("fwd");
+        let mut n2 = transfer(vec![], 0);
+        n2.touches = vec![RegionTouch::CpuRmw(RegionId(0))];
+        s2.push(n2);
+        assert!(s2.validate(&topo).unwrap_err().contains("CpuRmw"));
+        // CpuStream index out of range: rejected.
+        let mut s3 = Schedule::new(0);
+        s3.phase("step");
+        s3.push(OpNode {
+            op: Op::CpuStep {
+                adam_elements: 10,
+                adam_layout: OptLayout::dram_only(),
+                streams: vec![(1e6, OptLayout::dram_only())],
+            },
+            deps: vec![],
+            name: "step".into(),
+            lane: "cpu/step".into(),
+            phase: 0,
+            ends_phase: true,
+            touches: vec![RegionTouch::CpuStream {
+                region: RegionId(0),
+                stream: 1,
+            }],
+        });
+        assert!(s3.validate(&topo).unwrap_err().contains("stream touch"));
+    }
+
+    #[test]
+    fn touch_region_accessor() {
+        use crate::mem::RegionId;
+        assert_eq!(RegionTouch::Dma(RegionId(3)).region(), RegionId(3));
+        assert_eq!(RegionTouch::CpuRmw(RegionId(1)).region(), RegionId(1));
+        assert_eq!(RegionTouch::Keepalive(RegionId(2)).region(), RegionId(2));
+        assert_eq!(
+            RegionTouch::CpuStream {
+                region: RegionId(4),
+                stream: 0
+            }
+            .region(),
+            RegionId(4)
+        );
     }
 }

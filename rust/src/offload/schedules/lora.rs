@@ -13,7 +13,7 @@
 
 use super::super::plan::{MemoryPlan, RunConfig};
 use super::super::schedule::{Op, OpNode, Schedule};
-use super::zero_offload::{build_fig1_passes, Fig1Shape};
+use super::zero_offload::{build_fig1_passes, cpu_step_touches, Fig1Shape};
 use super::ScheduleBuilder;
 use crate::topology::SystemTopology;
 
@@ -77,6 +77,7 @@ impl ScheduleBuilder for Lora {
             lane: "cpu/step".into(),
             phase: step,
             ends_phase: true,
+            touches: cpu_step_touches(plan),
         });
         s
     }

@@ -29,8 +29,9 @@
 //! configuration.
 
 use super::super::plan::{MemoryPlan, RunConfig};
-use super::super::schedule::{FlopsTerm, Op, OpId, OpNode, Schedule};
+use super::super::schedule::{FlopsTerm, Op, OpId, OpNode, RegionTouch, Schedule};
 use super::ScheduleBuilder;
+use crate::mem::RegionId;
 use crate::model::flops;
 use crate::sim::fabric::Dir;
 use crate::topology::{GpuId, NodeId, SystemTopology};
@@ -49,6 +50,11 @@ pub struct PassShape<'a> {
     pub g16: &'a [(NodeId, f64)],
     /// Host stripe fractions for this GPU's activation checkpoints.
     pub acts: &'a [(NodeId, f64)],
+    /// Plan regions the three streams above belong to (touch annotations
+    /// for the tensor-access profiling pass).
+    pub p16_region: RegionId,
+    pub g16_region: RegionId,
+    pub acts_region: RegionId,
     pub param_block_bytes: f64,
     pub act_block_bytes: f64,
     pub grad_block_bytes: f64,
@@ -86,6 +92,7 @@ fn transfer(
     lane: String,
     phase: usize,
     ends_phase: bool,
+    region: RegionId,
 ) -> OpNode {
     OpNode {
         op: Op::Transfer {
@@ -99,6 +106,7 @@ fn transfer(
         lane,
         phase,
         ends_phase,
+        touches: vec![RegionTouch::Dma(region)],
     }
 }
 
@@ -129,6 +137,7 @@ pub fn emit_pass(s: &mut Schedule, p: &PassShape<'_>, fwd: usize, bwd: usize) ->
             h2d.clone(),
             fwd,
             false,
+            p.p16_region,
         )));
     }
 
@@ -153,6 +162,7 @@ pub fn emit_pass(s: &mut Schedule, p: &PassShape<'_>, fwd: usize, bwd: usize) ->
             lane: compute.clone(),
             phase: fwd,
             ends_phase: l == layers - 1,
+            touches: vec![],
         });
         fwd_compute[l] = Some(fc);
         if p.offload_activations {
@@ -166,6 +176,7 @@ pub fn emit_pass(s: &mut Schedule, p: &PassShape<'_>, fwd: usize, bwd: usize) ->
                 d2h.clone(),
                 fwd,
                 false,
+                p.acts_region,
             )));
         }
         let nxt = l + depth;
@@ -180,6 +191,7 @@ pub fn emit_pass(s: &mut Schedule, p: &PassShape<'_>, fwd: usize, bwd: usize) ->
                 h2d.clone(),
                 fwd,
                 false,
+                p.p16_region,
             )));
         }
     }
@@ -200,6 +212,7 @@ pub fn emit_pass(s: &mut Schedule, p: &PassShape<'_>, fwd: usize, bwd: usize) ->
             h2d.clone(),
             bwd,
             false,
+            p.p16_region,
         )));
         if p.offload_activations {
             act_load[l] = Some(s.push(transfer(
@@ -212,6 +225,7 @@ pub fn emit_pass(s: &mut Schedule, p: &PassShape<'_>, fwd: usize, bwd: usize) ->
                 h2d.clone(),
                 bwd,
                 false,
+                p.acts_region,
             )));
         }
     }
@@ -243,6 +257,7 @@ pub fn emit_pass(s: &mut Schedule, p: &PassShape<'_>, fwd: usize, bwd: usize) ->
             lane: compute.clone(),
             phase: bwd,
             ends_phase: false,
+            touches: vec![],
         });
         grads.push(s.push(transfer(
             g,
@@ -254,6 +269,7 @@ pub fn emit_pass(s: &mut Schedule, p: &PassShape<'_>, fwd: usize, bwd: usize) ->
             d2h.clone(),
             bwd,
             true,
+            p.g16_region,
         )));
         if l >= depth {
             let t = l - depth;
@@ -267,6 +283,7 @@ pub fn emit_pass(s: &mut Schedule, p: &PassShape<'_>, fwd: usize, bwd: usize) ->
                 h2d.clone(),
                 bwd,
                 false,
+                p.p16_region,
             )));
             if p.offload_activations {
                 act_load[t] = Some(s.push(transfer(
@@ -279,6 +296,7 @@ pub fn emit_pass(s: &mut Schedule, p: &PassShape<'_>, fwd: usize, bwd: usize) ->
                     h2d.clone(),
                     bwd,
                     false,
+                    p.acts_region,
                 )));
             }
         }
@@ -321,6 +339,29 @@ impl IterQuantities {
     }
 }
 
+/// Touch annotations of the full-model CPU step: the Adam pass
+/// read-modify-writes the merged fp32 P/G/O working set, stream 0 reads
+/// the fp32 master, stream 1 writes the bf16 copy, and the bf16 gradients
+/// are consumed without separately-priced traffic (the calibrated STEP
+/// model folds their read into the Adam pass) — a keepalive so their
+/// liveness window extends through the step.
+pub fn cpu_step_touches(plan: &MemoryPlan<'_>) -> Vec<RegionTouch> {
+    vec![
+        RegionTouch::CpuRmw(plan.master),
+        RegionTouch::CpuRmw(plan.grads32),
+        RegionTouch::CpuRmw(plan.optstates),
+        RegionTouch::CpuStream {
+            region: plan.master,
+            stream: 0,
+        },
+        RegionTouch::CpuStream {
+            region: plan.params16,
+            stream: 1,
+        },
+        RegionTouch::Keepalive(plan.grads16),
+    ]
+}
+
 /// The full-model CPU optimizer step + bf16 re-cast, as the legacy engine
 /// priced it: one Adam pass over all parameters in the plan's merged
 /// layout, plus streaming the fp32 master (read) and bf16 copy (write).
@@ -350,6 +391,7 @@ pub fn full_model_cpu_step(
         lane: "cpu/step".into(),
         phase,
         ends_phase: true,
+        touches: cpu_step_touches(plan),
     }
 }
 
@@ -416,6 +458,9 @@ pub fn build_fig1_passes(
                     p16: &p16,
                     g16: &g16,
                     acts: &acts,
+                    p16_region: plan.params16,
+                    g16_region: plan.grads16,
+                    acts_region: plan.activations[g],
                     param_block_bytes: q.param_block_bytes,
                     act_block_bytes: q.act_block_bytes,
                     grad_block_bytes,

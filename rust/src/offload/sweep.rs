@@ -501,4 +501,40 @@ mod tests {
         }
         assert!(nhi < 1.0);
     }
+
+    #[test]
+    fn profile_aware_engine_sweeps_end_to_end() {
+        // The profile-driven engine is a first-class sweep column: profiles
+        // are computed per cell inside the plan builder, so the sweep
+        // machinery needs no special-casing — and the placements it drives
+        // must never lose to naive interleave on any shared cell.
+        let base = config_a();
+        let cxl = with_dram_capacity(config_a(), 128 * GIB);
+        let policies: Vec<EngineRef> = vec![
+            engine::by_name("baseline-dram").unwrap(),
+            engine::by_name("naive-cxl").unwrap(),
+            engine::by_name("profile-aware").unwrap(),
+        ];
+        let res = sweep_grid(&base, &cxl, &qwen25_7b(), 1, &[4096, 8192], &[4], &policies);
+        assert_eq!(res.policies[2], "profile-aware");
+        for p in &res.points {
+            let (n, ours) = (res.normalized(p, 1, 0), res.normalized(p, 2, 0));
+            let (n, ours) = (n.expect("naive fits"), ours.expect("profile-aware fits"));
+            assert!(
+                ours >= n - 1e-9,
+                "c{}b{}: profile-aware ({ours:.3}) lost to naive ({n:.3})",
+                p.context,
+                p.batch
+            );
+        }
+        // parallel == serial bitwise even with the profiling pass in play
+        let serial = sweep_grid_with_threads(
+            &base, &cxl, &qwen25_7b(), 1, &[4096, 8192], &[4], &policies, 1,
+        );
+        let parallel = sweep_grid_with_threads(
+            &base, &cxl, &qwen25_7b(), 1, &[4096, 8192], &[4], &policies, 4,
+        );
+        assert_eq!(serial.digest(), parallel.digest());
+        assert_eq!(serial.digest(), res.digest());
+    }
 }

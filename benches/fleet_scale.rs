@@ -1,0 +1,144 @@
+//! Fleet-simulator scale bench: jobs/sec and sim-events/sec at 10-, 100-
+//! and 1000-job traces for every registered admission policy, on the
+//! §V-B-shaped host (config-a, 128 GiB DRAM).
+//!
+//! Gates (enforced in CI via `--smoke`):
+//! * `placement-aware` ≥ `fifo` on aggregate tokens/sec at the pinned
+//!   100-job mixed-context trace, and strictly fewer rejected jobs (the
+//!   XL jobs in the static/lifetime gap are the difference).
+//! * bit-identical result digests across reruns (the determinism
+//!   contract at bench scale).
+//!
+//! Results land in `bench_out/fleet_scale/` and in `BENCH_fleet.json`
+//! (override: `CXLFINE_BENCH_FLEET_OUT`), which the CI bench-smoke job
+//! uploads on every push so the fleet-throughput trajectory is recorded
+//! alongside the DES, schedule and capacity ones.
+
+use std::time::Instant;
+
+use cxlfine::fleet::{mixed_trace_with_xl, scheduler, simulate_fleet};
+use cxlfine::topology::presets::{config_a, with_dram_capacity};
+use cxlfine::trow;
+use cxlfine::util::bench::BenchReport;
+use cxlfine::util::json::{Json, JsonObj};
+use cxlfine::util::table::Table;
+use cxlfine::util::units::GIB;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut report = BenchReport::new("fleet_scale");
+    let topo = with_dram_capacity(config_a(), 128 * GIB);
+    let threads = cxlfine::util::threadpool::default_threads();
+
+    // Every scale carries 8 XL jobs (statically infeasible, lifetime
+    // feasible) except the 10-job smoke point, which stays pure mixed.
+    let scales: Vec<(usize, usize)> = if smoke {
+        vec![(10, 0), (92, 8)]
+    } else {
+        vec![(10, 0), (92, 8), (992, 8)]
+    };
+
+    let mut json_scales = Vec::new();
+    for (n_mixed, n_xl) in scales {
+        let n_jobs = n_mixed + n_xl;
+        let trace = mixed_trace_with_xl(&topo, 1007, n_mixed, n_xl);
+        assert_eq!(
+            trace.jobs.len(),
+            n_jobs,
+            "the XL static/lifetime gap cell must exist at 128 GiB DRAM"
+        );
+        let mut t = Table::new(&[
+            "policy",
+            "wall",
+            "jobs/s",
+            "events/s",
+            "agg tok/s",
+            "completed",
+            "rejected",
+        ])
+        .left(0);
+        let mut raws = Vec::new();
+        let mut by_policy = Vec::new();
+        for policy in scheduler::registry() {
+            let t0 = Instant::now();
+            let res = simulate_fleet(&topo, &trace, &policy, threads);
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            t.row(trow![
+                policy.name(),
+                format!("{wall:.2}s"),
+                format!("{:.0}", n_jobs as f64 / wall),
+                format!("{:.0}", res.n_events as f64 / wall),
+                format!("{:.0}", res.aggregate_tokens_per_sec()),
+                res.completed(),
+                res.rejected()
+            ]);
+            let mut cell = JsonObj::new();
+            cell.set("policy", policy.name());
+            cell.set("wall_s", wall);
+            cell.set("jobs_per_sec", n_jobs as f64 / wall);
+            cell.set("events_per_sec", res.n_events as f64 / wall);
+            cell.set("aggregate_tokens_per_sec", res.aggregate_tokens_per_sec());
+            cell.set("completed", res.completed());
+            cell.set("rejected", res.rejected());
+            cell.set("digest", format!("{:016x}", res.digest()));
+            raws.push(Json::Obj(cell));
+            by_policy.push((policy.name().to_string(), res));
+        }
+        // The admission gate at the pinned 100-job mixed trace.
+        if n_xl > 0 {
+            let get = |name: &str| {
+                by_policy
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .map(|(_, r)| r)
+                    .expect("registered policy ran")
+            };
+            let (fifo, pa) = (get("fifo"), get("placement-aware"));
+            assert!(
+                pa.rejected() < fifo.rejected(),
+                "{n_jobs} jobs: placement-aware must strictly beat fifo on rejections \
+                 ({} vs {})",
+                pa.rejected(),
+                fifo.rejected()
+            );
+            if n_jobs <= 100 {
+                assert!(
+                    pa.aggregate_tokens_per_sec() + 1e-9 >= fifo.aggregate_tokens_per_sec(),
+                    "100-job trace: placement-aware lost aggregate throughput: {:.1} vs {:.1}",
+                    pa.aggregate_tokens_per_sec(),
+                    fifo.aggregate_tokens_per_sec()
+                );
+            }
+        }
+        // Determinism at the smallest scale: a rerun is bit-identical.
+        if n_jobs <= 10 {
+            let policy = scheduler::by_name("fifo").unwrap();
+            let a = simulate_fleet(&topo, &trace, &policy, 1);
+            let b = simulate_fleet(&topo, &trace, &policy, threads);
+            assert_eq!(a.digest(), b.digest(), "rerun must be bit-identical");
+        }
+        println!("{n_jobs}-job trace on {} ({} XL jobs)", topo.name, n_xl);
+        report.section(&format!("jobs_{n_jobs}"), t, Json::Arr(raws.clone()));
+        json_scales.push(Json::Obj({
+            let mut o = JsonObj::new();
+            o.set("n_jobs", n_jobs);
+            o.set("n_xl", n_xl);
+            o.set("trace_digest", format!("{:016x}", trace.digest()));
+            o.set("policies", Json::Arr(raws));
+            o
+        }));
+    }
+
+    let mut root = JsonObj::new();
+    root.set("bench", "fleet_scale");
+    root.set("smoke", smoke);
+    root.set("scales", Json::Arr(json_scales));
+    let out =
+        std::env::var("CXLFINE_BENCH_FLEET_OUT").unwrap_or_else(|_| "BENCH_fleet.json".into());
+    let payload = Json::Obj(root).to_string_pretty();
+    match std::fs::write(&out, &payload) {
+        Ok(()) => println!("\n[fleet_scale] wrote {out}"),
+        Err(e) => eprintln!("warn: could not write {out}: {e}"),
+    }
+    report.finish();
+}

@@ -3,6 +3,7 @@
 use anyhow::anyhow;
 
 use super::{parse, CliDone};
+use crate::fleet::{self, simulate_fleet, FleetTrace, TraceGen};
 use crate::mem::{engine, EngineRef, Policy};
 use crate::model::footprint::{Footprint, Workload};
 use crate::model::{presets as mpresets, ModelConfig};
@@ -548,6 +549,108 @@ pub fn train(args: &[String]) -> Result<(), CliDone> {
         println!("wrote {path}");
     }
     let _ = GIB;
+    Ok(())
+}
+
+/// `cxlfine fleet` — multi-tenant job scheduling on one shared host.
+pub fn fleet(args: &[String]) -> Result<(), CliDone> {
+    let spec = CliSpec::new(
+        "cxlfine fleet",
+        "multi-tenant fleet simulation: job scheduling + online DRAM/CXL capacity management",
+    )
+    .opt("preset", "config-a", "hardware preset of the shared host")
+    .opt("dram", "128GiB", "DRAM capacity of the shared host")
+    .opt(
+        "policy",
+        "placement-aware",
+        "admission policy (fifo|backfill|placement-aware)",
+    )
+    .opt(
+        "engine",
+        "cxl-aware+striping",
+        "placement engine generated jobs request",
+    )
+    .opt("jobs", "100", "jobs to generate when no trace file is replayed")
+    .opt("seed", "42", "trace-generator seed")
+    .opt("rate", "120", "mean inter-arrival seconds of the Poisson arrivals")
+    .opt(
+        "trace",
+        "",
+        "trace JSON path: replay it if the file exists, else generate and save there",
+    )
+    .opt(
+        "json",
+        "",
+        "write the full result (per-job records + occupancy, digest-self-certifying) here",
+    )
+    .opt("threads", "0", "calibration worker threads (0 = default)");
+    let a = parse(spec, args)?;
+    let topo = get_topo(a.get("preset").unwrap(), a.get("dram").filter(|s| !s.is_empty()))?;
+    let policy_name = a.get("policy").unwrap();
+    let policy = fleet::scheduler::by_name(policy_name).ok_or_else(|| {
+        CliDone::Bad(format!(
+            "unknown policy {policy_name:?} ({})",
+            fleet::scheduler::known_names().join("|")
+        ))
+    })?;
+    let engine_name = a.get("engine").unwrap().to_string();
+    get_engine(&engine_name)?; // validate the name up front
+    let trace_path = a.get("trace").filter(|s| !s.is_empty()).map(str::to_string);
+    let trace = match trace_path
+        .as_deref()
+        .filter(|p| std::path::Path::new(p).exists())
+    {
+        Some(p) => {
+            let text = std::fs::read_to_string(p).map_err(|e| anyhow!("reading {p}: {e}"))?;
+            let json =
+                crate::util::json::Json::parse(&text).map_err(|e| anyhow!("parsing {p}: {e}"))?;
+            let t = FleetTrace::from_json(&json).map_err(|e| anyhow!("{p}: {e}"))?;
+            println!(
+                "replaying {} jobs from {p} (generation flags --jobs/--seed/--rate/--engine \
+                 are ignored on replay; delete the file to regenerate)",
+                t.jobs.len()
+            );
+            t
+        }
+        None => {
+            let rate = a.parse_f64("rate")?;
+            if !(rate.is_finite() && rate > 0.0) {
+                return Err(CliDone::Bad(format!(
+                    "--rate must be a positive number of seconds, got {rate}"
+                )));
+            }
+            let mut tg = TraceGen::mixed(a.parse_u64("seed")?, a.parse_usize("jobs")?);
+            tg.mean_interarrival_s = rate;
+            tg.engines = vec![engine_name];
+            let t = tg.generate();
+            if let Some(p) = &trace_path {
+                std::fs::write(p, t.to_json().to_string_pretty())
+                    .map_err(|e| anyhow!("writing {p}: {e}"))?;
+                println!("wrote generated trace to {p}");
+            }
+            t
+        }
+    };
+    let threads = match a.parse_usize("threads")? {
+        0 => crate::util::threadpool::default_threads(),
+        n => n,
+    };
+    let res = simulate_fleet(&topo, &trace, &policy, threads);
+    println!(
+        "fleet of {} jobs under {} on {} (digest {:016x})",
+        trace.jobs.len(),
+        res.policy,
+        topo.name,
+        res.digest()
+    );
+    print!("{}", res.summary_table().render());
+    println!();
+    print!("{}", res.occupancy_table().render());
+    if let Some(path) = a.get("json").filter(|s| !s.is_empty()) {
+        std::fs::write(path, res.to_json().to_string_pretty())
+            .map_err(|e| anyhow!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

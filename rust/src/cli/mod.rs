@@ -7,7 +7,8 @@
 //! * `sweep`     — (C, B) policy grid normalized to baseline (Fig. 9/10),
 //! * `optimizer` — CPU Adam step time vs element count (Fig. 5; sim + real),
 //! * `bandwidth` — host→GPU transfer bandwidth matrix (Fig. 6),
-//! * `train`     — run the functional fine-tuning loop on the artifacts.
+//! * `train`     — run the functional fine-tuning loop on the artifacts,
+//! * `fleet`     — multi-tenant job scheduling on one shared DRAM+CXL host.
 
 pub mod commands;
 
@@ -29,6 +30,7 @@ pub fn run(args: Vec<String>) -> i32 {
         "bandwidth" => commands::bandwidth(rest),
         "train" => commands::train(rest),
         "trace" => commands::trace(rest),
+        "fleet" => commands::fleet(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             return 0;
@@ -67,7 +69,8 @@ fn usage() -> String {
        optimizer  CPU Adam time vs element count, DRAM vs CXL (Fig. 5)\n  \
        bandwidth  host->GPU DMA bandwidth matrix (Fig. 6)\n  \
        train      run the functional fine-tuning loop on AOT artifacts\n  \
-       trace      export a chrome://tracing JSON of one simulated iteration"
+       trace      export a chrome://tracing JSON of one simulated iteration\n  \
+       fleet      multi-tenant job scheduling + online capacity management (--trace/--policy)"
         .to_string()
 }
 

@@ -1,0 +1,185 @@
+//! The long-lived multi-job host: one [`NumaAllocator`] shared by every
+//! resident job, plus GPU-slot accounting.
+//!
+//! Each admitted job is one committed region (its [`PlanReservation`]
+//! shards, one per node) named `job-<id>`; completion releases it through
+//! [`NumaAllocator::release_region`], restoring free space byte-identically
+//! to the job never having run. Admission plans are built against a
+//! *capacity view*: a clone of the host topology whose node capacities
+//! equal the current free bytes, so the existing placement engines and
+//! capacity arithmetic do all the work unchanged. [`FleetHost::free_view`]
+//! is the one-shot form of that view; the simulator's probe keeps its own
+//! scratch clone and rewrites only the capacities per attempt (same
+//! semantics, no per-attempt deep clone).
+
+use std::collections::BTreeMap;
+
+use crate::mem::{AllocError, NumaAllocator, Placement, Policy, RegionId, RegionRequest, TensorClass};
+use crate::offload::PlanReservation;
+use crate::sim::memmodel::AccessMode;
+use crate::topology::{presets as tpresets, SystemTopology};
+
+pub struct FleetHost<'t> {
+    topo: &'t SystemTopology,
+    alloc: NumaAllocator<'t>,
+    /// Committed reservation per resident job id.
+    by_job: BTreeMap<u64, RegionId>,
+    /// GPUs currently assigned to per-job reservations.
+    gpus_in_use: usize,
+}
+
+impl<'t> FleetHost<'t> {
+    pub fn new(topo: &'t SystemTopology) -> Self {
+        Self {
+            topo,
+            // The engine is irrelevant: the host only `commit`s explicit
+            // reservations computed by admission plans, never `alloc`s.
+            alloc: NumaAllocator::new(topo, Policy::DramOnly),
+            by_job: BTreeMap::new(),
+            gpus_in_use: 0,
+        }
+    }
+
+    pub fn topo(&self) -> &'t SystemTopology {
+        self.topo
+    }
+
+    /// Free bytes per node, indexed by `NodeId.0`.
+    pub fn free(&self) -> Vec<u64> {
+        self.topo
+            .all_nodes()
+            .iter()
+            .map(|&n| self.alloc.free_on(n))
+            .collect()
+    }
+
+    /// Used bytes per node, indexed by `NodeId.0`.
+    pub fn used(&self) -> Vec<u64> {
+        self.topo
+            .all_nodes()
+            .iter()
+            .map(|&n| self.alloc.used_on(n))
+            .collect()
+    }
+
+    pub fn free_gpus(&self) -> usize {
+        self.topo.gpus.len() - self.gpus_in_use
+    }
+
+    /// Clone of the host topology with capacities set to the current free
+    /// bytes — the one-shot capacity view admission plans are built
+    /// against (the simulator's probe maintains the same view
+    /// incrementally in a scratch clone). Nodes may carry zero capacity,
+    /// so the clone is deliberately not re-validated.
+    pub fn free_view(&self) -> SystemTopology {
+        tpresets::with_node_capacities(self.topo.clone(), &self.free())
+    }
+
+    pub fn n_resident(&self) -> usize {
+        self.by_job.len()
+    }
+
+    /// Commit a job's reservation (memory shards + GPU slots) for its
+    /// whole residency.
+    pub fn reserve(
+        &mut self,
+        job_id: u64,
+        reservation: &PlanReservation,
+        gpus: usize,
+    ) -> Result<(), AllocError> {
+        assert!(
+            !self.by_job.contains_key(&job_id),
+            "job {job_id} is already resident"
+        );
+        assert!(
+            gpus <= self.free_gpus(),
+            "job {job_id} wants {gpus} GPUs, {} free",
+            self.free_gpus()
+        );
+        let placement = Placement {
+            parts: reservation.parts.clone(),
+            mode: AccessMode::Partitioned,
+        };
+        let id = self.alloc.commit(
+            RegionRequest::new(
+                format!("job-{job_id}"),
+                TensorClass::Activations,
+                reservation.total_bytes(),
+            ),
+            placement,
+        )?;
+        self.by_job.insert(job_id, id);
+        self.gpus_in_use += gpus;
+        Ok(())
+    }
+
+    /// Release a completed job's reservation; free space afterwards is
+    /// byte-identical to the job never having been resident.
+    pub fn release(&mut self, job_id: u64, gpus: usize) -> bool {
+        match self.by_job.remove(&job_id) {
+            Some(rid) => {
+                let released = self.alloc.release_region(rid).is_some();
+                debug_assert!(released, "resident job must hold a live region");
+                debug_assert!(self.gpus_in_use >= gpus, "GPU accounting underflow");
+                self.gpus_in_use -= gpus;
+                released
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets::dev_tiny;
+    use crate::topology::NodeId;
+    use crate::util::units::GIB;
+
+    fn res(parts: Vec<(NodeId, u64)>) -> PlanReservation {
+        PlanReservation { parts }
+    }
+
+    #[test]
+    fn reserve_release_round_trip_restores_free_and_gpus() {
+        let topo = dev_tiny();
+        let mut h = FleetHost::new(&topo);
+        let before = h.free();
+        assert_eq!(h.free_gpus(), 2);
+        h.reserve(7, &res(vec![(NodeId(0), 2 * GIB), (NodeId(1), GIB)]), 1)
+            .unwrap();
+        assert_eq!(h.n_resident(), 1);
+        assert_eq!(h.free_gpus(), 1);
+        assert_eq!(h.free()[0], before[0] - 2 * GIB);
+        assert_eq!(h.free()[1], before[1] - GIB);
+        assert!(h.release(7, 1));
+        assert_eq!(h.free(), before, "free space byte-identical after release");
+        assert_eq!(h.free_gpus(), 2);
+        assert!(!h.release(7, 1), "double release rejected");
+    }
+
+    #[test]
+    fn free_view_tracks_occupancy_down_to_zero() {
+        let topo = dev_tiny();
+        let mut h = FleetHost::new(&topo);
+        h.reserve(1, &res(vec![(NodeId(1), 4 * GIB)]), 0).unwrap();
+        let view = h.free_view();
+        assert_eq!(view.mem_nodes[1].capacity, 0, "cxl0 fully occupied");
+        assert_eq!(view.mem_nodes[0].capacity, topo.mem_nodes[0].capacity);
+        assert_eq!(view.gpus.len(), topo.gpus.len());
+    }
+
+    #[test]
+    fn overcommit_is_rejected_and_leaves_state_unchanged() {
+        let topo = dev_tiny(); // 8 GiB DRAM
+        let mut h = FleetHost::new(&topo);
+        let before = h.free();
+        let err = h
+            .reserve(3, &res(vec![(NodeId(0), 100 * GIB)]), 1)
+            .unwrap_err();
+        assert!(err.shortfall > 0);
+        assert_eq!(h.free(), before);
+        assert_eq!(h.n_resident(), 0);
+        assert_eq!(h.free_gpus(), 2, "failed reserve must not leak GPU slots");
+    }
+}

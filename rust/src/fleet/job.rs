@@ -1,0 +1,391 @@
+//! Fleet jobs and arrival traces.
+//!
+//! A [`JobSpec`] names one fine-tuning job by *configuration* — model
+//! preset × workload shape × schedule × requested placement engine ×
+//! iteration count — plus its arrival time. Everything is stored as
+//! registry names (resolved at simulation time through
+//! `model::presets::by_name`, `offload::schedules::by_name` and
+//! `mem::engine::by_name`), so traces serialize to plain JSON and replay
+//! bit-identically on any host.
+//!
+//! [`TraceGen`] is the seeded synthetic workload generator: Poisson-ish
+//! arrivals via the inverse-CDF exponential sampler on the crate PRNG
+//! ([`Xoshiro256pp::exp_mean`]) and a job-mix sampled over model presets ×
+//! context lengths × batches × schedules. One PRNG stream, one fixed
+//! sampling order per job — the same seed always yields a byte-identical
+//! trace (pinned below), and [`FleetTrace::to_json`] embeds a digest so a
+//! replayed file is self-certifying.
+
+use crate::jobj;
+use crate::model::footprint::Workload;
+use crate::util::digest::Fnv64;
+use crate::util::json::Json;
+use crate::util::prng::Xoshiro256pp;
+
+/// One fine-tuning job of the fleet.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    pub id: u64,
+    /// Arrival time on the shared host, seconds from trace start.
+    pub arrival_s: f64,
+    /// Model preset name (`model::presets::by_name`).
+    pub model: String,
+    pub gpus: usize,
+    pub batch: usize,
+    pub context: usize,
+    /// Schedule registry name (`offload::schedules::by_name`).
+    pub schedule: String,
+    /// Requested placement engine (`mem::engine::by_name`); the
+    /// placement-aware policy may substitute a different one.
+    pub engine: String,
+    /// Training iterations the job runs once admitted.
+    pub iterations: u32,
+}
+
+impl JobSpec {
+    pub fn workload(&self) -> Workload {
+        Workload::new(self.gpus, self.batch, self.context)
+    }
+
+    /// Tokens the job processes over its whole life.
+    pub fn total_tokens(&self) -> u64 {
+        self.workload().tokens_per_iter() * self.iterations as u64
+    }
+
+    /// Memoization key of the job's *configuration* — the identity fields
+    /// that determine profiles and calibrated cost (id/arrival excluded).
+    pub fn config_key(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{}",
+            self.model, self.gpus, self.batch, self.context, self.schedule
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        jobj! {
+            "id" => self.id,
+            "arrival_s" => self.arrival_s,
+            "model" => self.model.as_str(),
+            "gpus" => self.gpus,
+            "batch" => self.batch,
+            "context" => self.context,
+            "schedule" => self.schedule.as_str(),
+            "engine" => self.engine.as_str(),
+            "iterations" => self.iterations as u64,
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobSpec, String> {
+        let num = |key: &str| {
+            j.path(&[key])
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("job missing numeric {key:?}"))
+        };
+        let text = |key: &str| {
+            j.path(&[key])
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("job missing string {key:?}"))
+        };
+        let iterations = num("iterations")?;
+        if !(1..=u32::MAX as u64).contains(&iterations) {
+            return Err(format!("job iterations {iterations} out of range (1..=u32::MAX)"));
+        }
+        let spec = JobSpec {
+            id: num("id")?,
+            arrival_s: j
+                .path(&["arrival_s"])
+                .and_then(Json::as_f64)
+                .ok_or_else(|| "job missing arrival_s".to_string())?,
+            model: text("model")?,
+            gpus: num("gpus")? as usize,
+            batch: num("batch")? as usize,
+            context: num("context")? as usize,
+            schedule: text("schedule")?,
+            engine: text("engine")?,
+            iterations: iterations as u32,
+        };
+        if !(spec.arrival_s.is_finite() && spec.arrival_s >= 0.0) {
+            return Err(format!(
+                "job {}: arrival_s must be a non-negative finite time",
+                spec.id
+            ));
+        }
+        if spec.gpus < 1 || spec.batch < 1 || spec.context < 1 {
+            return Err(format!("job {}: workload dimensions must be positive", spec.id));
+        }
+        Ok(spec)
+    }
+
+    fn fold(&self, h: &mut Fnv64) {
+        h.write_u64(self.id);
+        h.write_f64(self.arrival_s);
+        h.write_str(&self.model);
+        h.write_u64(self.gpus as u64);
+        h.write_u64(self.batch as u64);
+        h.write_u64(self.context as u64);
+        h.write_str(&self.schedule);
+        h.write_str(&self.engine);
+        h.write_u64(self.iterations as u64);
+    }
+}
+
+/// A replayable arrival trace: the generator seed (0 for hand-built
+/// traces) plus every job. The generator emits jobs in arrival order, but
+/// the simulator orders events by time itself, so appended out-of-order
+/// jobs (e.g. [`crate::fleet::sim::mixed_trace_with_xl`]'s XL cells) are
+/// fine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetTrace {
+    pub seed: u64,
+    pub jobs: Vec<JobSpec>,
+}
+
+impl FleetTrace {
+    /// Bit-exact FNV-1a fingerprint of the whole trace (float fields by
+    /// IEEE-754 pattern): two traces match iff they are byte-identical.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_u64(self.seed);
+        h.write_u64(self.jobs.len() as u64);
+        for j in &self.jobs {
+            j.fold(&mut h);
+        }
+        h.finish()
+    }
+
+    /// Machine-readable trace (what `cxlfine fleet --trace` writes and
+    /// replays), digest-embedded so files are self-certifying. The seed is
+    /// written as a decimal *string*: JSON numbers ride an f64 here, which
+    /// would silently round seeds above 2^53 and break the digest on
+    /// replay of the tool's own output.
+    pub fn to_json(&self) -> Json {
+        let jobs: Vec<Json> = self.jobs.iter().map(JobSpec::to_json).collect();
+        jobj! {
+            "seed" => self.seed.to_string(),
+            "digest" => format!("{:016x}", self.digest()),
+            "jobs" => Json::Arr(jobs),
+        }
+    }
+
+    /// Parse a trace, verifying the embedded digest when present and
+    /// rejecting duplicate job ids (replays would double-reserve).
+    /// Accepts the seed as either a decimal string (what [`to_json`]
+    /// writes) or a plain number (hand-written files).
+    pub fn from_json(j: &Json) -> Result<FleetTrace, String> {
+        let seed_field = j
+            .path(&["seed"])
+            .ok_or_else(|| "trace missing seed".to_string())?;
+        let seed = match seed_field {
+            Json::Str(s) => s
+                .parse::<u64>()
+                .map_err(|e| format!("trace seed {s:?}: {e}"))?,
+            other => other
+                .as_u64()
+                .ok_or_else(|| "trace seed must be a u64".to_string())?,
+        };
+        let raw = j
+            .path(&["jobs"])
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "trace missing jobs array".to_string())?;
+        let jobs = raw
+            .iter()
+            .map(JobSpec::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let mut ids = std::collections::BTreeSet::new();
+        for job in &jobs {
+            if !ids.insert(job.id) {
+                return Err(format!("trace has duplicate job id {}", job.id));
+            }
+        }
+        let trace = FleetTrace { seed, jobs };
+        if let Some(want) = j.path(&["digest"]).and_then(Json::as_str) {
+            let got = format!("{:016x}", trace.digest());
+            if want != got {
+                return Err(format!(
+                    "trace digest mismatch: file says {want}, contents hash to {got}"
+                ));
+            }
+        }
+        Ok(trace)
+    }
+}
+
+/// Seeded synthetic workload generator.
+///
+/// Arrivals are a Poisson process (exponential inter-arrivals with mean
+/// `mean_interarrival_s`, inverse-CDF on [`Xoshiro256pp`]); each job's
+/// configuration is sampled uniformly from the mix vectors. Sampling order
+/// per job is fixed (inter-arrival, model, batch, context, schedule,
+/// engine, iterations), so a seed pins the whole trace bitwise.
+#[derive(Clone, Debug)]
+pub struct TraceGen {
+    pub seed: u64,
+    pub n_jobs: usize,
+    pub mean_interarrival_s: f64,
+    pub gpus: usize,
+    pub models: Vec<String>,
+    pub contexts: Vec<usize>,
+    pub batches: Vec<usize>,
+    pub schedules: Vec<String>,
+    pub engines: Vec<String>,
+    /// Inclusive iteration-count range.
+    pub min_iterations: u32,
+    pub max_iterations: u32,
+}
+
+impl TraceGen {
+    /// The default mixed-context fleet: 7B jobs across the paper's context
+    /// ladder, full fine-tuning and LoRA, striped CXL-aware placement.
+    pub fn mixed(seed: u64, n_jobs: usize) -> Self {
+        Self {
+            seed,
+            n_jobs,
+            mean_interarrival_s: 120.0,
+            gpus: 1,
+            models: vec!["7b".into()],
+            contexts: vec![4096, 8192, 16384, 32768],
+            batches: vec![1, 4, 8, 16],
+            schedules: vec!["zero-offload".into(), "lora:16".into()],
+            engines: vec!["cxl-aware+striping".into()],
+            min_iterations: 2,
+            max_iterations: 8,
+        }
+    }
+
+    pub fn generate(&self) -> FleetTrace {
+        assert!(
+            !self.models.is_empty()
+                && !self.contexts.is_empty()
+                && !self.batches.is_empty()
+                && !self.schedules.is_empty()
+                && !self.engines.is_empty(),
+            "every mix dimension needs at least one entry"
+        );
+        assert!(self.min_iterations >= 1 && self.min_iterations <= self.max_iterations);
+        let mut rng = Xoshiro256pp::seeded(self.seed);
+        let mut t = 0.0;
+        let mut jobs = Vec::with_capacity(self.n_jobs);
+        for id in 0..self.n_jobs {
+            t += rng.exp_mean(self.mean_interarrival_s);
+            jobs.push(JobSpec {
+                id: id as u64,
+                arrival_s: t,
+                model: rng.choice(&self.models).clone(),
+                gpus: self.gpus,
+                batch: *rng.choice(&self.batches),
+                context: *rng.choice(&self.contexts),
+                schedule: rng.choice(&self.schedules).clone(),
+                engine: rng.choice(&self.engines).clone(),
+                iterations: rng
+                    .range_u64(self.min_iterations as u64, self.max_iterations as u64)
+                    as u32,
+            });
+        }
+        FleetTrace {
+            seed: self.seed,
+            jobs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_yields_byte_identical_traces() {
+        let a = TraceGen::mixed(77, 40).generate();
+        let b = TraceGen::mixed(77, 40).generate();
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty(),
+            "serialized traces must match byte-for-byte"
+        );
+        let c = TraceGen::mixed(78, 40).generate();
+        assert_ne!(a.digest(), c.digest(), "a different seed must diverge");
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_mix_is_sampled() {
+        let t = TraceGen::mixed(5, 200).generate();
+        assert_eq!(t.jobs.len(), 200);
+        for w in t.jobs.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s, "arrivals must ascend");
+        }
+        for j in &t.jobs {
+            assert!(j.arrival_s.is_finite() && j.arrival_s > 0.0);
+            assert!((2..=8).contains(&j.iterations));
+        }
+        let contexts: std::collections::BTreeSet<usize> =
+            t.jobs.iter().map(|j| j.context).collect();
+        assert!(contexts.len() >= 3, "200 draws must hit most of the ladder");
+        let schedules: std::collections::BTreeSet<&str> =
+            t.jobs.iter().map(|j| j.schedule.as_str()).collect();
+        assert_eq!(schedules.len(), 2);
+    }
+
+    #[test]
+    fn trace_json_round_trips_and_verifies_digest() {
+        let t = TraceGen::mixed(11, 17).generate();
+        let text = t.to_json().to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let back = FleetTrace::from_json(&parsed).unwrap();
+        assert_eq!(t, back, "round trip must preserve every field bitwise");
+        // A tampered trace must be rejected by the digest check.
+        let mut t2 = t.clone();
+        t2.jobs[0].context += 1;
+        let mut tampered = t2.to_json();
+        // keep t2's jobs but the ORIGINAL digest → mismatch
+        if let Json::Obj(o) = &mut tampered {
+            o.set("digest", format!("{:016x}", t.digest()));
+        }
+        let err = FleetTrace::from_json(&tampered).unwrap_err();
+        assert!(err.contains("digest mismatch"), "{err}");
+    }
+
+    #[test]
+    fn huge_seeds_and_bad_jobs_survive_or_fail_parsing_cleanly() {
+        // Seeds above 2^53 must round-trip exactly (stringified seed).
+        let mut t = TraceGen::mixed(1, 3).generate();
+        t.seed = (1u64 << 53) + 3;
+        let back = FleetTrace::from_json(&Json::parse(&t.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back.seed, (1u64 << 53) + 3);
+        assert_eq!(t, back);
+        // A numeric seed (hand-written file) still parses.
+        let hand = Json::parse(r#"{"seed": 7, "jobs": []}"#).unwrap();
+        assert_eq!(FleetTrace::from_json(&hand).unwrap().seed, 7);
+        // Malformed jobs are clean errors, not panics downstream.
+        let zero_iter = Json::parse(
+            r#"{"seed": 1, "jobs": [{"id": 0, "arrival_s": 0.0, "model": "7b",
+                "gpus": 1, "batch": 1, "context": 256, "schedule": "zero-offload",
+                "engine": "cxl-aware", "iterations": 0}]}"#,
+        )
+        .unwrap();
+        let err = FleetTrace::from_json(&zero_iter).unwrap_err();
+        assert!(err.contains("iterations"), "{err}");
+        // Duplicate ids are rejected even without a digest.
+        let mut dup = TraceGen::mixed(1, 2).generate();
+        dup.jobs[1].id = dup.jobs[0].id;
+        let mut json = dup.to_json();
+        if let Json::Obj(o) = &mut json {
+            o.set("digest", Json::Null); // strip certification
+        }
+        // digest now Null → as_str None → skipped; duplicate check must fire
+        let err = FleetTrace::from_json(&json).unwrap_err();
+        assert!(err.contains("duplicate job id"), "{err}");
+    }
+
+    #[test]
+    fn mean_interarrival_is_respected() {
+        let mut g = TraceGen::mixed(13, 2000);
+        g.mean_interarrival_s = 10.0;
+        let t = g.generate();
+        let last = t.jobs.last().unwrap().arrival_s;
+        let mean = last / 2000.0;
+        assert!((mean - 10.0).abs() < 1.0, "empirical mean {mean}");
+    }
+}

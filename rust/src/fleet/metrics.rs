@@ -1,0 +1,494 @@
+//! Fleet-level metrics: per-job records, occupancy curves, summary
+//! statistics, bitwise digests and the digest-self-certifying JSON form
+//! (the fleet analogue of `SweepResult::to_json`).
+
+use crate::jobj;
+use crate::topology::SystemTopology;
+use crate::trow;
+use crate::util::digest::Fnv64;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::util::units::fmt_bytes;
+
+/// Lifecycle state of a job. `Queued`/`Running` are transient; a finished
+/// simulation leaves only `Completed` and `Rejected` (asserted by the
+/// fleet invariant tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Completed,
+    Rejected,
+}
+
+impl JobStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Completed => "completed",
+            JobStatus::Rejected => "rejected",
+        }
+    }
+
+    fn code(self) -> u64 {
+        match self {
+            JobStatus::Queued => 0,
+            JobStatus::Running => 1,
+            JobStatus::Completed => 2,
+            JobStatus::Rejected => 3,
+        }
+    }
+}
+
+/// Everything the simulator knows about one job at the end of the run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobRecord {
+    pub id: u64,
+    pub model: String,
+    pub gpus: usize,
+    pub batch: usize,
+    pub context: usize,
+    pub schedule: String,
+    pub engine_requested: String,
+    /// Engine the job actually ran under (policies may substitute).
+    pub engine_used: Option<String>,
+    pub iterations: u32,
+    pub arrival_s: f64,
+    pub start_s: Option<f64>,
+    pub finish_s: Option<f64>,
+    /// Calibrated per-iteration time the job was priced at.
+    pub iter_s: Option<f64>,
+    /// Tokens over the job's whole life (counted when completed).
+    pub total_tokens: u64,
+    pub status: JobStatus,
+}
+
+impl JobRecord {
+    /// Job completion time (finish − arrival), the fleet's headline
+    /// latency metric; `None` unless completed.
+    pub fn jct_s(&self) -> Option<f64> {
+        Some(self.finish_s? - self.arrival_s)
+    }
+
+    fn fold(&self, h: &mut Fnv64) {
+        h.write_u64(self.id);
+        h.write_str(&self.model);
+        h.write_u64(self.gpus as u64);
+        h.write_u64(self.batch as u64);
+        h.write_u64(self.context as u64);
+        h.write_str(&self.schedule);
+        h.write_str(&self.engine_requested);
+        h.write_str(self.engine_used.as_deref().unwrap_or(""));
+        h.write_u64(self.iterations as u64);
+        h.write_f64(self.arrival_s);
+        for opt in [self.start_s, self.finish_s, self.iter_s] {
+            match opt {
+                Some(v) => {
+                    h.write_u64(1);
+                    h.write_f64(v);
+                }
+                None => {
+                    h.write_u64(0);
+                }
+            }
+        }
+        h.write_u64(self.total_tokens);
+        h.write_u64(self.status.code());
+    }
+
+    fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        jobj! {
+            "id" => self.id,
+            "model" => self.model.as_str(),
+            "gpus" => self.gpus,
+            "batch" => self.batch,
+            "context" => self.context,
+            "schedule" => self.schedule.as_str(),
+            "engine_requested" => self.engine_requested.as_str(),
+            "engine_used" => self.engine_used.as_deref().map(Json::from).unwrap_or(Json::Null),
+            "iterations" => self.iterations as u64,
+            "arrival_s" => self.arrival_s,
+            "start_s" => opt(self.start_s),
+            "finish_s" => opt(self.finish_s),
+            "iter_s" => opt(self.iter_s),
+            "total_tokens" => self.total_tokens,
+            "status" => self.status.name(),
+        }
+    }
+}
+
+/// One point of the occupancy curve, sampled after every processed event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OccupancySample {
+    pub t_s: f64,
+    /// Used bytes per node, indexed by `NodeId.0`.
+    pub used: Vec<u64>,
+    pub queue_len: usize,
+    pub running: usize,
+}
+
+/// The complete outcome of one fleet simulation.
+#[derive(Clone, Debug)]
+pub struct FleetResult {
+    pub policy: String,
+    pub topology: String,
+    pub node_names: Vec<String>,
+    pub node_caps: Vec<u64>,
+    pub records: Vec<JobRecord>,
+    pub samples: Vec<OccupancySample>,
+    /// Discrete events processed (arrivals + completions).
+    pub n_events: u64,
+}
+
+impl FleetResult {
+    pub fn new(policy: &str, topo: &SystemTopology) -> Self {
+        Self {
+            policy: policy.to_string(),
+            topology: topo.name.clone(),
+            node_names: topo.mem_nodes.iter().map(|n| n.name.clone()).collect(),
+            node_caps: topo.mem_nodes.iter().map(|n| n.capacity).collect(),
+            records: Vec::new(),
+            samples: Vec::new(),
+            n_events: 0,
+        }
+    }
+
+    pub fn arrived(&self) -> usize {
+        self.records.len()
+    }
+
+    fn count(&self, s: JobStatus) -> usize {
+        self.records.iter().filter(|r| r.status == s).count()
+    }
+
+    pub fn completed(&self) -> usize {
+        self.count(JobStatus::Completed)
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.count(JobStatus::Rejected)
+    }
+
+    /// Jobs still queued or running when the event heap drained (0 for a
+    /// finished simulation — pinned by the invariant tests).
+    pub fn unfinished(&self) -> usize {
+        self.count(JobStatus::Queued) + self.count(JobStatus::Running)
+    }
+
+    /// Admitted = every job that got to run (completed + still running).
+    pub fn admitted(&self) -> usize {
+        self.completed() + self.count(JobStatus::Running)
+    }
+
+    /// Simulated-clock end of the fleet: the last completion time.
+    pub fn makespan_s(&self) -> f64 {
+        self.records
+            .iter()
+            .filter_map(|r| r.finish_s)
+            .fold(0.0, f64::max)
+    }
+
+    /// Completion times (finish − arrival) of all completed jobs.
+    pub fn jcts_s(&self) -> Vec<f64> {
+        self.records.iter().filter_map(JobRecord::jct_s).collect()
+    }
+
+    pub fn mean_jct_s(&self) -> Option<f64> {
+        let xs = self.jcts_s();
+        (!xs.is_empty()).then(|| xs.iter().sum::<f64>() / xs.len() as f64)
+    }
+
+    pub fn p99_jct_s(&self) -> Option<f64> {
+        let mut xs = self.jcts_s();
+        if xs.is_empty() {
+            return None;
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((xs.len() - 1) as f64 * 0.99).round() as usize;
+        Some(xs[idx])
+    }
+
+    /// Tokens completed by the whole fleet per simulated second.
+    pub fn aggregate_tokens_per_sec(&self) -> f64 {
+        let tokens: u64 = self
+            .records
+            .iter()
+            .filter(|r| r.status == JobStatus::Completed)
+            .map(|r| r.total_tokens)
+            .sum();
+        let span = self.makespan_s();
+        if span > 0.0 {
+            tokens as f64 / span
+        } else {
+            0.0
+        }
+    }
+
+    pub fn max_queue_len(&self) -> usize {
+        self.samples.iter().map(|s| s.queue_len).max().unwrap_or(0)
+    }
+
+    /// Peak committed bytes on a node across the whole run.
+    pub fn peak_used(&self, node: usize) -> u64 {
+        self.samples.iter().map(|s| s.used[node]).max().unwrap_or(0)
+    }
+
+    /// Time-weighted mean occupancy of a node (each sample holds until the
+    /// next event).
+    pub fn mean_used(&self, node: usize) -> f64 {
+        if self.samples.len() < 2 {
+            return self.samples.first().map(|s| s.used[node] as f64).unwrap_or(0.0);
+        }
+        let mut acc = 0.0;
+        let mut span = 0.0;
+        for w in self.samples.windows(2) {
+            let dt = w[1].t_s - w[0].t_s;
+            acc += w[0].used[node] as f64 * dt;
+            span += dt;
+        }
+        if span > 0.0 {
+            acc / span
+        } else {
+            self.samples[0].used[node] as f64
+        }
+    }
+
+    /// Bit-exact FNV-1a digest of the whole result — per-job records,
+    /// occupancy curve and event count. The determinism contract: reruns
+    /// and different `--threads` settings must reproduce it exactly.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_str(&self.policy);
+        h.write_str(&self.topology);
+        h.write_u64(self.node_caps.len() as u64);
+        for c in &self.node_caps {
+            h.write_u64(*c);
+        }
+        h.write_u64(self.records.len() as u64);
+        for r in &self.records {
+            r.fold(&mut h);
+        }
+        h.write_u64(self.samples.len() as u64);
+        for s in &self.samples {
+            h.write_f64(s.t_s);
+            for u in &s.used {
+                h.write_u64(*u);
+            }
+            h.write_u64(s.queue_len as u64);
+            h.write_u64(s.running as u64);
+        }
+        h.write_u64(self.n_events);
+        h.finish()
+    }
+
+    /// Machine-readable form (written by `cxlfine fleet --json`): summary,
+    /// per-node occupancy statistics, the full per-job record set and the
+    /// occupancy curve, digest-self-certifying like `SweepResult::to_json`.
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        let nodes: Vec<Json> = self
+            .node_names
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                jobj! {
+                    "name" => name.as_str(),
+                    "capacity" => self.node_caps[i],
+                    "peak_used" => self.peak_used(i),
+                    "mean_used" => self.mean_used(i),
+                }
+            })
+            .collect();
+        let jobs: Vec<Json> = self.records.iter().map(JobRecord::to_json).collect();
+        let occupancy: Vec<Json> = self
+            .samples
+            .iter()
+            .map(|s| {
+                let used: Vec<Json> = s.used.iter().map(|&u| Json::from(u)).collect();
+                jobj! {
+                    "t_s" => s.t_s,
+                    "used" => Json::Arr(used),
+                    "queue_len" => s.queue_len,
+                    "running" => s.running,
+                }
+            })
+            .collect();
+        jobj! {
+            "policy" => self.policy.as_str(),
+            "topology" => self.topology.as_str(),
+            "digest" => format!("{:016x}", self.digest()),
+            "summary" => jobj! {
+                "arrived" => self.arrived(),
+                "completed" => self.completed(),
+                "rejected" => self.rejected(),
+                "unfinished" => self.unfinished(),
+                "makespan_s" => self.makespan_s(),
+                "mean_jct_s" => opt(self.mean_jct_s()),
+                "p99_jct_s" => opt(self.p99_jct_s()),
+                "aggregate_tokens_per_sec" => self.aggregate_tokens_per_sec(),
+                "max_queue_len" => self.max_queue_len(),
+                "n_events" => self.n_events,
+            },
+            "nodes" => Json::Arr(nodes),
+            "jobs" => Json::Arr(jobs),
+            "occupancy" => Json::Arr(occupancy),
+        }
+    }
+
+    /// The fleet summary (rendered by `cxlfine fleet`).
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(&["metric", "value"]).left(0);
+        t.row(trow!["jobs arrived", self.arrived()]);
+        t.row(trow!["jobs completed", self.completed()]);
+        t.row(trow!["jobs rejected", self.rejected()]);
+        t.row(trow!["max queue length", self.max_queue_len()]);
+        t.row(trow!["makespan", format!("{:.1}s", self.makespan_s())]);
+        t.row(trow![
+            "mean JCT",
+            self.mean_jct_s()
+                .map(|v| format!("{v:.1}s"))
+                .unwrap_or_else(|| "-".into())
+        ]);
+        t.row(trow![
+            "p99 JCT",
+            self.p99_jct_s()
+                .map(|v| format!("{v:.1}s"))
+                .unwrap_or_else(|| "-".into())
+        ]);
+        t.row(trow![
+            "aggregate throughput",
+            format!("{:.0} tok/s", self.aggregate_tokens_per_sec())
+        ]);
+        t.row(trow!["events processed", self.n_events]);
+        t
+    }
+
+    /// Per-node occupancy statistics (rendered by `cxlfine fleet`).
+    pub fn occupancy_table(&self) -> Table {
+        let mut t = Table::new(&["node", "capacity", "peak used", "peak %", "mean used"]).left(0);
+        for (i, name) in self.node_names.iter().enumerate() {
+            let peak = self.peak_used(i);
+            let cap = self.node_caps[i];
+            t.row(trow![
+                name.clone(),
+                fmt_bytes(cap),
+                fmt_bytes(peak),
+                format!("{:.1}%", 100.0 * peak as f64 / cap.max(1) as f64),
+                fmt_bytes(self.mean_used(i) as u64)
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets::dev_tiny;
+
+    fn record(id: u64, arrival: f64, finish: Option<f64>, tokens: u64) -> JobRecord {
+        JobRecord {
+            id,
+            model: "tiny-2m".into(),
+            gpus: 1,
+            batch: 2,
+            context: 256,
+            schedule: "zero-offload".into(),
+            engine_requested: "cxl-aware".into(),
+            engine_used: finish.map(|_| "cxl-aware".to_string()),
+            iterations: 2,
+            arrival_s: arrival,
+            start_s: finish.map(|f| f - 1.0),
+            finish_s: finish,
+            iter_s: finish.map(|_| 0.5),
+            total_tokens: tokens,
+            status: if finish.is_some() {
+                JobStatus::Completed
+            } else {
+                JobStatus::Rejected
+            },
+        }
+    }
+
+    fn result() -> FleetResult {
+        let topo = dev_tiny();
+        let mut r = FleetResult::new("fifo", &topo);
+        r.records = vec![
+            record(0, 0.0, Some(10.0), 1000),
+            record(1, 2.0, Some(4.0), 500),
+            record(2, 3.0, None, 700),
+        ];
+        r.samples = vec![
+            OccupancySample { t_s: 0.0, used: vec![100, 0, 0], queue_len: 0, running: 1 },
+            OccupancySample { t_s: 2.0, used: vec![300, 50, 0], queue_len: 1, running: 2 },
+            OccupancySample { t_s: 10.0, used: vec![0, 0, 0], queue_len: 0, running: 0 },
+        ];
+        r.n_events = 5;
+        r
+    }
+
+    #[test]
+    fn summary_statistics() {
+        let r = result();
+        assert_eq!(r.arrived(), 3);
+        assert_eq!(r.completed(), 2);
+        assert_eq!(r.rejected(), 1);
+        assert_eq!(r.unfinished(), 0);
+        assert_eq!(r.makespan_s(), 10.0);
+        // JCTs: 10−0 = 10, 4−2 = 2 → mean 6, p99 = max
+        assert!((r.mean_jct_s().unwrap() - 6.0).abs() < 1e-12);
+        assert!((r.p99_jct_s().unwrap() - 10.0).abs() < 1e-12);
+        // only completed tokens count: (1000 + 500) / 10
+        assert!((r.aggregate_tokens_per_sec() - 150.0).abs() < 1e-12);
+        assert_eq!(r.max_queue_len(), 1);
+        assert_eq!(r.peak_used(0), 300);
+        // time-weighted: 100·2 + 300·8 over 10s = 260
+        assert!((r.mean_used(0) - 260.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn digest_is_stable_and_sensitive() {
+        let a = result();
+        let b = result();
+        assert_eq!(a.digest(), b.digest());
+        let mut c = result();
+        c.records[1].finish_s = Some(4.000001);
+        assert_ne!(a.digest(), c.digest(), "a float wiggle must change it");
+        let mut d = result();
+        d.samples[1].queue_len = 2;
+        assert_ne!(a.digest(), d.digest());
+    }
+
+    #[test]
+    fn json_is_parseable_and_self_certifying() {
+        let r = result();
+        let text = r.to_json().to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.path(&["digest"]).unwrap().as_str(),
+            Some(format!("{:016x}", r.digest()).as_str())
+        );
+        assert_eq!(
+            parsed.path(&["summary", "completed"]).unwrap().as_u64(),
+            Some(2)
+        );
+        let jobs = parsed.path(&["jobs"]).unwrap().as_arr().unwrap();
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[2].path(&["status"]).unwrap().as_str(), Some("rejected"));
+        assert!(matches!(jobs[2].path(&["finish_s"]), Some(Json::Null)));
+        let occ = parsed.path(&["occupancy"]).unwrap().as_arr().unwrap();
+        assert_eq!(occ.len(), 3);
+        assert_eq!(occ[1].path(&["queue_len"]).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn tables_render_every_node_and_metric() {
+        let r = result();
+        let s = r.summary_table().render();
+        assert!(s.contains("aggregate throughput"), "{s}");
+        let o = r.occupancy_table().render();
+        assert!(o.contains("dram") && o.contains("cxl1"), "{o}");
+    }
+}

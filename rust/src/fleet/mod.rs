@@ -1,0 +1,36 @@
+//! The fleet layer: a discrete-event, multi-tenant simulator sitting
+//! *above* the per-job machinery — many fine-tuning jobs arriving over
+//! time on one shared DRAM + CXL host (the production regime the ROADMAP
+//! targets, which neither the paper nor a single-iteration pipeline
+//! models).
+//!
+//! * [`job`] — job specs, replayable JSON traces, and the seeded
+//!   synthetic workload generator (Poisson-ish arrivals over a job mix),
+//! * [`host`] — the long-lived multi-job host: one shared
+//!   [`crate::mem::NumaAllocator`] plus GPU-slot accounting; admission
+//!   plans are built against its capacity "free view",
+//! * [`scheduler`] — the pluggable admission-policy registry (`fifo`,
+//!   `backfill`, `placement-aware`),
+//! * [`sim`] — the event loop and the memoized per-(config, engine) cost
+//!   calibrator (one real `offload::executor` run per cell),
+//! * [`metrics`] — per-job records, occupancy curves, makespan / JCT /
+//!   aggregate-throughput statistics, digests and JSON.
+//!
+//! The cluster-DES shape follows the dslab family of simulators: an event
+//! heap owns the clock, resources are capacity counters, and policies are
+//! pure decision plugins consulted at every arrival and completion.
+//! Determinism is a contract here exactly as in `sim::flow`: identical
+//! traces produce bit-identical [`FleetResult::digest`]s across reruns
+//! and thread counts.
+
+pub mod host;
+pub mod job;
+pub mod metrics;
+pub mod scheduler;
+pub mod sim;
+
+pub use host::FleetHost;
+pub use job::{FleetTrace, JobSpec, TraceGen};
+pub use metrics::{FleetResult, JobRecord, JobStatus, OccupancySample};
+pub use scheduler::{AdmissionProbe, PolicyRef, SchedPolicy};
+pub use sim::{mixed_trace_with_xl, simulate_fleet, CalCost, Calibrator};

@@ -1,0 +1,250 @@
+//! Admission / scheduling policies and their registry (the fleet analogue
+//! of `mem::engine` and `offload::schedules`).
+//!
+//! A policy is consulted at every scheduling point (job arrival, job
+//! completion) through an [`AdmissionProbe`]: it inspects the queue in
+//! arrival order and calls [`AdmissionProbe::try_admit`] for the jobs it
+//! wants to start. A successful `try_admit` *immediately* debits the
+//! probe's working free view (memory shards + GPU slots), so later picks
+//! in the same pass see the updated capacity — policies stay pure
+//! decision logic while all placement/capacity arithmetic lives behind
+//! the probe (the simulator implements it with real `MemoryPlan` builds).
+//!
+//! Registered policies:
+//!
+//! | Name | Accounting | Engine | Queue discipline |
+//! |---|---|---|---|
+//! | `fifo` | static | requested | strict order, head-of-line blocking |
+//! | `backfill` | static | requested | any fitting job may jump the blocked head |
+//! | `placement-aware` | lifetime (per-phase peak) | requested, then better-fitting alternatives | backfill order |
+
+use std::sync::Arc;
+
+use super::job::JobSpec;
+
+/// What a policy may ask of the simulator at one scheduling point.
+pub trait AdmissionProbe {
+    /// Queued jobs, in arrival order. Indices are stable for the whole
+    /// pass; already-admitted indices simply refuse further admission.
+    fn queue_len(&self) -> usize;
+
+    fn job(&self, idx: usize) -> &JobSpec;
+
+    /// Try to start queued job `idx` now with `engine` (registry name;
+    /// `None` = the job's requested engine) under static or lifetime
+    /// (per-phase peak) capacity accounting, against the current working
+    /// free view. On success the reservation (memory + GPUs) is debited
+    /// and recorded; `false` means the job does not fit right now (or the
+    /// engine name is unknown, or `idx` was already admitted this pass).
+    fn try_admit(&mut self, idx: usize, engine: Option<&str>, lifetime: bool) -> bool;
+}
+
+/// An admission/scheduling policy.
+pub trait SchedPolicy: Send + Sync {
+    /// Registry / CLI name, e.g. `"placement-aware"`.
+    fn name(&self) -> &'static str;
+
+    /// Admit zero or more queued jobs at this scheduling point.
+    fn schedule(&self, probe: &mut dyn AdmissionProbe);
+}
+
+/// Shared handle to a policy — what the simulator, CLI and benches thread.
+pub type PolicyRef = Arc<dyn SchedPolicy>;
+
+/// Strict arrival order with head-of-line blocking: admission stops at
+/// the first queued job that does not fit (static accounting, requested
+/// engine) — the classic batch-queue baseline.
+pub struct Fifo;
+
+impl SchedPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn schedule(&self, probe: &mut dyn AdmissionProbe) {
+        for i in 0..probe.queue_len() {
+            if !probe.try_admit(i, None, false) {
+                break;
+            }
+        }
+    }
+}
+
+/// Out-of-order backfill: every queued job that fits the current free
+/// capacity starts, regardless of a blocked head (EASY-style backfill
+/// without reservations; static accounting, requested engine).
+pub struct Backfill;
+
+impl SchedPolicy for Backfill {
+    fn name(&self) -> &'static str {
+        "backfill"
+    }
+
+    fn schedule(&self, probe: &mut dyn AdmissionProbe) {
+        for i in 0..probe.queue_len() {
+            let _ = probe.try_admit(i, None, false);
+        }
+    }
+}
+
+/// The paper-side policy: admit a job only if a *lifetime-aware* plan
+/// (`MemoryPlan::fits_lifetime_aware` semantics — per-phase peak, not the
+/// static sum) fits, and choose the placement engine per job — the
+/// requested engine first, then the profile-driven and adaptive
+/// alternatives in a fixed order. Jobs whose static footprint overflows
+/// the host but whose liveness windows interleave are exactly the ones
+/// this policy serves and the static policies reject.
+pub struct PlacementAware;
+
+/// Alternative engines `placement-aware` tries after the requested one,
+/// in order.
+pub const PLACEMENT_AWARE_ALTERNATIVES: [&str; 3] =
+    ["profile-aware", "cxl-aware+striping", "adaptive-spill"];
+
+impl SchedPolicy for PlacementAware {
+    fn name(&self) -> &'static str {
+        "placement-aware"
+    }
+
+    fn schedule(&self, probe: &mut dyn AdmissionProbe) {
+        for i in 0..probe.queue_len() {
+            let requested = probe.job(i).engine.clone();
+            let mut candidates = vec![requested];
+            for alt in PLACEMENT_AWARE_ALTERNATIVES {
+                if candidates.iter().all(|c| c != alt) {
+                    candidates.push(alt.to_string());
+                }
+            }
+            for engine in &candidates {
+                if probe.try_admit(i, Some(engine), true) {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Canonical names of every registered policy (CLI help text).
+pub fn known_names() -> Vec<&'static str> {
+    vec!["fifo", "backfill", "placement-aware"]
+}
+
+/// Resolve a policy by name (the CLI/bench entry point; new policies
+/// register here, nothing else changes).
+pub fn by_name(name: &str) -> Option<PolicyRef> {
+    match name {
+        "fifo" => Some(Arc::new(Fifo)),
+        "backfill" => Some(Arc::new(Backfill)),
+        "placement-aware" | "ours" => Some(Arc::new(PlacementAware)),
+        _ => None,
+    }
+}
+
+/// One instance of every registered policy, in canonical order.
+pub fn registry() -> Vec<PolicyRef> {
+    known_names()
+        .into_iter()
+        .map(|n| by_name(n).expect("known name resolves"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_every_known_name() {
+        for name in known_names() {
+            let p = by_name(name).unwrap_or_else(|| panic!("{name} must resolve"));
+            assert_eq!(p.name(), name, "canonical name must round-trip");
+        }
+        assert_eq!(by_name("ours").unwrap().name(), "placement-aware");
+        assert!(by_name("??").is_none());
+        assert_eq!(registry().len(), known_names().len());
+    }
+
+    /// Scripted probe: job `i` fits iff `fits[i]`; records every admission
+    /// and the accounting mode / engine it was asked under.
+    struct Scripted {
+        jobs: Vec<JobSpec>,
+        fits: Vec<bool>,
+        admitted: Vec<usize>,
+        lifetime_seen: Vec<bool>,
+        engines_seen: Vec<Vec<String>>,
+    }
+
+    impl Scripted {
+        fn new(fits: Vec<bool>) -> Self {
+            let jobs = (0..fits.len())
+                .map(|i| JobSpec {
+                    id: i as u64,
+                    arrival_s: i as f64,
+                    model: "tiny-2m".into(),
+                    gpus: 1,
+                    batch: 1,
+                    context: 256,
+                    schedule: "zero-offload".into(),
+                    engine: "cxl-aware".into(),
+                    iterations: 1,
+                })
+                .collect();
+            Self {
+                engines_seen: vec![Vec::new(); fits.len()],
+                lifetime_seen: Vec::new(),
+                admitted: Vec::new(),
+                fits,
+                jobs,
+            }
+        }
+    }
+
+    impl AdmissionProbe for Scripted {
+        fn queue_len(&self) -> usize {
+            self.jobs.len()
+        }
+        fn job(&self, idx: usize) -> &JobSpec {
+            &self.jobs[idx]
+        }
+        fn try_admit(&mut self, idx: usize, engine: Option<&str>, lifetime: bool) -> bool {
+            self.engines_seen[idx]
+                .push(engine.unwrap_or(&self.jobs[idx].engine).to_string());
+            self.lifetime_seen.push(lifetime);
+            if self.fits[idx] && !self.admitted.contains(&idx) {
+                self.admitted.push(idx);
+                true
+            } else {
+                false
+            }
+        }
+    }
+
+    #[test]
+    fn fifo_blocks_at_the_head() {
+        let mut p = Scripted::new(vec![true, false, true]);
+        Fifo.schedule(&mut p);
+        assert_eq!(p.admitted, vec![0], "job 2 must wait behind blocked job 1");
+        assert!(p.lifetime_seen.iter().all(|l| !l), "fifo is static-accounted");
+    }
+
+    #[test]
+    fn backfill_jumps_the_blocked_head() {
+        let mut p = Scripted::new(vec![true, false, true]);
+        Backfill.schedule(&mut p);
+        assert_eq!(p.admitted, vec![0, 2], "fitting job 2 backfills past job 1");
+    }
+
+    #[test]
+    fn placement_aware_tries_requested_engine_first_then_alternatives() {
+        let mut p = Scripted::new(vec![false, true]);
+        PlacementAware.schedule(&mut p);
+        assert!(p.lifetime_seen.iter().all(|l| *l), "lifetime accounting only");
+        // Job 0 never fits → all four candidates tried, requested first.
+        assert_eq!(
+            p.engines_seen[0],
+            vec!["cxl-aware", "profile-aware", "cxl-aware+striping", "adaptive-spill"]
+        );
+        // Job 1 fits on the first try → no alternatives consulted.
+        assert_eq!(p.engines_seen[1], vec!["cxl-aware"]);
+        assert_eq!(p.admitted, vec![1]);
+    }
+}

@@ -1,0 +1,680 @@
+//! The multi-tenant discrete-event fleet simulator.
+//!
+//! Jobs arrive over simulated time (heap-ordered events, dslab-style:
+//! completions before arrivals at equal timestamps, unique sequence
+//! numbers as the final tie-break, `f64::to_bits` as the heap key — exact
+//! for the non-negative times the fleet uses), pass the configured
+//! admission policy, occupy DRAM/CXL capacity and GPU slots on a
+//! [`FleetHost`] for their whole residency, and run `iterations ×
+//! iter_s` where `iter_s` comes from a [`Calibrator`]: one *real*
+//! `offload::executor` run per distinct (configuration, engine) pair,
+//! memoized, so fleets of hundreds of jobs cost hundreds of plan builds
+//! but only a handful of executor runs.
+//!
+//! Determinism contract: the event loop is serial and every tie is broken
+//! by explicit keys; calibration cells are pure functions of (topology,
+//! config, engine), so pre-warming them in parallel (`--threads`) cannot
+//! change any value. Identical traces therefore produce bit-identical
+//! [`FleetResult::digest`]s across reruns and thread counts (pinned by
+//! `rust/tests/fleet_sim.rs`).
+//!
+//! Rejection rule: a job is rejected *at arrival* iff the policy cannot
+//! place it on an **empty** host (same engines, same accounting) —
+//! otherwise it queues, and since the event loop re-schedules at every
+//! completion, every queued job eventually starts and the simulation
+//! always drains.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
+
+use super::host::FleetHost;
+use super::job::{FleetTrace, JobSpec, TraceGen};
+use super::metrics::{FleetResult, JobRecord, JobStatus, OccupancySample};
+use super::scheduler::{AdmissionProbe, PolicyRef};
+use crate::mem::engine;
+use crate::model::presets as mpresets;
+use crate::offload::{
+    schedules, simulate_iteration, MemoryPlan, PlanReservation, RunConfig, RunProfiles,
+};
+use crate::topology::SystemTopology;
+use crate::util::threadpool::par_map;
+
+/// Calibrated price of one iteration of a (configuration, engine) pair,
+/// measured on the empty host.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalCost {
+    pub iter_s: f64,
+    pub tokens_per_iter: u64,
+}
+
+fn resolve_cfg(spec: &JobSpec, engine_name: &str) -> Option<RunConfig> {
+    let model = mpresets::by_name(&spec.model)?;
+    let eng = engine::by_name(engine_name)?;
+    let schedule = schedules::by_name(&spec.schedule)?;
+    Some(RunConfig::new(model, spec.workload(), eng).with_schedule(schedule))
+}
+
+/// Placement-independent per-region profiles of a job's configuration
+/// (probe-based, so always computed against the real topology whose
+/// capacities validate).
+fn compute_profiles(topo: &SystemTopology, spec: &JobSpec) -> Option<RunProfiles> {
+    if spec.gpus > topo.gpus.len() {
+        return None;
+    }
+    let cfg = resolve_cfg(spec, "baseline-dram")?;
+    MemoryPlan::profile_run(topo, &cfg).ok()
+}
+
+/// One real executor run on the empty host: the job's calibrated cost.
+/// Falls back to a lifetime-aware plan for configurations only timeline
+/// accounting can fit at all.
+fn compute_cost(
+    topo: &SystemTopology,
+    spec: &JobSpec,
+    engine_name: &str,
+    profiles: Option<&RunProfiles>,
+) -> Option<CalCost> {
+    if spec.gpus > topo.gpus.len() {
+        return None;
+    }
+    let cfg = resolve_cfg(spec, engine_name)?;
+    let prof = profiles?;
+    let plan = MemoryPlan::build_with_profiles(topo, &cfg, false, prof.clone())
+        .or_else(|_| MemoryPlan::build_with_profiles(topo, &cfg, true, prof.clone()))
+        .ok()?;
+    let bd = simulate_iteration(topo, &cfg, &plan);
+    Some(CalCost {
+        iter_s: bd.iter_s,
+        tokens_per_iter: bd.tokens,
+    })
+}
+
+/// Memoized per-(configuration, engine) cost model and per-configuration
+/// profile cache. Every value is a pure function of the (real, validated)
+/// host topology, so cache warm-up order — including the parallel
+/// pre-warm — cannot change results.
+pub struct Calibrator<'t> {
+    topo: &'t SystemTopology,
+    profiles: BTreeMap<String, Option<RunProfiles>>,
+    costs: BTreeMap<String, Option<CalCost>>,
+}
+
+impl<'t> Calibrator<'t> {
+    pub fn new(topo: &'t SystemTopology) -> Self {
+        Self {
+            topo,
+            profiles: BTreeMap::new(),
+            costs: BTreeMap::new(),
+        }
+    }
+
+    /// Cached measured profiles of the job's configuration (`None` when
+    /// the model/schedule does not resolve or wants more GPUs than exist).
+    pub fn profiles(&mut self, spec: &JobSpec) -> Option<RunProfiles> {
+        let topo = self.topo;
+        self.profiles
+            .entry(spec.config_key())
+            .or_insert_with(|| compute_profiles(topo, spec))
+            .clone()
+    }
+
+    /// Cached calibrated cost of (configuration, engine).
+    pub fn cost(&mut self, spec: &JobSpec, engine_name: &str) -> Option<CalCost> {
+        let key = format!("{}|{engine_name}", spec.config_key());
+        if let Some(v) = self.costs.get(&key) {
+            return *v;
+        }
+        let prof = self.profiles(spec);
+        let v = compute_cost(self.topo, spec, engine_name, prof.as_ref());
+        self.costs.insert(key, v);
+        v
+    }
+
+    /// Pre-compute the distinct (configuration, requested-engine) cells of
+    /// a trace across `threads` workers. Costs the placement-aware policy
+    /// derives for substitute engines still fill in lazily (serial).
+    pub fn prewarm(&mut self, jobs: &[JobSpec], threads: usize) {
+        let mut cells: BTreeMap<String, JobSpec> = BTreeMap::new();
+        for j in jobs {
+            cells
+                .entry(format!("{}|{}", j.config_key(), j.engine))
+                .or_insert_with(|| j.clone());
+        }
+        let cells: Vec<JobSpec> = cells.into_values().collect();
+        let topo = self.topo;
+        let results = par_map(cells.len(), threads.max(1), |i| {
+            let spec = &cells[i];
+            let prof = compute_profiles(topo, spec);
+            let cost = compute_cost(topo, spec, &spec.engine, prof.as_ref());
+            (prof, cost)
+        });
+        for (spec, (prof, cost)) in cells.iter().zip(results) {
+            self.profiles.entry(spec.config_key()).or_insert(prof);
+            self.costs
+                .entry(format!("{}|{}", spec.config_key(), spec.engine))
+                .or_insert(cost);
+        }
+    }
+}
+
+/// A recorded admission decision of one scheduling pass.
+struct ProbeAdmission {
+    engine: String,
+    reservation: PlanReservation,
+    cost: CalCost,
+}
+
+/// The simulator's [`AdmissionProbe`]: a working free view (memory + GPU
+/// slots) that real `MemoryPlan` builds are checked against and debited
+/// from as the policy picks jobs.
+///
+/// `blocked` memoizes failed probes by `(config, engine, accounting)`:
+/// between two completion events, free capacity and free GPU slots only
+/// *shrink* (admissions debit, arrivals change nothing), and every
+/// registered engine is monotone in the free vector, so a failed probe
+/// provably fails again until a completion frees capacity — the caller
+/// clears the set exactly then. This turns the O(queue × engines) plan
+/// rebuilds a long blocked queue would pay at every arrival into set
+/// lookups, without changing a single admission decision.
+struct Probe<'a, 't> {
+    /// Scratch clone of the host topology; only its `mem_nodes[..]
+    /// .capacity` fields are rewritten (to the working free bytes) before
+    /// each plan build, so probes cost capacity writes, not deep clones.
+    view: SystemTopology,
+    free: Vec<u64>,
+    free_gpus: usize,
+    queue: Vec<&'a JobSpec>,
+    cal: &'a mut Calibrator<'t>,
+    blocked: &'a mut BTreeSet<String>,
+    admissions: Vec<Option<ProbeAdmission>>,
+}
+
+impl<'a, 't> Probe<'a, 't> {
+    fn new(
+        topo: &SystemTopology,
+        free: Vec<u64>,
+        free_gpus: usize,
+        queue: Vec<&'a JobSpec>,
+        cal: &'a mut Calibrator<'t>,
+        blocked: &'a mut BTreeSet<String>,
+    ) -> Self {
+        let n = queue.len();
+        Self {
+            view: topo.clone(),
+            free,
+            free_gpus,
+            queue,
+            cal,
+            blocked,
+            admissions: (0..n).map(|_| None).collect(),
+        }
+    }
+}
+
+impl AdmissionProbe for Probe<'_, '_> {
+    fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn job(&self, idx: usize) -> &JobSpec {
+        self.queue[idx]
+    }
+
+    fn try_admit(&mut self, idx: usize, engine_name: Option<&str>, lifetime: bool) -> bool {
+        if self.admissions[idx].is_some() {
+            return false;
+        }
+        let spec = self.queue[idx];
+        let engine_name = engine_name.unwrap_or(&spec.engine).to_string();
+        let probe_key = format!("{}|{engine_name}|{lifetime}", spec.config_key());
+        if self.blocked.contains(&probe_key) {
+            return false;
+        }
+        if spec.gpus > self.free_gpus {
+            self.blocked.insert(probe_key);
+            return false;
+        }
+        let admissible = self.cal.profiles(spec).zip(resolve_cfg(spec, &engine_name));
+        let Some((profiles, cfg)) = admissible else {
+            self.blocked.insert(probe_key);
+            return false;
+        };
+        // Plan against the working free view: capacities = what is left.
+        for (node, cap) in self.view.mem_nodes.iter_mut().zip(&self.free) {
+            node.capacity = *cap;
+        }
+        let Ok(plan) = MemoryPlan::build_with_profiles(&self.view, &cfg, lifetime, profiles)
+        else {
+            self.blocked.insert(probe_key);
+            return false;
+        };
+        let reservation = plan.reservation();
+        drop(plan);
+        // Price only engines that actually admit: the calibration cell is
+        // a real executor run, wasted on candidates whose plan fails.
+        let Some(cost) = self.cal.cost(spec, &engine_name) else {
+            self.blocked.insert(probe_key);
+            return false;
+        };
+        for (n, b) in &reservation.parts {
+            debug_assert!(self.free[n.0] >= *b, "probe view over-promised");
+            self.free[n.0] -= *b;
+        }
+        self.free_gpus -= spec.gpus;
+        self.admissions[idx] = Some(ProbeAdmission {
+            engine: engine_name,
+            reservation,
+            cost,
+        });
+        true
+    }
+}
+
+/// Can the policy place this job on an EMPTY host? (The reject-at-arrival
+/// feasibility check — runs the real policy against a single-job queue
+/// with full capacity, so fifo/backfill test the requested engine under
+/// static accounting and placement-aware tests its whole engine menu
+/// under lifetime accounting.)
+fn feasible_on_empty(
+    topo: &SystemTopology,
+    spec: &JobSpec,
+    policy: &PolicyRef,
+    cal: &mut Calibrator<'_>,
+) -> bool {
+    let free: Vec<u64> = topo.mem_nodes.iter().map(|n| n.capacity).collect();
+    // A throwaway blocked-set: failures observed at *current* capacity do
+    // not apply to the empty-host hypothetical, and vice versa.
+    let mut blocked = BTreeSet::new();
+    let mut probe = Probe::new(topo, free, topo.gpus.len(), vec![spec], cal, &mut blocked);
+    policy.schedule(&mut probe);
+    probe.admissions[0].is_some()
+}
+
+const EV_COMPLETE: u8 = 0;
+const EV_ARRIVE: u8 = 1;
+
+/// Mutable per-job lifecycle state; the immutable [`JobSpec`] stays in the
+/// trace (the event loop reads it by reference, never clones it).
+struct JobState {
+    status: JobStatus,
+    engine_used: Option<String>,
+    start_s: Option<f64>,
+    finish_s: Option<f64>,
+    iter_s: Option<f64>,
+}
+
+/// Run a whole trace under one policy. `threads` only parallelizes the
+/// calibration pre-warm — the event loop itself is serial and the result
+/// digest is independent of the worker count.
+pub fn simulate_fleet(
+    topo: &SystemTopology,
+    trace: &FleetTrace,
+    policy: &PolicyRef,
+    threads: usize,
+) -> FleetResult {
+    let mut ids = BTreeSet::new();
+    for j in &trace.jobs {
+        assert!(ids.insert(j.id), "duplicate job id {}", j.id);
+        assert!(
+            j.arrival_s.is_finite() && j.arrival_s >= 0.0,
+            "job {}: arrival must be a non-negative finite time",
+            j.id
+        );
+        assert!(j.iterations >= 1, "job {}: needs at least one iteration", j.id);
+        assert!(
+            j.gpus >= 1 && j.batch >= 1 && j.context >= 1,
+            "job {}: workload dimensions must be positive",
+            j.id
+        );
+    }
+    let mut cal = Calibrator::new(topo);
+    cal.prewarm(&trace.jobs, threads);
+    let mut host = FleetHost::new(topo);
+    let mut jobs: Vec<JobState> = trace
+        .jobs
+        .iter()
+        .map(|_| JobState {
+            status: JobStatus::Queued,
+            engine_used: None,
+            start_s: None,
+            finish_s: None,
+            iter_s: None,
+        })
+        .collect();
+
+    // Event key: (time bits, kind, seq, job index). Completions sort
+    // before arrivals at the same instant so freed capacity is visible to
+    // same-time arrivals; `seq` makes every key unique. `+ 0.0` folds a
+    // hand-written `-0.0` arrival into `+0.0` — its sign-bit pattern would
+    // otherwise sort after every positive time.
+    let mut heap: BinaryHeap<Reverse<(u64, u8, u64, usize)>> = BinaryHeap::new();
+    for (i, s) in trace.jobs.iter().enumerate() {
+        heap.push(Reverse(((s.arrival_s + 0.0).to_bits(), EV_ARRIVE, i as u64, i)));
+    }
+    // Completion events continue the unique-sequence space after arrivals.
+    let mut seq: u64 = trace.jobs.len() as u64;
+
+    let mut queue: Vec<usize> = Vec::new();
+    let mut samples: Vec<OccupancySample> = Vec::new();
+    let mut feasible: BTreeMap<String, bool> = BTreeMap::new();
+    // Failed-probe memo, valid while capacity only shrinks (see [`Probe`]);
+    // completions grow capacity, so they invalidate it.
+    let mut blocked: BTreeSet<String> = BTreeSet::new();
+    let mut n_events: u64 = 0;
+    let mut running: usize = 0;
+
+    while let Some(Reverse((tb, kind, _seq, ji))) = heap.pop() {
+        let now = f64::from_bits(tb);
+        n_events += 1;
+        if kind == EV_COMPLETE {
+            let released = host.release(trace.jobs[ji].id, trace.jobs[ji].gpus);
+            debug_assert!(released, "completed job must have been resident");
+            jobs[ji].status = JobStatus::Completed;
+            jobs[ji].finish_s = Some(now);
+            running -= 1;
+            blocked.clear();
+        } else {
+            // Reject at arrival iff the policy cannot place the job even
+            // on an empty host; otherwise it queues.
+            let spec = &trace.jobs[ji];
+            let key = format!("{}|{}", spec.config_key(), spec.engine);
+            let ok = match feasible.get(&key) {
+                Some(v) => *v,
+                None => {
+                    let v = feasible_on_empty(topo, spec, policy, &mut cal);
+                    feasible.insert(key, v);
+                    v
+                }
+            };
+            if ok {
+                queue.push(ji);
+            } else {
+                jobs[ji].status = JobStatus::Rejected;
+            }
+        }
+
+        // Scheduling pass: hand the policy the queued specs by reference.
+        let snapshot: Vec<&JobSpec> = queue.iter().map(|&i| &trace.jobs[i]).collect();
+        let mut probe = Probe::new(
+            topo,
+            host.free(),
+            host.free_gpus(),
+            snapshot,
+            &mut cal,
+            &mut blocked,
+        );
+        policy.schedule(&mut probe);
+        let admissions = probe.admissions;
+        let mut started: Vec<usize> = Vec::new();
+        for (qpos, adm) in admissions.into_iter().enumerate() {
+            let Some(adm) = adm else { continue };
+            let ji = queue[qpos];
+            let spec = &trace.jobs[ji];
+            host.reserve(spec.id, &adm.reservation, spec.gpus)
+                .expect("probe debited the identical free view");
+            let finish = now + adm.cost.iter_s * spec.iterations as f64;
+            jobs[ji].status = JobStatus::Running;
+            jobs[ji].engine_used = Some(adm.engine);
+            jobs[ji].start_s = Some(now);
+            jobs[ji].iter_s = Some(adm.cost.iter_s);
+            heap.push(Reverse((finish.to_bits(), EV_COMPLETE, seq, ji)));
+            seq += 1;
+            running += 1;
+            started.push(qpos);
+        }
+        for &qpos in started.iter().rev() {
+            queue.remove(qpos);
+        }
+        samples.push(OccupancySample {
+            t_s: now,
+            used: host.used(),
+            queue_len: queue.len(),
+            running,
+        });
+    }
+    assert!(
+        queue.is_empty() && running == 0,
+        "fleet failed to drain: {} queued, {running} running",
+        queue.len()
+    );
+
+    let mut result = FleetResult::new(policy.name(), topo);
+    result.n_events = n_events;
+    result.samples = samples;
+    result.records = trace
+        .jobs
+        .iter()
+        .zip(jobs)
+        .map(|(spec, j)| JobRecord {
+            id: spec.id,
+            model: spec.model.clone(),
+            gpus: spec.gpus,
+            batch: spec.batch,
+            context: spec.context,
+            schedule: spec.schedule.clone(),
+            engine_requested: spec.engine.clone(),
+            engine_used: j.engine_used,
+            iterations: spec.iterations,
+            arrival_s: spec.arrival_s,
+            start_s: j.start_s,
+            finish_s: j.finish_s,
+            iter_s: j.iter_s,
+            total_tokens: spec.total_tokens(),
+            status: j.status,
+        })
+        .collect();
+    result
+}
+
+/// The pinned evaluation trace: `n_mixed` jobs from [`TraceGen::mixed`]
+/// plus `n_xl` "XL" jobs at the first batch rung (context 32768) whose
+/// *static* footprint overflows the host but whose per-phase peak fits —
+/// the cells only a lifetime-aware admission policy can serve. Returns
+/// the mixed trace unchanged when the host has no such rung (ample DRAM);
+/// callers that depend on the XL cell assert on `jobs.len()`.
+pub fn mixed_trace_with_xl(
+    topo: &SystemTopology,
+    seed: u64,
+    n_mixed: usize,
+    n_xl: usize,
+) -> FleetTrace {
+    let mut tg = TraceGen::mixed(seed, n_mixed);
+    // Lighter than the default mix: enough idle capacity that the XL jobs
+    // mostly run in windows the static policies would leave empty.
+    tg.mean_interarrival_s = 240.0;
+    let mut trace = tg.generate();
+    if n_xl == 0 {
+        return trace;
+    }
+    let xl_engine = "cxl-aware+striping";
+    let context = 32768usize;
+    let model = mpresets::by_name("7b").expect("preset");
+    let mut xl_batch = None;
+    for rung in 1..=40usize {
+        let batch = rung * 8;
+        let cfg = RunConfig::new(
+            model.clone(),
+            crate::model::footprint::Workload::new(1, batch, context),
+            engine::by_name(xl_engine).expect("registered"),
+        );
+        // Static fit is monotone in batch (only activations grow), so the
+        // first failing rung is THE static/lifetime boundary candidate.
+        if !MemoryPlan::fits(topo, &cfg) {
+            if MemoryPlan::fits_lifetime_aware(topo, &cfg) {
+                xl_batch = Some(batch);
+            }
+            break;
+        }
+    }
+    let Some(batch) = xl_batch else {
+        return trace;
+    };
+    let span = trace.jobs.last().map(|j| j.arrival_s).unwrap_or(0.0);
+    let base_id = trace.jobs.len() as u64;
+    for k in 0..n_xl {
+        trace.jobs.push(JobSpec {
+            id: base_id + k as u64,
+            arrival_s: span * (k as f64 + 1.0) / (n_xl as f64 + 1.0),
+            model: "7b".into(),
+            gpus: 1,
+            batch,
+            context,
+            schedule: "zero-offload".into(),
+            engine: xl_engine.into(),
+            iterations: 1,
+        });
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::scheduler;
+    use crate::topology::presets::dev_tiny;
+    use crate::util::units::MIB;
+
+    fn job(id: u64, arrival: f64, batch: usize, context: usize) -> JobSpec {
+        JobSpec {
+            id,
+            arrival_s: arrival,
+            model: "tiny-2m".into(),
+            gpus: 1,
+            batch,
+            context,
+            schedule: "zero-offload".into(),
+            engine: "cxl-aware+striping".into(),
+            iterations: 2,
+        }
+    }
+
+    /// dev-tiny shrunk so tiny-2m jobs actually contend for memory.
+    fn tight_topo() -> SystemTopology {
+        let mut t = dev_tiny();
+        t.mem_nodes[0].capacity = 48 * MIB;
+        t.mem_nodes[1].capacity = 16 * MIB;
+        t.mem_nodes[2].capacity = 16 * MIB;
+        t.validate();
+        t
+    }
+
+    #[test]
+    fn single_job_runs_to_completion() {
+        let topo = dev_tiny();
+        let trace = FleetTrace {
+            seed: 0,
+            jobs: vec![job(0, 1.0, 2, 256)],
+        };
+        let policy = scheduler::by_name("fifo").unwrap();
+        let res = simulate_fleet(&topo, &trace, &policy, 1);
+        assert_eq!(res.completed(), 1);
+        assert_eq!(res.rejected(), 0);
+        assert_eq!(res.n_events, 2, "one arrival + one completion");
+        let r = &res.records[0];
+        assert_eq!(r.start_s, Some(1.0), "empty host admits on arrival");
+        let iter_s = r.iter_s.unwrap();
+        assert!(iter_s > 0.0);
+        assert!((r.finish_s.unwrap() - (1.0 + 2.0 * iter_s)).abs() < 1e-9);
+        assert_eq!(r.engine_used.as_deref(), Some("cxl-aware+striping"));
+        // occupancy returns to zero at the final sample
+        let last = res.samples.last().unwrap();
+        assert!(last.used.iter().all(|&u| u == 0));
+    }
+
+    #[test]
+    fn gpu_slots_serialize_a_two_gpu_host() {
+        // Three 1-GPU jobs arriving together on a 2-GPU host: two start at
+        // once, the third waits for the first completion.
+        let topo = dev_tiny();
+        let trace = FleetTrace {
+            seed: 0,
+            jobs: vec![job(0, 0.0, 1, 256), job(1, 0.0, 1, 256), job(2, 0.0, 1, 256)],
+        };
+        let policy = scheduler::by_name("fifo").unwrap();
+        let res = simulate_fleet(&topo, &trace, &policy, 1);
+        assert_eq!(res.completed(), 3);
+        let starts: Vec<f64> = res.records.iter().map(|r| r.start_s.unwrap()).collect();
+        assert_eq!(starts[0], 0.0);
+        assert_eq!(starts[1], 0.0);
+        assert!(starts[2] > 0.0, "third job must wait for a GPU slot");
+        assert_eq!(res.max_queue_len(), 1);
+    }
+
+    #[test]
+    fn infeasible_jobs_are_rejected_at_arrival() {
+        let topo = tight_topo();
+        // context 65536 × batch 8 tiny-2m activation checkpoints alone
+        // (512·B·C bytes) overflow the whole 80 MiB machine under any
+        // accounting; the small job is untouched.
+        let trace = FleetTrace {
+            seed: 0,
+            jobs: vec![job(0, 0.0, 8, 65536), job(1, 1.0, 1, 256)],
+        };
+        for policy in scheduler::registry() {
+            let res = simulate_fleet(&topo, &trace, &policy, 1);
+            assert_eq!(res.rejected(), 1, "{}", policy.name());
+            assert_eq!(res.completed(), 1, "{}", policy.name());
+            assert_eq!(
+                res.records[0].status,
+                JobStatus::Rejected,
+                "{}: the XL job is the rejected one",
+                policy.name()
+            );
+            assert!(res.records[0].start_s.is_none());
+        }
+    }
+
+    #[test]
+    fn backfill_starts_small_jobs_a_blocked_fifo_head_delays() {
+        // GPU-slot head-of-line blocking on a 2-GPU host, all arrivals at
+        // t=0 (same-time events process in id order): job 0 takes one GPU,
+        // job 1 wants both and blocks, job 2 wants the remaining one.
+        // Fifo's blocked head also delays job 2; backfill lets it jump.
+        let topo = dev_tiny();
+        let mut j1 = job(1, 0.0, 1, 256);
+        j1.gpus = 2;
+        let trace = FleetTrace {
+            seed: 0,
+            jobs: vec![job(0, 0.0, 1, 256), j1, job(2, 0.0, 1, 256)],
+        };
+        let fifo = scheduler::by_name("fifo").unwrap();
+        let backfill = scheduler::by_name("backfill").unwrap();
+        let rf = simulate_fleet(&topo, &trace, &fifo, 1);
+        let rb = simulate_fleet(&topo, &trace, &backfill, 1);
+        assert_eq!(rf.completed(), 3);
+        assert_eq!(rb.completed(), 3);
+        let start = |r: &FleetResult, id: usize| r.records[id].start_s.unwrap();
+        // Under fifo, job 2 starts only after the blocked 2-GPU head ran.
+        assert!(start(&rf, 1) > 0.0, "head must wait for job 0's GPU");
+        assert!(start(&rf, 2) >= start(&rf, 1));
+        // Backfill starts job 2 immediately, jumping the blocked head.
+        assert_eq!(start(&rb, 2), 0.0, "backfill must jump the blocked head");
+        assert!(
+            start(&rb, 2) < start(&rb, 1),
+            "small job first: {} vs {}",
+            start(&rb, 2),
+            start(&rb, 1)
+        );
+    }
+
+    #[test]
+    fn calibrator_memoizes_costs_and_profiles() {
+        let topo = dev_tiny();
+        let mut cal = Calibrator::new(&topo);
+        let a = job(0, 0.0, 2, 256);
+        let c1 = cal.cost(&a, "cxl-aware+striping").unwrap();
+        let c2 = cal.cost(&a, "cxl-aware+striping").unwrap();
+        assert_eq!(c1, c2);
+        assert_eq!(cal.costs.len(), 1, "one (config, engine) cell");
+        assert_eq!(cal.profiles.len(), 1);
+        // same config, second engine → one more cost cell, no new profile
+        cal.cost(&a, "baseline-dram").unwrap();
+        assert_eq!(cal.costs.len(), 2);
+        assert_eq!(cal.profiles.len(), 1);
+        assert!(cal.cost(&a, "no-such-engine").is_none());
+        // pre-warm is value-identical to the lazy path
+        let mut warm = Calibrator::new(&topo);
+        warm.prewarm(&[a.clone()], 4);
+        assert_eq!(warm.cost(&a, &a.engine), cal.cost(&a, &a.engine));
+    }
+}

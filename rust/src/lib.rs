@@ -18,6 +18,7 @@
 //! figure to a module and bench target.
 
 pub mod cli;
+pub mod fleet;
 pub mod mem;
 pub mod model;
 pub mod offload;

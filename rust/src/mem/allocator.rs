@@ -269,19 +269,55 @@ impl<'t> NumaAllocator<'t> {
     /// Release a region, returning its bytes to the nodes (across every
     /// phase of its committed window).
     pub fn release(&mut self, id: RegionId) -> bool {
-        match self.regions.remove(&id.0) {
-            Some(r) => {
-                let (lo, hi) = self.window(r.lifetime);
-                for (n, b) in &r.placement.parts {
-                    for ph in lo..=hi {
-                        debug_assert!(self.used[n.0][ph] >= *b, "release underflow");
-                        self.used[n.0][ph] -= *b;
-                    }
-                }
-                true
+        self.release_region(id).is_some()
+    }
+
+    /// [`NumaAllocator::release`] returning the released [`Region`] — the
+    /// explicit public path long-lived owners (the fleet host) use to free
+    /// a completed job's reservation without rebuilding the allocator.
+    /// Free space afterwards is byte-identical to never having allocated
+    /// the region (pinned by `release_restores_free_byte_identically`).
+    pub fn release_region(&mut self, id: RegionId) -> Option<Region> {
+        let r = self.regions.remove(&id.0)?;
+        let (lo, hi) = self.window(r.lifetime);
+        for (n, b) in &r.placement.parts {
+            for ph in lo..=hi {
+                debug_assert!(self.used[n.0][ph] >= *b, "release underflow");
+                self.used[n.0][ph] -= *b;
             }
-            None => false,
         }
+        Some(r)
+    }
+
+    /// Per-phase (early) release of a region's committed tail: give back
+    /// the phases `[from, death]` of its window and shrink the lifetime to
+    /// end at `from − 1` — how a long-lived host retires e.g. activation
+    /// occupancy the moment the backward pass ends instead of at region
+    /// death. Releasing at or before the birth phase releases the whole
+    /// region; releasing past the death phase is a no-op. Eternal regions
+    /// (no lifetime) span the full timeline and become scoped when
+    /// truncated. Returns `false` only for unknown ids.
+    pub fn release_phases_from(&mut self, id: RegionId, from: usize) -> bool {
+        let (lifetime, parts) = match self.regions.get(&id.0) {
+            Some(r) => (r.lifetime, r.placement.parts.clone()),
+            None => return false,
+        };
+        let (lo, hi) = self.window(lifetime);
+        if from <= lo {
+            return self.release_region(id).is_some();
+        }
+        if from > hi {
+            return true;
+        }
+        for (n, b) in &parts {
+            for ph in from..=hi {
+                debug_assert!(self.used[n.0][ph] >= *b, "release underflow");
+                self.used[n.0][ph] -= *b;
+            }
+        }
+        let r = self.regions.get_mut(&id.0).expect("presence checked above");
+        r.lifetime = Some(Lifetime::spanning(lo as u32, (from - 1) as u32));
+        true
     }
 
     pub fn region(&self, id: RegionId) -> Option<&Region> {
@@ -546,6 +582,108 @@ mod tests {
         let d = a.describe();
         assert!(d.contains("live [0..1]"), "{d}");
         assert!(d.contains("per-phase"), "{d}");
+    }
+
+    /// The fleet-host satellite: after releasing a region, every phase of
+    /// every node must be byte-identical to an allocator where the region
+    /// was never allocated at all. Neighbouring regions are committed with
+    /// explicit placements so their shards cannot shift with the victim's
+    /// presence.
+    #[test]
+    fn release_restores_free_byte_identically() {
+        let topo = dev_tiny();
+        let build = |with_victim: bool| {
+            let mut a = NumaAllocator::with_phases(&topo, Policy::DramOnly, 3);
+            a.commit(
+                RegionRequest::new("keep-a", TensorClass::MasterParams, GIB)
+                    .with_lifetime(Lifetime::spanning(0, 2)),
+                Placement::single(NodeId(0), GIB),
+            )
+            .unwrap();
+            let victim = if with_victim {
+                Some(
+                    a.commit(
+                        RegionRequest::new("victim", TensorClass::Activations, 2 * GIB),
+                        Placement {
+                            parts: vec![(NodeId(0), GIB), (NodeId(1), GIB)],
+                            mode: crate::sim::memmodel::AccessMode::Partitioned,
+                        },
+                    )
+                    .unwrap(),
+                )
+            } else {
+                None
+            };
+            a.commit(
+                RegionRequest::new("keep-b", TensorClass::Activations, GIB)
+                    .with_lifetime(Lifetime::spanning(1, 1)),
+                Placement::single(NodeId(2), GIB),
+            )
+            .unwrap();
+            (a, victim)
+        };
+        let (mut with, victim) = build(true);
+        let released = with.release_region(victim.unwrap()).expect("live region");
+        assert_eq!(released.name, "victim");
+        assert_eq!(released.bytes, 2 * GIB);
+        let (without, _) = build(false);
+        for n in topo.all_nodes() {
+            for ph in 0..3 {
+                assert_eq!(
+                    with.used_on_at(n, ph),
+                    without.used_on_at(n, ph),
+                    "node {} phase {ph} differs from never-allocated",
+                    n.0
+                );
+            }
+            assert_eq!(with.free_on(n), without.free_on(n));
+        }
+        assert!(with.release_region(released.id).is_none(), "double release");
+    }
+
+    #[test]
+    fn release_phases_from_truncates_the_tail_only() {
+        let topo = dev_tiny();
+        let mut a = NumaAllocator::with_phases(&topo, Policy::DramOnly, 4);
+        let id = a
+            .alloc(
+                RegionRequest::new("acts", TensorClass::Activations, 2 * GIB)
+                    .with_lifetime(Lifetime::spanning(0, 2)),
+            )
+            .unwrap();
+        assert!(a.release_phases_from(id, 1));
+        assert_eq!(a.used_on_at(NodeId(0), 0), 2 * GIB, "head phase keeps bytes");
+        assert_eq!(a.used_on_at(NodeId(0), 1), 0);
+        assert_eq!(a.used_on_at(NodeId(0), 2), 0);
+        assert_eq!(a.region(id).unwrap().lifetime, Some(Lifetime::spanning(0, 0)));
+        // past-death truncation is a no-op, not an error
+        assert!(a.release_phases_from(id, 3));
+        assert_eq!(a.used_on_at(NodeId(0), 0), 2 * GIB);
+        // truncating at (or before) birth releases the whole region
+        assert!(a.release_phases_from(id, 0));
+        assert!(a.region(id).is_none());
+        for ph in 0..4 {
+            assert_eq!(a.used_on_at(NodeId(0), ph), 0, "phase {ph}");
+        }
+        assert!(!a.release_phases_from(id, 0), "unknown id must be rejected");
+    }
+
+    #[test]
+    fn release_phases_from_scopes_eternal_regions() {
+        let topo = dev_tiny();
+        let mut a = NumaAllocator::with_phases(&topo, Policy::DramOnly, 3);
+        let id = a
+            .alloc(RegionRequest::new("p", TensorClass::MasterParams, GIB))
+            .unwrap();
+        assert!(a.release_phases_from(id, 2));
+        assert_eq!(a.region(id).unwrap().lifetime, Some(Lifetime::spanning(0, 1)));
+        assert_eq!(a.used_on_at(NodeId(0), 1), GIB);
+        assert_eq!(a.used_on_at(NodeId(0), 2), 0);
+        // the shrunk window is what a subsequent full release gives back
+        assert!(a.release(id));
+        for ph in 0..3 {
+            assert_eq!(a.used_on_at(NodeId(0), ph), 0);
+        }
     }
 
     // ------------------------------------------------------------------

@@ -24,7 +24,7 @@ pub mod sweep;
 pub use executor::{execute, Execution, RegionTraffic};
 pub use iteration::{legacy_simulate_iteration, legacy_simulate_iteration_traced};
 pub use metrics::{PhaseBreakdown, PhaseReport, PhaseSpan};
-pub use plan::{MemoryPlan, PlanError, RunConfig, RunProfiles};
+pub use plan::{MemoryPlan, PlanError, PlanReservation, RunConfig, RunProfiles};
 pub use schedule::{FlopsTerm, Op, OpId, OpNode, RegionTouch, Schedule};
 pub use schedules::{ScheduleBuilder, ScheduleRef};
 pub use sweep::{

@@ -154,20 +154,48 @@ impl<'t> MemoryPlan<'t> {
         Self::build_inner(topo, cfg, true)
     }
 
+    /// [`MemoryPlan::build`] / [`MemoryPlan::build_lifetime_aware`] with a
+    /// pre-computed profile set, skipping the probe pass entirely.
+    /// Profiles are placement-independent (pinned by
+    /// `profiles_are_placement_independent`), so a cached set measured on
+    /// any capacity variant of the same machine is exact here — this is
+    /// what lets a long-lived fleet host admission-check hundreds of jobs
+    /// against constrained topology *views* (whose zero-capacity nodes the
+    /// probe clone could not even validate) at allocation cost only.
+    pub fn build_with_profiles(
+        topo: &'t SystemTopology,
+        cfg: &RunConfig,
+        lifetime_aware: bool,
+        profiles: RunProfiles,
+    ) -> Result<MemoryPlan<'t>, PlanError> {
+        Self::build_inner_with(topo, cfg, lifetime_aware, Some(profiles))
+    }
+
     fn build_inner(
         topo: &'t SystemTopology,
         cfg: &RunConfig,
         lifetime_aware: bool,
     ) -> Result<MemoryPlan<'t>, PlanError> {
+        Self::build_inner_with(topo, cfg, lifetime_aware, None)
+    }
+
+    fn build_inner_with(
+        topo: &'t SystemTopology,
+        cfg: &RunConfig,
+        lifetime_aware: bool,
+        precomputed: Option<RunProfiles>,
+    ) -> Result<MemoryPlan<'t>, PlanError> {
         let f = Footprint::compute(&cfg.model, &cfg.workload);
         // The profiling pass costs a probe plan + schedule walk; only pay
-        // for it when something consumes the result (this also keeps the
-        // legacy engines' static path work-identical, not just
-        // byte-identical).
-        let profiles = if lifetime_aware || cfg.engine.uses_profiles() {
-            Some(Self::profile_run(topo, cfg)?)
-        } else {
-            None
+        // for it when something consumes the result and the caller did not
+        // bring a cached set (this also keeps the legacy engines' static
+        // path work-identical, not just byte-identical).
+        let profiles = match precomputed {
+            Some(p) => Some(p),
+            None if lifetime_aware || cfg.engine.uses_profiles() => {
+                Some(Self::profile_run(topo, cfg)?)
+            }
+            None => None,
         };
         let n_phases = profiles.as_ref().map(|p| p.n_phases()).unwrap_or(1);
         let mut alloc = if lifetime_aware {
@@ -341,6 +369,49 @@ impl<'t> MemoryPlan<'t> {
             .unwrap()
             .placement
             .fractions()
+    }
+
+    /// The plan's per-node byte demand (see [`PlanReservation`]): what a
+    /// long-lived multi-job host debits for the job's whole residency.
+    pub fn reservation(&self) -> PlanReservation {
+        let parts = self
+            .alloc
+            .topo()
+            .all_nodes()
+            .into_iter()
+            .filter_map(|n| {
+                let used = self.alloc.used_on(n);
+                (used > 0).then_some((n, used))
+            })
+            .collect();
+        PlanReservation { parts }
+    }
+}
+
+/// Per-node byte demand of a built plan, the plan → reservation handle the
+/// fleet simulator commits against its long-lived host allocator. For
+/// plans built with [`MemoryPlan::build`] this is the static per-node sum;
+/// for [`MemoryPlan::build_lifetime_aware`] it is the per-phase *peak* per
+/// node — strictly smaller whenever liveness windows do not all overlap,
+/// which is exactly the capacity a lifetime-aware admission policy can
+/// hand to additional tenants.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanReservation {
+    /// `(node, bytes)` in ascending node order, zero-byte nodes omitted.
+    pub parts: Vec<(NodeId, u64)>,
+}
+
+impl PlanReservation {
+    pub fn total_bytes(&self) -> u64 {
+        self.parts.iter().map(|(_, b)| *b).sum()
+    }
+
+    pub fn bytes_on(&self, node: NodeId) -> u64 {
+        self.parts
+            .iter()
+            .find(|(n, _)| *n == node)
+            .map(|(_, b)| *b)
+            .unwrap_or(0)
     }
 }
 
@@ -713,6 +784,79 @@ mod tests {
                 r.name
             );
         }
+    }
+
+    #[test]
+    fn build_with_profiles_matches_the_self_profiling_paths() {
+        // Handing the builder a cached profile set must reproduce both the
+        // static and the lifetime-aware plans byte-for-byte — the contract
+        // the fleet admission path (hundreds of cached-profile builds per
+        // sim) rests on.
+        let topo = with_dram_capacity(config_a(), 128 * GIB);
+        let cfg = RunConfig::new(
+            qwen25_7b(),
+            Workload::new(1, 8, 4096),
+            Policy::CxlAware { striping: true },
+        );
+        let cached = MemoryPlan::profile_run(&topo, &cfg).unwrap();
+        let snapshot = |p: &MemoryPlan<'_>| {
+            p.alloc
+                .regions()
+                .map(|r| (r.name.clone(), r.placement.clone(), r.lifetime))
+                .collect::<Vec<_>>()
+        };
+        for lifetime in [false, true] {
+            let direct = if lifetime {
+                MemoryPlan::build_lifetime_aware(&topo, &cfg).unwrap()
+            } else {
+                MemoryPlan::build(&topo, &cfg).unwrap()
+            };
+            let via_cache =
+                MemoryPlan::build_with_profiles(&topo, &cfg, lifetime, cached.clone()).unwrap();
+            assert_eq!(snapshot(&direct), snapshot(&via_cache), "lifetime={lifetime}");
+            assert_eq!(direct.reservation(), via_cache.reservation());
+        }
+    }
+
+    #[test]
+    fn reservation_sums_static_and_peaks_lifetime() {
+        let topo = with_dram_capacity(config_a(), 128 * GIB);
+        let cfg = RunConfig::new(
+            qwen25_7b(),
+            Workload::new(1, 8, 4096),
+            Policy::CxlAware { striping: true },
+        );
+        // Static: the reservation is exactly the per-node placement sums.
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        let res = plan.reservation();
+        for n in topo.all_nodes() {
+            let sum: u64 = plan
+                .alloc
+                .regions()
+                .map(|r| r.placement.bytes_on(n))
+                .sum();
+            assert_eq!(res.bytes_on(n), sum, "node {}", n.0);
+        }
+        assert_eq!(res.total_bytes(), plan.footprint.total());
+        // Lifetime-aware on a single node: the reservation is the phase
+        // peak, strictly below the static sum (activations die before the
+        // step, the fp32 set is dead until it).
+        let ample = config_a();
+        let dcfg = RunConfig::new(qwen25_7b(), Workload::new(1, 8, 4096), Policy::DramOnly);
+        let dstatic = MemoryPlan::build(&ample, &dcfg).unwrap().reservation();
+        let life = MemoryPlan::build_lifetime_aware(&ample, &dcfg).unwrap();
+        let lres = life.reservation();
+        assert!(
+            lres.total_bytes() < dstatic.total_bytes(),
+            "per-phase peak {} must undercut static sum {}",
+            lres.total_bytes(),
+            dstatic.total_bytes()
+        );
+        // Ascending node order, no zero shards.
+        for w in lres.parts.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+        assert!(lres.parts.iter().all(|(_, b)| *b > 0));
     }
 
     #[test]

@@ -131,6 +131,21 @@ pub fn with_dram_capacity(mut t: SystemTopology, dram_bytes: u64) -> SystemTopol
     t
 }
 
+/// Override every memory node's capacity at once — the fleet host's
+/// "free view": admission plans are built against a clone of the host
+/// topology whose capacities equal the *remaining* free bytes per node.
+/// Deliberately not re-validated: a fully occupied node has zero
+/// remaining capacity, which `validate` (rightly) rejects for real
+/// machines but which the placement engines and allocator arithmetic
+/// handle fine (a zero-capacity node simply never receives bytes).
+pub fn with_node_capacities(mut t: SystemTopology, caps: &[u64]) -> SystemTopology {
+    assert_eq!(caps.len(), t.mem_nodes.len(), "one capacity per node");
+    for (node, cap) in t.mem_nodes.iter_mut().zip(caps) {
+        node.capacity = *cap;
+    }
+    t
+}
+
 /// Add `n` extra GPUs (scalability studies beyond the paper's 2).
 pub fn with_gpus(mut t: SystemTopology, n: usize) -> SystemTopology {
     let base_links = t.links.len();
@@ -218,6 +233,15 @@ mod tests {
         let t = with_dram_capacity(config_a(), 128 * GIB);
         assert_eq!(t.dram().capacity, 128 * GIB);
         assert_eq!(t.node(t.cxl_nodes()[0]).capacity, 512 * GIB);
+    }
+
+    #[test]
+    fn with_node_capacities_overrides_every_node_and_allows_zero() {
+        let t = with_node_capacities(config_b(), &[10 * GIB, 0, 7]);
+        assert_eq!(t.dram().capacity, 10 * GIB);
+        assert_eq!(t.mem_nodes[1].capacity, 0);
+        assert_eq!(t.mem_nodes[2].capacity, 7);
+        assert_eq!(t.cxl_nodes().len(), 2, "node kinds unchanged");
     }
 
     #[test]

@@ -107,6 +107,16 @@ impl Xoshiro256pp {
         lo + self.next_f64() * (hi - lo)
     }
 
+    /// Exponentially distributed sample with the given `mean`, via the
+    /// inverse-CDF transform `-mean · ln(1 − U)` — the inter-arrival time
+    /// of a Poisson process with rate `1/mean`. One uniform draw per call,
+    /// so traces built from this are reproducible from the seed alone.
+    pub fn exp_mean(&mut self, mean: f64) -> f64 {
+        assert!(mean > 0.0 && mean.is_finite(), "exp_mean needs mean > 0");
+        // 1 − U ∈ (0, 1], so ln never sees 0 and the sample is finite.
+        -mean * (1.0 - self.next_f64()).ln()
+    }
+
     /// Standard normal via Box–Muller (one value per call; simple > fast here).
     pub fn normal(&mut self) -> f64 {
         let u1 = self.next_f64().max(f64::MIN_POSITIVE);
@@ -203,6 +213,29 @@ mod tests {
             }
         }
         assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn exp_mean_moments_and_support() {
+        let mut rng = Xoshiro256pp::seeded(29);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.exp_mean(3.0);
+            assert!(x >= 0.0 && x.is_finite(), "sample {x}");
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 3.0).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn exp_mean_is_deterministic() {
+        let mut a = Xoshiro256pp::seeded(31);
+        let mut b = Xoshiro256pp::seeded(31);
+        for _ in 0..100 {
+            assert_eq!(a.exp_mean(7.0).to_bits(), b.exp_mean(7.0).to_bits());
+        }
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! Diagnostic primitives for the static verifier: stable `P0xx` codes,
+//! severities, anchors, and rustc-style rendering.
+//!
+//! A [`Diagnostic`] is one finding: a stable code (`P006`), a
+//! [`Severity`], an [`Anchor`] naming the node / region / phase / job it
+//! is about, and a one-line message carrying the offending values.
+//! [`Diagnostics`] is the ordered collection a lint pass returns; emission
+//! order is meaningful (the first `Error` is what legacy `validate`
+//! callers see), so it is never sorted.
+
+use crate::util::json::{Json, JsonObj};
+
+/// How bad a finding is. Ordering is `Info < Warn < Error`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    /// Worth knowing, never fails anything (even under `--deny-warnings`).
+    Info,
+    /// Suspicious — fails `validate_strict` and `lint --deny-warnings`.
+    Warn,
+    /// Structurally wrong — fails `validate` and plan builds.
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+impl std::fmt::Display for Severity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What a diagnostic is anchored to.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Anchor {
+    /// A schedule node, by index (= dispatch priority) and span name.
+    Node { index: usize, name: String },
+    /// A plan region, by name.
+    Region { name: String },
+    /// A phase index (schedule phase or allocator timeline slot).
+    Phase { index: usize },
+    /// A fleet-trace job, by id.
+    Job { id: u64 },
+    /// The trace as a whole.
+    Trace,
+    /// No specific anchor (e.g. an empty schedule).
+    General,
+}
+
+impl Anchor {
+    /// Short location label, e.g. `node 12 (grad-offload b3)`; empty for
+    /// [`Anchor::General`].
+    pub fn label(&self) -> String {
+        match self {
+            Anchor::Node { index, name } => format!("node {index} ({name})"),
+            Anchor::Region { name } => format!("region '{name}'"),
+            Anchor::Phase { index } => format!("phase {index}"),
+            Anchor::Job { id } => format!("job {id}"),
+            Anchor::Trace => "trace".to_string(),
+            Anchor::General => String::new(),
+        }
+    }
+}
+
+/// One finding from a lint pass.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Stable code, e.g. `"P006"`. Documented in DESIGN.md §12.
+    pub code: &'static str,
+    pub severity: Severity,
+    pub anchor: Anchor,
+    /// One line: what is wrong, with the offending values inline.
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// rustc-style one-liner:
+    /// `error[P006]: node 12 (grad-offload b3): has a Dma touch on a
+    /// non-Transfer op`.
+    pub fn render(&self) -> String {
+        let label = self.anchor.label();
+        if label.is_empty() {
+            format!("{}[{}]: {}", self.severity, self.code, self.message)
+        } else {
+            format!(
+                "{}[{}]: {}: {}",
+                self.severity, self.code, label, self.message
+            )
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.set("code", self.code);
+        o.set("severity", self.severity.name());
+        o.set("anchor", self.anchor.label());
+        o.set("message", self.message.as_str());
+        Json::Obj(o)
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+/// An ordered list of findings; what every `lint_*` entry point returns.
+#[derive(Clone, Debug, Default)]
+pub struct Diagnostics {
+    items: Vec<Diagnostic>,
+}
+
+impl Diagnostics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(
+        &mut self,
+        code: &'static str,
+        severity: Severity,
+        anchor: Anchor,
+        message: impl Into<String>,
+    ) {
+        self.items.push(Diagnostic {
+            code,
+            severity,
+            anchor,
+            message: message.into(),
+        });
+    }
+
+    /// Append every finding of `other`, preserving order.
+    pub fn extend(&mut self, other: Diagnostics) {
+        self.items.extend(other.items);
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, Diagnostic> {
+        self.items.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn count(&self, severity: Severity) -> usize {
+        self.items.iter().filter(|d| d.severity == severity).count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.count(Severity::Error) > 0
+    }
+
+    pub fn has_warnings(&self) -> bool {
+        self.count(Severity::Warn) > 0
+    }
+
+    /// First finding at severity `Error` (emission order).
+    pub fn first_error(&self) -> Option<&Diagnostic> {
+        self.first_at_least(Severity::Error)
+    }
+
+    /// First finding at or above `floor` (emission order).
+    pub fn first_at_least(&self, floor: Severity) -> Option<&Diagnostic> {
+        self.items.iter().find(|d| d.severity >= floor)
+    }
+
+    /// Highest severity present, if any findings exist.
+    pub fn worst(&self) -> Option<Severity> {
+        self.items.iter().map(|d| d.severity).max()
+    }
+
+    /// Does any finding carry this code?
+    pub fn has_code(&self, code: &str) -> bool {
+        self.items.iter().any(|d| d.code == code)
+    }
+
+    /// All codes present, in emission order (with duplicates).
+    pub fn codes(&self) -> Vec<&'static str> {
+        self.items.iter().map(|d| d.code).collect()
+    }
+
+    /// All findings rendered one per line.
+    pub fn render(&self) -> String {
+        self.items
+            .iter()
+            .map(|d| d.render())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.items.iter().map(|d| d.to_json()).collect())
+    }
+}
+
+impl<'a> IntoIterator for &'a Diagnostics {
+    type Item = &'a Diagnostic;
+    type IntoIter = std::slice::Iter<'a, Diagnostic>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severity_orders_info_warn_error() {
+        assert!(Severity::Info < Severity::Warn);
+        assert!(Severity::Warn < Severity::Error);
+    }
+
+    #[test]
+    fn renders_rustc_style() {
+        let d = Diagnostic {
+            code: "P006",
+            severity: Severity::Error,
+            anchor: Anchor::Node {
+                index: 12,
+                name: "grad-offload b3".into(),
+            },
+            message: "has a Dma touch on a non-Transfer op".into(),
+        };
+        assert_eq!(
+            d.render(),
+            "error[P006]: node 12 (grad-offload b3): has a Dma touch on a non-Transfer op"
+        );
+    }
+
+    #[test]
+    fn general_anchor_omits_location() {
+        let d = Diagnostic {
+            code: "P001",
+            severity: Severity::Error,
+            anchor: Anchor::General,
+            message: "schedule has no nodes".into(),
+        };
+        assert_eq!(d.render(), "error[P001]: schedule has no nodes");
+    }
+
+    #[test]
+    fn counts_and_first_error() {
+        let mut ds = Diagnostics::new();
+        ds.push("P013", Severity::Warn, Anchor::Phase { index: 1 }, "empty");
+        ds.push("P018", Severity::Info, Anchor::Region { name: "x".into() }, "cold");
+        assert!(!ds.has_errors());
+        assert!(ds.has_warnings());
+        assert_eq!(ds.worst(), Some(Severity::Warn));
+        ds.push("P002", Severity::Error, Anchor::General, "bad phase");
+        assert_eq!(ds.first_error().unwrap().code, "P002");
+        assert_eq!(ds.count(Severity::Error), 1);
+        assert!(ds.has_code("P013"));
+        assert!(!ds.has_code("P999"));
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut ds = Diagnostics::new();
+        ds.push("P201", Severity::Error, Anchor::Trace, "digest mismatch");
+        let j = ds.to_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        let o = arr[0].as_obj().unwrap();
+        assert_eq!(o.get("code").and_then(|v| v.as_str()), Some("P201"));
+        assert_eq!(o.get("severity").and_then(|v| v.as_str()), Some("error"));
+    }
+}

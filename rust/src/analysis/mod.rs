@@ -1,0 +1,39 @@
+//! `pallas lint` — a static verifier over the three IRs the system
+//! already has: schedule graphs ([`crate::offload::Schedule`]), memory
+//! plans ([`crate::offload::MemoryPlan`]), and fleet traces
+//! ([`crate::fleet::FleetTrace`]).
+//!
+//! The paper's placement results stand on *honest accounting*: every
+//! lifetime, stripe fraction, and admission decision downstream of a
+//! schedule is derived from its `touches` annotations, so a dishonest or
+//! incomplete annotation silently corrupts placement long before the
+//! executor's runtime ledger could notice. This module moves those checks
+//! to registration time: each `lint_*` entry point walks its IR and
+//! returns [`Diagnostics`] — rustc-style findings with stable `P0xx`
+//! codes, `Error`/`Warn`/`Info` severities, and node/region/phase/job
+//! anchors — instead of scattered panics.
+//!
+//! Code space (full catalog in DESIGN.md §12):
+//!
+//! | Range | Layer | Entry point |
+//! |---|---|---|
+//! | `P001`–`P018` | schedule graph | [`lint_schedule`] |
+//! | `P101`–`P105` | plan / allocator | [`lint_plan`], [`lint_commit`] |
+//! | `P201`–`P206` | fleet trace | [`lint_trace`] |
+//!
+//! Integration: `Schedule::validate` renders the first `Error` (same
+//! strings as the legacy checks), `Schedule::validate_strict` also fails
+//! on warnings, `MemoryPlan` builds lint the probe schedule against the
+//! probe plan, and the CLI `lint` subcommand (CI: `lint --all
+//! --deny-warnings`) sweeps every registered schedule × preset.
+
+pub mod diag;
+mod plan_lint;
+mod schedule_lint;
+mod trace_lint;
+
+pub use diag::{Anchor, Diagnostic, Diagnostics, Severity};
+pub use plan_lint::{lint_commit, lint_plan};
+pub(crate) use schedule_lint::lint_schedule_adjacency;
+pub use schedule_lint::{lint_schedule, RegionInfo, ScheduleLintContext};
+pub use trace_lint::lint_trace;

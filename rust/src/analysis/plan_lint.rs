@@ -1,0 +1,152 @@
+//! Plan / allocator lints: placement integrity, lifetime hygiene, and
+//! per-phase capacity fit — the checks that used to live as asserts (or
+//! not at all) inside the allocator.
+
+use super::diag::{Anchor, Diagnostics, Severity};
+use crate::mem::{NumaAllocator, Placement, RegionRequest};
+use crate::offload::plan::MemoryPlan;
+use crate::topology::NodeId;
+use crate::util::units::fmt_bytes;
+
+/// Lint a built plan: every committed region's placement must be
+/// internally consistent (P101/P105), lifetimes should be doing useful
+/// work (P102/P103), and committed occupancy must fit every memory node
+/// at every phase (P104). See DESIGN.md §12 for the catalog.
+pub fn lint_plan(plan: &MemoryPlan<'_>) -> Diagnostics {
+    let mut ds = Diagnostics::new();
+    let alloc = &plan.alloc;
+    let n_phases = alloc.n_phases();
+    for r in alloc.regions() {
+        let anchor = Anchor::Region {
+            name: r.name.clone(),
+        };
+        if let Err(msg) = r.placement.check(r.bytes) {
+            let code = if msg.contains("duplicate") {
+                "P105"
+            } else {
+                "P101"
+            };
+            ds.push(code, Severity::Error, anchor.clone(), msg);
+        }
+        match &r.lifetime {
+            Some(lt)
+                if n_phases > 1
+                    && lt.birth_phase == 0
+                    && lt.death_phase as usize == n_phases - 1 =>
+            {
+                ds.push(
+                    "P102",
+                    Severity::Info,
+                    anchor,
+                    format!(
+                        "scoped lifetime {lt} spans the whole {n_phases}-phase timeline — \
+                         the region is never released"
+                    ),
+                );
+            }
+            None if n_phases > 1 => {
+                // An eternal region whose measured liveness is narrower
+                // holds capacity through phases where it is dead.
+                if let Some(p) = plan.profiles.as_ref().and_then(|ps| ps.get(&r.name)) {
+                    if (p.lifetime.span() as usize) < n_phases {
+                        ds.push(
+                            "P103",
+                            Severity::Warn,
+                            anchor,
+                            format!(
+                                "committed eternally but its measured liveness window is only \
+                                 {} — phase-scoped accounting would release {} outside it",
+                                p.lifetime,
+                                fmt_bytes(r.bytes)
+                            ),
+                        );
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    // Committed occupancy vs node capacity, per phase. Unreachable through
+    // `commit` (it refuses overflow), so any hit here means accounting has
+    // been corrupted.
+    for (node_idx, spec) in alloc.topo().mem_nodes.iter().enumerate() {
+        for ph in 0..n_phases {
+            let used = alloc.used_on_at(NodeId(node_idx), ph);
+            if used > spec.capacity {
+                ds.push(
+                    "P104",
+                    Severity::Error,
+                    Anchor::Phase { index: ph },
+                    format!(
+                        "committed occupancy on node{node_idx} ({}) is {} at phase {ph}, over \
+                         its {} capacity",
+                        spec.name,
+                        fmt_bytes(used),
+                        fmt_bytes(spec.capacity)
+                    ),
+                );
+            }
+        }
+    }
+    ds
+}
+
+/// Pre-commit check: would committing `req` under `placement` overflow any
+/// memory node at any phase of the request's liveness window? Emits the
+/// same placement-integrity codes as [`lint_plan`] plus P104 for each
+/// (node, phase) that would go over capacity — all without mutating the
+/// allocator, so a caller can surface the diagnostic *before* the commit
+/// is attempted.
+pub fn lint_commit(
+    alloc: &NumaAllocator<'_>,
+    req: &RegionRequest,
+    placement: &Placement,
+) -> Diagnostics {
+    let mut ds = Diagnostics::new();
+    if let Err(msg) = placement.check(req.bytes) {
+        let code = if msg.contains("duplicate") {
+            "P105"
+        } else {
+            "P101"
+        };
+        ds.push(
+            code,
+            Severity::Error,
+            Anchor::Region {
+                name: req.name.clone(),
+            },
+            msg,
+        );
+    }
+    let n_phases = alloc.n_phases();
+    let last = n_phases.saturating_sub(1);
+    let (lo, hi) = match &req.lifetime {
+        Some(lt) => (
+            (lt.birth_phase as usize).min(last),
+            (lt.death_phase as usize).min(last),
+        ),
+        None => (0, last),
+    };
+    for (node, bytes) in &placement.parts {
+        let cap = alloc.topo().node(*node).capacity;
+        for ph in lo..=hi {
+            let used = alloc.used_on_at(*node, ph);
+            if used + bytes > cap {
+                ds.push(
+                    "P104",
+                    Severity::Error,
+                    Anchor::Phase { index: ph },
+                    format!(
+                        "committing '{}' would raise node{} occupancy to {} at phase {ph}, \
+                         over its {} capacity",
+                        req.name,
+                        node.0,
+                        fmt_bytes(used + bytes),
+                        fmt_bytes(cap)
+                    ),
+                );
+            }
+        }
+    }
+    ds
+}

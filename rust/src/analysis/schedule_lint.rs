@@ -1,0 +1,534 @@
+//! Schedule lints: the structural checks `Schedule::validate` has always
+//! enforced (now emitted as diagnostics instead of early-returned strings),
+//! plus annotation-honesty warnings and plan-context checks the runtime
+//! executor could previously only catch after the fact.
+//!
+//! Emission order is the legacy `validate` order — per node: phase, deps,
+//! op payload, touches — with the cycle check last, so the first `Error`
+//! in the returned [`Diagnostics`] is exactly the violation legacy callers
+//! used to get back as a bare string.
+
+use super::diag::{Anchor, Diagnostics, Severity};
+use crate::mem::{Lifetime, RegionId};
+use crate::offload::plan::MemoryPlan;
+use crate::offload::schedule::{Op, OpNode, RegionTouch, Schedule};
+use crate::topology::SystemTopology;
+
+/// What the linter knows about one committed plan region.
+#[derive(Clone, Debug)]
+pub struct RegionInfo {
+    pub id: RegionId,
+    pub name: String,
+    /// Liveness window the region was committed under (`None` = whole run).
+    pub lifetime: Option<Lifetime>,
+}
+
+/// Plan-side context for schedule linting: which regions exist and the
+/// lifetime windows they were committed under. Without it the
+/// region-resolution (P007), lifetime-window (P008), and untouched-region
+/// (P018) checks are skipped — `Schedule::validate` runs context-free
+/// because schedules are built against a plan that may not exist yet;
+/// `MemoryPlan` paths and the CLI lint against the real plan.
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleLintContext {
+    pub regions: Vec<RegionInfo>,
+}
+
+impl ScheduleLintContext {
+    pub fn from_plan(plan: &MemoryPlan<'_>) -> Self {
+        Self {
+            regions: plan
+                .alloc
+                .regions()
+                .map(|r| RegionInfo {
+                    id: r.id,
+                    name: r.name.clone(),
+                    lifetime: r.lifetime,
+                })
+                .collect(),
+        }
+    }
+
+    fn find(&self, id: RegionId) -> Option<(usize, &RegionInfo)> {
+        self.regions.iter().enumerate().find(|(_, r)| r.id == id)
+    }
+}
+
+/// Lint a schedule against a topology and (optionally) the memory plan it
+/// annotates. See DESIGN.md §12 for the code catalog.
+pub fn lint_schedule(
+    sched: &Schedule,
+    topo: &SystemTopology,
+    ctx: Option<&ScheduleLintContext>,
+) -> Diagnostics {
+    lint_schedule_adjacency(sched, topo, ctx).0
+}
+
+fn node_anchor(i: usize, node: &OpNode) -> Anchor {
+    Anchor::Node {
+        index: i,
+        name: node.name.clone(),
+    }
+}
+
+/// [`lint_schedule`] that additionally hands back the dependency
+/// bookkeeping it had to build anyway — `(indegree, dependents)` per node
+/// — when the schedule is structurally clean, so the executor does not
+/// rebuild the O(V+E) adjacency. `None` whenever any `Error` was emitted.
+pub(crate) fn lint_schedule_adjacency(
+    sched: &Schedule,
+    topo: &SystemTopology,
+    ctx: Option<&ScheduleLintContext>,
+) -> (Diagnostics, Option<(Vec<u32>, Vec<Vec<u32>>)>) {
+    let mut ds = Diagnostics::new();
+    if sched.nodes.is_empty() {
+        ds.push(
+            "P001",
+            Severity::Error,
+            Anchor::General,
+            "schedule has no nodes",
+        );
+        return (ds, None);
+    }
+    let n = sched.nodes.len();
+
+    // Dependency bookkeeping up front (shared with the executor): the
+    // executor-facing indegree counts every listed edge; the Kahn scratch
+    // counts only well-formed edges so a bad index cannot masquerade as a
+    // cycle. On a clean schedule the two are identical.
+    let mut indeg: Vec<u32> = vec![0; n];
+    let mut valid_indeg: Vec<u32> = vec![0; n];
+    let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for (i, node) in sched.nodes.iter().enumerate() {
+        indeg[i] = node.deps.len() as u32;
+        for d in &node.deps {
+            if (d.0 as usize) < n && d.0 as usize != i {
+                valid_indeg[i] += 1;
+                dependents[d.0 as usize].push(i as u32);
+            }
+        }
+    }
+
+    let mut touched: Vec<bool> = vec![false; ctx.map_or(0, |c| c.regions.len())];
+    for (i, node) in sched.nodes.iter().enumerate() {
+        if node.phase >= sched.phases.len() {
+            ds.push(
+                "P002",
+                Severity::Error,
+                node_anchor(i, node),
+                format!(
+                    "references phase {} but only {} are declared",
+                    node.phase,
+                    sched.phases.len()
+                ),
+            );
+        }
+        let mut seen_deps: Vec<u32> = Vec::new();
+        for d in &node.deps {
+            if d.0 as usize >= n {
+                ds.push(
+                    "P003",
+                    Severity::Error,
+                    node_anchor(i, node),
+                    format!("depends on out-of-range node {}", d.0),
+                );
+            } else if d.0 as usize == i {
+                ds.push(
+                    "P003",
+                    Severity::Error,
+                    node_anchor(i, node),
+                    "depends on itself",
+                );
+            } else if d.0 as usize > i {
+                ds.push(
+                    "P014",
+                    Severity::Warn,
+                    node_anchor(i, node),
+                    format!(
+                        "depends on later node {} — dispatch priority (index order) is inverted \
+                         across this edge",
+                        d.0
+                    ),
+                );
+            }
+            if seen_deps.contains(&d.0) {
+                ds.push(
+                    "P015",
+                    Severity::Warn,
+                    node_anchor(i, node),
+                    format!("lists dependency on node {} more than once", d.0),
+                );
+            } else {
+                seen_deps.push(d.0);
+            }
+        }
+        lint_op_payload(&mut ds, i, node, topo);
+        for t in &node.touches {
+            lint_touch_kind(&mut ds, i, node, t);
+            if let Some(c) = ctx {
+                match c.find(t.region()) {
+                    None => ds.push(
+                        "P007",
+                        Severity::Error,
+                        node_anchor(i, node),
+                        format!(
+                            "touches region id {} which is not in the memory plan \
+                             ({} regions committed)",
+                            t.region().0,
+                            c.regions.len()
+                        ),
+                    ),
+                    Some((k, info)) => {
+                        touched[k] = true;
+                        if let Some(lt) = &info.lifetime {
+                            if !lt.contains(node.phase as u32) {
+                                ds.push(
+                                    "P008",
+                                    Severity::Error,
+                                    node_anchor(i, node),
+                                    format!(
+                                        "touches region '{}' at phase {} outside its committed \
+                                         lifetime {lt}",
+                                        info.name, node.phase
+                                    ),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        lint_honesty(&mut ds, i, node);
+        let gated = !dependents[i].is_empty();
+        if matches!(node.op, Op::Barrier) {
+            if node.deps.is_empty() {
+                ds.push(
+                    "P016",
+                    Severity::Warn,
+                    node_anchor(i, node),
+                    "barrier waits on nothing (no dependencies)",
+                );
+            } else if !gated {
+                ds.push(
+                    "P016",
+                    Severity::Warn,
+                    node_anchor(i, node),
+                    "barrier gates nothing (no dependents)",
+                );
+            }
+        } else if n > 1 && node.deps.is_empty() && !gated {
+            ds.push(
+                "P012",
+                Severity::Warn,
+                node_anchor(i, node),
+                "is isolated: no dependencies and nothing depends on it",
+            );
+        } else if !gated && !node.ends_phase {
+            ds.push(
+                "P017",
+                Severity::Info,
+                node_anchor(i, node),
+                "terminal node does not mark a phase boundary (ends_phase = false)",
+            );
+        }
+    }
+
+    // Phases no node occupies.
+    let mut occupancy = vec![0usize; sched.phases.len()];
+    for node in &sched.nodes {
+        if node.phase < occupancy.len() {
+            occupancy[node.phase] += 1;
+        }
+    }
+    for (p, &count) in occupancy.iter().enumerate() {
+        if count == 0 {
+            ds.push(
+                "P013",
+                Severity::Warn,
+                Anchor::Phase { index: p },
+                format!("phase '{}' has no nodes", sched.phases[p]),
+            );
+        }
+    }
+
+    // Committed regions the schedule never mentions (benign for ablations
+    // like no-act-offload, hence Info — but a new builder forgetting its
+    // annotations entirely shows up here).
+    if let Some(c) = ctx {
+        for (k, info) in c.regions.iter().enumerate() {
+            if !touched[k] {
+                ds.push(
+                    "P018",
+                    Severity::Info,
+                    Anchor::Region {
+                        name: info.name.clone(),
+                    },
+                    "committed but never touched by the schedule \
+                     (no traffic or liveness annotations)",
+                );
+            }
+        }
+    }
+
+    // Kahn's algorithm over the well-formed edges: every node must drain,
+    // otherwise the stuck set sits on or downstream of a cycle.
+    let mut scratch = valid_indeg;
+    let mut queue: Vec<u32> = (0..n as u32).filter(|&i| scratch[i as usize] == 0).collect();
+    let mut seen = 0usize;
+    while let Some(i) = queue.pop() {
+        seen += 1;
+        for &j in &dependents[i as usize] {
+            scratch[j as usize] -= 1;
+            if scratch[j as usize] == 0 {
+                queue.push(j);
+            }
+        }
+    }
+    if seen != n {
+        let stuck: Vec<usize> = (0..n).filter(|&i| scratch[i] > 0).collect();
+        let mut names = stuck
+            .iter()
+            .take(6)
+            .map(|&i| format!("node {i} ({})", sched.nodes[i].name))
+            .collect::<Vec<_>>()
+            .join(", ");
+        if stuck.len() > 6 {
+            names.push_str(&format!(", … {} more", stuck.len() - 6));
+        }
+        let first = stuck[0];
+        ds.push(
+            "P004",
+            Severity::Error,
+            node_anchor(first, &sched.nodes[first]),
+            format!("schedule graph has a cycle ({seen} of {n} nodes reachable; stuck: {names})"),
+        );
+    }
+
+    let adjacency = if ds.has_errors() {
+        None
+    } else {
+        Some((indeg, dependents))
+    };
+    (ds, adjacency)
+}
+
+/// P005: op payload sanity (GPU / memory-node indices, stripe fractions,
+/// finite byte and FLOPs quantities). Messages match the legacy
+/// `validate` wording.
+fn lint_op_payload(ds: &mut Diagnostics, i: usize, node: &OpNode, topo: &SystemTopology) {
+    match &node.op {
+        Op::Transfer {
+            gpu,
+            stripes,
+            bytes,
+            ..
+        } => {
+            if gpu.0 >= topo.gpus.len() {
+                ds.push(
+                    "P005",
+                    Severity::Error,
+                    node_anchor(i, node),
+                    format!("targets gpu {} but topology has {}", gpu.0, topo.gpus.len()),
+                );
+            }
+            if stripes.is_empty() {
+                ds.push(
+                    "P005",
+                    Severity::Error,
+                    node_anchor(i, node),
+                    "has no stripes",
+                );
+            } else {
+                let total: f64 = stripes.iter().map(|(_, f)| *f).sum();
+                if (total - 1.0).abs() > 1e-6 {
+                    ds.push(
+                        "P005",
+                        Severity::Error,
+                        node_anchor(i, node),
+                        format!("stripe fractions sum to {total}"),
+                    );
+                }
+                for (mem, _) in stripes {
+                    if mem.0 >= topo.mem_nodes.len() {
+                        ds.push(
+                            "P005",
+                            Severity::Error,
+                            node_anchor(i, node),
+                            format!("stripes onto unknown memory node {}", mem.0),
+                        );
+                    }
+                }
+            }
+            if !bytes.is_finite() || *bytes < 0.0 {
+                ds.push(
+                    "P005",
+                    Severity::Error,
+                    node_anchor(i, node),
+                    format!("has bad byte count {bytes}"),
+                );
+            }
+        }
+        Op::Compute { gpu, work } => {
+            if gpu.0 >= topo.gpus.len() {
+                ds.push(
+                    "P005",
+                    Severity::Error,
+                    node_anchor(i, node),
+                    format!(
+                        "computes on gpu {} but topology has {}",
+                        gpu.0,
+                        topo.gpus.len()
+                    ),
+                );
+            }
+            if work.is_empty() {
+                ds.push(
+                    "P005",
+                    Severity::Error,
+                    node_anchor(i, node),
+                    "has no FLOPs terms",
+                );
+            }
+            for t in work {
+                if !t.flops.is_finite() || t.flops < 0.0 || !t.scale.is_finite() {
+                    ds.push(
+                        "P005",
+                        Severity::Error,
+                        node_anchor(i, node),
+                        format!("has bad FLOPs term {t:?}"),
+                    );
+                }
+            }
+        }
+        Op::CpuStep { streams, .. } => {
+            for (bytes, _) in streams {
+                if !bytes.is_finite() || *bytes < 0.0 {
+                    ds.push(
+                        "P005",
+                        Severity::Error,
+                        node_anchor(i, node),
+                        format!("has bad stream byte count {bytes}"),
+                    );
+                }
+            }
+        }
+        Op::Barrier => {}
+    }
+}
+
+/// P006: touch kind must match the op kind (a `Dma` touch describes
+/// `Transfer` bytes, `CpuRmw`/`CpuStream` describe `CpuStep` passes).
+fn lint_touch_kind(ds: &mut Diagnostics, i: usize, node: &OpNode, t: &RegionTouch) {
+    match t {
+        RegionTouch::Dma(_) => {
+            if !matches!(node.op, Op::Transfer { .. }) {
+                ds.push(
+                    "P006",
+                    Severity::Error,
+                    node_anchor(i, node),
+                    "has a Dma touch on a non-Transfer op",
+                );
+            }
+        }
+        RegionTouch::CpuRmw(_) => {
+            if !matches!(node.op, Op::CpuStep { .. }) {
+                ds.push(
+                    "P006",
+                    Severity::Error,
+                    node_anchor(i, node),
+                    "has a CpuRmw touch on a non-CpuStep op",
+                );
+            }
+        }
+        RegionTouch::CpuStream { stream, .. } => match &node.op {
+            Op::CpuStep { streams, .. } => {
+                if *stream >= streams.len() {
+                    ds.push(
+                        "P006",
+                        Severity::Error,
+                        node_anchor(i, node),
+                        format!("stream touch {} out of range ({} streams)", stream, streams.len()),
+                    );
+                }
+            }
+            _ => {
+                ds.push(
+                    "P006",
+                    Severity::Error,
+                    node_anchor(i, node),
+                    "has a CpuStream touch on a non-CpuStep op",
+                );
+            }
+        },
+        RegionTouch::Keepalive(_) => {}
+    }
+}
+
+/// P009–P011: annotation honesty — an op that moves bytes must say which
+/// region they belong to, or profiling undercounts and every downstream
+/// lifetime / placement / admission decision sees a rosier schedule than
+/// the executor will run. This is the dishonesty the runtime ledger test
+/// (`executor_ledger_validates_profiles`) can only catch after execution.
+fn lint_honesty(ds: &mut Diagnostics, i: usize, node: &OpNode) {
+    match &node.op {
+        Op::Transfer { bytes, .. } => {
+            if *bytes > 0.0
+                && !node
+                    .touches
+                    .iter()
+                    .any(|t| matches!(t, RegionTouch::Dma(_)))
+            {
+                ds.push(
+                    "P009",
+                    Severity::Warn,
+                    node_anchor(i, node),
+                    format!(
+                        "moves {bytes:.0} bytes with no Dma touch — traffic invisible to \
+                         profiling"
+                    ),
+                );
+            }
+        }
+        Op::CpuStep {
+            adam_elements,
+            streams,
+            ..
+        } => {
+            if *adam_elements > 0
+                && !node
+                    .touches
+                    .iter()
+                    .any(|t| matches!(t, RegionTouch::CpuRmw(_)))
+            {
+                ds.push(
+                    "P010",
+                    Severity::Warn,
+                    node_anchor(i, node),
+                    format!(
+                        "runs Adam over {adam_elements} elements with no CpuRmw touch — \
+                         optimizer traffic invisible to profiling"
+                    ),
+                );
+            }
+            for (k, (bytes, _)) in streams.iter().enumerate() {
+                if *bytes > 0.0
+                    && !node
+                        .touches
+                        .iter()
+                        .any(|t| matches!(t, RegionTouch::CpuStream { stream, .. } if *stream == k))
+                {
+                    ds.push(
+                        "P011",
+                        Severity::Warn,
+                        node_anchor(i, node),
+                        format!(
+                            "stream {k} moves {bytes:.0} bytes with no CpuStream touch — \
+                             cast traffic invisible to profiling"
+                        ),
+                    );
+                }
+            }
+        }
+        _ => {}
+    }
+}

@@ -1,0 +1,122 @@
+//! Fleet-trace lints: integrity (digest), well-formedness (job fields,
+//! duplicate ids), registry resolution (models / schedules / engines),
+//! and arrival-order hygiene.
+//!
+//! Operates on parsed JSON rather than a [`FleetTrace`] so it can keep
+//! going where `FleetTrace::from_json` must abort: one malformed job
+//! becomes one P205 diagnostic and the remaining jobs are still checked.
+
+use super::diag::{Anchor, Diagnostics, Severity};
+use crate::fleet::{FleetTrace, JobSpec};
+use crate::util::json::Json;
+
+/// Lint a fleet trace as parsed JSON. See DESIGN.md §12 for the catalog.
+pub fn lint_trace(j: &Json) -> Diagnostics {
+    let mut ds = Diagnostics::new();
+    let Some(obj) = j.as_obj() else {
+        ds.push(
+            "P205",
+            Severity::Error,
+            Anchor::Trace,
+            "trace is not a JSON object",
+        );
+        return ds;
+    };
+    // Canonical traces carry the seed as a decimal string (u64 survives
+    // round-tripping); a plain number is tolerated like `from_json` does.
+    let seed = match obj.get("seed") {
+        Some(Json::Str(s)) => s.parse::<u64>().ok(),
+        Some(v) => v.as_u64(),
+        None => None,
+    };
+    if seed.is_none() {
+        ds.push(
+            "P205",
+            Severity::Error,
+            Anchor::Trace,
+            "trace is missing a u64 'seed'",
+        );
+    }
+    let Some(jobs_json) = obj.get("jobs").and_then(|v| v.as_arr()) else {
+        ds.push(
+            "P205",
+            Severity::Error,
+            Anchor::Trace,
+            "trace is missing a 'jobs' array",
+        );
+        return ds;
+    };
+    let mut jobs: Vec<JobSpec> = Vec::new();
+    let mut all_parsed = true;
+    for (idx, jj) in jobs_json.iter().enumerate() {
+        match JobSpec::from_json(jj) {
+            Ok(job) => {
+                for issue in job.registry_issues() {
+                    ds.push("P204", Severity::Error, Anchor::Job { id: job.id }, issue);
+                }
+                jobs.push(job);
+            }
+            Err(e) => {
+                all_parsed = false;
+                ds.push(
+                    "P205",
+                    Severity::Error,
+                    Anchor::Trace,
+                    format!("jobs[{idx}]: {e}"),
+                );
+            }
+        }
+    }
+    let mut seen_ids = std::collections::BTreeSet::new();
+    for job in &jobs {
+        if !seen_ids.insert(job.id) {
+            ds.push(
+                "P202",
+                Severity::Error,
+                Anchor::Job { id: job.id },
+                "duplicate job id",
+            );
+        }
+    }
+    // Arrival order: the fleet host replays jobs in listed order, so an
+    // out-of-order arrival is legal (and exercised by the XL generator)
+    // but usually means the trace was edited by hand.
+    for w in jobs.windows(2) {
+        if w[1].arrival_s < w[0].arrival_s {
+            ds.push(
+                "P203",
+                Severity::Warn,
+                Anchor::Job { id: w[1].id },
+                format!(
+                    "arrives at {:.3}s, before preceding job {} at {:.3}s \
+                     (arrivals are not sorted)",
+                    w[1].arrival_s, w[0].id, w[0].arrival_s
+                ),
+            );
+        }
+    }
+    match obj.get("digest").and_then(|v| v.as_str()) {
+        Some(want) => {
+            // Recomputing requires every job to have parsed; P205 already
+            // covers the trace when one did not.
+            if let (Some(seed), true) = (seed, all_parsed) {
+                let got = format!("{:016x}", FleetTrace { seed, jobs }.digest());
+                if got != want {
+                    ds.push(
+                        "P201",
+                        Severity::Error,
+                        Anchor::Trace,
+                        format!("digest mismatch: file says {want}, contents hash to {got}"),
+                    );
+                }
+            }
+        }
+        None => ds.push(
+            "P206",
+            Severity::Info,
+            Anchor::Trace,
+            "trace carries no digest — integrity cannot be verified",
+        ),
+    }
+    ds
+}

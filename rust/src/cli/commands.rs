@@ -654,6 +654,192 @@ pub fn fleet(args: &[String]) -> Result<(), CliDone> {
     Ok(())
 }
 
+/// `cxlfine lint` — run the static verifier over schedules / plans / traces.
+///
+/// Sweeps every registered schedule (or one, with `--schedule`) across the
+/// requested model × preset grid: builds a lifetime-aware plan, builds the
+/// schedule against it, and runs [`crate::analysis::lint_schedule`] (with
+/// the plan's region context) plus [`crate::analysis::lint_plan`]. With
+/// `--trace` it also lints a fleet-trace JSON file. Exit is nonzero on any
+/// Error diagnostic, or on Warnings under `--deny-warnings`; Infos never
+/// fail the run. The JSON report is written before the exit verdict so CI
+/// can upload it from a failing job.
+pub fn lint(args: &[String]) -> Result<(), CliDone> {
+    use crate::analysis::{self, Severity};
+    use crate::jobj;
+    use crate::util::json::Json;
+    let spec = CliSpec::new(
+        "cxlfine lint",
+        "static verifier for schedules, memory plans, and fleet traces",
+    )
+    .opt("schedule", "", "lint one registered schedule (default: all)")
+    .flag("all", "lint every registered schedule (the default when --schedule is empty)")
+    .opt("model", "7b,tiny-2m", "comma-separated model presets to sweep")
+    .opt("preset", "config-a,config-b", "comma-separated hardware presets to sweep")
+    .opt("dram", "", "override DRAM capacity on every preset")
+    .opt("gpus", "1", "number of GPUs")
+    .opt("batch", "4", "per-GPU batch size")
+    .opt("context", "4096", "context length (tokens)")
+    .opt("trace", "", "also lint this fleet-trace JSON file (P2xx codes)")
+    .opt("json", "", "write the full diagnostic report to this JSON file")
+    .flag("deny-warnings", "treat Warn diagnostics as fatal (CI mode)");
+    let a = parse(spec, args)?;
+    let deny = a.flag("deny-warnings");
+    let schedules: Vec<ScheduleRef> = match a.get("schedule").filter(|s| !s.is_empty()) {
+        Some(name) => vec![get_schedule(name)?],
+        None => schedules::registered(),
+    };
+    let models: Vec<&str> =
+        a.get("model").unwrap().split(',').filter(|s| !s.is_empty()).collect();
+    let presets: Vec<&str> =
+        a.get("preset").unwrap().split(',').filter(|s| !s.is_empty()).collect();
+    let dram = a.get("dram").filter(|s| !s.is_empty());
+    let w = Workload::new(
+        a.parse_usize("gpus")?,
+        a.parse_usize("batch")?,
+        a.parse_usize("context")?,
+    );
+    let engine = get_engine("cxl-aware+striping")?;
+
+    let (mut n_err, mut n_warn, mut n_info) = (0usize, 0usize, 0usize);
+    let mut cells: Vec<Json> = Vec::new();
+    let mut detail: Vec<String> = Vec::new();
+    let mut t =
+        Table::new(&["schedule", "model", "preset", "errors", "warnings", "infos", "verdict"])
+            .left(0)
+            .left(1)
+            .left(2)
+            .left(6);
+    for sref in &schedules {
+        for model_name in &models {
+            let model = get_model(model_name)?;
+            for preset_name in &presets {
+                let topo = get_topo(preset_name, dram)?;
+                let cfg = RunConfig::new(model.clone(), w, engine.clone())
+                    .with_schedule(sref.clone());
+                let cell = format!("{} × {} × {}", sref.name(), model_name, preset_name);
+                let mut diags = analysis::Diagnostics::new();
+                let mut verdict;
+                match MemoryPlan::build_lifetime_aware(&topo, &cfg) {
+                    Ok(plan) => {
+                        let sched = cfg.schedule.build(&topo, &cfg, &plan);
+                        let ctx = analysis::ScheduleLintContext::from_plan(&plan);
+                        diags.extend(analysis::lint_schedule(&sched, &topo, Some(&ctx)));
+                        diags.extend(analysis::lint_plan(&plan));
+                        verdict = if diags.has_errors() {
+                            "FAIL"
+                        } else if diags.has_warnings() {
+                            "warn"
+                        } else {
+                            "clean"
+                        };
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        if msg.contains("static lint") {
+                            // The builder's own lint gate fired: surface it.
+                            diags.push(
+                                "P000",
+                                Severity::Error,
+                                analysis::Anchor::General,
+                                msg,
+                            );
+                            verdict = "FAIL";
+                        } else {
+                            // Capacity outcome, not a defect in the IRs.
+                            verdict = "no-fit";
+                        }
+                    }
+                }
+                n_err += diags.count(Severity::Error);
+                n_warn += diags.count(Severity::Warn);
+                n_info += diags.count(Severity::Info);
+                if deny && verdict == "warn" {
+                    verdict = "FAIL";
+                }
+                for d in &diags {
+                    detail.push(format!("{cell}: {}", d.render()));
+                }
+                let dj: Vec<Json> = diags.iter().map(|d| d.to_json()).collect();
+                cells.push(jobj! {
+                    "schedule" => sref.name(),
+                    "model" => *model_name,
+                    "preset" => *preset_name,
+                    "verdict" => verdict,
+                    "diagnostics" => Json::Arr(dj),
+                });
+                t.row(trow![
+                    sref.name(),
+                    *model_name,
+                    *preset_name,
+                    diags.count(Severity::Error),
+                    diags.count(Severity::Warn),
+                    diags.count(Severity::Info),
+                    verdict
+                ]);
+            }
+        }
+    }
+
+    let mut trace_json = Json::Null;
+    if let Some(path) = a.get("trace").filter(|s| !s.is_empty()) {
+        let text = std::fs::read_to_string(path).map_err(|e| anyhow!("reading {path}: {e}"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        let diags = analysis::lint_trace(&json);
+        n_err += diags.count(Severity::Error);
+        n_warn += diags.count(Severity::Warn);
+        n_info += diags.count(Severity::Info);
+        for d in &diags {
+            detail.push(format!("{path}: {}", d.render()));
+        }
+        let dj: Vec<Json> = diags.iter().map(|d| d.to_json()).collect();
+        trace_json = jobj! {
+            "path" => path,
+            "diagnostics" => Json::Arr(dj),
+        };
+    }
+
+    println!(
+        "lint: {} schedule(s) × {} model(s) × {} preset(s)",
+        schedules.len(),
+        models.len(),
+        presets.len()
+    );
+    print!("{}", t.render());
+    if !detail.is_empty() {
+        println!();
+        for line in &detail {
+            println!("{line}");
+        }
+    }
+    println!();
+    println!("{n_err} error(s), {n_warn} warning(s), {n_info} info(s)");
+
+    if let Some(path) = a.get("json").filter(|s| !s.is_empty()) {
+        let report = jobj! {
+            "deny_warnings" => deny,
+            "errors" => n_err as u64,
+            "warnings" => n_warn as u64,
+            "infos" => n_info as u64,
+            "cells" => Json::Arr(cells),
+            "trace" => trace_json,
+        };
+        std::fs::write(path, report.to_string_pretty())
+            .map_err(|e| anyhow!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+
+    if n_err > 0 {
+        return Err(CliDone::Runtime(anyhow!("lint found {n_err} error(s)")));
+    }
+    if deny && n_warn > 0 {
+        return Err(CliDone::Runtime(anyhow!(
+            "lint found {n_warn} warning(s) under --deny-warnings"
+        )));
+    }
+    Ok(())
+}
+
 /// `cxlfine trace` — export a Chrome-trace of one simulated iteration.
 pub fn trace(args: &[String]) -> Result<(), CliDone> {
     let spec = CliSpec::new(

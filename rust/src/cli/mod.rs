@@ -8,7 +8,8 @@
 //! * `optimizer` — CPU Adam step time vs element count (Fig. 5; sim + real),
 //! * `bandwidth` — host→GPU transfer bandwidth matrix (Fig. 6),
 //! * `train`     — run the functional fine-tuning loop on the artifacts,
-//! * `fleet`     — multi-tenant job scheduling on one shared DRAM+CXL host.
+//! * `fleet`     — multi-tenant job scheduling on one shared DRAM+CXL host,
+//! * `lint`      — static verifier for schedules, memory plans, and fleet traces.
 
 pub mod commands;
 
@@ -31,6 +32,7 @@ pub fn run(args: Vec<String>) -> i32 {
         "train" => commands::train(rest),
         "trace" => commands::trace(rest),
         "fleet" => commands::fleet(rest),
+        "lint" => commands::lint(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             return 0;
@@ -70,7 +72,8 @@ fn usage() -> String {
        bandwidth  host->GPU DMA bandwidth matrix (Fig. 6)\n  \
        train      run the functional fine-tuning loop on AOT artifacts\n  \
        trace      export a chrome://tracing JSON of one simulated iteration\n  \
-       fleet      multi-tenant job scheduling + online capacity management (--trace/--policy)"
+       fleet      multi-tenant job scheduling + online capacity management (--trace/--policy)\n  \
+       lint       static verifier: schedules x plans x traces (--all --deny-warnings)"
         .to_string()
 }
 

@@ -117,6 +117,24 @@ impl JobSpec {
         Ok(spec)
     }
 
+    /// Registry resolution: which of the job's model / schedule / engine
+    /// names fail to resolve. Empty for a simulatable job. The static
+    /// verifier reports each entry as a P204 diagnostic; the fleet host
+    /// would otherwise only discover the dangling name at admission time.
+    pub fn registry_issues(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if crate::model::presets::by_name(&self.model).is_none() {
+            out.push(format!("names unregistered model preset {:?}", self.model));
+        }
+        if crate::offload::schedules::by_name(&self.schedule).is_none() {
+            out.push(format!("names unregistered schedule {:?}", self.schedule));
+        }
+        if crate::mem::engine::by_name(&self.engine).is_none() {
+            out.push(format!("names unregistered engine {:?}", self.engine));
+        }
+        out
+    }
+
     fn fold(&self, h: &mut Fnv64) {
         h.write_u64(self.id);
         h.write_f64(self.arrival_s);
@@ -344,6 +362,25 @@ mod tests {
         }
         let err = FleetTrace::from_json(&tampered).unwrap_err();
         assert!(err.contains("digest mismatch"), "{err}");
+    }
+
+    #[test]
+    fn registry_issues_flags_each_dangling_name() {
+        // Every generated job must be simulatable as-is.
+        let t = TraceGen::mixed(3, 25).generate();
+        for j in &t.jobs {
+            let issues = j.registry_issues();
+            assert!(issues.is_empty(), "job {} dangles: {issues:?}", j.id);
+        }
+        let mut bad = t.jobs[0].clone();
+        bad.model = "no-such-model".into();
+        bad.schedule = "no-such-sched".into();
+        bad.engine = "no-such-engine".into();
+        let issues = bad.registry_issues();
+        assert_eq!(issues.len(), 3, "{issues:?}");
+        assert!(issues[0].contains("model preset") && issues[0].contains("no-such-model"));
+        assert!(issues[1].contains("schedule") && issues[1].contains("no-such-sched"));
+        assert!(issues[2].contains("engine") && issues[2].contains("no-such-engine"));
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! See `DESIGN.md` for the experiment index mapping every paper table and
 //! figure to a module and bench target.
 
+pub mod analysis;
 pub mod cli;
 pub mod fleet;
 pub mod mem;

@@ -46,6 +46,9 @@ pub struct AllocError {
     /// Phase at which peak occupancy was exceeded (timeline accounting;
     /// `None` when the engine itself refused the placement).
     pub phase: Option<usize>,
+    /// Placement-integrity failure (lint code P101/P105): the engine
+    /// returned a malformed placement rather than a capacity shortfall.
+    pub detail: Option<String>,
 }
 
 impl std::fmt::Display for AllocError {
@@ -72,6 +75,9 @@ impl std::fmt::Display for AllocError {
                 fmt_bytes(n.requested),
                 fmt_bytes(n.shortfall)
             )?;
+        }
+        if let Some(d) = &self.detail {
+            write!(f, "; {d}")?;
         }
         Ok(())
     }
@@ -208,8 +214,20 @@ impl<'t> NumaAllocator<'t> {
                     })
                     .collect(),
                 phase: None,
+                detail: None,
             })?;
-        placement.validate(req.bytes);
+        // Placement integrity (lint P101/P105) as an error, not a panic:
+        // a buggy engine should fail the one allocation, not the process.
+        if let Err(msg) = placement.check(req.bytes) {
+            return Err(AllocError {
+                request: req.name.clone(),
+                bytes: req.bytes,
+                shortfall: 0,
+                nodes: Vec::new(),
+                phase: None,
+                detail: Some(format!("engine returned a malformed placement: {msg}")),
+            });
+        }
         self.commit(req, placement)
     }
 
@@ -237,6 +255,7 @@ impl<'t> NumaAllocator<'t> {
                             shortfall: *b - free,
                         }],
                         phase: Some(ph),
+                        detail: None,
                     });
                 }
             }
@@ -466,6 +485,34 @@ mod tests {
         assert_eq!(err.nodes[0].free, 2 * GIB);
         assert_eq!(err.nodes[0].shortfall, 2 * GIB);
         assert!(err.to_string().contains("phase 1"), "{err}");
+    }
+
+    #[test]
+    fn malformed_engine_placement_is_an_error_not_a_panic() {
+        struct BadEngine;
+        impl crate::mem::PlacementEngine for BadEngine {
+            fn name(&self) -> &str {
+                "bad-test-engine"
+            }
+            fn place(
+                &self,
+                _topo: &crate::topology::SystemTopology,
+                req: &RegionRequest,
+                _free: &[u64],
+            ) -> Result<Placement, u64> {
+                // One byte more than the region: an integrity violation
+                // that used to panic inside alloc_profiled.
+                Ok(Placement::single(NodeId(0), req.bytes + 1))
+            }
+        }
+        let topo = dev_tiny();
+        let engine: crate::mem::EngineRef = std::sync::Arc::new(BadEngine);
+        let mut a = NumaAllocator::new(&topo, engine);
+        let err = a
+            .alloc(RegionRequest::new("bad", TensorClass::Activations, 1000))
+            .unwrap_err();
+        assert!(err.detail.is_some(), "integrity failures carry a detail");
+        assert!(err.to_string().contains("bytes mismatch"), "{err}");
     }
 
     #[test]

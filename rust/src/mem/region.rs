@@ -108,16 +108,31 @@ impl Placement {
         self.parts.iter().any(|(n, b)| *n == node && *b > 0)
     }
 
-    pub fn validate(&self, expected_bytes: u64) {
-        assert_eq!(
-            self.total_bytes(),
-            expected_bytes,
-            "placement bytes mismatch"
-        );
-        // no duplicate node entries (allocator merges them)
+    /// Integrity check: parts must sum to the region size exactly and
+    /// name each node at most once (the allocator merges shards). The
+    /// non-panicking form — the allocator routes failures through
+    /// `AllocError`, the plan linter reports them as P101/P105.
+    pub fn check(&self, expected_bytes: u64) -> Result<(), String> {
+        let total = self.total_bytes();
+        if total != expected_bytes {
+            return Err(format!(
+                "placement bytes mismatch: parts sum to {total}, region is {expected_bytes}"
+            ));
+        }
         let mut seen = std::collections::HashSet::new();
         for (n, _) in &self.parts {
-            assert!(seen.insert(n.0), "duplicate node {} in placement", n.0);
+            if !seen.insert(n.0) {
+                return Err(format!("duplicate node {} in placement", n.0));
+            }
+        }
+        Ok(())
+    }
+
+    /// Panicking form of [`Placement::check`], for engine-internal
+    /// invariants where a violation is a programming error.
+    pub fn validate(&self, expected_bytes: u64) {
+        if let Err(e) = self.check(expected_bytes) {
+            panic!("{e}");
         }
     }
 }

@@ -180,181 +180,39 @@ impl Schedule {
 
     /// Structural validation: in-bounds edges, an acyclic graph, sane op
     /// payloads, and (given the topology) valid GPU / memory-node indices.
-    /// Returns a human-readable description of the first violation.
+    /// Backed by the static verifier ([`crate::analysis::lint_schedule`]);
+    /// returns the first `Error`-severity diagnostic, rendered. Warnings
+    /// (dishonest annotations, isolated nodes, …) do not fail this path —
+    /// use [`Schedule::validate_strict`] for that.
     pub fn validate(&self, topo: &SystemTopology) -> Result<(), String> {
         self.validated_adjacency(topo).map(|_| ())
     }
 
+    /// [`Schedule::validate`] that also fails on `Warn`-severity
+    /// diagnostics (annotation honesty, isolated nodes, empty phases,
+    /// vacuous barriers). What CI's `lint --all --deny-warnings` holds
+    /// every registered builder to.
+    pub fn validate_strict(&self, topo: &SystemTopology) -> Result<(), String> {
+        let diags = crate::analysis::lint_schedule(self, topo, None);
+        match diags.first_at_least(crate::analysis::Severity::Warn) {
+            Some(d) => Err(d.render()),
+            None => Ok(()),
+        }
+    }
+
     /// [`Schedule::validate`] that additionally hands back the dependency
-    /// bookkeeping it had to build anyway — `(indegree, dependents)` per
-    /// node — so the executor does not rebuild the O(V+E) adjacency.
+    /// bookkeeping the lint pass had to build anyway — `(indegree,
+    /// dependents)` per node — so the executor does not rebuild the
+    /// O(V+E) adjacency.
     pub(crate) fn validated_adjacency(
         &self,
         topo: &SystemTopology,
     ) -> Result<(Vec<u32>, Vec<Vec<u32>>), String> {
-        if self.nodes.is_empty() {
-            return Err("schedule has no nodes".into());
+        let (diags, adjacency) = crate::analysis::lint_schedule_adjacency(self, topo, None);
+        match diags.first_error() {
+            Some(d) => Err(d.render()),
+            None => Ok(adjacency.expect("error-free lint always yields adjacency")),
         }
-        let n = self.nodes.len();
-        for (i, node) in self.nodes.iter().enumerate() {
-            if node.phase >= self.phases.len() {
-                return Err(format!(
-                    "node {i} ({}) references phase {} but only {} are declared",
-                    node.name,
-                    node.phase,
-                    self.phases.len()
-                ));
-            }
-            for d in &node.deps {
-                if d.0 as usize >= n {
-                    return Err(format!(
-                        "node {i} ({}) depends on out-of-range node {}",
-                        node.name, d.0
-                    ));
-                }
-                if d.0 as usize == i {
-                    return Err(format!("node {i} ({}) depends on itself", node.name));
-                }
-            }
-            match &node.op {
-                Op::Transfer {
-                    gpu,
-                    stripes,
-                    bytes,
-                    ..
-                } => {
-                    if gpu.0 >= topo.gpus.len() {
-                        return Err(format!(
-                            "node {i} ({}) targets gpu {} but topology has {}",
-                            node.name,
-                            gpu.0,
-                            topo.gpus.len()
-                        ));
-                    }
-                    if stripes.is_empty() {
-                        return Err(format!("node {i} ({}) has no stripes", node.name));
-                    }
-                    let total: f64 = stripes.iter().map(|(_, f)| *f).sum();
-                    if (total - 1.0).abs() > 1e-6 {
-                        return Err(format!(
-                            "node {i} ({}) stripe fractions sum to {total}",
-                            node.name
-                        ));
-                    }
-                    for (mem, _) in stripes {
-                        if mem.0 >= topo.mem_nodes.len() {
-                            return Err(format!(
-                                "node {i} ({}) stripes onto unknown memory node {}",
-                                node.name, mem.0
-                            ));
-                        }
-                    }
-                    if !bytes.is_finite() || *bytes < 0.0 {
-                        return Err(format!("node {i} ({}) has bad byte count {bytes}", node.name));
-                    }
-                }
-                Op::Compute { gpu, work } => {
-                    if gpu.0 >= topo.gpus.len() {
-                        return Err(format!(
-                            "node {i} ({}) computes on gpu {} but topology has {}",
-                            node.name,
-                            gpu.0,
-                            topo.gpus.len()
-                        ));
-                    }
-                    if work.is_empty() {
-                        return Err(format!("node {i} ({}) has no FLOPs terms", node.name));
-                    }
-                    for t in work {
-                        if !t.flops.is_finite() || t.flops < 0.0 || !t.scale.is_finite() {
-                            return Err(format!(
-                                "node {i} ({}) has bad FLOPs term {t:?}",
-                                node.name
-                            ));
-                        }
-                    }
-                }
-                Op::CpuStep { streams, .. } => {
-                    for (bytes, _) in streams {
-                        if !bytes.is_finite() || *bytes < 0.0 {
-                            return Err(format!(
-                                "node {i} ({}) has bad stream byte count {bytes}",
-                                node.name
-                            ));
-                        }
-                    }
-                }
-                Op::Barrier => {}
-            }
-            for t in &node.touches {
-                match t {
-                    RegionTouch::Dma(_) => {
-                        if !matches!(node.op, Op::Transfer { .. }) {
-                            return Err(format!(
-                                "node {i} ({}) has a Dma touch on a non-Transfer op",
-                                node.name
-                            ));
-                        }
-                    }
-                    RegionTouch::CpuRmw(_) => {
-                        if !matches!(node.op, Op::CpuStep { .. }) {
-                            return Err(format!(
-                                "node {i} ({}) has a CpuRmw touch on a non-CpuStep op",
-                                node.name
-                            ));
-                        }
-                    }
-                    RegionTouch::CpuStream { stream, .. } => match &node.op {
-                        Op::CpuStep { streams, .. } => {
-                            if *stream >= streams.len() {
-                                return Err(format!(
-                                    "node {i} ({}) stream touch {} out of range ({} streams)",
-                                    node.name,
-                                    stream,
-                                    streams.len()
-                                ));
-                            }
-                        }
-                        _ => {
-                            return Err(format!(
-                                "node {i} ({}) has a CpuStream touch on a non-CpuStep op",
-                                node.name
-                            ));
-                        }
-                    },
-                    RegionTouch::Keepalive(_) => {}
-                }
-            }
-        }
-        // Kahn's algorithm: every node must be reachable through the edge
-        // partial order, otherwise there is a cycle.
-        let mut indeg: Vec<u32> = vec![0; n];
-        let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); n];
-        for (i, node) in self.nodes.iter().enumerate() {
-            indeg[i] = node.deps.len() as u32;
-            for d in &node.deps {
-                dependents[d.0 as usize].push(i as u32);
-            }
-        }
-        let mut scratch = indeg.clone();
-        let mut queue: Vec<u32> = (0..n as u32).filter(|&i| scratch[i as usize] == 0).collect();
-        let mut seen = 0usize;
-        while let Some(i) = queue.pop() {
-            seen += 1;
-            for &j in &dependents[i as usize] {
-                scratch[j as usize] -= 1;
-                if scratch[j as usize] == 0 {
-                    queue.push(j);
-                }
-            }
-        }
-        if seen != n {
-            return Err(format!(
-                "schedule graph has a cycle ({} of {n} nodes reachable)",
-                seen
-            ));
-        }
-        Ok((indeg, dependents))
     }
 }
 
@@ -508,6 +366,52 @@ mod tests {
             }],
         });
         assert!(s3.validate(&topo).unwrap_err().contains("stream touch"));
+    }
+
+    #[test]
+    fn cycle_error_names_the_stuck_nodes() {
+        let topo = dev_tiny();
+        let mut s = Schedule::new(0);
+        s.phase("fwd");
+        // 2 is a clean root; 0 ↔ 1 form the cycle. The error must say
+        // which nodes are stuck, not just that a cycle exists.
+        s.push(transfer(vec![OpId(1)], 0));
+        s.push(transfer(vec![OpId(0)], 0));
+        s.push(transfer(vec![], 0));
+        let err = s.validate(&topo).unwrap_err();
+        assert!(err.contains("cycle"), "{err}");
+        assert!(err.contains("node 0"), "stuck nodes must be named: {err}");
+        assert!(err.contains("node 1"), "stuck nodes must be named: {err}");
+    }
+
+    #[test]
+    fn validate_strict_rejects_dishonest_transfer() {
+        // A transfer that moves bytes but carries no Dma touch passes
+        // plain validation (annotations are descriptive) but is exactly
+        // the dishonesty the strict gate exists to catch.
+        let topo = dev_tiny();
+        let mut s = Schedule::new(128);
+        s.phase("fwd");
+        let a = s.push(transfer(vec![], 0));
+        s.push(transfer(vec![a], 0));
+        assert!(s.validate(&topo).is_ok());
+        let err = s.validate_strict(&topo).unwrap_err();
+        assert!(err.contains("P009"), "{err}");
+    }
+
+    #[test]
+    fn validate_strict_accepts_honest_annotations() {
+        use crate::mem::RegionId;
+        let topo = dev_tiny();
+        let mut s = Schedule::new(128);
+        s.phase("fwd");
+        let mut n1 = transfer(vec![], 0);
+        n1.touches = vec![RegionTouch::Dma(RegionId(0))];
+        let a = s.push(n1);
+        let mut n2 = transfer(vec![a], 0);
+        n2.touches = vec![RegionTouch::Dma(RegionId(1))];
+        s.push(n2);
+        assert!(s.validate_strict(&topo).is_ok());
     }
 
     #[test]

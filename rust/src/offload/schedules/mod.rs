@@ -70,6 +70,18 @@ pub fn known_names() -> Vec<&'static str> {
     vec!["zero-offload", "grad-accum[:K]", "lora[:R]", "no-act-offload"]
 }
 
+/// One concrete instance of every registered scenario (parameterized
+/// entries at their defaults) — what `lint --all` and registry-wide tests
+/// sweep. Keep in sync with [`by_name`] / [`known_names`].
+pub fn registered() -> Vec<ScheduleRef> {
+    vec![
+        zero_offload(),
+        Arc::new(grad_accum::GradAccum::new(grad_accum::DEFAULT_MICRO_BATCHES)),
+        Arc::new(lora::Lora::new(lora::DEFAULT_RANK)),
+        Arc::new(no_act_offload::NoActOffload),
+    ]
+}
+
 fn parse_param(rest: &str, default: usize) -> Option<usize> {
     if rest.is_empty() {
         return Some(default);
@@ -95,6 +107,19 @@ mod tests {
             format!("lora:{}", lora::DEFAULT_RANK)
         );
         assert_eq!(by_name("lora:64").unwrap().name(), "lora:64");
+    }
+
+    #[test]
+    fn registered_covers_every_known_name() {
+        let regs = registered();
+        assert_eq!(regs.len(), known_names().len());
+        for r in &regs {
+            assert_eq!(
+                by_name(r.name()).unwrap().name(),
+                r.name(),
+                "registered() entries must round-trip through by_name"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,286 @@
+//! Static-verifier acceptance tests (ISSUE 6).
+//!
+//! * The clean bill: every registered schedule × both hardware configs
+//!   lints with zero errors and zero warnings (the `lint --all
+//!   --deny-warnings` CI gate, in-process).
+//! * proptest_lite mutation drills: seeded corruptions of a known-clean
+//!   schedule (dropped Dma touch, narrowed lifetime window, orphan node,
+//!   dangling region id) must each fire their documented P0xx code.
+//! * Plan/commit drills: an over-capacity phase peak fires P104 before
+//!   commit.
+//! * Trace drills: corrupted digest (P201), duplicate ids (P202),
+//!   non-monotonic arrivals (P203), unregistered names (P204).
+
+use cxlfine::analysis::{
+    lint_commit, lint_plan, lint_schedule, lint_trace, ScheduleLintContext, Severity,
+};
+use cxlfine::fleet::TraceGen;
+use cxlfine::mem::{Lifetime, NumaAllocator, Placement, Policy, RegionRequest, TensorClass};
+use cxlfine::model::footprint::Workload;
+use cxlfine::model::presets;
+use cxlfine::offload::{schedules, FlopsTerm, MemoryPlan, Op, OpNode, RegionTouch, Schedule};
+use cxlfine::topology::presets::{config_a, config_b, dev_tiny, with_dram_capacity};
+use cxlfine::topology::{GpuId, NodeId, SystemTopology};
+use cxlfine::util::proptest_lite::{forall, UsizeRange};
+use cxlfine::util::units::GIB;
+
+/// Build the known-clean fixture: zero-offload on the dev machine with the
+/// 2M-parameter model, lifetime-aware placement. Returns the built schedule
+/// plus the plan's region context (the same pair `lint --all` sweeps).
+fn clean_setup(topo: &SystemTopology) -> (Schedule, ScheduleLintContext) {
+    let cfg = cxlfine::offload::RunConfig::new(
+        presets::tiny_2m(),
+        Workload::new(1, 2, 256),
+        Policy::CxlAware { striping: true },
+    )
+    .with_schedule(schedules::by_name("zero-offload").unwrap());
+    let plan = MemoryPlan::build_lifetime_aware(topo, &cfg).expect("tiny plan fits dev machine");
+    let sched = cfg.schedule.build(topo, &cfg, &plan);
+    let ctx = ScheduleLintContext::from_plan(&plan);
+    (sched, ctx)
+}
+
+fn dev_topo() -> SystemTopology {
+    with_dram_capacity(dev_tiny(), 8 * GIB)
+}
+
+#[test]
+fn fixture_is_clean() {
+    let topo = dev_topo();
+    let (sched, ctx) = clean_setup(&topo);
+    let d = lint_schedule(&sched, &topo, Some(&ctx));
+    assert!(!d.has_errors() && !d.has_warnings(), "fixture must lint clean:\n{}", d.render());
+}
+
+/// The CI gate, in-process: every registered schedule × config-a AND
+/// config-b, lifetime-aware plans, zero errors and zero warnings.
+#[test]
+fn clean_bill_every_registered_schedule_on_both_configs() {
+    for make_topo in [config_a, config_b] {
+        let topo = with_dram_capacity(make_topo(), 128 * GIB);
+        for sref in schedules::registered() {
+            let cfg = cxlfine::offload::RunConfig::new(
+                presets::qwen25_7b(),
+                Workload::new(1, 4, 4096),
+                Policy::CxlAware { striping: true },
+            )
+            .with_schedule(sref.clone());
+            let plan = MemoryPlan::build_lifetime_aware(&topo, &cfg)
+                .unwrap_or_else(|e| panic!("{} on {}: {e}", sref.name(), topo.name));
+            let sched = cfg.schedule.build(&topo, &cfg, &plan);
+            let ctx = ScheduleLintContext::from_plan(&plan);
+            let mut d = lint_schedule(&sched, &topo, Some(&ctx));
+            d.extend(lint_plan(&plan));
+            assert!(
+                !d.has_errors() && !d.has_warnings(),
+                "{} on {} must lint clean under --deny-warnings:\n{}",
+                sref.name(),
+                topo.name,
+                d.render()
+            );
+        }
+    }
+}
+
+/// Dropping the Dma touch from a transfer makes its traffic invisible to
+/// profiling — the dishonest-touch drill must fire P009 on every pick.
+#[test]
+fn mutation_dropped_dma_touch_fires_p009() {
+    let topo = dev_topo();
+    forall("drop-dma-touch", 0x15EED, 16, &UsizeRange { lo: 0, hi: 1 << 20 }, |&pick| {
+        let (mut sched, ctx) = clean_setup(&topo);
+        let candidates: Vec<usize> = sched
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| {
+                matches!(n.op, Op::Transfer { bytes, .. } if bytes > 0.0)
+                    && n.touches.iter().any(|t| matches!(t, RegionTouch::Dma(_)))
+            })
+            .map(|(i, _)| i)
+            .collect();
+        if candidates.is_empty() {
+            return Err("fixture has no honest transfers to corrupt".into());
+        }
+        let victim = candidates[pick % candidates.len()];
+        sched.nodes[victim].touches.retain(|t| !matches!(t, RegionTouch::Dma(_)));
+        let d = lint_schedule(&sched, &topo, Some(&ctx));
+        if !d.has_code("P009") {
+            return Err(format!(
+                "dropping node {victim}'s Dma touch must fire P009:\n{}",
+                d.render()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Narrowing a committed lifetime window under a region that is touched in
+/// a later phase is an out-of-window access — P008, an error.
+#[test]
+fn mutation_narrowed_lifetime_window_fires_p008() {
+    let topo = dev_topo();
+    forall("narrow-lifetime", 0xBEEF, 16, &UsizeRange { lo: 0, hi: 1 << 20 }, |&pick| {
+        let (sched, mut ctx) = clean_setup(&topo);
+        // Regions touched at phase > 0: narrowing their window to [0] must
+        // put that access outside the committed lifetime.
+        let candidates: Vec<cxlfine::mem::RegionId> = sched
+            .nodes
+            .iter()
+            .filter(|n| n.phase > 0)
+            .flat_map(|n| n.touches.iter().map(|t| t.region()))
+            .collect();
+        if candidates.is_empty() {
+            return Err("fixture touches nothing after phase 0".into());
+        }
+        let victim = candidates[pick % candidates.len()];
+        for r in &mut ctx.regions {
+            if r.id == victim {
+                r.lifetime = Some(Lifetime::spanning(0, 0));
+            }
+        }
+        let d = lint_schedule(&sched, &topo, Some(&ctx));
+        if !d.has_code("P008") {
+            return Err(format!(
+                "narrowing region {victim:?} to [0] must fire P008:\n{}",
+                d.render()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// An orphan node — no deps, no dependents — is dead scheduling weight;
+/// P012 must flag it wherever it lands.
+#[test]
+fn mutation_orphan_node_fires_p012() {
+    let topo = dev_topo();
+    forall("orphan-node", 0x0B0E, 16, &UsizeRange { lo: 0, hi: 1 << 20 }, |&pick| {
+        let (mut sched, ctx) = clean_setup(&topo);
+        let phase = pick % sched.phases.len();
+        sched.nodes.push(OpNode {
+            op: Op::Compute { gpu: GpuId(0), work: vec![FlopsTerm::new(1e9)] },
+            deps: Vec::new(),
+            name: "orphan".into(),
+            lane: "gpu0/compute".into(),
+            phase,
+            ends_phase: false,
+            touches: Vec::new(),
+        });
+        let d = lint_schedule(&sched, &topo, Some(&ctx));
+        if !d.has_code("P012") {
+            return Err(format!("an orphan node in phase {phase} must fire P012:\n{}", d.render()));
+        }
+        Ok(())
+    });
+}
+
+/// A touch naming a region the plan never committed is a dangling id —
+/// P007, an error.
+#[test]
+fn mutation_dangling_region_id_fires_p007() {
+    let topo = dev_topo();
+    let (mut sched, ctx) = clean_setup(&topo);
+    let victim = sched
+        .nodes
+        .iter()
+        .position(|n| matches!(n.op, Op::Transfer { .. }))
+        .expect("fixture has transfers");
+    sched.nodes[victim]
+        .touches
+        .push(RegionTouch::Dma(cxlfine::mem::RegionId(9999)));
+    let d = lint_schedule(&sched, &topo, Some(&ctx));
+    assert!(d.has_code("P007"), "dangling RegionId(9999) must fire P007:\n{}", d.render());
+    assert!(d.has_errors());
+}
+
+/// Committing a region whose bytes push a node past capacity in some phase
+/// must be flagged by the pre-commit lint (P104) — the same arithmetic the
+/// allocator's own commit check runs.
+#[test]
+fn over_capacity_phase_peak_fires_p104() {
+    let topo = dev_topo();
+    let alloc = NumaAllocator::new(&topo, Policy::CxlAware { striping: false });
+    let cap = topo.node(NodeId(0)).capacity;
+    let req = RegionRequest::new("too-big", TensorClass::Activations, cap + 1);
+    let placement = Placement::single(NodeId(0), cap + 1);
+    let d = lint_commit(&alloc, &req, &placement);
+    assert!(d.has_code("P104"), "oversized commit must fire P104:\n{}", d.render());
+    assert_eq!(d.count(Severity::Error), d.len(), "P104 is an error");
+
+    // A placement that fits is silent.
+    let ok = RegionRequest::new("fits", TensorClass::Activations, cap / 2);
+    let d2 = lint_commit(&alloc, &ok, &Placement::single(NodeId(0), cap / 2));
+    assert!(d2.is_empty(), "in-capacity commit must lint clean:\n{}", d2.render());
+}
+
+/// A malformed placement (bytes mismatch) is P101 at the same gate.
+#[test]
+fn malformed_placement_fires_p101() {
+    let topo = dev_topo();
+    let alloc = NumaAllocator::new(&topo, Policy::CxlAware { striping: false });
+    let req = RegionRequest::new("r", TensorClass::Params16, 100);
+    let d = lint_commit(&alloc, &req, &Placement::single(NodeId(0), 99));
+    assert!(d.has_code("P101"), "bytes mismatch must fire P101:\n{}", d.render());
+}
+
+/// Trace drills: each corruption of a generated (clean) trace fires its
+/// documented P2xx code.
+#[test]
+fn trace_corruptions_fire_their_codes() {
+    let clean = TraceGen::mixed(9, 12).generate();
+    let d = lint_trace(&clean.to_json());
+    assert!(
+        !d.has_errors() && !d.has_warnings(),
+        "generated trace must lint clean:\n{}",
+        d.render()
+    );
+
+    // P201: digest field says one thing, contents hash to another.
+    let mut j = clean.to_json();
+    if let cxlfine::util::json::Json::Obj(o) = &mut j {
+        o.set("digest", "deadbeefdeadbeef");
+    }
+    let d = lint_trace(&j);
+    assert!(d.has_code("P201"), "corrupted digest must fire P201:\n{}", d.render());
+
+    // P202: duplicate job ids.
+    let mut t = clean.clone();
+    let id0 = t.jobs[0].id;
+    t.jobs[1].id = id0;
+    let d = lint_trace(&t.to_json());
+    assert!(d.has_code("P202"), "duplicate ids must fire P202:\n{}", d.render());
+
+    // P203: arrivals out of order (a warning, not an error).
+    let mut t = clean.clone();
+    let last = t.jobs.len() - 1;
+    t.jobs[last].arrival_s = 0.0;
+    let d = lint_trace(&t.to_json());
+    assert!(d.has_code("P203"), "inverted arrivals must fire P203:\n{}", d.render());
+    assert!(!d.has_errors(), "P203 is a warning:\n{}", d.render());
+
+    // P204: names that resolve in no registry.
+    let mut t = clean.clone();
+    t.jobs[0].model = "no-such-model".into();
+    t.jobs[0].schedule = "no-such-sched".into();
+    t.jobs[0].engine = "no-such-engine".into();
+    let d = lint_trace(&t.to_json());
+    assert!(d.has_code("P204"), "unregistered names must fire P204:\n{}", d.render());
+    assert!(
+        d.count(Severity::Error) >= 3,
+        "all three dangling names are reported:\n{}",
+        d.render()
+    );
+
+    // P206: an unsigned trace is an Info, never a failure.
+    let mut stripped = cxlfine::util::json::JsonObj::new();
+    if let cxlfine::util::json::Json::Obj(o) = &clean.to_json() {
+        for (k, v) in o.iter() {
+            if k != "digest" {
+                stripped.set(k, v.clone());
+            }
+        }
+    }
+    let d = lint_trace(&cxlfine::util::json::Json::Obj(stripped));
+    assert!(d.has_code("P206") && !d.has_errors(), "unsigned trace is Info-only:\n{}", d.render());
+}

@@ -1,0 +1,151 @@
+//! Fault-recovery bench: the pinned 100-job mixed-context trace on the
+//! §V-B-shaped host (config-a, 128 GiB DRAM) hit by the derived pinned
+//! fault trace (link degrade + CXL AIC hot-remove + restore inside the
+//! busiest AIC window), replayed under every registered recovery policy.
+//!
+//! Gates (enforced in CI via `--smoke`):
+//! * `evacuate` ≥ `checkpoint-restart` ≥ `fail-stop` on completed jobs,
+//!   and `evacuate` strictly beats `fail-stop` on both completions and
+//!   goodput (useful tokens per second of makespan).
+//! * bit-identical result digests across reruns (the determinism
+//!   contract extends to faulted runs).
+//!
+//! Results land in `bench_out/fleet_faults/` and in `BENCH_faults.json`
+//! (override: `CXLFINE_BENCH_FAULTS_OUT`), which the CI bench-smoke job
+//! uploads on every push so the degradation-recovery trajectory is
+//! recorded alongside the fleet-throughput one.
+
+use std::time::Instant;
+
+use cxlfine::fleet::{
+    faults, mixed_trace_with_xl, pinned_faults_from_baseline, scheduler, simulate_fleet,
+    simulate_fleet_faulted,
+};
+use cxlfine::topology::presets::{config_a, with_dram_capacity};
+use cxlfine::trow;
+use cxlfine::util::bench::BenchReport;
+use cxlfine::util::json::{Json, JsonObj};
+use cxlfine::util::table::Table;
+use cxlfine::util::units::GIB;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut report = BenchReport::new("fleet_faults");
+    let topo = with_dram_capacity(config_a(), 128 * GIB);
+    let threads = cxlfine::util::threadpool::default_threads();
+    let policy = scheduler::by_name("placement-aware").unwrap();
+
+    let trace = mixed_trace_with_xl(&topo, 1007, 92, 8);
+    assert_eq!(
+        trace.jobs.len(),
+        100,
+        "the XL static/lifetime gap cell must exist at 128 GiB DRAM"
+    );
+    // The fault window derives from the fault-free run: degrade a CXL
+    // link a quarter into the busiest AIC-resident span, hot-remove the
+    // AIC halfway through, restore it at three quarters.
+    let baseline = simulate_fleet(&topo, &trace, &policy, threads);
+    let fault_trace = pinned_faults_from_baseline(&topo, &baseline);
+    fault_trace.validate(&topo).unwrap();
+    println!(
+        "pinned fault trace: {} events (digest {:016x}) on {}",
+        fault_trace.events.len(),
+        fault_trace.digest(),
+        topo.name
+    );
+
+    let mut t = Table::new(&[
+        "recovery",
+        "wall",
+        "completed",
+        "failed",
+        "interrupts",
+        "migrations",
+        "goodput tok/s",
+        "lost tok",
+        "recovery s",
+    ])
+    .left(0);
+    let mut raws = Vec::new();
+    let mut by_name = Vec::new();
+    for recovery in faults::registry() {
+        let t0 = Instant::now();
+        let res = simulate_fleet_faulted(&topo, &trace, &policy, &fault_trace, &recovery, threads);
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        t.row(trow![
+            recovery.name(),
+            format!("{wall:.2}s"),
+            res.completed(),
+            res.failed(),
+            res.interruptions(),
+            res.migrations(),
+            format!("{:.0}", res.goodput_tokens_per_sec()),
+            res.lost_tokens(),
+            format!("{:.0}", res.recovery_s())
+        ]);
+        let mut cell = JsonObj::new();
+        cell.set("recovery", recovery.name());
+        cell.set("wall_s", wall);
+        cell.set("completed", res.completed());
+        cell.set("failed", res.failed());
+        cell.set("interruptions", res.interruptions());
+        cell.set("migrations", res.migrations());
+        cell.set("goodput_tokens_per_sec", res.goodput_tokens_per_sec());
+        cell.set("lost_tokens", res.lost_tokens());
+        cell.set("recovery_s", res.recovery_s());
+        cell.set("digest", format!("{:016x}", res.digest()));
+        raws.push(Json::Obj(cell));
+        by_name.push((recovery.name().to_string(), res));
+    }
+    let get = |name: &str| {
+        by_name
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, r)| r)
+            .expect("registered recovery policy ran")
+    };
+    let (fs, cr, ev) = (get("fail-stop"), get("checkpoint-restart"), get("evacuate"));
+    // The graded recovery ladder, with the strict beat at its ends.
+    assert!(
+        ev.completed() >= cr.completed() && cr.completed() >= fs.completed(),
+        "completions must grade evacuate ≥ checkpoint-restart ≥ fail-stop: {} / {} / {}",
+        ev.completed(),
+        cr.completed(),
+        fs.completed()
+    );
+    assert!(
+        ev.completed() > fs.completed(),
+        "evacuate must strictly beat fail-stop on completions: {} vs {}",
+        ev.completed(),
+        fs.completed()
+    );
+    assert!(
+        ev.goodput_tokens_per_sec() > fs.goodput_tokens_per_sec(),
+        "evacuate must strictly beat fail-stop on goodput: {:.1} vs {:.1} tok/s",
+        ev.goodput_tokens_per_sec(),
+        fs.goodput_tokens_per_sec()
+    );
+    // Determinism: a single-threaded rerun is bit-identical.
+    let recovery = faults::by_name("evacuate").unwrap();
+    let rerun = simulate_fleet_faulted(&topo, &trace, &policy, &fault_trace, &recovery, 1);
+    assert_eq!(rerun.digest(), ev.digest(), "faulted rerun must be bit-identical");
+
+    report.section("recovery_policies", t, Json::Arr(raws.clone()));
+
+    let mut root = JsonObj::new();
+    root.set("bench", "fleet_faults");
+    root.set("smoke", smoke);
+    root.set("policy", policy.name());
+    root.set("trace_digest", format!("{:016x}", trace.digest()));
+    root.set("fault_digest", format!("{:016x}", fault_trace.digest()));
+    root.set("n_faults", fault_trace.events.len());
+    root.set("recoveries", Json::Arr(raws));
+    let out =
+        std::env::var("CXLFINE_BENCH_FAULTS_OUT").unwrap_or_else(|_| "BENCH_faults.json".into());
+    let payload = Json::Obj(root).to_string_pretty();
+    match std::fs::write(&out, &payload) {
+        Ok(()) => println!("\n[fleet_faults] wrote {out}"),
+        Err(e) => eprintln!("warn: could not write {out}: {e}"),
+    }
+    report.finish();
+}

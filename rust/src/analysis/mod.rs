@@ -20,6 +20,7 @@
 //! | `P001`–`P018` | schedule graph | [`lint_schedule`] |
 //! | `P101`–`P105` | plan / allocator | [`lint_plan`], [`lint_commit`] |
 //! | `P201`–`P206` | fleet trace | [`lint_trace`] |
+//! | `P207`–`P209` | fault trace | [`lint_fault_trace`] |
 //!
 //! Integration: `Schedule::validate` renders the first `Error` (same
 //! strings as the legacy checks), `Schedule::validate_strict` also fails
@@ -36,4 +37,4 @@ pub use diag::{Anchor, Diagnostic, Diagnostics, Severity};
 pub use plan_lint::{lint_commit, lint_plan};
 pub(crate) use schedule_lint::lint_schedule_adjacency;
 pub use schedule_lint::{lint_schedule, RegionInfo, ScheduleLintContext};
-pub use trace_lint::lint_trace;
+pub use trace_lint::{lint_fault_trace, lint_trace};

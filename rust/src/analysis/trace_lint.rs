@@ -1,13 +1,17 @@
 //! Fleet-trace lints: integrity (digest), well-formedness (job fields,
 //! duplicate ids), registry resolution (models / schedules / engines),
-//! and arrival-order hygiene.
+//! and arrival-order hygiene. Fault traces get the same treatment via
+//! [`lint_fault_trace`]: target validity (P207), time ordering (P208) and
+//! offline/restore pairing (P209) — the conditions
+//! [`FaultTrace::validate`] aborts on, reported exhaustively instead.
 //!
 //! Operates on parsed JSON rather than a [`FleetTrace`] so it can keep
 //! going where `FleetTrace::from_json` must abort: one malformed job
 //! becomes one P205 diagnostic and the remaining jobs are still checked.
 
 use super::diag::{Anchor, Diagnostics, Severity};
-use crate::fleet::{FleetTrace, JobSpec};
+use crate::fleet::{FaultEvent, FaultKind, FaultTrace, FleetTrace, JobSpec};
+use crate::topology::{MemKind, SystemTopology};
 use crate::util::json::Json;
 
 /// Lint a fleet trace as parsed JSON. See DESIGN.md §12 for the catalog.
@@ -116,6 +120,205 @@ pub fn lint_trace(j: &Json) -> Diagnostics {
             Severity::Info,
             Anchor::Trace,
             "trace carries no digest — integrity cannot be verified",
+        ),
+    }
+    ds
+}
+
+/// Lint a fault trace as parsed JSON. `topo` enables the machine-specific
+/// target checks (P207); without it only shape, ordering and pairing are
+/// checked. See DESIGN.md §12 for the catalog.
+pub fn lint_fault_trace(j: &Json, topo: Option<&SystemTopology>) -> Diagnostics {
+    let mut ds = Diagnostics::new();
+    let Some(obj) = j.as_obj() else {
+        ds.push(
+            "P205",
+            Severity::Error,
+            Anchor::Trace,
+            "fault trace is not a JSON object",
+        );
+        return ds;
+    };
+    let seed = match obj.get("seed") {
+        Some(Json::Str(s)) => s.parse::<u64>().ok(),
+        Some(v) => v.as_u64(),
+        None => None,
+    };
+    if seed.is_none() {
+        ds.push(
+            "P205",
+            Severity::Error,
+            Anchor::Trace,
+            "fault trace is missing a u64 'seed'",
+        );
+    }
+    let Some(events_json) = obj.get("events").and_then(|v| v.as_arr()) else {
+        ds.push(
+            "P205",
+            Severity::Error,
+            Anchor::Trace,
+            "fault trace is missing an 'events' array",
+        );
+        return ds;
+    };
+    let mut events: Vec<FaultEvent> = Vec::new();
+    let mut all_parsed = true;
+    for (idx, ej) in events_json.iter().enumerate() {
+        match FaultEvent::from_json(ej) {
+            Ok(ev) => events.push(ev),
+            Err(e) => {
+                all_parsed = false;
+                ds.push(
+                    "P205",
+                    Severity::Error,
+                    Anchor::Trace,
+                    format!("events[{idx}]: {e}"),
+                );
+            }
+        }
+    }
+    // P208: fault times must be monotonically non-decreasing (the event
+    // heap would reorder them, silently changing which jobs are hit).
+    let mut last = f64::NEG_INFINITY;
+    for (idx, ev) in events.iter().enumerate() {
+        if !(ev.t_s.is_finite() && ev.t_s >= 0.0) {
+            ds.push(
+                "P208",
+                Severity::Error,
+                Anchor::Trace,
+                format!("events[{idx}]: t_s {} is not a non-negative finite time", ev.t_s),
+            );
+            continue;
+        }
+        if ev.t_s < last {
+            ds.push(
+                "P208",
+                Severity::Error,
+                Anchor::Trace,
+                format!(
+                    "events[{idx}]: t_s {} precedes the previous fault at {last} \
+                     (fault events must be time-sorted)",
+                    ev.t_s
+                ),
+            );
+        }
+        last = ev.t_s;
+    }
+    // P207: every fault must target hardware that exists (and magnitudes
+    // must be meaningful); P209: restores must pair with a prior offline.
+    let mut offline = std::collections::BTreeSet::new();
+    for (idx, ev) in events.iter().enumerate() {
+        let node_exists = |node: usize| topo.map(|t| node < t.mem_nodes.len());
+        match &ev.kind {
+            FaultKind::LinkDegrade { link, bw_factor } => {
+                if topo.map(|t| *link >= t.links.len()) == Some(true) {
+                    ds.push(
+                        "P207",
+                        Severity::Error,
+                        Anchor::Trace,
+                        format!("events[{idx}]: link {link} does not exist on this topology"),
+                    );
+                }
+                if !(bw_factor.is_finite() && *bw_factor > 0.0 && *bw_factor <= 1.0) {
+                    ds.push(
+                        "P207",
+                        Severity::Error,
+                        Anchor::Trace,
+                        format!("events[{idx}]: bw_factor {bw_factor} must be in (0, 1]"),
+                    );
+                }
+            }
+            FaultKind::NodeOffline { node } => {
+                match node_exists(*node) {
+                    Some(false) => ds.push(
+                        "P207",
+                        Severity::Error,
+                        Anchor::Trace,
+                        format!("events[{idx}]: node {node} does not exist on this topology"),
+                    ),
+                    Some(true)
+                        if topo.is_some_and(|t| t.mem_nodes[*node].kind != MemKind::CxlAic) =>
+                    {
+                        ds.push(
+                            "P207",
+                            Severity::Error,
+                            Anchor::Trace,
+                            format!(
+                                "events[{idx}]: node {node} is local DRAM — only CXL AICs \
+                                 can go offline"
+                            ),
+                        )
+                    }
+                    _ => {}
+                }
+                if !offline.insert(*node) {
+                    ds.push(
+                        "P209",
+                        Severity::Error,
+                        Anchor::Trace,
+                        format!("events[{idx}]: node {node} is already offline"),
+                    );
+                }
+            }
+            FaultKind::NodeRestore { node } => {
+                if node_exists(*node) == Some(false) {
+                    ds.push(
+                        "P207",
+                        Severity::Error,
+                        Anchor::Trace,
+                        format!("events[{idx}]: node {node} does not exist on this topology"),
+                    );
+                }
+                if !offline.remove(node) {
+                    ds.push(
+                        "P209",
+                        Severity::Error,
+                        Anchor::Trace,
+                        format!(
+                            "events[{idx}]: restore of node {node} without a prior offline"
+                        ),
+                    );
+                }
+            }
+            FaultKind::CapacitySqueeze { node, bytes } => {
+                if node_exists(*node) == Some(false) {
+                    ds.push(
+                        "P207",
+                        Severity::Error,
+                        Anchor::Trace,
+                        format!("events[{idx}]: node {node} does not exist on this topology"),
+                    );
+                }
+                if *bytes == 0 {
+                    ds.push(
+                        "P207",
+                        Severity::Error,
+                        Anchor::Trace,
+                        format!("events[{idx}]: capacity squeeze of zero bytes"),
+                    );
+                }
+            }
+        }
+    }
+    match obj.get("digest").and_then(|v| v.as_str()) {
+        Some(want) => {
+            if let (Some(seed), true) = (seed, all_parsed) {
+                let got = format!("{:016x}", FaultTrace { seed, events }.digest());
+                if got != want {
+                    ds.push(
+                        "P201",
+                        Severity::Error,
+                        Anchor::Trace,
+                        format!("digest mismatch: file says {want}, contents hash to {got}"),
+                    );
+                }
+            }
+        }
+        None => ds.push(
+            "P206",
+            Severity::Info,
+            Anchor::Trace,
+            "fault trace carries no digest — integrity cannot be verified",
         ),
     }
     ds

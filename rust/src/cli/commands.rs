@@ -3,7 +3,7 @@
 use anyhow::anyhow;
 
 use super::{parse, CliDone};
-use crate::fleet::{self, simulate_fleet, FleetTrace, TraceGen};
+use crate::fleet::{self, simulate_fleet_faulted, FaultTrace, FleetTrace, TraceGen};
 use crate::mem::{engine, EngineRef, Policy};
 use crate::model::footprint::{Footprint, Workload};
 use crate::model::{presets as mpresets, ModelConfig};
@@ -579,6 +579,18 @@ pub fn fleet(args: &[String]) -> Result<(), CliDone> {
         "trace JSON path: replay it if the file exists, else generate and save there",
     )
     .opt(
+        "faults",
+        "",
+        "fault-trace JSON path: replay it if the file exists, else generate and save there",
+    )
+    .opt(
+        "recovery",
+        "fail-stop",
+        "recovery policy for fault-hit jobs (fail-stop|checkpoint-restart|evacuate)",
+    )
+    .opt("fault-seed", "1", "fault-generator seed")
+    .opt("n-faults", "4", "fault events to generate when no fault trace is replayed")
+    .opt(
         "json",
         "",
         "write the full result (per-job records + occupancy, digest-self-certifying) here",
@@ -631,11 +643,54 @@ pub fn fleet(args: &[String]) -> Result<(), CliDone> {
             t
         }
     };
+    let recovery_name = a.get("recovery").unwrap();
+    let recovery = fleet::faults::by_name(recovery_name).ok_or_else(|| {
+        CliDone::Bad(format!(
+            "unknown recovery policy {recovery_name:?} ({})",
+            fleet::faults::known_names().join("|")
+        ))
+    })?;
+    let faults_path = a.get("faults").filter(|s| !s.is_empty()).map(str::to_string);
+    let faults = match faults_path
+        .as_deref()
+        .filter(|p| std::path::Path::new(p).exists())
+    {
+        Some(p) => {
+            let text = std::fs::read_to_string(p).map_err(|e| anyhow!("reading {p}: {e}"))?;
+            let json =
+                crate::util::json::Json::parse(&text).map_err(|e| anyhow!("parsing {p}: {e}"))?;
+            let f = FaultTrace::from_json(&json).map_err(|e| anyhow!("{p}: {e}"))?;
+            f.validate(&topo).map_err(|e| anyhow!("{p}: {e}"))?;
+            println!(
+                "replaying {} fault events from {p} (--fault-seed/--n-faults are ignored \
+                 on replay; delete the file to regenerate)",
+                f.events.len()
+            );
+            f
+        }
+        None => match &faults_path {
+            Some(p) => {
+                let horizon =
+                    trace.jobs.last().map(|j| j.arrival_s).unwrap_or(0.0).max(1.0);
+                let f = fleet::FaultGen::new(
+                    a.parse_u64("fault-seed")?,
+                    a.parse_usize("n-faults")?,
+                    horizon,
+                )
+                .generate(&topo);
+                std::fs::write(p, f.to_json().to_string_pretty())
+                    .map_err(|e| anyhow!("writing {p}: {e}"))?;
+                println!("wrote generated fault trace to {p}");
+                f
+            }
+            None => FaultTrace::empty(),
+        },
+    };
     let threads = match a.parse_usize("threads")? {
         0 => crate::util::threadpool::default_threads(),
         n => n,
     };
-    let res = simulate_fleet(&topo, &trace, &policy, threads);
+    let res = simulate_fleet_faulted(&topo, &trace, &policy, &faults, &recovery, threads);
     println!(
         "fleet of {} jobs under {} on {} (digest {:016x})",
         trace.jobs.len(),
@@ -643,9 +698,21 @@ pub fn fleet(args: &[String]) -> Result<(), CliDone> {
         topo.name,
         res.digest()
     );
+    if !faults.events.is_empty() {
+        println!(
+            "injected {} fault events (digest {:016x}) under {} recovery",
+            faults.events.len(),
+            faults.digest(),
+            res.recovery
+        );
+    }
     print!("{}", res.summary_table().render());
     println!();
     print!("{}", res.occupancy_table().render());
+    if let Some(rt) = res.reasons_table() {
+        println!();
+        print!("{}", rt.render());
+    }
     if let Some(path) = a.get("json").filter(|s| !s.is_empty()) {
         std::fs::write(path, res.to_json().to_string_pretty())
             .map_err(|e| anyhow!("writing {path}: {e}"))?;
@@ -680,7 +747,12 @@ pub fn lint(args: &[String]) -> Result<(), CliDone> {
     .opt("gpus", "1", "number of GPUs")
     .opt("batch", "4", "per-GPU batch size")
     .opt("context", "4096", "context length (tokens)")
-    .opt("trace", "", "also lint this fleet-trace JSON file (P2xx codes)")
+    .opt(
+        "trace",
+        "",
+        "also lint this fleet-trace or fault-trace JSON file (P2xx codes; fault traces \
+         are detected by their 'events' array and checked against the first --preset)",
+    )
     .opt("json", "", "write the full diagnostic report to this JSON file")
     .flag("deny-warnings", "treat Warn diagnostics as fatal (CI mode)");
     let a = parse(spec, args)?;
@@ -785,7 +857,13 @@ pub fn lint(args: &[String]) -> Result<(), CliDone> {
     if let Some(path) = a.get("trace").filter(|s| !s.is_empty()) {
         let text = std::fs::read_to_string(path).map_err(|e| anyhow!("reading {path}: {e}"))?;
         let json = Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
-        let diags = analysis::lint_trace(&json);
+        // A fault trace carries 'events' where a fleet trace carries 'jobs'.
+        let diags = if json.path(&["events"]).is_some() {
+            let topo = get_topo(presets.first().copied().unwrap_or("config-a"), dram)?;
+            analysis::lint_fault_trace(&json, Some(&topo))
+        } else {
+            analysis::lint_trace(&json)
+        };
         n_err += diags.count(Severity::Error);
         n_warn += diags.count(Severity::Warn);
         n_info += diags.count(Severity::Info);

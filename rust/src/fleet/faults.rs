@@ -1,0 +1,915 @@
+//! Fault injection and recovery for the fleet simulator.
+//!
+//! A [`FaultTrace`] is the hardware-side analogue of [`super::job::FleetTrace`]:
+//! a seeded, digest-embedded JSON file of typed events that the simulator
+//! injects into its heap loop as first-class events (ordering rule: at one
+//! timestamp, faults apply **after completions and before arrivals** — a
+//! job that finishes at t is done, a job that arrives at t sees the
+//! post-fault machine). Kinds:
+//!
+//! * [`FaultKind::LinkDegrade`] — a PCIe link retrains at lower width /
+//!   throttles; bandwidth scales by `bw_factor`. Degrades compound
+//!   multiplicatively and are never restored (a retrained link stays
+//!   retrained for the run).
+//! * [`FaultKind::NodeOffline`] — CXL AIC hot-remove. The DRAM node is
+//!   rejected at validation: a host without DRAM is not degraded, it is
+//!   gone.
+//! * [`FaultKind::NodeRestore`] — the AIC comes back (hot-add). Only valid
+//!   after a prior offline.
+//! * [`FaultKind::CapacitySqueeze`] — ECC pressure / reserved-region
+//!   growth shrinks a node's usable capacity by `bytes` (any node,
+//!   including DRAM; squeezes accumulate and persist across restores).
+//!
+//! [`Degradation`] accumulates the applied events into per-link factors,
+//! per-node offline flags and squeezed bytes, and derives the post-fault
+//! hardware as a topology clone (via the `topology::presets` degraded
+//! views) plus a deterministic cache key so the `Calibrator` can memoize
+//! costs per degradation state.
+//!
+//! When a fault lands on a resident job's regions, a [`RecoveryPolicy`]
+//! (registry shaped like `fleet::scheduler`) decides its fate:
+//! `fail-stop`, `checkpoint-restart`, or `evacuate` — mechanics live in
+//! `fleet::sim`, the policy is pure choice.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use crate::jobj;
+use crate::topology::{presets as tpresets, LinkId, MemKind, NodeId, SystemTopology};
+use crate::util::digest::Fnv64;
+use crate::util::json::Json;
+use crate::util::prng::Xoshiro256pp;
+
+use super::job::JobSpec;
+
+/// One typed hardware fault.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Link `link` retrains: bandwidth scales by `bw_factor` ∈ (0, 1].
+    LinkDegrade { link: usize, bw_factor: f64 },
+    /// CXL AIC hot-remove (node capacity → 0 until restored).
+    NodeOffline { node: usize },
+    /// The AIC returns (hot-add).
+    NodeRestore { node: usize },
+    /// Usable capacity on `node` shrinks by `bytes` (persistent).
+    CapacitySqueeze { node: usize, bytes: u64 },
+}
+
+impl FaultKind {
+    /// Stable kind tag (JSON field and digest component).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FaultKind::LinkDegrade { .. } => "link-degrade",
+            FaultKind::NodeOffline { .. } => "node-offline",
+            FaultKind::NodeRestore { .. } => "node-restore",
+            FaultKind::CapacitySqueeze { .. } => "capacity-squeeze",
+        }
+    }
+}
+
+/// One fault at one simulated time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Seconds from trace start (same clock as `JobSpec::arrival_s`).
+    pub t_s: f64,
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    pub fn to_json(&self) -> Json {
+        match &self.kind {
+            FaultKind::LinkDegrade { link, bw_factor } => jobj! {
+                "t_s" => self.t_s,
+                "kind" => self.kind.tag(),
+                "link" => *link,
+                "bw_factor" => *bw_factor,
+            },
+            FaultKind::NodeOffline { node } | FaultKind::NodeRestore { node } => jobj! {
+                "t_s" => self.t_s,
+                "kind" => self.kind.tag(),
+                "node" => *node,
+            },
+            FaultKind::CapacitySqueeze { node, bytes } => jobj! {
+                "t_s" => self.t_s,
+                "kind" => self.kind.tag(),
+                "node" => *node,
+                "bytes" => *bytes,
+            },
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultEvent, String> {
+        let t_s = j
+            .path(&["t_s"])
+            .and_then(Json::as_f64)
+            .ok_or_else(|| "fault event missing numeric t_s".to_string())?;
+        let tag = j
+            .path(&["kind"])
+            .and_then(Json::as_str)
+            .ok_or_else(|| "fault event missing kind".to_string())?;
+        let num = |key: &str| {
+            j.path(&[key])
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("{tag} fault missing numeric {key:?}"))
+        };
+        let kind = match tag {
+            "link-degrade" => FaultKind::LinkDegrade {
+                link: num("link")? as usize,
+                bw_factor: j
+                    .path(&["bw_factor"])
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| "link-degrade fault missing bw_factor".to_string())?,
+            },
+            "node-offline" => FaultKind::NodeOffline {
+                node: num("node")? as usize,
+            },
+            "node-restore" => FaultKind::NodeRestore {
+                node: num("node")? as usize,
+            },
+            "capacity-squeeze" => FaultKind::CapacitySqueeze {
+                node: num("node")? as usize,
+                bytes: num("bytes")?,
+            },
+            other => return Err(format!("unknown fault kind {other:?}")),
+        };
+        Ok(FaultEvent { t_s, kind })
+    }
+
+    fn fold(&self, h: &mut Fnv64) {
+        h.write_f64(self.t_s);
+        h.write_str(self.kind.tag());
+        match &self.kind {
+            FaultKind::LinkDegrade { link, bw_factor } => {
+                h.write_u64(*link as u64);
+                h.write_f64(*bw_factor);
+            }
+            FaultKind::NodeOffline { node } | FaultKind::NodeRestore { node } => {
+                h.write_u64(*node as u64);
+            }
+            FaultKind::CapacitySqueeze { node, bytes } => {
+                h.write_u64(*node as u64);
+                h.write_u64(*bytes);
+            }
+        }
+    }
+}
+
+/// A replayable fault trace: generator seed (0 for hand-built / derived
+/// traces) plus every event, time-sorted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultTrace {
+    pub seed: u64,
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultTrace {
+    /// The no-fault trace — `simulate_fleet` runs every job under this.
+    pub fn empty() -> Self {
+        FaultTrace {
+            seed: 0,
+            events: Vec::new(),
+        }
+    }
+
+    /// Bit-exact FNV-1a fingerprint (floats by IEEE-754 pattern).
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_u64(self.seed);
+        h.write_u64(self.events.len() as u64);
+        for e in &self.events {
+            e.fold(&mut h);
+        }
+        h.finish()
+    }
+
+    /// Digest-embedded JSON (seed as a decimal string for the same
+    /// above-2^53 reason as [`super::job::FleetTrace::to_json`]).
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self.events.iter().map(FaultEvent::to_json).collect();
+        jobj! {
+            "seed" => self.seed.to_string(),
+            "digest" => format!("{:016x}", self.digest()),
+            "events" => Json::Arr(events),
+        }
+    }
+
+    /// Parse a fault trace, verifying the embedded digest when present.
+    pub fn from_json(j: &Json) -> Result<FaultTrace, String> {
+        let seed_field = j
+            .path(&["seed"])
+            .ok_or_else(|| "fault trace missing seed".to_string())?;
+        let seed = match seed_field {
+            Json::Str(s) => s
+                .parse::<u64>()
+                .map_err(|e| format!("fault trace seed {s:?}: {e}"))?,
+            other => other
+                .as_u64()
+                .ok_or_else(|| "fault trace seed must be a u64".to_string())?,
+        };
+        let raw = j
+            .path(&["events"])
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "fault trace missing events array".to_string())?;
+        let events = raw
+            .iter()
+            .map(FaultEvent::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let trace = FaultTrace { seed, events };
+        if let Some(want) = j.path(&["digest"]).and_then(Json::as_str) {
+            let got = format!("{:016x}", trace.digest());
+            if want != got {
+                return Err(format!(
+                    "fault trace digest mismatch: file says {want}, contents hash to {got}"
+                ));
+            }
+        }
+        Ok(trace)
+    }
+
+    /// Semantic validation against the machine the trace will run on:
+    /// in-range targets, DRAM never offlined, factors/bytes in range,
+    /// monotonic times, and offline/restore pairing (no double-offline, no
+    /// restore without a prior offline). The simulator refuses invalid
+    /// traces up front; `cxlfine lint --trace` reports the same conditions
+    /// as P207–P209 diagnostics.
+    pub fn validate(&self, topo: &SystemTopology) -> Result<(), String> {
+        let mut last_t = f64::NEG_INFINITY;
+        let mut offline: BTreeSet<usize> = BTreeSet::new();
+        for (i, e) in self.events.iter().enumerate() {
+            if !(e.t_s.is_finite() && e.t_s >= 0.0) {
+                return Err(format!(
+                    "fault {i}: t_s must be a non-negative finite time"
+                ));
+            }
+            if e.t_s < last_t {
+                return Err(format!(
+                    "fault {i}: t_s {} precedes previous fault at {last_t} (events must be time-sorted)",
+                    e.t_s
+                ));
+            }
+            last_t = e.t_s;
+            match &e.kind {
+                FaultKind::LinkDegrade { link, bw_factor } => {
+                    if *link >= topo.links.len() {
+                        return Err(format!(
+                            "fault {i}: link {link} out of range (topology has {})",
+                            topo.links.len()
+                        ));
+                    }
+                    if !(bw_factor.is_finite() && *bw_factor > 0.0 && *bw_factor <= 1.0) {
+                        return Err(format!(
+                            "fault {i}: bw_factor {bw_factor} must be in (0, 1]"
+                        ));
+                    }
+                }
+                FaultKind::NodeOffline { node } => {
+                    if *node >= topo.mem_nodes.len() {
+                        return Err(format!(
+                            "fault {i}: node {node} out of range (topology has {})",
+                            topo.mem_nodes.len()
+                        ));
+                    }
+                    if topo.mem_nodes[*node].kind != MemKind::CxlAic {
+                        return Err(format!(
+                            "fault {i}: node {node} is local DRAM — only CXL AICs can go offline"
+                        ));
+                    }
+                    if !offline.insert(*node) {
+                        return Err(format!("fault {i}: node {node} is already offline"));
+                    }
+                }
+                FaultKind::NodeRestore { node } => {
+                    if *node >= topo.mem_nodes.len() {
+                        return Err(format!(
+                            "fault {i}: node {node} out of range (topology has {})",
+                            topo.mem_nodes.len()
+                        ));
+                    }
+                    if !offline.remove(node) {
+                        return Err(format!(
+                            "fault {i}: restore of node {node} without a prior offline"
+                        ));
+                    }
+                }
+                FaultKind::CapacitySqueeze { node, bytes } => {
+                    if *node >= topo.mem_nodes.len() {
+                        return Err(format!(
+                            "fault {i}: node {node} out of range (topology has {})",
+                            topo.mem_nodes.len()
+                        ));
+                    }
+                    if *bytes == 0 {
+                        return Err(format!("fault {i}: capacity squeeze of zero bytes"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Seeded synthetic fault generator (the hardware-side [`super::job::TraceGen`]).
+///
+/// Events arrive as a Poisson process over `[0, horizon_s]`; each event's
+/// kind is sampled with a fixed order (inter-arrival, kind roll, target,
+/// magnitude), so a seed pins the trace bitwise, and the generator tracks
+/// the offline set so every emitted trace validates against `topo`.
+#[derive(Clone, Debug)]
+pub struct FaultGen {
+    pub seed: u64,
+    pub n_events: usize,
+    pub horizon_s: f64,
+}
+
+impl FaultGen {
+    pub fn new(seed: u64, n_events: usize, horizon_s: f64) -> Self {
+        Self {
+            seed,
+            n_events,
+            horizon_s,
+        }
+    }
+
+    pub fn generate(&self, topo: &SystemTopology) -> FaultTrace {
+        let cxl = topo.cxl_nodes();
+        assert!(!cxl.is_empty(), "fault generation needs at least one CXL AIC");
+        assert!(self.horizon_s > 0.0 && self.n_events > 0);
+        let mut rng = Xoshiro256pp::seeded(self.seed);
+        let mean_gap = self.horizon_s / self.n_events as f64;
+        let mut t = 0.0;
+        let mut offline: BTreeSet<usize> = BTreeSet::new();
+        let mut events = Vec::with_capacity(self.n_events);
+        for _ in 0..self.n_events {
+            t += rng.exp_mean(mean_gap);
+            let roll = rng.below(4);
+            let target = *rng.choice(&cxl);
+            let kind = match roll {
+                0 => FaultKind::LinkDegrade {
+                    link: topo.node(target).link.expect("AIC sits behind a link").0,
+                    bw_factor: rng.range_f64(0.25, 1.0),
+                },
+                1 if !offline.contains(&target.0) => {
+                    offline.insert(target.0);
+                    FaultKind::NodeOffline { node: target.0 }
+                }
+                2 if !offline.is_empty() => {
+                    let back = *offline.iter().next().expect("nonempty");
+                    offline.remove(&back);
+                    FaultKind::NodeRestore { node: back }
+                }
+                _ => FaultKind::CapacitySqueeze {
+                    node: target.0,
+                    bytes: rng.range_u64(1, topo.node(target).capacity.max(2) / 2),
+                },
+            };
+            events.push(FaultEvent { t_s: t, kind });
+        }
+        let trace = FaultTrace {
+            seed: self.seed,
+            events,
+        };
+        debug_assert!(trace.validate(topo).is_ok(), "generator emits valid traces");
+        trace
+    }
+}
+
+/// Derive the pinned acceptance fault trace from a *no-fault* baseline
+/// run: locate the longest window during which the first CXL AIC holds
+/// bytes, then degrade its link at 25 % of the window, hot-remove the AIC
+/// at 50 %, and restore it at 75 % — guaranteeing the hot-remove lands on
+/// resident regions (≥ 1 job is hit under every recovery policy). Pure in
+/// the baseline, so the derived trace is as reproducible as the run.
+pub fn pinned_faults_from_baseline(
+    topo: &SystemTopology,
+    baseline: &super::metrics::FleetResult,
+) -> FaultTrace {
+    let aic = *topo
+        .cxl_nodes()
+        .first()
+        .expect("pinned faults need a CXL AIC");
+    let link = topo.node(aic).link.expect("AIC sits behind a link");
+    let mut best = (0.0_f64, 0.0_f64);
+    let mut cur_start: Option<f64> = None;
+    let mut last_t = 0.0_f64;
+    for s in &baseline.samples {
+        let occupied = s.used.get(aic.0).copied().unwrap_or(0) > 0;
+        match (occupied, cur_start) {
+            (true, None) => cur_start = Some(s.t_s),
+            (false, Some(st)) => {
+                if s.t_s - st > best.1 - best.0 {
+                    best = (st, s.t_s);
+                }
+                cur_start = None;
+            }
+            _ => {}
+        }
+        last_t = s.t_s;
+    }
+    if let Some(st) = cur_start {
+        if last_t - st > best.1 - best.0 {
+            best = (st, last_t);
+        }
+    }
+    assert!(
+        best.1 > best.0,
+        "baseline never occupies AIC node {} — nothing to fault",
+        aic.0
+    );
+    let at = |frac: f64| best.0 + (best.1 - best.0) * frac;
+    FaultTrace {
+        seed: 0,
+        events: vec![
+            FaultEvent {
+                t_s: at(0.25),
+                kind: FaultKind::LinkDegrade {
+                    link: link.0,
+                    bw_factor: 0.5,
+                },
+            },
+            FaultEvent {
+                t_s: at(0.50),
+                kind: FaultKind::NodeOffline { node: aic.0 },
+            },
+            FaultEvent {
+                t_s: at(0.75),
+                kind: FaultKind::NodeRestore { node: aic.0 },
+            },
+        ],
+    }
+}
+
+/// Accumulated degradation state: what the applied prefix of a fault
+/// trace has done to the machine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Degradation {
+    /// Per-link multiplicative bandwidth factor (1.0 = healthy).
+    pub link_factors: Vec<f64>,
+    /// Per-node offline flag.
+    pub offline: Vec<bool>,
+    /// Per-node squeezed-away bytes (accumulated, persistent).
+    pub squeezed: Vec<u64>,
+}
+
+impl Degradation {
+    pub fn pristine(topo: &SystemTopology) -> Self {
+        Degradation {
+            link_factors: vec![1.0; topo.links.len()],
+            offline: vec![false; topo.mem_nodes.len()],
+            squeezed: vec![0; topo.mem_nodes.len()],
+        }
+    }
+
+    pub fn is_pristine(&self) -> bool {
+        self.link_factors.iter().all(|f| *f == 1.0)
+            && self.offline.iter().all(|o| !o)
+            && self.squeezed.iter().all(|s| *s == 0)
+    }
+
+    /// Fold one fault in. The caller validates the trace up front, so the
+    /// pairing invariants hold here by construction.
+    pub fn apply(&mut self, kind: &FaultKind) {
+        match kind {
+            FaultKind::LinkDegrade { link, bw_factor } => {
+                self.link_factors[*link] *= bw_factor;
+            }
+            FaultKind::NodeOffline { node } => self.offline[*node] = true,
+            FaultKind::NodeRestore { node } => self.offline[*node] = false,
+            FaultKind::CapacitySqueeze { node, bytes } => {
+                self.squeezed[*node] = self.squeezed[*node].saturating_add(*bytes);
+            }
+        }
+    }
+
+    /// The post-fault machine: the pristine topology with every degraded
+    /// view applied (link factors first, then offlines, then squeezes).
+    /// Not re-validated — offline nodes have zero capacity.
+    pub fn degraded_topo(&self, topo: &SystemTopology) -> SystemTopology {
+        let mut t = topo.clone();
+        for (i, f) in self.link_factors.iter().enumerate() {
+            if *f != 1.0 {
+                t = tpresets::with_link_bw_factor(t, LinkId(i), *f);
+            }
+        }
+        for (i, off) in self.offline.iter().enumerate() {
+            if *off {
+                t = tpresets::with_node_offline(t, NodeId(i));
+            }
+        }
+        for (i, s) in self.squeezed.iter().enumerate() {
+            if *s > 0 {
+                t = tpresets::with_reduced_capacity(t, NodeId(i), *s);
+            }
+        }
+        t
+    }
+
+    /// Effective (degraded) capacity of every node: zero when offline,
+    /// else the pristine capacity minus accumulated squeezes.
+    pub fn effective_caps(&self, topo: &SystemTopology) -> Vec<u64> {
+        topo.mem_nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                if self.offline[i] {
+                    0
+                } else {
+                    n.capacity.saturating_sub(self.squeezed[i])
+                }
+            })
+            .collect()
+    }
+
+    /// Deterministic memoization key of this degradation state — appended
+    /// to the `Calibrator` cost-cache key so costs computed on different
+    /// post-fault machines never collide. Empty for the pristine machine
+    /// (keeping the zero-fault cache keys byte-identical to PR 5's).
+    pub fn key(&self) -> String {
+        if self.is_pristine() {
+            return String::new();
+        }
+        use std::fmt::Write;
+        let mut s = String::new();
+        for (i, f) in self.link_factors.iter().enumerate() {
+            if *f != 1.0 {
+                let _ = write!(s, "L{i}:{:016x};", f.to_bits());
+            }
+        }
+        for (i, off) in self.offline.iter().enumerate() {
+            if *off {
+                let _ = write!(s, "N{i}:off;");
+            }
+        }
+        for (i, sq) in self.squeezed.iter().enumerate() {
+            if *sq > 0 {
+                let _ = write!(s, "S{i}:{sq};");
+            }
+        }
+        s
+    }
+}
+
+/// What happens to a resident job whose regions a fault touches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryAction {
+    /// Kill the job; release its regions and GPUs.
+    FailStop,
+    /// Roll back to the last checkpoint, release everything, re-queue with
+    /// exponential backoff (bounded retries, then fail).
+    CheckpointRestart,
+    /// Re-plan against the degraded free view and migrate the surviving
+    /// regions (falls back to checkpoint-restart when nothing fits).
+    Evacuate,
+}
+
+/// Recovery policy: pure choice of [`RecoveryAction`] per hit job — all
+/// mechanics (checkpoint math, migration pricing, backoff) live in
+/// `fleet::sim`.
+pub trait RecoveryPolicy: Send + Sync {
+    /// Registry / CLI name, e.g. `"evacuate"`.
+    fn name(&self) -> &'static str;
+
+    /// Decide the fate of `job` at its `interruptions`-th hit (1-based).
+    fn decide(&self, job: &JobSpec, interruptions: u32) -> RecoveryAction;
+}
+
+/// Shared handle — what the simulator, CLI and benches thread.
+pub type RecoveryRef = Arc<dyn RecoveryPolicy>;
+
+/// Baseline: every hit job dies.
+pub struct FailStop;
+
+impl RecoveryPolicy for FailStop {
+    fn name(&self) -> &'static str {
+        "fail-stop"
+    }
+    fn decide(&self, _job: &JobSpec, _interruptions: u32) -> RecoveryAction {
+        RecoveryAction::FailStop
+    }
+}
+
+/// Roll back to the last checkpoint and re-queue.
+pub struct CheckpointRestart;
+
+impl RecoveryPolicy for CheckpointRestart {
+    fn name(&self) -> &'static str {
+        "checkpoint-restart"
+    }
+    fn decide(&self, _job: &JobSpec, _interruptions: u32) -> RecoveryAction {
+        RecoveryAction::CheckpointRestart
+    }
+}
+
+/// Live-migrate the hit regions to surviving nodes.
+pub struct Evacuate;
+
+impl RecoveryPolicy for Evacuate {
+    fn name(&self) -> &'static str {
+        "evacuate"
+    }
+    fn decide(&self, _job: &JobSpec, _interruptions: u32) -> RecoveryAction {
+        RecoveryAction::Evacuate
+    }
+}
+
+/// Iterations between durable checkpoints: progress at an interruption
+/// rolls back to the last multiple of this.
+pub const CHECKPOINT_INTERVAL_ITERS: u64 = 2;
+
+/// A job is failed outright after this many interruptions under
+/// checkpoint-restart (bounded retries).
+pub const MAX_RETRIES: u32 = 3;
+
+/// Re-admission backoff after interruption k is `BACKOFF_BASE_S * 2^(k-1)`.
+pub const BACKOFF_BASE_S: f64 = 30.0;
+
+/// Canonical names of every registered recovery policy.
+pub fn known_names() -> Vec<&'static str> {
+    vec!["fail-stop", "checkpoint-restart", "evacuate"]
+}
+
+/// Resolve a recovery policy by name.
+pub fn by_name(name: &str) -> Option<RecoveryRef> {
+    match name {
+        "fail-stop" => Some(Arc::new(FailStop)),
+        "checkpoint-restart" => Some(Arc::new(CheckpointRestart)),
+        "evacuate" => Some(Arc::new(Evacuate)),
+        _ => None,
+    }
+}
+
+/// One instance of every registered recovery policy, in canonical order.
+pub fn registry() -> Vec<RecoveryRef> {
+    known_names()
+        .into_iter()
+        .map(|n| by_name(n).expect("known name resolves"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets::{config_a, config_b, dev_tiny};
+    use crate::util::units::GIB;
+
+    fn sample_trace() -> FaultTrace {
+        FaultTrace {
+            seed: 42,
+            events: vec![
+                FaultEvent {
+                    t_s: 10.0,
+                    kind: FaultKind::LinkDegrade {
+                        link: 2,
+                        bw_factor: 0.5,
+                    },
+                },
+                FaultEvent {
+                    t_s: 20.0,
+                    kind: FaultKind::NodeOffline { node: 1 },
+                },
+                FaultEvent {
+                    t_s: 25.0,
+                    kind: FaultKind::CapacitySqueeze {
+                        node: 0,
+                        bytes: GIB,
+                    },
+                },
+                FaultEvent {
+                    t_s: 30.0,
+                    kind: FaultKind::NodeRestore { node: 1 },
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn fault_trace_json_round_trips_and_verifies_digest() {
+        let t = sample_trace();
+        let text = t.to_json().to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let back = FaultTrace::from_json(&parsed).unwrap();
+        assert_eq!(t, back, "round trip must preserve every field bitwise");
+        assert_eq!(t.digest(), back.digest());
+        // A tampered trace must be rejected by the digest check.
+        let mut t2 = t.clone();
+        t2.events[0].t_s += 1.0;
+        let mut tampered = t2.to_json();
+        if let Json::Obj(o) = &mut tampered {
+            o.set("digest", format!("{:016x}", t.digest()));
+        }
+        let err = FaultTrace::from_json(&tampered).unwrap_err();
+        assert!(err.contains("digest mismatch"), "{err}");
+    }
+
+    #[test]
+    fn huge_seeds_round_trip_via_the_string_field() {
+        let mut t = sample_trace();
+        t.seed = (1u64 << 53) + 9;
+        let back =
+            FaultTrace::from_json(&Json::parse(&t.to_json().to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.seed, (1u64 << 53) + 9);
+        // A numeric seed (hand-written file) still parses.
+        let hand = Json::parse(r#"{"seed": 7, "events": []}"#).unwrap();
+        assert_eq!(FaultTrace::from_json(&hand).unwrap().seed, 7);
+    }
+
+    #[test]
+    fn validate_accepts_the_sample_and_rejects_each_violation() {
+        let topo = config_a();
+        sample_trace().validate(&topo).unwrap();
+
+        let mk = |events: Vec<FaultEvent>| FaultTrace { seed: 0, events };
+        let at = |t_s: f64, kind: FaultKind| FaultEvent { t_s, kind };
+
+        // DRAM offline is rejected.
+        let err = mk(vec![at(1.0, FaultKind::NodeOffline { node: 0 })])
+            .validate(&topo)
+            .unwrap_err();
+        assert!(err.contains("local DRAM"), "{err}");
+        // Out-of-range targets.
+        for kind in [
+            FaultKind::NodeOffline { node: 9 },
+            FaultKind::NodeRestore { node: 9 },
+            FaultKind::CapacitySqueeze { node: 9, bytes: 1 },
+            FaultKind::LinkDegrade {
+                link: 9,
+                bw_factor: 0.5,
+            },
+        ] {
+            let err = mk(vec![at(1.0, kind)]).validate(&topo).unwrap_err();
+            assert!(err.contains("out of range"), "{err}");
+        }
+        // Bad factor / zero squeeze.
+        for f in [0.0, 1.5, f64::NAN] {
+            let err = mk(vec![at(
+                1.0,
+                FaultKind::LinkDegrade {
+                    link: 2,
+                    bw_factor: f,
+                },
+            )])
+            .validate(&topo)
+            .unwrap_err();
+            assert!(err.contains("bw_factor"), "{err}");
+        }
+        let err = mk(vec![at(1.0, FaultKind::CapacitySqueeze { node: 1, bytes: 0 })])
+            .validate(&topo)
+            .unwrap_err();
+        assert!(err.contains("zero bytes"), "{err}");
+        // Non-monotonic times.
+        let err = mk(vec![
+            at(5.0, FaultKind::NodeOffline { node: 1 }),
+            at(4.0, FaultKind::NodeRestore { node: 1 }),
+        ])
+        .validate(&topo)
+        .unwrap_err();
+        assert!(err.contains("time-sorted"), "{err}");
+        // Restore without offline; double offline.
+        let err = mk(vec![at(1.0, FaultKind::NodeRestore { node: 1 })])
+            .validate(&topo)
+            .unwrap_err();
+        assert!(err.contains("without a prior offline"), "{err}");
+        let err = mk(vec![
+            at(1.0, FaultKind::NodeOffline { node: 1 }),
+            at(2.0, FaultKind::NodeOffline { node: 1 }),
+        ])
+        .validate(&topo)
+        .unwrap_err();
+        assert!(err.contains("already offline"), "{err}");
+    }
+
+    #[test]
+    fn fault_gen_is_seed_deterministic_and_valid() {
+        let topo = config_b();
+        let a = FaultGen::new(7, 12, 1000.0).generate(&topo);
+        let b = FaultGen::new(7, 12, 1000.0).generate(&topo);
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+        a.validate(&topo).unwrap();
+        let c = FaultGen::new(8, 12, 1000.0).generate(&topo);
+        assert_ne!(a.digest(), c.digest(), "a different seed must diverge");
+        for w in a.events.windows(2) {
+            assert!(w[0].t_s <= w[1].t_s);
+        }
+    }
+
+    #[test]
+    fn degradation_tracks_and_keys_deterministically() {
+        let topo = config_a();
+        let mut d = Degradation::pristine(&topo);
+        assert!(d.is_pristine());
+        assert_eq!(d.key(), "", "pristine key must stay empty");
+        assert_eq!(
+            d.effective_caps(&topo),
+            topo.mem_nodes.iter().map(|n| n.capacity).collect::<Vec<_>>()
+        );
+
+        for e in &sample_trace().events {
+            d.apply(&e.kind);
+        }
+        // Offline then restore → node 1 back online; squeeze persists.
+        assert!(!d.offline[1]);
+        assert_eq!(d.squeezed[0], GIB);
+        assert_eq!(d.link_factors[2], 0.5);
+        assert!(!d.is_pristine());
+        let caps = d.effective_caps(&topo);
+        assert_eq!(caps[0], 512 * GIB - GIB);
+        assert_eq!(caps[1], 512 * GIB);
+        // Key is deterministic and distinguishes states.
+        let k1 = d.key();
+        assert_eq!(k1, d.clone().key());
+        d.apply(&FaultKind::NodeOffline { node: 1 });
+        assert_ne!(d.key(), k1);
+        assert_eq!(d.effective_caps(&topo)[1], 0);
+        // Degrades compound multiplicatively.
+        d.apply(&FaultKind::LinkDegrade {
+            link: 2,
+            bw_factor: 0.5,
+        });
+        assert_eq!(d.link_factors[2], 0.25);
+    }
+
+    #[test]
+    fn degraded_topo_applies_every_view() {
+        let topo = config_a();
+        let mut d = Degradation::pristine(&topo);
+        d.apply(&FaultKind::LinkDegrade {
+            link: 2,
+            bw_factor: 0.5,
+        });
+        d.apply(&FaultKind::NodeOffline { node: 1 });
+        d.apply(&FaultKind::CapacitySqueeze {
+            node: 0,
+            bytes: 2 * GIB,
+        });
+        let dt = d.degraded_topo(&topo);
+        assert_eq!(dt.links[2].per_dir_bw, topo.links[2].per_dir_bw * 0.5);
+        assert_eq!(dt.mem_nodes[1].capacity, 0);
+        assert_eq!(dt.mem_nodes[0].capacity, 510 * GIB);
+        // Pristine degradation is an exact clone.
+        let p = Degradation::pristine(&topo).degraded_topo(&topo);
+        assert_eq!(p.mem_nodes[1].capacity, topo.mem_nodes[1].capacity);
+        assert_eq!(p.links[2].per_dir_bw, topo.links[2].per_dir_bw);
+    }
+
+    #[test]
+    fn recovery_registry_resolves_every_known_name() {
+        for name in known_names() {
+            let p = by_name(name).unwrap_or_else(|| panic!("{name} must resolve"));
+            assert_eq!(p.name(), name, "canonical name must round-trip");
+        }
+        assert!(by_name("??").is_none());
+        assert_eq!(registry().len(), known_names().len());
+        let job = JobSpec {
+            id: 0,
+            arrival_s: 0.0,
+            model: "tiny-2m".into(),
+            gpus: 1,
+            batch: 1,
+            context: 256,
+            schedule: "zero-offload".into(),
+            engine: "cxl-aware".into(),
+            iterations: 1,
+        };
+        assert_eq!(by_name("fail-stop").unwrap().decide(&job, 1), RecoveryAction::FailStop);
+        assert_eq!(
+            by_name("checkpoint-restart").unwrap().decide(&job, 2),
+            RecoveryAction::CheckpointRestart
+        );
+        assert_eq!(by_name("evacuate").unwrap().decide(&job, 3), RecoveryAction::Evacuate);
+    }
+
+    #[test]
+    fn pinned_faults_hit_the_occupied_window() {
+        use crate::fleet::metrics::{FleetResult, OccupancySample};
+        let topo = dev_tiny();
+        let mut res = FleetResult::new("fifo", &topo);
+        let sample = |t_s: f64, aic: u64| OccupancySample {
+            t_s,
+            used: vec![0, aic, 0],
+            queue_len: 0,
+            running: 0,
+        };
+        res.samples = vec![
+            sample(0.0, 0),
+            sample(10.0, 1),
+            sample(110.0, 0),
+            sample(120.0, 5),
+            sample(420.0, 0),
+        ];
+        let faults = pinned_faults_from_baseline(&topo, &res);
+        faults.validate(&topo).unwrap();
+        assert_eq!(faults.events.len(), 3);
+        // Longest occupied window is [120, 420) → 25/50/75 % marks.
+        assert_eq!(faults.events[0].t_s, 195.0);
+        assert_eq!(faults.events[1].t_s, 270.0);
+        assert_eq!(faults.events[2].t_s, 345.0);
+        assert!(matches!(
+            faults.events[1].kind,
+            FaultKind::NodeOffline { node: 1 }
+        ));
+        assert!(matches!(
+            faults.events[0].kind,
+            FaultKind::LinkDegrade { link: 2, .. }
+        ));
+    }
+}

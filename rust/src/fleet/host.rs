@@ -1,5 +1,6 @@
 //! The long-lived multi-job host: one [`NumaAllocator`] shared by every
-//! resident job, plus GPU-slot accounting.
+//! resident job, plus GPU-slot accounting and *effective* (degradable)
+//! per-node capacities.
 //!
 //! Each admitted job is one committed region (its [`PlanReservation`]
 //! shards, one per node) named `job-<id>`; completion releases it through
@@ -11,6 +12,16 @@
 //! is the one-shot form of that view; the simulator's probe keeps its own
 //! scratch clone and rewrites only the capacities per attempt (same
 //! semantics, no per-attempt deep clone).
+//!
+//! Fault support: [`FleetHost::set_capacity`] overrides one node's
+//! effective capacity (AIC hot-remove → 0, capacity squeeze → reduced,
+//! restore → back up), which `free()` and `free_view()` immediately
+//! reflect; the allocator's committed bytes are untouched, so a fault can
+//! transiently leave a node *over* its effective capacity until the
+//! simulator evicts or evacuates the victims. [`FleetHost::release_memory`]
+//! / [`FleetHost::reserve_memory`] split a job's residency into its memory
+//! half (regions move during an evacuation while the job keeps its GPUs)
+//! and [`FleetHost::residents_on`] names the victims a node fault touches.
 
 use std::collections::BTreeMap;
 
@@ -22,10 +33,15 @@ use crate::topology::{presets as tpresets, SystemTopology};
 pub struct FleetHost<'t> {
     topo: &'t SystemTopology,
     alloc: NumaAllocator<'t>,
-    /// Committed reservation per resident job id.
-    by_job: BTreeMap<u64, RegionId>,
+    /// Committed reservation per resident job id (region handle + the
+    /// per-node shards, kept so faults can price bytes-on-node without
+    /// reaching into allocator internals).
+    by_job: BTreeMap<u64, (RegionId, PlanReservation)>,
     /// GPUs currently assigned to per-job reservations.
     gpus_in_use: usize,
+    /// Effective capacity per node — the pristine topology capacity until
+    /// a fault overrides it.
+    eff_caps: Vec<u64>,
 }
 
 impl<'t> FleetHost<'t> {
@@ -37,6 +53,7 @@ impl<'t> FleetHost<'t> {
             alloc: NumaAllocator::new(topo, Policy::DramOnly),
             by_job: BTreeMap::new(),
             gpus_in_use: 0,
+            eff_caps: topo.mem_nodes.iter().map(|n| n.capacity).collect(),
         }
     }
 
@@ -44,12 +61,21 @@ impl<'t> FleetHost<'t> {
         self.topo
     }
 
-    /// Free bytes per node, indexed by `NodeId.0`.
+    /// Override one node's effective capacity (fault events); `free()`
+    /// and `free_view()` reflect it immediately. Committed bytes are
+    /// untouched — the caller evicts/evacuates any overshoot.
+    pub fn set_capacity(&mut self, node: usize, bytes: u64) {
+        self.eff_caps[node] = bytes;
+    }
+
+    /// Free bytes per node under the *effective* capacities, indexed by
+    /// `NodeId.0`. A node holding more than its (degraded) effective
+    /// capacity reports zero free, never underflows.
     pub fn free(&self) -> Vec<u64> {
         self.topo
             .all_nodes()
             .iter()
-            .map(|&n| self.alloc.free_on(n))
+            .map(|&n| self.eff_caps[n.0].saturating_sub(self.alloc.used_on(n)))
             .collect()
     }
 
@@ -79,6 +105,23 @@ impl<'t> FleetHost<'t> {
         self.by_job.len()
     }
 
+    /// The committed reservation of a resident job.
+    pub fn reservation(&self, job_id: u64) -> Option<&PlanReservation> {
+        self.by_job.get(&job_id).map(|(_, r)| r)
+    }
+
+    /// Resident jobs holding bytes on `node`, as `(job_id, bytes_on_node)`
+    /// in ascending job-id order — the victim set of a node fault.
+    pub fn residents_on(&self, node: usize) -> Vec<(u64, u64)> {
+        self.by_job
+            .iter()
+            .filter_map(|(id, (_, res))| {
+                let bytes = res.bytes_on(crate::topology::NodeId(node));
+                (bytes > 0).then_some((*id, bytes))
+            })
+            .collect()
+    }
+
     /// Commit a job's reservation (memory shards + GPU slots) for its
     /// whole residency.
     pub fn reserve(
@@ -88,13 +131,25 @@ impl<'t> FleetHost<'t> {
         gpus: usize,
     ) -> Result<(), AllocError> {
         assert!(
-            !self.by_job.contains_key(&job_id),
-            "job {job_id} is already resident"
-        );
-        assert!(
             gpus <= self.free_gpus(),
             "job {job_id} wants {gpus} GPUs, {} free",
             self.free_gpus()
+        );
+        self.reserve_memory(job_id, reservation)?;
+        self.gpus_in_use += gpus;
+        Ok(())
+    }
+
+    /// Commit only the memory half of a residency (re-commit after an
+    /// evacuation re-plan: the job keeps the GPUs it already holds).
+    pub fn reserve_memory(
+        &mut self,
+        job_id: u64,
+        reservation: &PlanReservation,
+    ) -> Result<(), AllocError> {
+        assert!(
+            !self.by_job.contains_key(&job_id),
+            "job {job_id} is already resident"
         );
         let placement = Placement {
             parts: reservation.parts.clone(),
@@ -108,24 +163,47 @@ impl<'t> FleetHost<'t> {
             ),
             placement,
         )?;
-        self.by_job.insert(job_id, id);
-        self.gpus_in_use += gpus;
+        self.by_job.insert(
+            job_id,
+            (
+                id,
+                PlanReservation {
+                    parts: reservation.parts.clone(),
+                },
+            ),
+        );
         Ok(())
     }
 
     /// Release a completed job's reservation; free space afterwards is
-    /// byte-identical to the job never having been resident.
-    pub fn release(&mut self, job_id: u64, gpus: usize) -> bool {
-        match self.by_job.remove(&job_id) {
-            Some(rid) => {
-                let released = self.alloc.release_region(rid).is_some();
-                debug_assert!(released, "resident job must hold a live region");
-                debug_assert!(self.gpus_in_use >= gpus, "GPU accounting underflow");
-                self.gpus_in_use -= gpus;
-                released
-            }
-            None => false,
-        }
+    /// byte-identical to the job never having been resident. Releasing a
+    /// job that is not resident is a structured error — the simulator
+    /// treats it as fatal (a double release would silently corrupt
+    /// capacity accounting).
+    pub fn release(&mut self, job_id: u64, gpus: usize) -> Result<(), String> {
+        self.release_memory(job_id)?;
+        self.release_gpus(gpus);
+        Ok(())
+    }
+
+    /// Release only the memory half of a residency (first step of an
+    /// evacuation), returning the reservation that was committed.
+    pub fn release_memory(&mut self, job_id: u64) -> Result<PlanReservation, String> {
+        let (rid, res) = self
+            .by_job
+            .remove(&job_id)
+            .ok_or_else(|| format!("release of job {job_id}, which is not resident"))?;
+        let released = self.alloc.release_strict(rid).map(|_| ());
+        debug_assert!(released.is_ok(), "resident job must hold a live region");
+        released.map_err(|e| format!("job {job_id}: {e}"))?;
+        Ok(res)
+    }
+
+    /// Return `gpus` slots to the pool (completion, kill, or the
+    /// checkpoint-restart fallback after an evacuation found no fit).
+    pub fn release_gpus(&mut self, gpus: usize) {
+        debug_assert!(self.gpus_in_use >= gpus, "GPU accounting underflow");
+        self.gpus_in_use -= gpus;
     }
 }
 
@@ -152,10 +230,26 @@ mod tests {
         assert_eq!(h.free_gpus(), 1);
         assert_eq!(h.free()[0], before[0] - 2 * GIB);
         assert_eq!(h.free()[1], before[1] - GIB);
-        assert!(h.release(7, 1));
+        h.release(7, 1).unwrap();
         assert_eq!(h.free(), before, "free space byte-identical after release");
         assert_eq!(h.free_gpus(), 2);
-        assert!(!h.release(7, 1), "double release rejected");
+    }
+
+    #[test]
+    fn releasing_a_non_resident_job_is_a_structured_error() {
+        let topo = dev_tiny();
+        let mut h = FleetHost::new(&topo);
+        h.reserve(7, &res(vec![(NodeId(0), GIB)]), 1).unwrap();
+        h.release(7, 1).unwrap();
+        // Regression (the old API returned an ignorable bool): a double
+        // release must surface as an error naming the job, with state
+        // untouched.
+        let err = h.release(7, 1).unwrap_err();
+        assert!(err.contains("job 7") && err.contains("not resident"), "{err}");
+        let err = h.release_memory(99).unwrap_err();
+        assert!(err.contains("job 99"), "{err}");
+        assert_eq!(h.free_gpus(), 2);
+        assert_eq!(h.n_resident(), 0);
     }
 
     #[test]
@@ -181,5 +275,48 @@ mod tests {
         assert_eq!(h.free(), before);
         assert_eq!(h.n_resident(), 0);
         assert_eq!(h.free_gpus(), 2, "failed reserve must not leak GPU slots");
+    }
+
+    #[test]
+    fn set_capacity_degrades_free_without_touching_committed_bytes() {
+        let topo = dev_tiny(); // cxl0 = 4 GiB
+        let mut h = FleetHost::new(&topo);
+        h.reserve(1, &res(vec![(NodeId(1), 3 * GIB)]), 0).unwrap();
+        // Hot-remove: effective capacity 0 → free 0 (no underflow), used
+        // bytes still reported so the simulator can pick victims.
+        h.set_capacity(1, 0);
+        assert_eq!(h.free()[1], 0);
+        assert_eq!(h.used()[1], 3 * GIB);
+        assert_eq!(h.free_view().mem_nodes[1].capacity, 0);
+        assert_eq!(h.residents_on(1), vec![(1, 3 * GIB)]);
+        // Restore: full capacity minus the still-committed bytes.
+        h.set_capacity(1, 4 * GIB);
+        assert_eq!(h.free()[1], GIB);
+        // Squeeze below the committed bytes → free saturates at zero.
+        h.set_capacity(1, 2 * GIB);
+        assert_eq!(h.free()[1], 0);
+        assert_eq!(h.used()[1], 3 * GIB, "overshoot is visible, not hidden");
+    }
+
+    #[test]
+    fn evacuation_split_moves_memory_while_gpus_stay_held() {
+        let topo = dev_tiny();
+        let mut h = FleetHost::new(&topo);
+        let pristine = h.free();
+        h.reserve(5, &res(vec![(NodeId(1), 2 * GIB)]), 1).unwrap();
+        assert_eq!(h.free_gpus(), 1);
+        // Evacuate: release memory only, re-commit elsewhere.
+        let old = h.release_memory(5).unwrap();
+        assert_eq!(old.bytes_on(NodeId(1)), 2 * GIB);
+        assert_eq!(h.free_gpus(), 1, "GPUs stay held through the move");
+        h.reserve_memory(5, &res(vec![(NodeId(0), 2 * GIB), (NodeId(2), GIB)]))
+            .unwrap();
+        assert_eq!(h.reservation(5).unwrap().bytes_on(NodeId(0)), 2 * GIB);
+        assert_eq!(h.residents_on(1), vec![]);
+        assert_eq!(h.residents_on(2), vec![(5, GIB)]);
+        // Full release restores the pristine free vector byte-identically.
+        h.release(5, 1).unwrap();
+        assert_eq!(h.free(), pristine);
+        assert_eq!(h.free_gpus(), 2);
     }
 }

@@ -10,15 +10,25 @@ use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::util::units::fmt_bytes;
 
-/// Lifecycle state of a job. `Queued`/`Running` are transient; a finished
-/// simulation leaves only `Completed` and `Rejected` (asserted by the
-/// fleet invariant tests).
+/// Lifecycle state of a job. `Queued`/`Running` are transient, as are the
+/// fault-recovery states `Interrupted` (rolled back to its checkpoint,
+/// waiting out its re-admission backoff) and `Migrated` (running with its
+/// regions evacuated to surviving nodes — it completes like any running
+/// job). A finished simulation leaves only `Completed`, `Rejected` and
+/// `Failed` (asserted by the fleet invariant tests).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum JobStatus {
     Queued,
     Running,
     Completed,
     Rejected,
+    /// Killed by a fault (fail-stop, retries exhausted, or starved on the
+    /// degraded host after the trace drained).
+    Failed,
+    /// Hit by a fault, rolled back, waiting to re-enter the queue.
+    Interrupted,
+    /// Running after a live evacuation of its regions.
+    Migrated,
 }
 
 impl JobStatus {
@@ -28,6 +38,9 @@ impl JobStatus {
             JobStatus::Running => "running",
             JobStatus::Completed => "completed",
             JobStatus::Rejected => "rejected",
+            JobStatus::Failed => "failed",
+            JobStatus::Interrupted => "interrupted",
+            JobStatus::Migrated => "migrated",
         }
     }
 
@@ -37,6 +50,9 @@ impl JobStatus {
             JobStatus::Running => 1,
             JobStatus::Completed => 2,
             JobStatus::Rejected => 3,
+            JobStatus::Failed => 4,
+            JobStatus::Interrupted => 5,
+            JobStatus::Migrated => 6,
         }
     }
 }
@@ -62,6 +78,22 @@ pub struct JobRecord {
     /// Tokens over the job's whole life (counted when completed).
     pub total_tokens: u64,
     pub status: JobStatus,
+    /// Why the job was rejected or failed: the structured
+    /// `AllocError`/`PlanError` detail from admission, or the fault that
+    /// killed it. `None` for clean lifecycles.
+    pub reason: Option<String>,
+    /// Fault hits that interrupted the job (rollbacks + evacuations).
+    pub interruptions: u32,
+    /// Successful live evacuations of the job's regions.
+    pub migrations: u32,
+    /// Simulated seconds spent migrating the job's regions.
+    pub recovery_s: f64,
+    /// Tokens of work thrown away: progress rolled back to a checkpoint
+    /// (recomputed later) or dead work of a killed job.
+    pub lost_tokens: u64,
+    /// Tokens the job actually processed, including recomputed and dead
+    /// work (≥ `total_tokens` contribution for a completed job).
+    pub processed_tokens: u64,
 }
 
 impl JobRecord {
@@ -95,6 +127,20 @@ impl JobRecord {
         }
         h.write_u64(self.total_tokens);
         h.write_u64(self.status.code());
+        match &self.reason {
+            Some(r) => {
+                h.write_u64(1);
+                h.write_str(r);
+            }
+            None => {
+                h.write_u64(0);
+            }
+        }
+        h.write_u64(self.interruptions as u64);
+        h.write_u64(self.migrations as u64);
+        h.write_f64(self.recovery_s);
+        h.write_u64(self.lost_tokens);
+        h.write_u64(self.processed_tokens);
     }
 
     fn to_json(&self) -> Json {
@@ -115,6 +161,12 @@ impl JobRecord {
             "iter_s" => opt(self.iter_s),
             "total_tokens" => self.total_tokens,
             "status" => self.status.name(),
+            "reason" => self.reason.as_deref().map(Json::from).unwrap_or(Json::Null),
+            "interruptions" => self.interruptions as u64,
+            "migrations" => self.migrations as u64,
+            "recovery_s" => self.recovery_s,
+            "lost_tokens" => self.lost_tokens,
+            "processed_tokens" => self.processed_tokens,
         }
     }
 }
@@ -138,8 +190,15 @@ pub struct FleetResult {
     pub node_caps: Vec<u64>,
     pub records: Vec<JobRecord>,
     pub samples: Vec<OccupancySample>,
-    /// Discrete events processed (arrivals + completions).
+    /// Discrete events processed (arrivals + completions + faults +
+    /// re-queues).
     pub n_events: u64,
+    /// Recovery policy the run used. JSON-only — deliberately excluded
+    /// from the digest so a zero-fault run is bit-identical under every
+    /// recovery policy (the zero-fault path is a bitwise no-op).
+    pub recovery: String,
+    /// Fault events applied during the run (folded into the digest).
+    pub n_faults: u64,
 }
 
 impl FleetResult {
@@ -152,6 +211,8 @@ impl FleetResult {
             records: Vec::new(),
             samples: Vec::new(),
             n_events: 0,
+            recovery: String::new(),
+            n_faults: 0,
         }
     }
 
@@ -171,15 +232,39 @@ impl FleetResult {
         self.count(JobStatus::Rejected)
     }
 
-    /// Jobs still queued or running when the event heap drained (0 for a
-    /// finished simulation — pinned by the invariant tests).
-    pub fn unfinished(&self) -> usize {
-        self.count(JobStatus::Queued) + self.count(JobStatus::Running)
+    /// Jobs killed by a fault (or starved after the trace drained).
+    pub fn failed(&self) -> usize {
+        self.count(JobStatus::Failed)
     }
 
-    /// Admitted = every job that got to run (completed + still running).
+    /// Jobs still in a transient state when the event heap drained (0 for
+    /// a finished simulation — pinned by the invariant tests).
+    pub fn unfinished(&self) -> usize {
+        self.count(JobStatus::Queued)
+            + self.count(JobStatus::Running)
+            + self.count(JobStatus::Interrupted)
+            + self.count(JobStatus::Migrated)
+    }
+
+    /// Admitted = every job that got to run (completed + still running,
+    /// migrated jobs included).
     pub fn admitted(&self) -> usize {
-        self.completed() + self.count(JobStatus::Running)
+        self.completed() + self.count(JobStatus::Running) + self.count(JobStatus::Migrated)
+    }
+
+    /// Total fault interruptions across all jobs.
+    pub fn interruptions(&self) -> u64 {
+        self.records.iter().map(|r| r.interruptions as u64).sum()
+    }
+
+    /// Total successful evacuations across all jobs.
+    pub fn migrations(&self) -> u64 {
+        self.records.iter().map(|r| r.migrations as u64).sum()
+    }
+
+    /// Total simulated seconds spent migrating regions.
+    pub fn recovery_s(&self) -> f64 {
+        self.records.iter().map(|r| r.recovery_s).sum()
     }
 
     /// Simulated-clock end of the fleet: the last completion time.
@@ -190,9 +275,14 @@ impl FleetResult {
             .fold(0.0, f64::max)
     }
 
-    /// Completion times (finish − arrival) of all completed jobs.
+    /// Completion times (finish − arrival) of all completed jobs. Failed
+    /// jobs carry a `finish_s` (their kill time) but are not completions.
     pub fn jcts_s(&self) -> Vec<f64> {
-        self.records.iter().filter_map(JobRecord::jct_s).collect()
+        self.records
+            .iter()
+            .filter(|r| r.status == JobStatus::Completed)
+            .filter_map(JobRecord::jct_s)
+            .collect()
     }
 
     pub fn mean_jct_s(&self) -> Option<f64> {
@@ -224,6 +314,49 @@ impl FleetResult {
         } else {
             0.0
         }
+    }
+
+    /// Tokens of *useful* work: completed jobs' nominal tokens, every
+    /// iteration counted exactly once no matter how often it was recomputed.
+    pub fn useful_tokens(&self) -> u64 {
+        self.records
+            .iter()
+            .filter(|r| r.status == JobStatus::Completed)
+            .map(|r| r.total_tokens)
+            .sum()
+    }
+
+    /// Tokens actually processed fleet-wide, recomputed and dead work
+    /// included.
+    pub fn processed_tokens(&self) -> u64 {
+        self.records.iter().map(|r| r.processed_tokens).sum()
+    }
+
+    /// Tokens thrown away to rollbacks and kills.
+    pub fn lost_tokens(&self) -> u64 {
+        self.records.iter().map(|r| r.lost_tokens).sum()
+    }
+
+    /// Goodput: useful tokens per simulated second. Recomputed work and
+    /// dead work of failed jobs contribute nothing — under faults this is
+    /// the honest fleet throughput, and without faults it coincides with
+    /// [`Self::aggregate_tokens_per_sec`].
+    pub fn goodput_tokens_per_sec(&self) -> f64 {
+        let span = self.makespan_s();
+        if span > 0.0 {
+            self.useful_tokens() as f64 / span
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of processed tokens that was wasted (recomputed or dead).
+    pub fn waste_frac(&self) -> f64 {
+        let processed = self.processed_tokens();
+        if processed == 0 {
+            return 0.0;
+        }
+        1.0 - self.useful_tokens().min(processed) as f64 / processed as f64
     }
 
     pub fn max_queue_len(&self) -> usize {
@@ -280,6 +413,7 @@ impl FleetResult {
             h.write_u64(s.running as u64);
         }
         h.write_u64(self.n_events);
+        h.write_u64(self.n_faults);
         h.finish()
     }
 
@@ -318,18 +452,29 @@ impl FleetResult {
         jobj! {
             "policy" => self.policy.as_str(),
             "topology" => self.topology.as_str(),
+            "recovery" => self.recovery.as_str(),
             "digest" => format!("{:016x}", self.digest()),
             "summary" => jobj! {
                 "arrived" => self.arrived(),
                 "completed" => self.completed(),
                 "rejected" => self.rejected(),
+                "failed" => self.failed(),
                 "unfinished" => self.unfinished(),
                 "makespan_s" => self.makespan_s(),
                 "mean_jct_s" => opt(self.mean_jct_s()),
                 "p99_jct_s" => opt(self.p99_jct_s()),
                 "aggregate_tokens_per_sec" => self.aggregate_tokens_per_sec(),
+                "goodput_tokens_per_sec" => self.goodput_tokens_per_sec(),
+                "useful_tokens" => self.useful_tokens(),
+                "processed_tokens" => self.processed_tokens(),
+                "lost_tokens" => self.lost_tokens(),
+                "waste_frac" => self.waste_frac(),
+                "interruptions" => self.interruptions(),
+                "migrations" => self.migrations(),
+                "recovery_s" => self.recovery_s(),
                 "max_queue_len" => self.max_queue_len(),
                 "n_events" => self.n_events,
+                "n_faults" => self.n_faults,
             },
             "nodes" => Json::Arr(nodes),
             "jobs" => Json::Arr(jobs),
@@ -343,6 +488,7 @@ impl FleetResult {
         t.row(trow!["jobs arrived", self.arrived()]);
         t.row(trow!["jobs completed", self.completed()]);
         t.row(trow!["jobs rejected", self.rejected()]);
+        t.row(trow!["jobs failed", self.failed()]);
         t.row(trow!["max queue length", self.max_queue_len()]);
         t.row(trow!["makespan", format!("{:.1}s", self.makespan_s())]);
         t.row(trow![
@@ -361,8 +507,40 @@ impl FleetResult {
             "aggregate throughput",
             format!("{:.0} tok/s", self.aggregate_tokens_per_sec())
         ]);
+        t.row(trow![
+            "goodput",
+            format!("{:.0} tok/s", self.goodput_tokens_per_sec())
+        ]);
+        if self.n_faults > 0 {
+            t.row(trow!["faults applied", self.n_faults]);
+            t.row(trow!["interruptions", self.interruptions()]);
+            t.row(trow!["migrations", self.migrations()]);
+            t.row(trow![
+                "migration time",
+                format!("{:.1}s", self.recovery_s())
+            ]);
+            t.row(trow!["lost work", format!("{} tok", self.lost_tokens())]);
+            t.row(trow![
+                "waste",
+                format!("{:.1}%", 100.0 * self.waste_frac())
+            ]);
+        }
         t.row(trow!["events processed", self.n_events]);
         t
+    }
+
+    /// Per-job rejection / failure reasons (rendered by `cxlfine fleet`
+    /// when any job carries one).
+    pub fn reasons_table(&self) -> Option<Table> {
+        let mut t = Table::new(&["job", "status", "reason"]).left(2);
+        let mut any = false;
+        for r in &self.records {
+            if let Some(reason) = &r.reason {
+                t.row(trow![r.id, r.status.name(), reason.clone()]);
+                any = true;
+            }
+        }
+        any.then_some(t)
     }
 
     /// Per-node occupancy statistics (rendered by `cxlfine fleet`).
@@ -409,6 +587,12 @@ mod tests {
             } else {
                 JobStatus::Rejected
             },
+            reason: finish.is_none().then(|| "cannot place params16".to_string()),
+            interruptions: 0,
+            migrations: 0,
+            recovery_s: 0.0,
+            lost_tokens: 0,
+            processed_tokens: if finish.is_some() { tokens } else { 0 },
         }
     }
 
@@ -442,6 +626,12 @@ mod tests {
         assert!((r.p99_jct_s().unwrap() - 10.0).abs() < 1e-12);
         // only completed tokens count: (1000 + 500) / 10
         assert!((r.aggregate_tokens_per_sec() - 150.0).abs() < 1e-12);
+        // no faults → goodput coincides with aggregate throughput
+        assert_eq!(r.failed(), 0);
+        assert!((r.goodput_tokens_per_sec() - 150.0).abs() < 1e-12);
+        assert_eq!(r.useful_tokens(), 1500);
+        assert_eq!(r.processed_tokens(), 1500);
+        assert_eq!(r.waste_frac(), 0.0);
         assert_eq!(r.max_queue_len(), 1);
         assert_eq!(r.peak_used(0), 300);
         // time-weighted: 100·2 + 300·8 over 10s = 260
@@ -459,6 +649,70 @@ mod tests {
         let mut d = result();
         d.samples[1].queue_len = 2;
         assert_ne!(a.digest(), d.digest());
+        // Recovery accounting is digest-material…
+        let mut e = result();
+        e.records[0].lost_tokens = 1;
+        assert_ne!(a.digest(), e.digest());
+        let mut f = result();
+        f.records[0].reason = Some("x".into());
+        assert_ne!(a.digest(), f.digest());
+        let mut g = result();
+        g.n_faults = 1;
+        assert_ne!(a.digest(), g.digest());
+        // …but the recovery-policy *name* is not: a zero-fault run must be
+        // bit-identical under every recovery policy.
+        let mut h = result();
+        h.recovery = "evacuate".into();
+        assert_eq!(a.digest(), h.digest());
+    }
+
+    #[test]
+    fn fault_accounting_flows_into_summary_and_goodput() {
+        let mut r = result();
+        r.recovery = "checkpoint-restart".into();
+        r.n_faults = 2;
+        // Job 1 was interrupted once and recomputed 250 tokens.
+        r.records[1].interruptions = 1;
+        r.records[1].lost_tokens = 250;
+        r.records[1].processed_tokens = 750;
+        // Job 2 becomes a fault kill instead of a rejection.
+        r.records[2].status = JobStatus::Failed;
+        r.records[2].finish_s = Some(6.0);
+        r.records[2].reason = Some("node cxl0 went offline".into());
+        r.records[2].lost_tokens = 300;
+        r.records[2].processed_tokens = 300;
+
+        assert_eq!(r.failed(), 1);
+        assert_eq!(r.rejected(), 0);
+        assert_eq!(r.unfinished(), 0);
+        assert_eq!(r.interruptions(), 1);
+        assert_eq!(r.lost_tokens(), 550);
+        assert_eq!(r.useful_tokens(), 1500);
+        assert_eq!(r.processed_tokens(), 2050);
+        assert!((r.waste_frac() - (1.0 - 1500.0 / 2050.0)).abs() < 1e-12);
+        // The failed job's finish time is not a JCT.
+        assert_eq!(r.jcts_s().len(), 2);
+        // Reasons surface in the table and JSON.
+        let reasons = r.reasons_table().expect("two reasons present").render();
+        assert!(reasons.contains("went offline"), "{reasons}");
+        let s = r.summary_table().render();
+        assert!(s.contains("jobs failed") && s.contains("waste"), "{s}");
+        let j = r.to_json().to_string_pretty();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.path(&["summary", "failed"]).unwrap().as_u64(), Some(1));
+        assert_eq!(parsed.path(&["recovery"]).unwrap().as_str(), Some("checkpoint-restart"));
+        let jobs = parsed.path(&["jobs"]).unwrap().as_arr().unwrap();
+        assert_eq!(jobs[2].path(&["status"]).unwrap().as_str(), Some("failed"));
+        assert_eq!(
+            jobs[2].path(&["reason"]).unwrap().as_str(),
+            Some("node cxl0 went offline")
+        );
+        // A clean result has no reasons table.
+        let mut clean = result();
+        for rec in &mut clean.records {
+            rec.reason = None;
+        }
+        assert!(clean.reasons_table().is_none());
     }
 
     #[test]

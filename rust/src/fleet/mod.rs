@@ -11,10 +11,15 @@
 //!   plans are built against its capacity "free view",
 //! * [`scheduler`] — the pluggable admission-policy registry (`fifo`,
 //!   `backfill`, `placement-aware`),
-//! * [`sim`] — the event loop and the memoized per-(config, engine) cost
-//!   calibrator (one real `offload::executor` run per cell),
+//! * [`faults`] — replayable hardware-fault traces (link degrades, CXL
+//!   AIC hot-remove/hot-add, capacity squeezes), the accumulated
+//!   [`faults::Degradation`] view, and the recovery-policy registry
+//!   (`fail-stop`, `checkpoint-restart`, `evacuate`),
+//! * [`sim`] — the event loop and the memoized per-(config, engine,
+//!   degradation) cost calibrator (one real `offload::executor` run per
+//!   cell),
 //! * [`metrics`] — per-job records, occupancy curves, makespan / JCT /
-//!   aggregate-throughput statistics, digests and JSON.
+//!   goodput / lost-work statistics, digests and JSON.
 //!
 //! The cluster-DES shape follows the dslab family of simulators: an event
 //! heap owns the clock, resources are capacity counters, and policies are
@@ -23,14 +28,21 @@
 //! traces produce bit-identical [`FleetResult::digest`]s across reruns
 //! and thread counts.
 
+pub mod faults;
 pub mod host;
 pub mod job;
 pub mod metrics;
 pub mod scheduler;
 pub mod sim;
 
+pub use faults::{
+    pinned_faults_from_baseline, Degradation, FaultEvent, FaultGen, FaultKind, FaultTrace,
+    RecoveryAction, RecoveryPolicy, RecoveryRef,
+};
 pub use host::FleetHost;
 pub use job::{FleetTrace, JobSpec, TraceGen};
 pub use metrics::{FleetResult, JobRecord, JobStatus, OccupancySample};
 pub use scheduler::{AdmissionProbe, PolicyRef, SchedPolicy};
-pub use sim::{mixed_trace_with_xl, simulate_fleet, CalCost, Calibrator};
+pub use sim::{
+    mixed_trace_with_xl, simulate_fleet, simulate_fleet_faulted, CalCost, Calibrator,
+};

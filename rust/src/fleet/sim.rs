@@ -1,36 +1,48 @@
 //! The multi-tenant discrete-event fleet simulator.
 //!
 //! Jobs arrive over simulated time (heap-ordered events, dslab-style:
-//! completions before arrivals at equal timestamps, unique sequence
-//! numbers as the final tie-break, `f64::to_bits` as the heap key — exact
-//! for the non-negative times the fleet uses), pass the configured
-//! admission policy, occupy DRAM/CXL capacity and GPU slots on a
-//! [`FleetHost`] for their whole residency, and run `iterations ×
+//! completions before faults before arrivals at equal timestamps, unique
+//! sequence numbers as the final tie-break, `f64::to_bits` as the heap
+//! key — exact for the non-negative times the fleet uses), pass the
+//! configured admission policy, occupy DRAM/CXL capacity and GPU slots on
+//! a [`FleetHost`] for their whole residency, and run `iterations ×
 //! iter_s` where `iter_s` comes from a [`Calibrator`]: one *real*
-//! `offload::executor` run per distinct (configuration, engine) pair,
-//! memoized, so fleets of hundreds of jobs cost hundreds of plan builds
-//! but only a handful of executor runs.
+//! `offload::executor` run per distinct (configuration, engine,
+//! degradation) triple, memoized, so fleets of hundreds of jobs cost
+//! hundreds of plan builds but only a handful of executor runs.
+//!
+//! Hardware faults ([`FaultTrace`]) are first-class events in the same
+//! heap. Applying one folds it into a [`Degradation`], rebuilds the
+//! degraded topology view that admission and calibration see from then
+//! on, shrinks the host's effective capacities, and hands every resident
+//! job the fault touched to the run's [`RecoveryPolicy`]
+//! (`fail-stop` / `checkpoint-restart` / `evacuate` — see
+//! [`simulate_fleet_faulted`] for the mechanics). With an empty fault
+//! trace every added code path is a no-op and [`simulate_fleet`] is
+//! bit-identical to the fault-free simulator under every recovery policy
+//! (pinned by `zero_fault_run_is_bitwise_identical_across_recovery_policies`).
 //!
 //! Determinism contract: the event loop is serial and every tie is broken
 //! by explicit keys; calibration cells are pure functions of (topology,
-//! config, engine), so pre-warming them in parallel (`--threads`) cannot
-//! change any value. Identical traces therefore produce bit-identical
-//! [`FleetResult::digest`]s across reruns and thread counts (pinned by
-//! `rust/tests/fleet_sim.rs`).
+//! config, engine, degradation), so pre-warming them in parallel
+//! (`--threads`) cannot change any value. Identical traces therefore
+//! produce bit-identical [`FleetResult::digest`]s across reruns and
+//! thread counts (pinned by `rust/tests/fleet_sim.rs` and
+//! `rust/tests/fleet_faults.rs`).
 //!
 //! Rejection rule: a job is rejected *at arrival* iff the policy cannot
-//! place it on an **empty** host (same engines, same accounting) —
-//! otherwise it queues, and since the event loop re-schedules at every
-//! completion, every queued job eventually starts and the simulation
-//! always drains.
+//! place it on an **empty** host (same engines, same accounting) — the
+//! host being the machine *as degraded at that instant* — otherwise it
+//! queues. The recorded rejection reason is the first engine's refusal.
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
+use super::faults::{self, Degradation, FaultKind, FaultTrace, RecoveryAction, RecoveryRef};
 use super::host::FleetHost;
 use super::job::{FleetTrace, JobSpec, TraceGen};
 use super::metrics::{FleetResult, JobRecord, JobStatus, OccupancySample};
-use super::scheduler::{AdmissionProbe, PolicyRef};
+use super::scheduler::{AdmissionProbe, PolicyRef, PLACEMENT_AWARE_ALTERNATIVES};
 use crate::mem::engine;
 use crate::model::presets as mpresets;
 use crate::offload::{
@@ -38,6 +50,7 @@ use crate::offload::{
 };
 use crate::topology::SystemTopology;
 use crate::util::threadpool::par_map;
+use crate::util::units::fmt_bytes;
 
 /// Calibrated price of one iteration of a (configuration, engine) pair,
 /// measured on the empty host.
@@ -89,10 +102,13 @@ fn compute_cost(
     })
 }
 
-/// Memoized per-(configuration, engine) cost model and per-configuration
-/// profile cache. Every value is a pure function of the (real, validated)
-/// host topology, so cache warm-up order — including the parallel
-/// pre-warm — cannot change results.
+/// Memoized per-(configuration, engine, degradation) cost model and
+/// per-configuration profile cache. Every value is a pure function of the
+/// topology it was measured on, so cache warm-up order — including the
+/// parallel pre-warm — cannot change results. Profiles are
+/// placement-independent and always measured on the pristine topology;
+/// costs are keyed by the [`Degradation::key`] of the machine they were
+/// priced on (empty for pristine, so the zero-fault cache is unchanged).
 pub struct Calibrator<'t> {
     topo: &'t SystemTopology,
     profiles: BTreeMap<String, Option<RunProfiles>>,
@@ -118,21 +134,38 @@ impl<'t> Calibrator<'t> {
             .clone()
     }
 
-    /// Cached calibrated cost of (configuration, engine).
+    /// Cached calibrated cost of (configuration, engine) on the pristine
+    /// host.
     pub fn cost(&mut self, spec: &JobSpec, engine_name: &str) -> Option<CalCost> {
-        let key = format!("{}|{engine_name}", spec.config_key());
+        let topo = self.topo;
+        self.cost_on(topo, "", spec, engine_name)
+    }
+
+    /// Cached calibrated cost of (configuration, engine) on `topo`, which
+    /// must be the machine `deg_key` describes (the pristine topology for
+    /// the empty key). Costs priced on differently degraded machines live
+    /// in distinct cells and never collide.
+    pub fn cost_on(
+        &mut self,
+        topo: &SystemTopology,
+        deg_key: &str,
+        spec: &JobSpec,
+        engine_name: &str,
+    ) -> Option<CalCost> {
+        let key = format!("{}|{engine_name}|{deg_key}", spec.config_key());
         if let Some(v) = self.costs.get(&key) {
             return *v;
         }
         let prof = self.profiles(spec);
-        let v = compute_cost(self.topo, spec, engine_name, prof.as_ref());
+        let v = compute_cost(topo, spec, engine_name, prof.as_ref());
         self.costs.insert(key, v);
         v
     }
 
     /// Pre-compute the distinct (configuration, requested-engine) cells of
     /// a trace across `threads` workers. Costs the placement-aware policy
-    /// derives for substitute engines still fill in lazily (serial).
+    /// derives for substitute engines — and every cell on a degraded
+    /// machine — still fill in lazily (serial).
     pub fn prewarm(&mut self, jobs: &[JobSpec], threads: usize) {
         let mut cells: BTreeMap<String, JobSpec> = BTreeMap::new();
         for j in jobs {
@@ -150,8 +183,9 @@ impl<'t> Calibrator<'t> {
         });
         for (spec, (prof, cost)) in cells.iter().zip(results) {
             self.profiles.entry(spec.config_key()).or_insert(prof);
+            // Trailing '|' = the empty pristine degradation key.
             self.costs
-                .entry(format!("{}|{}", spec.config_key(), spec.engine))
+                .entry(format!("{}|{}|", spec.config_key(), spec.engine))
                 .or_insert(cost);
         }
     }
@@ -166,14 +200,16 @@ struct ProbeAdmission {
 
 /// The simulator's [`AdmissionProbe`]: a working free view (memory + GPU
 /// slots) that real `MemoryPlan` builds are checked against and debited
-/// from as the policy picks jobs.
+/// from as the policy picks jobs. `base` is the (possibly degraded)
+/// machine the view was cloned from, kept un-rewritten for calibration.
 ///
-/// `blocked` memoizes failed probes by `(config, engine, accounting)`:
-/// between two completion events, free capacity and free GPU slots only
-/// *shrink* (admissions debit, arrivals change nothing), and every
-/// registered engine is monotone in the free vector, so a failed probe
-/// provably fails again until a completion frees capacity — the caller
-/// clears the set exactly then. This turns the O(queue × engines) plan
+/// `blocked` memoizes failed probes by `(config, engine, accounting,
+/// degradation)`: between two capacity-growing events, free capacity and
+/// free GPU slots only *shrink* (admissions debit, arrivals change
+/// nothing), and every registered engine is monotone in the free vector,
+/// so a failed probe provably fails again until capacity is freed — the
+/// caller clears the set exactly then (completions, and every fault:
+/// restores grow capacity back). This turns the O(queue × engines) plan
 /// rebuilds a long blocked queue would pay at every arrival into set
 /// lookups, without changing a single admission decision.
 struct Probe<'a, 't> {
@@ -181,32 +217,48 @@ struct Probe<'a, 't> {
     /// .capacity` fields are rewritten (to the working free bytes) before
     /// each plan build, so probes cost capacity writes, not deep clones.
     view: SystemTopology,
+    base: &'a SystemTopology,
+    deg_key: &'a str,
     free: Vec<u64>,
     free_gpus: usize,
     queue: Vec<&'a JobSpec>,
     cal: &'a mut Calibrator<'t>,
     blocked: &'a mut BTreeSet<String>,
     admissions: Vec<Option<ProbeAdmission>>,
+    /// First refusal reason per queued job (feeds `JobRecord::reason`).
+    reasons: Vec<Option<String>>,
 }
 
 impl<'a, 't> Probe<'a, 't> {
     fn new(
-        topo: &SystemTopology,
+        topo: &'a SystemTopology,
         free: Vec<u64>,
         free_gpus: usize,
         queue: Vec<&'a JobSpec>,
         cal: &'a mut Calibrator<'t>,
         blocked: &'a mut BTreeSet<String>,
+        deg_key: &'a str,
     ) -> Self {
         let n = queue.len();
         Self {
             view: topo.clone(),
+            base: topo,
+            deg_key,
             free,
             free_gpus,
             queue,
             cal,
             blocked,
             admissions: (0..n).map(|_| None).collect(),
+            reasons: (0..n).map(|_| None).collect(),
+        }
+    }
+
+    /// Record the first refusal reason for job `idx` (later candidates'
+    /// refusals are noise once one engine has explained itself).
+    fn note(&mut self, idx: usize, msg: String) {
+        if self.reasons[idx].is_none() {
+            self.reasons[idx] = Some(msg);
         }
     }
 }
@@ -226,34 +278,50 @@ impl AdmissionProbe for Probe<'_, '_> {
         }
         let spec = self.queue[idx];
         let engine_name = engine_name.unwrap_or(&spec.engine).to_string();
-        let probe_key = format!("{}|{engine_name}|{lifetime}", spec.config_key());
+        let probe_key = format!(
+            "{}|{engine_name}|{lifetime}|{}",
+            spec.config_key(),
+            self.deg_key
+        );
         if self.blocked.contains(&probe_key) {
             return false;
         }
         if spec.gpus > self.free_gpus {
             self.blocked.insert(probe_key);
+            self.note(
+                idx,
+                format!("wants {} GPUs, {} free", spec.gpus, self.free_gpus),
+            );
             return false;
         }
         let admissible = self.cal.profiles(spec).zip(resolve_cfg(spec, &engine_name));
         let Some((profiles, cfg)) = admissible else {
             self.blocked.insert(probe_key);
+            self.note(
+                idx,
+                format!("{engine_name}: model/schedule/engine does not resolve or cannot be profiled"),
+            );
             return false;
         };
         // Plan against the working free view: capacities = what is left.
         for (node, cap) in self.view.mem_nodes.iter_mut().zip(&self.free) {
             node.capacity = *cap;
         }
-        let Ok(plan) = MemoryPlan::build_with_profiles(&self.view, &cfg, lifetime, profiles)
-        else {
-            self.blocked.insert(probe_key);
-            return false;
+        let plan = match MemoryPlan::build_with_profiles(&self.view, &cfg, lifetime, profiles) {
+            Ok(p) => p,
+            Err(e) => {
+                self.blocked.insert(probe_key);
+                self.note(idx, format!("{engine_name}: {e}"));
+                return false;
+            }
         };
         let reservation = plan.reservation();
         drop(plan);
         // Price only engines that actually admit: the calibration cell is
         // a real executor run, wasted on candidates whose plan fails.
-        let Some(cost) = self.cal.cost(spec, &engine_name) else {
+        let Some(cost) = self.cal.cost_on(self.base, self.deg_key, spec, &engine_name) else {
             self.blocked.insert(probe_key);
+            self.note(idx, format!("{engine_name}: calibration failed"));
             return false;
         };
         for (n, b) in &reservation.parts {
@@ -272,26 +340,48 @@ impl AdmissionProbe for Probe<'_, '_> {
 
 /// Can the policy place this job on an EMPTY host? (The reject-at-arrival
 /// feasibility check — runs the real policy against a single-job queue
-/// with full capacity, so fifo/backfill test the requested engine under
-/// static accounting and placement-aware tests its whole engine menu
-/// under lifetime accounting.)
+/// with full capacity of the machine *as currently degraded*, so
+/// fifo/backfill test the requested engine under static accounting and
+/// placement-aware tests its whole engine menu under lifetime
+/// accounting.) Returns `None` when the job is placeable and the first
+/// refusal reason otherwise.
 fn feasible_on_empty(
     topo: &SystemTopology,
     spec: &JobSpec,
     policy: &PolicyRef,
     cal: &mut Calibrator<'_>,
-) -> bool {
+    deg_key: &str,
+) -> Option<String> {
     let free: Vec<u64> = topo.mem_nodes.iter().map(|n| n.capacity).collect();
     // A throwaway blocked-set: failures observed at *current* capacity do
     // not apply to the empty-host hypothetical, and vice versa.
     let mut blocked = BTreeSet::new();
-    let mut probe = Probe::new(topo, free, topo.gpus.len(), vec![spec], cal, &mut blocked);
+    let mut probe = Probe::new(
+        topo,
+        free,
+        topo.gpus.len(),
+        vec![spec],
+        cal,
+        &mut blocked,
+        deg_key,
+    );
     policy.schedule(&mut probe);
-    probe.admissions[0].is_some()
+    if probe.admissions[0].is_some() {
+        None
+    } else {
+        Some(probe.reasons[0].clone().unwrap_or_else(|| {
+            "no registered engine can place the job on an empty host".to_string()
+        }))
+    }
 }
 
 const EV_COMPLETE: u8 = 0;
-const EV_ARRIVE: u8 = 1;
+const EV_FAULT: u8 = 1;
+const EV_ARRIVE: u8 = 2;
+const EV_REQUEUE: u8 = 3;
+
+/// "This job has no live completion event" sentinel for `completion_seq`.
+const NO_COMPLETION: u64 = u64::MAX;
 
 /// Mutable per-job lifecycle state; the immutable [`JobSpec`] stays in the
 /// trace (the event loop reads it by reference, never clones it).
@@ -301,15 +391,126 @@ struct JobState {
     start_s: Option<f64>,
     finish_s: Option<f64>,
     iter_s: Option<f64>,
+    reason: Option<String>,
+    /// Iterations safely behind the last checkpoint (survive a restart).
+    durable_iters: u64,
+    /// Iterations of the in-flight run segment (remaining at admission).
+    run_iters: u64,
+    /// Scheduled finish time of the in-flight run segment.
+    pending_finish_s: f64,
+    interruptions: u32,
+    migrations: u32,
+    recovery_s: f64,
+    lost_tokens: u64,
+    /// Iterations actually executed (useful + lost), across all segments.
+    processed_iters: u64,
 }
 
-/// Run a whole trace under one policy. `threads` only parallelizes the
-/// calibration pre-warm — the event loop itself is serial and the result
-/// digest is independent of the worker count.
+impl JobState {
+    fn fresh() -> Self {
+        JobState {
+            status: JobStatus::Queued,
+            engine_used: None,
+            start_s: None,
+            finish_s: None,
+            iter_s: None,
+            reason: None,
+            durable_iters: 0,
+            run_iters: 0,
+            pending_finish_s: 0.0,
+            interruptions: 0,
+            migrations: 0,
+            recovery_s: 0.0,
+            lost_tokens: 0,
+            processed_iters: 0,
+        }
+    }
+}
+
+/// Aggregate bandwidth available for evacuating regions off a faulted
+/// node: the sum of the single-flow link capacities of every *online*
+/// CXL AIC (DRAM-bound moves ride those same links), with the DRAM
+/// stream bandwidth as the floor when every AIC is gone.
+fn migration_bandwidth(topo: &SystemTopology) -> f64 {
+    let mut bw = 0.0;
+    for n in topo.cxl_nodes() {
+        if topo.node(n).capacity > 0 {
+            if let Some(l) = topo.node(n).link {
+                bw += topo.link(l).capacity(1);
+            }
+        }
+    }
+    if bw > 0.0 {
+        bw
+    } else {
+        topo.dram().peak_bw
+    }
+}
+
+/// Human-readable fault description for job records and CLI summaries.
+fn describe_fault(topo: &SystemTopology, kind: &FaultKind) -> String {
+    match kind {
+        FaultKind::LinkDegrade { link, bw_factor } => format!(
+            "link {} degraded to {:.0}% bandwidth",
+            topo.links[*link].name,
+            bw_factor * 100.0
+        ),
+        FaultKind::NodeOffline { node } => {
+            format!("node {} went offline", topo.mem_nodes[*node].name)
+        }
+        FaultKind::NodeRestore { node } => {
+            format!("node {} restored", topo.mem_nodes[*node].name)
+        }
+        FaultKind::CapacitySqueeze { node, bytes } => format!(
+            "node {} squeezed by {}",
+            topo.mem_nodes[*node].name,
+            fmt_bytes(*bytes)
+        ),
+    }
+}
+
+/// Run a whole trace under one policy on a fault-free machine. `threads`
+/// only parallelizes the calibration pre-warm — the event loop itself is
+/// serial and the result digest is independent of the worker count.
 pub fn simulate_fleet(
     topo: &SystemTopology,
     trace: &FleetTrace,
     policy: &PolicyRef,
+    threads: usize,
+) -> FleetResult {
+    let recovery = faults::by_name("fail-stop").expect("registered");
+    simulate_fleet_faulted(topo, trace, policy, &FaultTrace::empty(), &recovery, threads)
+}
+
+/// Run a whole trace under one policy while injecting `faults`, resolving
+/// every hit resident job through `recovery`.
+///
+/// Recovery mechanics (the policy is pure choice, this is the machinery):
+///
+/// * **fail-stop** — the job dies where it stands: regions and GPUs are
+///   released, all processed work is lost.
+/// * **checkpoint-restart** — progress rolls back to the last multiple of
+///   [`faults::CHECKPOINT_INTERVAL_ITERS`]; the job releases everything
+///   and re-queues after an exponential backoff
+///   ([`faults::BACKOFF_BASE_S`] `· 2^(hit-1)`), failing outright after
+///   [`faults::MAX_RETRIES`] interruptions. Re-admission re-plans (and
+///   may re-price) on the then-current machine; only the iterations past
+///   the checkpoint are re-run.
+/// * **evacuate** — the job's regions are re-planned against the degraded
+///   host's *free* view (its own bytes released first; requested engine,
+///   then the placement-aware alternates, static then lifetime
+///   accounting) and migrated at the cost of `bytes-moved / remaining
+///   aggregate link bandwidth`, which delays its completion; GPUs stay
+///   held and no progress is lost. When nothing fits, it falls back to
+///   checkpoint-restart. The per-iteration price stays locked at
+///   admission — a link degrade slows *future* admissions' calibration,
+///   not jobs already running (documented simplification).
+pub fn simulate_fleet_faulted(
+    topo: &SystemTopology,
+    trace: &FleetTrace,
+    policy: &PolicyRef,
+    faults: &FaultTrace,
+    recovery: &RecoveryRef,
     threads: usize,
 ) -> FleetResult {
     let mut ids = BTreeSet::new();
@@ -327,81 +528,277 @@ pub fn simulate_fleet(
             j.id
         );
     }
+    faults
+        .validate(topo)
+        .unwrap_or_else(|e| panic!("invalid fault trace: {e}"));
+    let id_to_idx: BTreeMap<u64, usize> =
+        trace.jobs.iter().enumerate().map(|(i, j)| (j.id, i)).collect();
     let mut cal = Calibrator::new(topo);
     cal.prewarm(&trace.jobs, threads);
     let mut host = FleetHost::new(topo);
-    let mut jobs: Vec<JobState> = trace
-        .jobs
-        .iter()
-        .map(|_| JobState {
-            status: JobStatus::Queued,
-            engine_used: None,
-            start_s: None,
-            finish_s: None,
-            iter_s: None,
-        })
-        .collect();
+    let mut jobs: Vec<JobState> = trace.jobs.iter().map(|_| JobState::fresh()).collect();
 
-    // Event key: (time bits, kind, seq, job index). Completions sort
-    // before arrivals at the same instant so freed capacity is visible to
-    // same-time arrivals; `seq` makes every key unique. `+ 0.0` folds a
-    // hand-written `-0.0` arrival into `+0.0` — its sign-bit pattern would
-    // otherwise sort after every positive time.
+    // Event key: (time bits, kind, seq, index). At one timestamp
+    // completions sort before faults (a job that finishes at t is done)
+    // and faults before arrivals (a job arriving at t sees the post-fault
+    // machine); `seq` makes every key unique. `+ 0.0` folds a hand-written
+    // `-0.0` time into `+0.0` — its sign-bit pattern would otherwise sort
+    // after every positive time. The index is a job index except for
+    // EV_FAULT events, where it indexes `faults.events`.
     let mut heap: BinaryHeap<Reverse<(u64, u8, u64, usize)>> = BinaryHeap::new();
     for (i, s) in trace.jobs.iter().enumerate() {
         heap.push(Reverse(((s.arrival_s + 0.0).to_bits(), EV_ARRIVE, i as u64, i)));
     }
-    // Completion events continue the unique-sequence space after arrivals.
+    // Fault, completion and re-queue events continue the unique-sequence
+    // space after arrivals (zero faults ⇒ the sequence allocation is
+    // byte-identical to the fault-free simulator's).
     let mut seq: u64 = trace.jobs.len() as u64;
+    for (fi, ev) in faults.events.iter().enumerate() {
+        heap.push(Reverse(((ev.t_s + 0.0).to_bits(), EV_FAULT, seq, fi)));
+        seq += 1;
+    }
+
+    // The live completion event per job: a fault that kills, restarts or
+    // migrates a running job cannot remove its queued completion from the
+    // heap, so it bumps this sequence instead and the stale pop is skipped.
+    let mut completion_seq: Vec<u64> = vec![NO_COMPLETION; trace.jobs.len()];
+
+    let mut deg = Degradation::pristine(topo);
+    let mut deg_key = String::new();
+    // The degraded machine, rebuilt at each fault; `None` ⇒ pristine (use
+    // `topo` itself — keeps the zero-fault path free of clones).
+    let mut dtopo: Option<SystemTopology> = None;
 
     let mut queue: Vec<usize> = Vec::new();
     let mut samples: Vec<OccupancySample> = Vec::new();
-    let mut feasible: BTreeMap<String, bool> = BTreeMap::new();
+    // Arrival-feasibility memo: `None` = feasible, `Some(reason)` = reject.
+    let mut feasible: BTreeMap<String, Option<String>> = BTreeMap::new();
     // Failed-probe memo, valid while capacity only shrinks (see [`Probe`]);
-    // completions grow capacity, so they invalidate it.
+    // completions and faults (restores!) grow capacity, so they clear it.
     let mut blocked: BTreeSet<String> = BTreeSet::new();
     let mut n_events: u64 = 0;
     let mut running: usize = 0;
 
-    while let Some(Reverse((tb, kind, _seq, ji))) = heap.pop() {
+    while let Some(Reverse((tb, kind, ev_seq, ji))) = heap.pop() {
+        // A cancelled (stale) completion: its job was killed, restarted or
+        // migrated by a fault after this event was scheduled.
+        if kind == EV_COMPLETE && completion_seq[ji] != ev_seq {
+            continue;
+        }
         let now = f64::from_bits(tb);
         n_events += 1;
-        if kind == EV_COMPLETE {
-            let released = host.release(trace.jobs[ji].id, trace.jobs[ji].gpus);
-            debug_assert!(released, "completed job must have been resident");
-            jobs[ji].status = JobStatus::Completed;
-            jobs[ji].finish_s = Some(now);
-            running -= 1;
-            blocked.clear();
-        } else {
-            // Reject at arrival iff the policy cannot place the job even
-            // on an empty host; otherwise it queues.
-            let spec = &trace.jobs[ji];
-            let key = format!("{}|{}", spec.config_key(), spec.engine);
-            let ok = match feasible.get(&key) {
-                Some(v) => *v,
-                None => {
-                    let v = feasible_on_empty(topo, spec, policy, &mut cal);
-                    feasible.insert(key, v);
-                    v
-                }
-            };
-            if ok {
-                queue.push(ji);
-            } else {
-                jobs[ji].status = JobStatus::Rejected;
+        match kind {
+            EV_COMPLETE => {
+                let spec = &trace.jobs[ji];
+                host.release(spec.id, spec.gpus)
+                    .unwrap_or_else(|e| panic!("completion of job {}: {e}", spec.id));
+                completion_seq[ji] = NO_COMPLETION;
+                jobs[ji].processed_iters += jobs[ji].run_iters;
+                jobs[ji].status = JobStatus::Completed;
+                jobs[ji].finish_s = Some(now);
+                running -= 1;
+                blocked.clear();
             }
+            EV_FAULT => {
+                let ev = &faults.events[ji];
+                deg.apply(&ev.kind);
+                deg_key = deg.key();
+                dtopo = if deg.is_pristine() {
+                    None
+                } else {
+                    Some(deg.degraded_topo(topo))
+                };
+                let eff = deg.effective_caps(topo);
+                for (i, cap) in eff.iter().enumerate() {
+                    host.set_capacity(i, *cap);
+                }
+                blocked.clear();
+                let desc = describe_fault(topo, &ev.kind);
+
+                // Victims: residents whose bytes the fault touched, with
+                // the byte count that must move or die.
+                let victims: Vec<(usize, u64)> = match &ev.kind {
+                    FaultKind::NodeOffline { node } => host
+                        .residents_on(*node)
+                        .into_iter()
+                        .map(|(id, bytes)| (id_to_idx[&id], bytes))
+                        .collect(),
+                    FaultKind::CapacitySqueeze { node, .. } => {
+                        let used = host.used()[*node];
+                        if used > eff[*node] {
+                            // Evict the largest residents first (fewest
+                            // victims), job id as the deterministic tie.
+                            let mut residents = host.residents_on(*node);
+                            residents.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                            let mut overshoot = used - eff[*node];
+                            let mut v = Vec::new();
+                            for (id, bytes) in residents {
+                                if overshoot == 0 {
+                                    break;
+                                }
+                                v.push((id_to_idx[&id], bytes));
+                                overshoot = overshoot.saturating_sub(bytes);
+                            }
+                            v
+                        } else {
+                            Vec::new()
+                        }
+                    }
+                    // Bandwidth loss and hot-add displace no bytes.
+                    FaultKind::LinkDegrade { .. } | FaultKind::NodeRestore { .. } => Vec::new(),
+                };
+
+                // Release every victim's memory before re-planning any of
+                // them: an evacuation may reuse the room a co-victim frees.
+                for &(vji, _) in &victims {
+                    host.release_memory(trace.jobs[vji].id)
+                        .unwrap_or_else(|e| panic!("fault victim: {e}"));
+                }
+                let cur = dtopo.as_ref().unwrap_or(topo);
+                for (vji, bytes_hit) in victims {
+                    let spec = &trace.jobs[vji];
+                    let tpi = spec.workload().tokens_per_iter();
+                    let st = &mut jobs[vji];
+                    let iter_s = st.iter_s.expect("victim was running");
+                    let remaining =
+                        ((st.pending_finish_s - now) / iter_s).ceil().max(0.0) as u64;
+                    let run_done = st.run_iters.saturating_sub(remaining);
+                    st.interruptions += 1;
+                    let hit = st.interruptions;
+                    let action = recovery.decide(spec, hit);
+                    let mut eff_action = action;
+                    if action == RecoveryAction::Evacuate {
+                        // Re-plan against the degraded free view (the
+                        // victim's own bytes are already released).
+                        let free = host.free();
+                        let mut view = cur.clone();
+                        for (node, cap) in view.mem_nodes.iter_mut().zip(&free) {
+                            node.capacity = *cap;
+                        }
+                        let mut candidates: Vec<String> = vec![st
+                            .engine_used
+                            .clone()
+                            .unwrap_or_else(|| spec.engine.clone())];
+                        for alt in PLACEMENT_AWARE_ALTERNATIVES {
+                            if !candidates.iter().any(|c| c == alt) {
+                                candidates.push(alt.to_string());
+                            }
+                        }
+                        let mut placed: Option<(String, PlanReservation)> = None;
+                        'search: for engine_name in &candidates {
+                            let Some((profiles, cfg)) =
+                                cal.profiles(spec).zip(resolve_cfg(spec, engine_name))
+                            else {
+                                continue;
+                            };
+                            for lifetime in [false, true] {
+                                if let Ok(plan) = MemoryPlan::build_with_profiles(
+                                    &view,
+                                    &cfg,
+                                    lifetime,
+                                    profiles.clone(),
+                                ) {
+                                    placed = Some((engine_name.clone(), plan.reservation()));
+                                    break 'search;
+                                }
+                            }
+                        }
+                        if let Some((engine_name, resv)) = placed {
+                            host.reserve_memory(spec.id, &resv)
+                                .expect("plan was built against the free view");
+                            let migrate_s = bytes_hit as f64 / migration_bandwidth(cur);
+                            st.pending_finish_s += migrate_s;
+                            heap.push(Reverse((
+                                st.pending_finish_s.to_bits(),
+                                EV_COMPLETE,
+                                seq,
+                                vji,
+                            )));
+                            completion_seq[vji] = seq;
+                            seq += 1;
+                            st.status = JobStatus::Migrated;
+                            st.migrations += 1;
+                            st.recovery_s += migrate_s;
+                            st.engine_used = Some(engine_name);
+                            // GPUs stay held; no progress is lost (the
+                            // delayed completion credits the full segment).
+                            continue;
+                        }
+                        eff_action = RecoveryAction::CheckpointRestart;
+                    }
+                    // Kill or restart: the run segment ends here.
+                    st.processed_iters += run_done;
+                    host.release_gpus(spec.gpus);
+                    running -= 1;
+                    completion_seq[vji] = NO_COMPLETION;
+                    if eff_action == RecoveryAction::CheckpointRestart
+                        && hit <= faults::MAX_RETRIES
+                    {
+                        let total_done = st.durable_iters + run_done;
+                        let ckpt = (total_done / faults::CHECKPOINT_INTERVAL_ITERS)
+                            * faults::CHECKPOINT_INTERVAL_ITERS;
+                        st.lost_tokens += (total_done - ckpt) * tpi;
+                        st.durable_iters = ckpt;
+                        st.status = JobStatus::Interrupted;
+                        let backoff = faults::BACKOFF_BASE_S * 2f64.powi(hit as i32 - 1);
+                        heap.push(Reverse(((now + backoff).to_bits(), EV_REQUEUE, seq, vji)));
+                        seq += 1;
+                    } else {
+                        st.status = JobStatus::Failed;
+                        st.finish_s = Some(now);
+                        // Nothing completed: every processed iteration is
+                        // sunk work.
+                        st.lost_tokens = st.processed_iters * tpi;
+                        st.reason = Some(if action == RecoveryAction::FailStop {
+                            format!("fail-stop: {desc}")
+                        } else {
+                            format!("retries exhausted after {desc}")
+                        });
+                    }
+                }
+            }
+            EV_ARRIVE => {
+                // Reject at arrival iff the policy cannot place the job
+                // even on an empty host (as currently degraded); otherwise
+                // it queues.
+                let spec = &trace.jobs[ji];
+                let key = format!("{}|{}|{deg_key}", spec.config_key(), spec.engine);
+                let cur = dtopo.as_ref().unwrap_or(topo);
+                let verdict = match feasible.get(&key) {
+                    Some(v) => v.clone(),
+                    None => {
+                        let v = feasible_on_empty(cur, spec, policy, &mut cal, &deg_key);
+                        feasible.insert(key, v.clone());
+                        v
+                    }
+                };
+                match verdict {
+                    None => queue.push(ji),
+                    Some(reason) => {
+                        jobs[ji].status = JobStatus::Rejected;
+                        jobs[ji].reason = Some(reason);
+                    }
+                }
+            }
+            EV_REQUEUE => {
+                // The backoff after an interruption elapsed: back in line.
+                jobs[ji].status = JobStatus::Queued;
+                queue.push(ji);
+            }
+            _ => unreachable!("unknown event kind {kind}"),
         }
 
         // Scheduling pass: hand the policy the queued specs by reference.
+        let cur = dtopo.as_ref().unwrap_or(topo);
         let snapshot: Vec<&JobSpec> = queue.iter().map(|&i| &trace.jobs[i]).collect();
         let mut probe = Probe::new(
-            topo,
+            cur,
             host.free(),
             host.free_gpus(),
             snapshot,
             &mut cal,
             &mut blocked,
+            &deg_key,
         );
         policy.schedule(&mut probe);
         let admissions = probe.admissions;
@@ -412,12 +809,19 @@ pub fn simulate_fleet(
             let spec = &trace.jobs[ji];
             host.reserve(spec.id, &adm.reservation, spec.gpus)
                 .expect("probe debited the identical free view");
-            let finish = now + adm.cost.iter_s * spec.iterations as f64;
+            // Only the iterations past the durable checkpoint re-run.
+            let remaining = spec.iterations as u64 - jobs[ji].durable_iters;
+            let finish = now + adm.cost.iter_s * remaining as f64;
             jobs[ji].status = JobStatus::Running;
             jobs[ji].engine_used = Some(adm.engine);
-            jobs[ji].start_s = Some(now);
+            if jobs[ji].start_s.is_none() {
+                jobs[ji].start_s = Some(now);
+            }
             jobs[ji].iter_s = Some(adm.cost.iter_s);
+            jobs[ji].run_iters = remaining;
+            jobs[ji].pending_finish_s = finish;
             heap.push(Reverse((finish.to_bits(), EV_COMPLETE, seq, ji)));
+            completion_seq[ji] = seq;
             seq += 1;
             running += 1;
             started.push(qpos);
@@ -432,35 +836,59 @@ pub fn simulate_fleet(
             running,
         });
     }
-    assert!(
-        queue.is_empty() && running == 0,
-        "fleet failed to drain: {} queued, {running} running",
-        queue.len()
-    );
+    assert!(running == 0, "fleet failed to drain: {running} still running");
+    if !queue.is_empty() {
+        // Only a degraded machine can strand queued jobs (the fault-free
+        // loop re-schedules at every completion until everything starts).
+        assert!(
+            !faults.events.is_empty(),
+            "fleet failed to drain with no faults: {} queued",
+            queue.len()
+        );
+        for ji in queue {
+            let spec = &trace.jobs[ji];
+            let tpi = spec.workload().tokens_per_iter();
+            jobs[ji].status = JobStatus::Failed;
+            jobs[ji].reason =
+                Some("starved on the degraded host after the trace drained".to_string());
+            jobs[ji].lost_tokens = jobs[ji].processed_iters * tpi;
+        }
+    }
 
     let mut result = FleetResult::new(policy.name(), topo);
+    result.recovery = recovery.name().to_string();
     result.n_events = n_events;
+    result.n_faults = faults.events.len() as u64;
     result.samples = samples;
     result.records = trace
         .jobs
         .iter()
         .zip(jobs)
-        .map(|(spec, j)| JobRecord {
-            id: spec.id,
-            model: spec.model.clone(),
-            gpus: spec.gpus,
-            batch: spec.batch,
-            context: spec.context,
-            schedule: spec.schedule.clone(),
-            engine_requested: spec.engine.clone(),
-            engine_used: j.engine_used,
-            iterations: spec.iterations,
-            arrival_s: spec.arrival_s,
-            start_s: j.start_s,
-            finish_s: j.finish_s,
-            iter_s: j.iter_s,
-            total_tokens: spec.total_tokens(),
-            status: j.status,
+        .map(|(spec, j)| {
+            let tpi = spec.workload().tokens_per_iter();
+            JobRecord {
+                id: spec.id,
+                model: spec.model.clone(),
+                gpus: spec.gpus,
+                batch: spec.batch,
+                context: spec.context,
+                schedule: spec.schedule.clone(),
+                engine_requested: spec.engine.clone(),
+                engine_used: j.engine_used,
+                iterations: spec.iterations,
+                arrival_s: spec.arrival_s,
+                start_s: j.start_s,
+                finish_s: j.finish_s,
+                iter_s: j.iter_s,
+                total_tokens: spec.total_tokens(),
+                status: j.status,
+                reason: j.reason,
+                interruptions: j.interruptions,
+                migrations: j.migrations,
+                recovery_s: j.recovery_s,
+                lost_tokens: j.lost_tokens,
+                processed_tokens: j.processed_iters * tpi,
+            }
         })
         .collect();
     result
@@ -621,6 +1049,10 @@ mod tests {
                 policy.name()
             );
             assert!(res.records[0].start_s.is_none());
+            // Satellite: the rejection carries its reason into the record.
+            let reason = res.records[0].reason.as_deref().unwrap_or_default();
+            assert!(!reason.is_empty(), "{}: rejection must say why", policy.name());
+            assert!(res.records[1].reason.is_none(), "{}", policy.name());
         }
     }
 
@@ -676,5 +1108,164 @@ mod tests {
         let mut warm = Calibrator::new(&topo);
         warm.prewarm(&[a.clone()], 4);
         assert_eq!(warm.cost(&a, &a.engine), cal.cost(&a, &a.engine));
+    }
+
+    #[test]
+    fn calibrator_keys_costs_by_degradation_state() {
+        // A cost priced on a degraded machine lives in its own cell and
+        // never shadows (or is shadowed by) the pristine price.
+        let topo = dev_tiny();
+        let mut cal = Calibrator::new(&topo);
+        let a = job(0, 0.0, 2, 4096);
+        let pristine = cal.cost(&a, "cxl-aware+striping").unwrap();
+        let mut deg = Degradation::pristine(&topo);
+        deg.apply(&FaultKind::LinkDegrade {
+            link: 2,
+            bw_factor: 0.25,
+        });
+        let dt = deg.degraded_topo(&topo);
+        let degraded = cal
+            .cost_on(&dt, &deg.key(), &a, "cxl-aware+striping")
+            .unwrap();
+        assert_eq!(cal.costs.len(), 2, "distinct cells per degradation");
+        // The pristine cell is untouched by the degraded measurement.
+        assert_eq!(cal.cost(&a, "cxl-aware+striping").unwrap(), pristine);
+        assert!(
+            degraded.iter_s >= pristine.iter_s,
+            "a slower link cannot make an iteration faster: {} vs {}",
+            degraded.iter_s,
+            pristine.iter_s
+        );
+    }
+
+    #[test]
+    fn zero_fault_run_is_bitwise_identical_across_recovery_policies() {
+        // The acceptance bar for the fault machinery: with an empty fault
+        // trace, every recovery policy (and thread count) produces the
+        // exact digest of the fault-free simulator.
+        let topo = tight_topo();
+        let trace = FleetTrace {
+            seed: 0,
+            jobs: vec![job(0, 0.0, 2, 256), job(1, 5.0, 2, 512), job(2, 9.0, 1, 256)],
+        };
+        let policy = scheduler::by_name("backfill").unwrap();
+        let base = simulate_fleet(&topo, &trace, &policy, 1);
+        assert_eq!(base.completed(), 3);
+        let empty = FaultTrace::empty();
+        for recovery in faults::registry() {
+            for threads in [1, 4] {
+                let res =
+                    simulate_fleet_faulted(&topo, &trace, &policy, &empty, &recovery, threads);
+                assert_eq!(
+                    res.digest(),
+                    base.digest(),
+                    "{} × {threads} threads must be a bitwise no-op",
+                    recovery.name()
+                );
+                assert_eq!(res.recovery, recovery.name());
+                assert_eq!(res.n_faults, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn recovery_policies_resolve_a_hot_remove_differently() {
+        // One memory-hungry job whose activations spill onto the CXL
+        // nodes; the derived pinned faults degrade its link, hot-remove
+        // cxl0 mid-run, and restore it later. fail-stop kills the job,
+        // checkpoint-restart loses progress but finishes, evacuate
+        // migrates (or at worst restarts) and finishes no later.
+        let topo = tight_topo();
+        let mut spec = job(0, 0.0, 8, 10240);
+        spec.iterations = 4;
+        let trace = FleetTrace {
+            seed: 0,
+            jobs: vec![spec],
+        };
+        let policy = scheduler::by_name("placement-aware").unwrap();
+        let baseline = simulate_fleet(&topo, &trace, &policy, 1);
+        assert_eq!(baseline.completed(), 1);
+        let faults_trace = faults::pinned_faults_from_baseline(&topo, &baseline);
+        faults_trace.validate(&topo).unwrap();
+
+        let run = |name: &str| {
+            let recovery = faults::by_name(name).unwrap();
+            simulate_fleet_faulted(&topo, &trace, &policy, &faults_trace, &recovery, 1)
+        };
+        let fs = run("fail-stop");
+        assert_eq!(fs.completed(), 0, "fail-stop kills the only job");
+        assert_eq!(fs.failed(), 1);
+        assert_eq!(fs.records[0].status, JobStatus::Failed);
+        let reason = fs.records[0].reason.as_deref().unwrap();
+        assert!(reason.starts_with("fail-stop:"), "{reason}");
+        assert!(fs.records[0].lost_tokens > 0, "killed mid-run work is lost");
+        assert_eq!(fs.useful_tokens(), 0);
+
+        let cr = run("checkpoint-restart");
+        assert_eq!(cr.completed(), 1, "the restarted job finishes");
+        assert!(cr.interruptions() >= 1);
+        let cr_finish = cr.records[0].finish_s.unwrap();
+        assert!(
+            cr_finish > baseline.records[0].finish_s.unwrap(),
+            "backoff + rework must delay completion"
+        );
+
+        let ev = run("evacuate");
+        assert_eq!(ev.completed(), 1, "the evacuated job finishes");
+        assert!(ev.interruptions() >= 1);
+        let ev_finish = ev.records[0].finish_s.unwrap();
+        assert!(
+            ev_finish <= cr_finish,
+            "migration never loses to restart-with-backoff: {ev_finish} vs {cr_finish}"
+        );
+        assert!(
+            ev.goodput_tokens_per_sec() >= cr.goodput_tokens_per_sec(),
+            "evacuate goodput {} < checkpoint-restart {}",
+            ev.goodput_tokens_per_sec(),
+            cr.goodput_tokens_per_sec()
+        );
+        assert!(
+            ev.goodput_tokens_per_sec() > fs.goodput_tokens_per_sec(),
+            "evacuate must strictly beat fail-stop on goodput"
+        );
+        // Reruns are bit-reproducible fault-for-fault.
+        assert_eq!(run("evacuate").digest(), ev.digest());
+        assert_eq!(run("fail-stop").digest(), fs.digest());
+    }
+
+    #[test]
+    fn a_squeeze_below_occupancy_evicts_the_largest_resident() {
+        // Squeeze DRAM below what the resident job holds there: the job is
+        // a victim even though the node stays online.
+        let topo = tight_topo();
+        let mut spec = job(0, 0.0, 8, 10240);
+        spec.iterations = 4;
+        let trace = FleetTrace {
+            seed: 0,
+            jobs: vec![spec],
+        };
+        let policy = scheduler::by_name("placement-aware").unwrap();
+        let baseline = simulate_fleet(&topo, &trace, &policy, 1);
+        let mid = baseline.records[0].finish_s.unwrap() * 0.5;
+        // Squeezing DRAM down to 1 MiB guarantees occupancy > capacity.
+        let squeeze = FaultTrace {
+            seed: 0,
+            events: vec![faults::FaultEvent {
+                t_s: mid,
+                kind: FaultKind::CapacitySqueeze {
+                    node: 0,
+                    bytes: 47 * MIB,
+                },
+            }],
+        };
+        squeeze.validate(&topo).unwrap();
+        let recovery = faults::by_name("fail-stop").unwrap();
+        let res = simulate_fleet_faulted(&topo, &trace, &policy, &squeeze, &recovery, 1);
+        assert_eq!(res.failed(), 1, "the squeezed-out job dies under fail-stop");
+        assert!(res.records[0].reason.as_deref().unwrap().contains("squeezed"));
+        // Occupancy respects the squeezed capacity in every later sample.
+        for s in res.samples.iter().filter(|s| s.t_s >= mid) {
+            assert!(s.used[0] <= MIB, "sample at {} overshoots", s.t_s);
+        }
     }
 }

@@ -308,6 +308,16 @@ impl<'t> NumaAllocator<'t> {
         Some(r)
     }
 
+    /// [`NumaAllocator::release_region`] with a structured error instead
+    /// of a silently ignorable `None`: callers that *know* the region must
+    /// be live (the fleet host releasing a resident job) route through
+    /// this, so a double release names the dead id instead of corrupting
+    /// capacity accounting downstream.
+    pub fn release_strict(&mut self, id: RegionId) -> Result<Region, String> {
+        self.release_region(id)
+            .ok_or_else(|| format!("release of unknown region id {}", id.0))
+    }
+
     /// Per-phase (early) release of a region's committed tail: give back
     /// the phases `[from, death]` of its window and shrink the lifetime to
     /// end at `from − 1` — how a long-lived host retires e.g. activation
@@ -686,6 +696,8 @@ mod tests {
             assert_eq!(with.free_on(n), without.free_on(n));
         }
         assert!(with.release_region(released.id).is_none(), "double release");
+        let err = with.release_strict(released.id).unwrap_err();
+        assert!(err.contains("unknown region id"), "{err}");
     }
 
     #[test]

@@ -146,6 +146,51 @@ pub fn with_node_capacities(mut t: SystemTopology, caps: &[u64]) -> SystemTopolo
     t
 }
 
+/// Scale one link's per-direction bandwidth by `factor` — a degraded
+/// (throttled / retrained-at-lower-width) PCIe link. Any CXL node behind
+/// the link has its DMA `peak_bw` scaled too (it is link-bound), while
+/// `cpu_stream_bw` is left alone below the scaled link rate: CXL.mem CPU
+/// streams are latency-limited, not link-limited, until the link drops
+/// under them. Deliberately not re-validated (see `with_node_capacities`).
+pub fn with_link_bw_factor(mut t: SystemTopology, link: LinkId, factor: f64) -> SystemTopology {
+    assert!(link.0 < t.links.len(), "link {} out of range", link.0);
+    assert!(factor > 0.0 && factor <= 1.0, "bw factor must be in (0, 1]");
+    t.links[link.0].per_dir_bw *= factor;
+    let link_rate = t.links[link.0].per_dir_bw;
+    for node in t.mem_nodes.iter_mut() {
+        if node.link == Some(link) {
+            node.peak_bw = node.peak_bw.min(link_rate);
+            node.cpu_stream_bw = node.cpu_stream_bw.min(link_rate);
+        }
+    }
+    t
+}
+
+/// Take a CXL node offline (AIC hot-remove): capacity drops to zero so no
+/// placement engine ever assigns it bytes. Node 0 (local DRAM) is rejected
+/// — a host without DRAM is not a degraded machine, it is no machine.
+/// Deliberately not re-validated: `validate` (rightly) refuses
+/// zero-capacity nodes on real machines.
+pub fn with_node_offline(mut t: SystemTopology, node: NodeId) -> SystemTopology {
+    assert!(node.0 < t.mem_nodes.len(), "node {} out of range", node.0);
+    assert!(
+        t.mem_nodes[node.0].kind == MemKind::CxlAic,
+        "only CXL AICs can go offline (node {} is {:?})",
+        node.0,
+        t.mem_nodes[node.0].kind
+    );
+    t.mem_nodes[node.0].capacity = 0;
+    t
+}
+
+/// Shrink one node's capacity by `bytes` (ECC pressure / reserved-region
+/// growth), saturating at zero. Deliberately not re-validated.
+pub fn with_reduced_capacity(mut t: SystemTopology, node: NodeId, bytes: u64) -> SystemTopology {
+    assert!(node.0 < t.mem_nodes.len(), "node {} out of range", node.0);
+    t.mem_nodes[node.0].capacity = t.mem_nodes[node.0].capacity.saturating_sub(bytes);
+    t
+}
+
 /// Add `n` extra GPUs (scalability studies beyond the paper's 2).
 pub fn with_gpus(mut t: SystemTopology, n: usize) -> SystemTopology {
     let base_links = t.links.len();
@@ -242,6 +287,41 @@ mod tests {
         assert_eq!(t.mem_nodes[1].capacity, 0);
         assert_eq!(t.mem_nodes[2].capacity, 7);
         assert_eq!(t.cxl_nodes().len(), 2, "node kinds unchanged");
+    }
+
+    #[test]
+    fn with_link_bw_factor_scales_link_and_aic_peak() {
+        let base = config_a();
+        let t = with_link_bw_factor(base.clone(), LinkId(2), 0.5);
+        assert_eq!(t.links[2].per_dir_bw, base.links[2].per_dir_bw * 0.5);
+        // The AIC behind link 2 is link-bound: peak_bw clamps to the link.
+        assert_eq!(t.mem_nodes[1].peak_bw, t.links[2].per_dir_bw);
+        // cpu_stream_bw (26 GB/s) is already below 32 GB/s — untouched.
+        assert_eq!(t.mem_nodes[1].cpu_stream_bw, base.mem_nodes[1].cpu_stream_bw);
+        // GPU links unaffected.
+        assert_eq!(t.links[0].per_dir_bw, base.links[0].per_dir_bw);
+    }
+
+    #[test]
+    fn with_node_offline_zeroes_capacity_only() {
+        let t = with_node_offline(config_b(), NodeId(1));
+        assert_eq!(t.mem_nodes[1].capacity, 0);
+        assert_eq!(t.mem_nodes[2].capacity, 256 * GIB);
+        assert_eq!(t.cxl_nodes().len(), 2, "node kinds unchanged");
+    }
+
+    #[test]
+    #[should_panic(expected = "only CXL AICs can go offline")]
+    fn with_node_offline_rejects_dram() {
+        let _ = with_node_offline(config_a(), NodeId(0));
+    }
+
+    #[test]
+    fn with_reduced_capacity_saturates() {
+        let t = with_reduced_capacity(config_a(), NodeId(1), 100 * GIB);
+        assert_eq!(t.mem_nodes[1].capacity, 412 * GIB);
+        let t = with_reduced_capacity(t, NodeId(1), u64::MAX);
+        assert_eq!(t.mem_nodes[1].capacity, 0);
     }
 
     #[test]

@@ -10,11 +10,14 @@
 //!   commit.
 //! * Trace drills: corrupted digest (P201), duplicate ids (P202),
 //!   non-monotonic arrivals (P203), unregistered names (P204).
+//! * Fault-trace drills: bad targets / DRAM offline (P207), unsorted
+//!   times (P208), unpaired offline/restore (P209).
 
 use cxlfine::analysis::{
-    lint_commit, lint_plan, lint_schedule, lint_trace, ScheduleLintContext, Severity,
+    lint_commit, lint_fault_trace, lint_plan, lint_schedule, lint_trace, ScheduleLintContext,
+    Severity,
 };
-use cxlfine::fleet::TraceGen;
+use cxlfine::fleet::{FaultEvent, FaultGen, FaultKind, FaultTrace, TraceGen};
 use cxlfine::mem::{Lifetime, NumaAllocator, Placement, Policy, RegionRequest, TensorClass};
 use cxlfine::model::footprint::Workload;
 use cxlfine::model::presets;
@@ -283,4 +286,76 @@ fn trace_corruptions_fire_their_codes() {
     }
     let d = lint_trace(&cxlfine::util::json::Json::Obj(stripped));
     assert!(d.has_code("P206") && !d.has_errors(), "unsigned trace is Info-only:\n{}", d.render());
+}
+
+/// Fault-trace drills: each corruption of a generated (clean) fault trace
+/// fires its documented P2xx code. Target checks need the topology.
+#[test]
+fn fault_trace_corruptions_fire_their_codes() {
+    let topo = dev_tiny();
+    let clean = FaultGen::new(7, 6, 10.0).generate(&topo);
+    let d = lint_fault_trace(&clean.to_json(), Some(&topo));
+    assert!(
+        !d.has_errors() && !d.has_warnings(),
+        "generated fault trace must lint clean:\n{}",
+        d.render()
+    );
+
+    let relint = |t: &FaultTrace| lint_fault_trace(&t.to_json(), Some(&topo));
+    let ev = |t_s: f64, kind: FaultKind| FaultEvent { t_s, kind };
+
+    // P207: targets that do not exist, DRAM offline, meaningless magnitudes.
+    let t = FaultTrace {
+        seed: 0,
+        events: vec![
+            ev(1.0, FaultKind::LinkDegrade { link: 999, bw_factor: 0.5 }),
+            ev(2.0, FaultKind::LinkDegrade { link: 0, bw_factor: 1.5 }),
+            ev(3.0, FaultKind::NodeOffline { node: 0 }),
+            ev(4.0, FaultKind::CapacitySqueeze { node: 1, bytes: 0 }),
+        ],
+    };
+    let d = relint(&t);
+    assert!(d.has_code("P207"), "bad fault targets must fire P207:\n{}", d.render());
+    assert!(
+        d.count(Severity::Error) >= 4,
+        "dangling link, bad factor, DRAM offline and zero squeeze all report:\n{}",
+        d.render()
+    );
+
+    // P208: events out of time order.
+    let mut t = clean.clone();
+    let last = t.events.len() - 1;
+    t.events[last].t_s = 0.0;
+    let d = relint(&t);
+    assert!(d.has_code("P208"), "unsorted fault times must fire P208:\n{}", d.render());
+
+    // P209: double offline, and a restore with no prior offline.
+    let cxl = topo.cxl_nodes()[0].0;
+    let t = FaultTrace {
+        seed: 0,
+        events: vec![
+            ev(1.0, FaultKind::NodeOffline { node: cxl }),
+            ev(2.0, FaultKind::NodeOffline { node: cxl }),
+        ],
+    };
+    let d = relint(&t);
+    assert!(d.has_code("P209"), "double offline must fire P209:\n{}", d.render());
+    let t = FaultTrace {
+        seed: 0,
+        events: vec![ev(1.0, FaultKind::NodeRestore { node: cxl })],
+    };
+    let d = relint(&t);
+    assert!(d.has_code("P209"), "unpaired restore must fire P209:\n{}", d.render());
+
+    // P201/P206 carry over: tampered digest errs, unsigned trace is Info.
+    let mut j = clean.to_json();
+    if let cxlfine::util::json::Json::Obj(o) = &mut j {
+        o.set("digest", "deadbeefdeadbeef");
+    }
+    let d = lint_fault_trace(&j, Some(&topo));
+    assert!(d.has_code("P201"), "tampered fault digest must fire P201:\n{}", d.render());
+
+    // Without a topology the shape checks still run; target checks skip.
+    let d = lint_fault_trace(&clean.to_json(), None);
+    assert!(!d.has_errors(), "topology-free lint of a clean trace:\n{}", d.render());
 }

@@ -8,6 +8,9 @@
 //!   XL jobs in the static/lifetime gap are the difference).
 //! * bit-identical result digests across reruns (the determinism
 //!   contract at bench scale).
+//! * the `simcore` event-core rung (DESIGN.md §14): the adapter loop is
+//!   byte-identical to the frozen `fleet::reference` loop, and the full
+//!   (non-smoke) run enforces ≥10× events/sec at the 100_000-job trace.
 //!
 //! Results land in `bench_out/fleet_scale/` and in `BENCH_fleet.json`
 //! (override: `CXLFINE_BENCH_FLEET_OUT`), which the CI bench-smoke job
@@ -16,6 +19,7 @@
 
 use std::time::Instant;
 
+use cxlfine::fleet::reference::ref_simulate_fleet;
 use cxlfine::fleet::{mixed_trace_with_xl, scheduler, simulate_fleet};
 use cxlfine::topology::presets::{config_a, with_dram_capacity};
 use cxlfine::trow;
@@ -129,10 +133,79 @@ fn main() {
         }));
     }
 
+    // The §14 event-core rung: the simcore adapter loop diffed against
+    // the frozen pre-port loop (`fleet::reference`) on one big trace.
+    // Smoke diffs a 2_000-job prefix so CI stays fast; the full run
+    // takes the 100_000-job rung and enforces the ≥10× events/sec gate.
+    let (big_mixed, big_xl) = if smoke { (1_992, 8) } else { (99_992, 8) };
+    let n_big = big_mixed + big_xl;
+    let big = mixed_trace_with_xl(&topo, 1007, big_mixed, big_xl);
+    assert_eq!(
+        big.jobs.len(),
+        n_big,
+        "the XL static/lifetime gap cell must exist at the simcore rung"
+    );
+    let policy = scheduler::by_name("placement-aware").unwrap();
+    let t0 = Instant::now();
+    let new = simulate_fleet(&topo, &big, &policy, threads);
+    let wall_new = t0.elapsed().as_secs_f64().max(1e-9);
+    let t0 = Instant::now();
+    let old = ref_simulate_fleet(&topo, &big, &policy, threads);
+    let wall_ref = t0.elapsed().as_secs_f64().max(1e-9);
+    assert_eq!(
+        new.digest(),
+        old.digest(),
+        "{n_big}-job trace: the simcore adapter loop drifted from the frozen reference"
+    );
+    let eps_new = new.n_events as f64 / wall_new;
+    let eps_ref = old.n_events as f64 / wall_ref;
+    let speedup = eps_new / eps_ref;
+    if !smoke {
+        assert!(
+            speedup >= 10.0,
+            "100_000-job rung: the simcore loop must be ≥10x the frozen loop \
+             on events/sec (got {speedup:.2}x: {eps_new:.0} vs {eps_ref:.0})"
+        );
+    }
+    let mut t = Table::new(&["engine", "wall", "events/s", "speedup", "digest"]);
+    t = t.left(0);
+    let mut raws = Vec::new();
+    for (engine, wall, eps, res) in [
+        ("simcore", wall_new, eps_new, &new),
+        ("reference", wall_ref, eps_ref, &old),
+    ] {
+        t.row(trow![
+            engine,
+            format!("{wall:.2}s"),
+            format!("{eps:.0}"),
+            format!("{:.2}x", eps / eps_ref),
+            format!("{:016x}", res.digest())
+        ]);
+        let mut cell = JsonObj::new();
+        cell.set("engine", engine);
+        cell.set("wall_s", wall);
+        cell.set("events_per_sec", eps);
+        cell.set("n_events", res.n_events);
+        cell.set("digest", format!("{:016x}", res.digest()));
+        raws.push(Json::Obj(cell));
+    }
+    println!("simcore rung: {n_big}-job trace, {speedup:.2}x events/sec vs reference");
+    report.section("simcore_rung", t, Json::Arr(raws.clone()));
+    let simcore_rung = Json::Obj({
+        let mut o = JsonObj::new();
+        o.set("n_jobs", n_big);
+        o.set("policy", policy.name());
+        o.set("trace_digest", format!("{:016x}", big.digest()));
+        o.set("speedup", speedup);
+        o.set("engines", Json::Arr(raws));
+        o
+    });
+
     let mut root = JsonObj::new();
     root.set("bench", "fleet_scale");
     root.set("smoke", smoke);
     root.set("scales", Json::Arr(json_scales));
+    root.set("simcore_rung", simcore_rung);
     let out =
         std::env::var("CXLFINE_BENCH_FLEET_OUT").unwrap_or_else(|_| "BENCH_fleet.json".into());
     let payload = Json::Obj(root).to_string_pretty();

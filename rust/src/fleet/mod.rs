@@ -15,9 +15,13 @@
 //!   AIC hot-remove/hot-add, capacity squeezes), the accumulated
 //!   [`faults::Degradation`] view, and the recovery-policy registry
 //!   (`fail-stop`, `checkpoint-restart`, `evacuate`),
-//! * [`sim`] — the event loop and the memoized per-(config, engine,
-//!   degradation) cost calibrator (one real `offload::executor` run per
-//!   cell),
+//! * [`sim`] — the event loop (a thin adapter over
+//!   [`crate::simcore`]'s `EventQueue`/`EventKey` since DESIGN.md §14)
+//!   and the memoized per-(config, engine, degradation) cost calibrator
+//!   (one real `offload::executor` run per cell),
+//! * [`reference`] — the frozen pre-`simcore` event loop, kept as the
+//!   differential oracle the parity suite and the fleet bench diff
+//!   against,
 //! * [`metrics`] — per-job records, occupancy curves, makespan / JCT /
 //!   goodput / lost-work statistics, digests and JSON.
 //!
@@ -32,6 +36,7 @@ pub mod faults;
 pub mod host;
 pub mod job;
 pub mod metrics;
+pub mod reference;
 pub mod scheduler;
 pub mod sim;
 

@@ -1,0 +1,604 @@
+//! The frozen pre-`simcore` fleet event loop, kept as a differential
+//! oracle (DESIGN.md §14) — the fleet twin of `sim::reference`.
+//!
+//! This is the serial `BinaryHeap<Reverse<(u64, u8, u64, usize)>>` loop
+//! exactly as it shipped in PRs 5/7, before `fleet::sim` was ported onto
+//! the shared `simcore` primitives (`EventKey`/`EventQueue`, interned
+//! probe memos, fixpoint-elided scheduling passes). Every scheduling pass
+//! here re-clones the topology and re-builds memory plans from scratch —
+//! deliberately: slow and obviously-correct is the point of an oracle.
+//!
+//! `rust/tests/simcore_parity.rs` and `benches/fleet_scale.rs` drive
+//! [`ref_simulate_fleet_faulted`] against the production loop and demand
+//! byte-identical [`FleetResult::digest`]s; the bench additionally records
+//! the events/sec ratio between the two. **Do not optimize this file.**
+//! Behavioral changes belong in `fleet::sim` with a matching parity
+//! argument; this copy only ever changes if the *contract* changes.
+//!
+//! Shared leaves (`Calibrator`, `resolve_cfg`, `migration_bandwidth`,
+//! `describe_fault`) are imported from `fleet::sim` — they are pure value
+//! functions that the port did not touch, so sharing them cannot mask a
+//! drift in the loop itself.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
+
+use super::faults::{self, Degradation, FaultKind, FaultTrace, RecoveryAction, RecoveryRef};
+use super::host::FleetHost;
+use super::job::{FleetTrace, JobSpec};
+use super::metrics::{FleetResult, JobRecord, JobStatus, OccupancySample};
+use super::scheduler::{AdmissionProbe, PolicyRef, PLACEMENT_AWARE_ALTERNATIVES};
+use super::sim::{describe_fault, migration_bandwidth, resolve_cfg, CalCost, Calibrator};
+use crate::offload::{MemoryPlan, PlanReservation};
+use crate::topology::SystemTopology;
+
+/// A recorded admission decision of one scheduling pass.
+struct ProbeAdmission {
+    engine: String,
+    reservation: PlanReservation,
+    cost: CalCost,
+}
+
+/// The frozen admission probe: a working free view that real `MemoryPlan`
+/// builds are checked against and debited from, with the original
+/// string-keyed blocked-set memo. See `fleet::sim` for the full
+/// commentary; this copy exists so the oracle never borrows production
+/// probe machinery.
+struct Probe<'a, 't> {
+    view: SystemTopology,
+    base: &'a SystemTopology,
+    deg_key: &'a str,
+    free: Vec<u64>,
+    free_gpus: usize,
+    queue: Vec<&'a JobSpec>,
+    cal: &'a mut Calibrator<'t>,
+    blocked: &'a mut BTreeSet<String>,
+    admissions: Vec<Option<ProbeAdmission>>,
+    reasons: Vec<Option<String>>,
+}
+
+impl<'a, 't> Probe<'a, 't> {
+    fn new(
+        topo: &'a SystemTopology,
+        free: Vec<u64>,
+        free_gpus: usize,
+        queue: Vec<&'a JobSpec>,
+        cal: &'a mut Calibrator<'t>,
+        blocked: &'a mut BTreeSet<String>,
+        deg_key: &'a str,
+    ) -> Self {
+        let n = queue.len();
+        Self {
+            view: topo.clone(),
+            base: topo,
+            deg_key,
+            free,
+            free_gpus,
+            queue,
+            cal,
+            blocked,
+            admissions: (0..n).map(|_| None).collect(),
+            reasons: (0..n).map(|_| None).collect(),
+        }
+    }
+
+    fn note(&mut self, idx: usize, msg: String) {
+        if self.reasons[idx].is_none() {
+            self.reasons[idx] = Some(msg);
+        }
+    }
+}
+
+impl AdmissionProbe for Probe<'_, '_> {
+    fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn job(&self, idx: usize) -> &JobSpec {
+        self.queue[idx]
+    }
+
+    fn try_admit(&mut self, idx: usize, engine_name: Option<&str>, lifetime: bool) -> bool {
+        if self.admissions[idx].is_some() {
+            return false;
+        }
+        let spec = self.queue[idx];
+        let engine_name = engine_name.unwrap_or(&spec.engine).to_string();
+        let probe_key = format!(
+            "{}|{engine_name}|{lifetime}|{}",
+            spec.config_key(),
+            self.deg_key
+        );
+        if self.blocked.contains(&probe_key) {
+            return false;
+        }
+        if spec.gpus > self.free_gpus {
+            self.blocked.insert(probe_key);
+            self.note(
+                idx,
+                format!("wants {} GPUs, {} free", spec.gpus, self.free_gpus),
+            );
+            return false;
+        }
+        let admissible = self.cal.profiles(spec).zip(resolve_cfg(spec, &engine_name));
+        let Some((profiles, cfg)) = admissible else {
+            self.blocked.insert(probe_key);
+            self.note(
+                idx,
+                format!("{engine_name}: model/schedule/engine does not resolve or cannot be profiled"),
+            );
+            return false;
+        };
+        for (node, cap) in self.view.mem_nodes.iter_mut().zip(&self.free) {
+            node.capacity = *cap;
+        }
+        let plan = match MemoryPlan::build_with_profiles(&self.view, &cfg, lifetime, profiles) {
+            Ok(p) => p,
+            Err(e) => {
+                self.blocked.insert(probe_key);
+                self.note(idx, format!("{engine_name}: {e}"));
+                return false;
+            }
+        };
+        let reservation = plan.reservation();
+        drop(plan);
+        let Some(cost) = self.cal.cost_on(self.base, self.deg_key, spec, &engine_name) else {
+            self.blocked.insert(probe_key);
+            self.note(idx, format!("{engine_name}: calibration failed"));
+            return false;
+        };
+        for (n, b) in &reservation.parts {
+            debug_assert!(self.free[n.0] >= *b, "probe view over-promised");
+            self.free[n.0] -= *b;
+        }
+        self.free_gpus -= spec.gpus;
+        self.admissions[idx] = Some(ProbeAdmission {
+            engine: engine_name,
+            reservation,
+            cost,
+        });
+        true
+    }
+}
+
+/// The frozen reject-at-arrival feasibility check: can the policy place
+/// this job on an EMPTY host as currently degraded?
+fn feasible_on_empty(
+    topo: &SystemTopology,
+    spec: &JobSpec,
+    policy: &PolicyRef,
+    cal: &mut Calibrator<'_>,
+    deg_key: &str,
+) -> Option<String> {
+    let free: Vec<u64> = topo.mem_nodes.iter().map(|n| n.capacity).collect();
+    let mut blocked = BTreeSet::new();
+    let mut probe = Probe::new(
+        topo,
+        free,
+        topo.gpus.len(),
+        vec![spec],
+        cal,
+        &mut blocked,
+        deg_key,
+    );
+    policy.schedule(&mut probe);
+    if probe.admissions[0].is_some() {
+        None
+    } else {
+        Some(probe.reasons[0].clone().unwrap_or_else(|| {
+            "no registered engine can place the job on an empty host".to_string()
+        }))
+    }
+}
+
+const EV_COMPLETE: u8 = 0;
+const EV_FAULT: u8 = 1;
+const EV_ARRIVE: u8 = 2;
+const EV_REQUEUE: u8 = 3;
+
+const NO_COMPLETION: u64 = u64::MAX;
+
+/// Mutable per-job lifecycle state (frozen copy).
+struct JobState {
+    status: JobStatus,
+    engine_used: Option<String>,
+    start_s: Option<f64>,
+    finish_s: Option<f64>,
+    iter_s: Option<f64>,
+    reason: Option<String>,
+    durable_iters: u64,
+    run_iters: u64,
+    pending_finish_s: f64,
+    interruptions: u32,
+    migrations: u32,
+    recovery_s: f64,
+    lost_tokens: u64,
+    processed_iters: u64,
+}
+
+impl JobState {
+    fn fresh() -> Self {
+        JobState {
+            status: JobStatus::Queued,
+            engine_used: None,
+            start_s: None,
+            finish_s: None,
+            iter_s: None,
+            reason: None,
+            durable_iters: 0,
+            run_iters: 0,
+            pending_finish_s: 0.0,
+            interruptions: 0,
+            migrations: 0,
+            recovery_s: 0.0,
+            lost_tokens: 0,
+            processed_iters: 0,
+        }
+    }
+}
+
+/// Frozen fault-free entry point: the oracle twin of
+/// `fleet::sim::simulate_fleet`.
+pub fn ref_simulate_fleet(
+    topo: &SystemTopology,
+    trace: &FleetTrace,
+    policy: &PolicyRef,
+    threads: usize,
+) -> FleetResult {
+    let recovery = faults::by_name("fail-stop").expect("registered");
+    ref_simulate_fleet_faulted(topo, trace, policy, &FaultTrace::empty(), &recovery, threads)
+}
+
+/// The frozen pre-port event loop: verbatim behavior of the PR 5/PR 7
+/// `simulate_fleet_faulted`, including its per-event topology clones and
+/// unconditional scheduling passes. See `fleet::sim` for the semantics
+/// commentary; only mechanical notes live here.
+pub fn ref_simulate_fleet_faulted(
+    topo: &SystemTopology,
+    trace: &FleetTrace,
+    policy: &PolicyRef,
+    faults: &FaultTrace,
+    recovery: &RecoveryRef,
+    threads: usize,
+) -> FleetResult {
+    let mut ids = BTreeSet::new();
+    for j in &trace.jobs {
+        assert!(ids.insert(j.id), "duplicate job id {}", j.id);
+        assert!(
+            j.arrival_s.is_finite() && j.arrival_s >= 0.0,
+            "job {}: arrival must be a non-negative finite time",
+            j.id
+        );
+        assert!(j.iterations >= 1, "job {}: needs at least one iteration", j.id);
+        assert!(
+            j.gpus >= 1 && j.batch >= 1 && j.context >= 1,
+            "job {}: workload dimensions must be positive",
+            j.id
+        );
+    }
+    faults
+        .validate(topo)
+        .unwrap_or_else(|e| panic!("invalid fault trace: {e}"));
+    let id_to_idx: BTreeMap<u64, usize> =
+        trace.jobs.iter().enumerate().map(|(i, j)| (j.id, i)).collect();
+    let mut cal = Calibrator::new(topo);
+    cal.prewarm(&trace.jobs, threads);
+    let mut host = FleetHost::new(topo);
+    let mut jobs: Vec<JobState> = trace.jobs.iter().map(|_| JobState::fresh()).collect();
+
+    let mut heap: BinaryHeap<Reverse<(u64, u8, u64, usize)>> = BinaryHeap::new();
+    for (i, s) in trace.jobs.iter().enumerate() {
+        heap.push(Reverse(((s.arrival_s + 0.0).to_bits(), EV_ARRIVE, i as u64, i)));
+    }
+    let mut seq: u64 = trace.jobs.len() as u64;
+    for (fi, ev) in faults.events.iter().enumerate() {
+        heap.push(Reverse(((ev.t_s + 0.0).to_bits(), EV_FAULT, seq, fi)));
+        seq += 1;
+    }
+
+    let mut completion_seq: Vec<u64> = vec![NO_COMPLETION; trace.jobs.len()];
+
+    let mut deg = Degradation::pristine(topo);
+    let mut deg_key = String::new();
+    let mut dtopo: Option<SystemTopology> = None;
+
+    let mut queue: Vec<usize> = Vec::new();
+    let mut samples: Vec<OccupancySample> = Vec::new();
+    let mut feasible: BTreeMap<String, Option<String>> = BTreeMap::new();
+    let mut blocked: BTreeSet<String> = BTreeSet::new();
+    let mut n_events: u64 = 0;
+    let mut running: usize = 0;
+
+    while let Some(Reverse((tb, kind, ev_seq, ji))) = heap.pop() {
+        if kind == EV_COMPLETE && completion_seq[ji] != ev_seq {
+            continue;
+        }
+        let now = f64::from_bits(tb);
+        n_events += 1;
+        match kind {
+            EV_COMPLETE => {
+                let spec = &trace.jobs[ji];
+                host.release(spec.id, spec.gpus)
+                    .unwrap_or_else(|e| panic!("completion of job {}: {e}", spec.id));
+                completion_seq[ji] = NO_COMPLETION;
+                jobs[ji].processed_iters += jobs[ji].run_iters;
+                jobs[ji].status = JobStatus::Completed;
+                jobs[ji].finish_s = Some(now);
+                running -= 1;
+                blocked.clear();
+            }
+            EV_FAULT => {
+                let ev = &faults.events[ji];
+                deg.apply(&ev.kind);
+                deg_key = deg.key();
+                dtopo = if deg.is_pristine() {
+                    None
+                } else {
+                    Some(deg.degraded_topo(topo))
+                };
+                let eff = deg.effective_caps(topo);
+                for (i, cap) in eff.iter().enumerate() {
+                    host.set_capacity(i, *cap);
+                }
+                blocked.clear();
+                let desc = describe_fault(topo, &ev.kind);
+
+                let victims: Vec<(usize, u64)> = match &ev.kind {
+                    FaultKind::NodeOffline { node } => host
+                        .residents_on(*node)
+                        .into_iter()
+                        .map(|(id, bytes)| (id_to_idx[&id], bytes))
+                        .collect(),
+                    FaultKind::CapacitySqueeze { node, .. } => {
+                        let used = host.used()[*node];
+                        if used > eff[*node] {
+                            let mut residents = host.residents_on(*node);
+                            residents.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                            let mut overshoot = used - eff[*node];
+                            let mut v = Vec::new();
+                            for (id, bytes) in residents {
+                                if overshoot == 0 {
+                                    break;
+                                }
+                                v.push((id_to_idx[&id], bytes));
+                                overshoot = overshoot.saturating_sub(bytes);
+                            }
+                            v
+                        } else {
+                            Vec::new()
+                        }
+                    }
+                    FaultKind::LinkDegrade { .. } | FaultKind::NodeRestore { .. } => Vec::new(),
+                };
+
+                for &(vji, _) in &victims {
+                    host.release_memory(trace.jobs[vji].id)
+                        .unwrap_or_else(|e| panic!("fault victim: {e}"));
+                }
+                let cur = dtopo.as_ref().unwrap_or(topo);
+                for (vji, bytes_hit) in victims {
+                    let spec = &trace.jobs[vji];
+                    let tpi = spec.workload().tokens_per_iter();
+                    let st = &mut jobs[vji];
+                    let iter_s = st.iter_s.expect("victim was running");
+                    let remaining =
+                        ((st.pending_finish_s - now) / iter_s).ceil().max(0.0) as u64;
+                    let run_done = st.run_iters.saturating_sub(remaining);
+                    st.interruptions += 1;
+                    let hit = st.interruptions;
+                    let action = recovery.decide(spec, hit);
+                    let mut eff_action = action;
+                    if action == RecoveryAction::Evacuate {
+                        let free = host.free();
+                        let mut view = cur.clone();
+                        for (node, cap) in view.mem_nodes.iter_mut().zip(&free) {
+                            node.capacity = *cap;
+                        }
+                        let mut candidates: Vec<String> = vec![st
+                            .engine_used
+                            .clone()
+                            .unwrap_or_else(|| spec.engine.clone())];
+                        for alt in PLACEMENT_AWARE_ALTERNATIVES {
+                            if !candidates.iter().any(|c| c == alt) {
+                                candidates.push(alt.to_string());
+                            }
+                        }
+                        let mut placed: Option<(String, PlanReservation)> = None;
+                        'search: for engine_name in &candidates {
+                            let Some((profiles, cfg)) =
+                                cal.profiles(spec).zip(resolve_cfg(spec, engine_name))
+                            else {
+                                continue;
+                            };
+                            for lifetime in [false, true] {
+                                if let Ok(plan) = MemoryPlan::build_with_profiles(
+                                    &view,
+                                    &cfg,
+                                    lifetime,
+                                    profiles.clone(),
+                                ) {
+                                    placed = Some((engine_name.clone(), plan.reservation()));
+                                    break 'search;
+                                }
+                            }
+                        }
+                        if let Some((engine_name, resv)) = placed {
+                            host.reserve_memory(spec.id, &resv)
+                                .expect("plan was built against the free view");
+                            let migrate_s = bytes_hit as f64 / migration_bandwidth(cur);
+                            st.pending_finish_s += migrate_s;
+                            heap.push(Reverse((
+                                st.pending_finish_s.to_bits(),
+                                EV_COMPLETE,
+                                seq,
+                                vji,
+                            )));
+                            completion_seq[vji] = seq;
+                            seq += 1;
+                            st.status = JobStatus::Migrated;
+                            st.migrations += 1;
+                            st.recovery_s += migrate_s;
+                            st.engine_used = Some(engine_name);
+                            continue;
+                        }
+                        eff_action = RecoveryAction::CheckpointRestart;
+                    }
+                    st.processed_iters += run_done;
+                    host.release_gpus(spec.gpus);
+                    running -= 1;
+                    completion_seq[vji] = NO_COMPLETION;
+                    if eff_action == RecoveryAction::CheckpointRestart
+                        && hit <= faults::MAX_RETRIES
+                    {
+                        let total_done = st.durable_iters + run_done;
+                        let ckpt = (total_done / faults::CHECKPOINT_INTERVAL_ITERS)
+                            * faults::CHECKPOINT_INTERVAL_ITERS;
+                        st.lost_tokens += (total_done - ckpt) * tpi;
+                        st.durable_iters = ckpt;
+                        st.status = JobStatus::Interrupted;
+                        let backoff = faults::BACKOFF_BASE_S * 2f64.powi(hit as i32 - 1);
+                        heap.push(Reverse(((now + backoff).to_bits(), EV_REQUEUE, seq, vji)));
+                        seq += 1;
+                    } else {
+                        st.status = JobStatus::Failed;
+                        st.finish_s = Some(now);
+                        st.lost_tokens = st.processed_iters * tpi;
+                        st.reason = Some(if action == RecoveryAction::FailStop {
+                            format!("fail-stop: {desc}")
+                        } else {
+                            format!("retries exhausted after {desc}")
+                        });
+                    }
+                }
+            }
+            EV_ARRIVE => {
+                let spec = &trace.jobs[ji];
+                let key = format!("{}|{}|{deg_key}", spec.config_key(), spec.engine);
+                let cur = dtopo.as_ref().unwrap_or(topo);
+                let verdict = match feasible.get(&key) {
+                    Some(v) => v.clone(),
+                    None => {
+                        let v = feasible_on_empty(cur, spec, policy, &mut cal, &deg_key);
+                        feasible.insert(key, v.clone());
+                        v
+                    }
+                };
+                match verdict {
+                    None => queue.push(ji),
+                    Some(reason) => {
+                        jobs[ji].status = JobStatus::Rejected;
+                        jobs[ji].reason = Some(reason);
+                    }
+                }
+            }
+            EV_REQUEUE => {
+                jobs[ji].status = JobStatus::Queued;
+                queue.push(ji);
+            }
+            _ => unreachable!("unknown event kind {kind}"),
+        }
+
+        // The frozen loop runs an unconditional scheduling pass after
+        // EVERY event — the production loop elides provable no-op passes;
+        // the parity suite exists to show the elision is invisible.
+        let cur = dtopo.as_ref().unwrap_or(topo);
+        let snapshot: Vec<&JobSpec> = queue.iter().map(|&i| &trace.jobs[i]).collect();
+        let mut probe = Probe::new(
+            cur,
+            host.free(),
+            host.free_gpus(),
+            snapshot,
+            &mut cal,
+            &mut blocked,
+            &deg_key,
+        );
+        policy.schedule(&mut probe);
+        let admissions = probe.admissions;
+        let mut started: Vec<usize> = Vec::new();
+        for (qpos, adm) in admissions.into_iter().enumerate() {
+            let Some(adm) = adm else { continue };
+            let ji = queue[qpos];
+            let spec = &trace.jobs[ji];
+            host.reserve(spec.id, &adm.reservation, spec.gpus)
+                .expect("probe debited the identical free view");
+            let remaining = spec.iterations as u64 - jobs[ji].durable_iters;
+            let finish = now + adm.cost.iter_s * remaining as f64;
+            jobs[ji].status = JobStatus::Running;
+            jobs[ji].engine_used = Some(adm.engine);
+            if jobs[ji].start_s.is_none() {
+                jobs[ji].start_s = Some(now);
+            }
+            jobs[ji].iter_s = Some(adm.cost.iter_s);
+            jobs[ji].run_iters = remaining;
+            jobs[ji].pending_finish_s = finish;
+            heap.push(Reverse((finish.to_bits(), EV_COMPLETE, seq, ji)));
+            completion_seq[ji] = seq;
+            seq += 1;
+            running += 1;
+            started.push(qpos);
+        }
+        for &qpos in started.iter().rev() {
+            queue.remove(qpos);
+        }
+        samples.push(OccupancySample {
+            t_s: now,
+            used: host.used(),
+            queue_len: queue.len(),
+            running,
+        });
+    }
+    assert!(running == 0, "fleet failed to drain: {running} still running");
+    if !queue.is_empty() {
+        assert!(
+            !faults.events.is_empty(),
+            "fleet failed to drain with no faults: {} queued",
+            queue.len()
+        );
+        for ji in queue {
+            let spec = &trace.jobs[ji];
+            let tpi = spec.workload().tokens_per_iter();
+            jobs[ji].status = JobStatus::Failed;
+            jobs[ji].reason =
+                Some("starved on the degraded host after the trace drained".to_string());
+            jobs[ji].lost_tokens = jobs[ji].processed_iters * tpi;
+        }
+    }
+
+    let mut result = FleetResult::new(policy.name(), topo);
+    result.recovery = recovery.name().to_string();
+    result.n_events = n_events;
+    result.n_faults = faults.events.len() as u64;
+    result.samples = samples;
+    result.records = trace
+        .jobs
+        .iter()
+        .zip(jobs)
+        .map(|(spec, j)| {
+            let tpi = spec.workload().tokens_per_iter();
+            JobRecord {
+                id: spec.id,
+                model: spec.model.clone(),
+                gpus: spec.gpus,
+                batch: spec.batch,
+                context: spec.context,
+                schedule: spec.schedule.clone(),
+                engine_requested: spec.engine.clone(),
+                engine_used: j.engine_used,
+                iterations: spec.iterations,
+                arrival_s: spec.arrival_s,
+                start_s: j.start_s,
+                finish_s: j.finish_s,
+                iter_s: j.iter_s,
+                total_tokens: spec.total_tokens(),
+                status: j.status,
+                reason: j.reason,
+                interruptions: j.interruptions,
+                migrations: j.migrations,
+                recovery_s: j.recovery_s,
+                lost_tokens: j.lost_tokens,
+                processed_tokens: j.processed_iters * tpi,
+            }
+        })
+        .collect();
+    result
+}

@@ -26,6 +26,7 @@ pub mod offload;
 pub mod optim;
 pub mod runtime;
 pub mod sim;
+pub mod simcore;
 pub mod topology;
 pub mod train;
 pub mod util;

@@ -12,18 +12,24 @@
 //! dependent work as each finishes — exactly how the real coordinator
 //! overlaps transfers with compute.
 //!
-//! # Hot-path architecture (DESIGN.md §7)
+//! # Hot-path architecture (DESIGN.md §7, §14)
 //!
 //! Every sweep cell and ablation bottoms out in this event loop, so it is
-//! built for events/sec while holding a hard determinism contract:
+//! built for events/sec while holding a hard determinism contract. Since
+//! the `simcore` unification this engine is a thin adapter over
+//! [`crate::simcore`] — the same primitives that run the fleet simulator:
 //!
-//! * **Slab flows** — flows live in a dense `Vec<FlowSlot>` with a free
-//!   list; `active` is a small id-sorted index vector, so every per-event
-//!   pass (rate assignment, drain, max-min) is a cache-linear walk with no
-//!   hashing and no per-event id collect+sort.
-//! * **Heap event queues** — pending activations and timers are binary
-//!   heaps keyed `(time, id)`; the tie-break that used to be an O(n)
-//!   `min_by` scan is now encoded in the heap key itself.
+//! * **Slab flows** — flows live in a [`crate::simcore::Slab`] with
+//!   free-list recycling; `active` is a small id-sorted index vector, so
+//!   every per-event pass (rate assignment, drain, max-min) is a
+//!   cache-linear walk with no hashing and no per-event id collect+sort.
+//! * **simcore event queues** — pending activations and timers are
+//!   [`crate::simcore::EventQueue`]s keyed [`crate::simcore::EventKey`]
+//!   `(time_bits, kind, id)`; the tie-break that used to be an O(n)
+//!   `min_by` scan is encoded in the key, and timer-heavy mixes upgrade
+//!   to the calendar-wheel backend automatically. Equal-time activation
+//!   bursts are drained as one cohort — a single max-min recompute per
+//!   timestamp instead of one per activation.
 //! * **Earliest-completion index** — the next completion candidate is
 //!   maintained incrementally: refreshed inside the rate-assignment loop
 //!   after each max-min solve and inside the drain loop when time advances,
@@ -40,11 +46,13 @@
 //!
 //! The pre-refactor HashMap engine is frozen in [`super::reference`]; the
 //! two are locked together bit-for-bit (ids, tags, `to_bits` timestamps) by
-//! `rust/tests/golden_trace.rs`, and `benches/sim_hotpath.rs` measures the
-//! speedup (≥3× required at ≥1e5 flows).
+//! `rust/tests/golden_trace.rs` and `rust/tests/simcore_parity.rs`, and
+//! `benches/sim_hotpath.rs` measures the speedup (≥3× required at ≥1e5
+//! flows).
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::HashMap;
+
+use crate::simcore::{EventKey, EventQueue, Slab};
 
 /// Seconds since simulation start.
 pub type SimTime = f64;
@@ -140,25 +148,11 @@ impl PathVec {
     }
 }
 
-/// Total-ordered finite-or-infinite event time for heap keys. Times are
-/// sums/quotients of asserted-nonnegative finite inputs, so NaN is a logic
-/// error — `Ord` panics on it rather than silently reordering events.
-#[derive(Clone, Copy, Debug, PartialEq)]
-struct OrdTime(f64);
-
-impl Eq for OrdTime {}
-
-impl PartialOrd for OrdTime {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for OrdTime {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.partial_cmp(&other.0).expect("NaN event time")
-    }
-}
+/// Event-key kind ranks for the two queues (the queues are separate, so
+/// the rank never arbitrates between them — it simply keeps the keys
+/// honest instances of the shared `time_bits · kind · seq` encoding).
+const KIND_ACTIVATE: u8 = 0;
+const KIND_TIMER: u8 = 1;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum SlotState {
@@ -332,16 +326,16 @@ fn maxmin_fill(
 pub struct FlowSim {
     now: SimTime,
     resources: Vec<Resource>,
-    /// Slab: flows in all states; slots are recycled via `free_slots`.
-    slots: Vec<FlowSlot>,
-    free_slots: Vec<u32>,
+    /// Slab: flows in all states; released slots recycle via the free list.
+    slots: Slab<FlowSlot>,
     /// Active slot indices, sorted by ascending flow id (the deterministic
     /// iteration order every per-event pass uses).
     active: Vec<u32>,
-    /// Flows whose setup latency has not elapsed: keyed (activate_at, id).
-    pending: BinaryHeap<Reverse<(OrdTime, u64, u32)>>,
-    /// Timers: keyed (fire_at, id); payload is the caller tag.
-    timers: BinaryHeap<Reverse<(OrdTime, u64, u64)>>,
+    /// Flows whose setup latency has not elapsed: keyed
+    /// (activate_at, KIND_ACTIVATE, id); payload is the slot index.
+    pending: EventQueue<u32>,
+    /// Timers: keyed (fire_at, KIND_TIMER, id); payload is the caller tag.
+    timers: EventQueue<u64>,
     next_id: u64,
     rates_dirty: bool,
     /// Earliest-completion candidate `(time, slot)` — valid whenever rates
@@ -360,11 +354,10 @@ impl FlowSim {
         Self {
             now: 0.0,
             resources: Vec::new(),
-            slots: Vec::new(),
-            free_slots: Vec::new(),
+            slots: Slab::new(),
             active: Vec::new(),
-            pending: BinaryHeap::new(),
-            timers: BinaryHeap::new(),
+            pending: EventQueue::new(),
+            timers: EventQueue::new(),
             next_id: 0,
             rates_dirty: true,
             cand_t: f64::INFINITY,
@@ -435,19 +428,9 @@ impl FlowSim {
             issued: self.now,
             tag,
         };
-        let si = match self.free_slots.pop() {
-            Some(si) => {
-                self.slots[si as usize] = slot;
-                si
-            }
-            None => {
-                assert!(self.slots.len() < u32::MAX as usize, "flow slab full");
-                self.slots.push(slot);
-                (self.slots.len() - 1) as u32
-            }
-        };
+        let si = self.slots.insert(slot);
         if setup > 0.0 {
-            self.pending.push(Reverse((OrdTime(start), id, si)));
+            self.pending.push(EventKey::new(start, KIND_ACTIVATE, id), si);
         } else {
             self.activate_slot(si, id);
         }
@@ -459,7 +442,7 @@ impl FlowSim {
         assert!(delay >= 0.0);
         let id = self.next_id;
         self.next_id += 1;
-        self.timers.push(Reverse((OrdTime(self.now + delay), id, tag)));
+        self.timers.push(EventKey::new(self.now + delay, KIND_TIMER, id), tag);
         TimerId(id)
     }
 
@@ -498,12 +481,17 @@ impl FlowSim {
         self.events
     }
 
-    pub fn n_active(&self) -> usize {
-        self.active.len() + self.pending.len()
+    /// All outstanding work: active flows, pending activations, **and**
+    /// timers. (The pre-simcore `n_active()` omitted timers while its
+    /// `idle()` counted them — a pure-timer workload reported length 0
+    /// yet not idle.)
+    pub fn len(&self) -> usize {
+        self.active.len() + self.pending.len() + self.timers.len()
     }
 
-    pub fn idle(&self) -> bool {
-        self.active.is_empty() && self.pending.is_empty() && self.timers.is_empty()
+    /// True iff no work is outstanding — exactly `len() == 0`.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 
     /// Rate assignment with the load-dependent CXL collapse: first decide,
@@ -527,8 +515,8 @@ impl FlowSim {
         }
         let nr = self.resources.len();
         let sc = &mut self.scratch;
-        if sc.rates.len() < self.slots.len() {
-            sc.rates.resize(self.slots.len(), 0.0);
+        if sc.rates.len() < self.slots.slot_count() {
+            sc.rates.resize(self.slots.slot_count(), 0.0);
         }
         sc.base_caps.clear();
         sc.base_caps
@@ -559,7 +547,7 @@ impl FlowSim {
                 sc.caps.extend_from_slice(&sc.base_caps);
                 sc.caps[ri] = f64::INFINITY;
                 maxmin_fill(
-                    &self.slots,
+                    self.slots.entries(),
                     &self.active,
                     &sc.caps,
                     &mut sc.rem_cap,
@@ -588,7 +576,7 @@ impl FlowSim {
                 .map(|(i, r)| r.model.capacity(sc.collapsed[i])),
         );
         maxmin_fill(
-            &self.slots,
+            self.slots.entries(),
             &self.active,
             &sc.caps,
             &mut sc.rem_cap,
@@ -628,14 +616,8 @@ impl FlowSim {
             // otherwise re-rank it).
             let t_complete = self.cand_t;
             let who = self.cand_slot;
-            let t_activate = match self.pending.peek() {
-                Some(&Reverse((t, _, _))) => t.0,
-                None => f64::INFINITY,
-            };
-            let t_timer = match self.timers.peek() {
-                Some(&Reverse((t, _, _))) => t.0,
-                None => f64::INFINITY,
-            };
+            let t_activate = self.pending.peek_key().map_or(f64::INFINITY, |k| k.time());
+            let t_timer = self.timers.peek_key().map_or(f64::INFINITY, |k| k.time());
 
             let t_next = t_complete.min(t_activate).min(t_timer);
             if !t_next.is_finite() {
@@ -678,10 +660,24 @@ impl FlowSim {
             self.now = t_next;
 
             // Activations first (internal — loop again for a visible event).
+            // The whole equal-timestamp activation cohort drains at once:
+            // same-time activations only ever stack onto the active list
+            // (ties favor activation above, so no timer/completion can
+            // interleave), and the max-min solve is a pure function of the
+            // final active set — one recompute per cohort replaces one per
+            // activation, bitwise identically.
             if t_activate <= t_timer && t_activate <= t_complete && t_activate.is_finite() {
-                let Reverse((_, id, si)) = self.pending.pop().unwrap();
-                debug_assert_eq!(self.slots[si as usize].id, id);
-                self.activate_slot(si, id);
+                let (key, si) = self.pending.pop().expect("peeked activation must pop");
+                debug_assert_eq!(self.slots[si as usize].id, key.seq());
+                self.activate_slot(si, key.seq());
+                while let Some(k) = self.pending.peek_key() {
+                    if k.time_bits() != key.time_bits() {
+                        break;
+                    }
+                    let (k, nsi) = self.pending.pop().expect("peeked activation must pop");
+                    debug_assert_eq!(self.slots[nsi as usize].id, k.seq());
+                    self.activate_slot(nsi, k.seq());
+                }
                 continue;
             }
 
@@ -689,9 +685,9 @@ impl FlowSim {
             // the same instant a transfer ends should observe the pre-completion
             // state; deterministic either way, this order is just fixed).
             if t_timer <= t_complete && t_timer.is_finite() {
-                let Reverse((_, id, tag)) = self.timers.pop().unwrap();
+                let (key, tag) = self.timers.pop().expect("peeked timer must pop");
                 self.events += 1;
-                return Some(Event::TimerFired { id: TimerId(id), tag });
+                return Some(Event::TimerFired { id: TimerId(key.seq()), tag });
             }
 
             // Completion.
@@ -716,7 +712,7 @@ impl FlowSim {
                 .expect("candidate not in active list");
             self.active.remove(pos);
             self.slots[si as usize].state = SlotState::Free;
-            self.free_slots.push(si);
+            self.slots.release(si);
             self.rates_dirty = true;
             self.finished.insert(id, stats);
             self.events += 1;
@@ -942,7 +938,7 @@ mod tests {
         // getting a fresh id
         let b = sim.start_flow(&[l], 1.0, 0.0, 1);
         assert_ne!(a, b, "ids must never be reused");
-        assert_eq!(sim.slots.len(), 1, "slot must be recycled");
+        assert_eq!(sim.slots.slot_count(), 1, "slot must be recycled");
         sim.run_to_idle();
         // both flows' stats are independently retrievable
         assert!(sim.stats(a).is_some() && sim.stats(b).is_some());
@@ -978,6 +974,35 @@ mod tests {
         for id in ids {
             assert!(sim.stats(id).is_none());
         }
+    }
+
+    #[test]
+    fn len_counts_pure_timer_workloads_and_matches_is_empty() {
+        // Regression: the pre-simcore `n_active()` omitted timers while
+        // `idle()` counted them, so a pure-timer sim claimed "0 items
+        // outstanding" yet "not idle". `len`/`is_empty` must agree.
+        let mut sim = FlowSim::new();
+        assert!(sim.is_empty());
+        assert_eq!(sim.len(), 0);
+        sim.add_timer(0.25, 1);
+        sim.add_timer(0.5, 2);
+        assert_eq!(sim.len(), 2, "timers are outstanding work");
+        assert!(!sim.is_empty());
+        let e = sim.next_event().unwrap();
+        assert_eq!(e.tag(), 1);
+        assert_eq!(sim.len(), 1);
+        assert!(!sim.is_empty());
+        sim.run_to_idle();
+        assert_eq!(sim.len(), 0);
+        assert!(sim.is_empty());
+        // A mixed workload counts all three populations.
+        let l = sim.add_resource("l", CapacityModel::Fixed(1.0));
+        sim.start_flow(&[l], 1.0, 0.0, 10); // active
+        sim.start_flow(&[l], 1.0, 0.5, 11); // pending activation
+        sim.add_timer(2.0, 12); // timer
+        assert_eq!(sim.len(), 3);
+        sim.run_to_idle();
+        assert!(sim.is_empty());
     }
 
     #[test]

@@ -1,0 +1,133 @@
+//! The shared event-key encoding (DESIGN.md §14).
+//!
+//! Both discrete-event layers key their queues with the same triple
+//! `time_bits · kind · seq`:
+//!
+//! * `time_bits` — the IEEE-754 bit pattern of the (finite, non-negative)
+//!   event time. For non-negative finite doubles the bit pattern is
+//!   order-isomorphic to the value, so a plain `u64` compare *is* the
+//!   time compare — no `OrdTime` wrapper, no NaN branches on the hot
+//!   path. `-0.0` is folded to `+0.0` at construction so the two zero
+//!   encodings can never reorder.
+//! * `kind` — the per-layer event-class rank broken at equal times. The
+//!   fleet pins completions(0) < faults(1) < arrivals(2) < requeues(3);
+//!   FlowSim uses activation(0) vs timer(1) across its two queues.
+//! * `seq` — a monotonically issued sequence number making every key
+//!   unique and the total order exhaustive (equal-key order would be
+//!   backend-defined, so the layers never issue duplicate keys).
+//!
+//! The derived lexicographic `Ord` over the struct fields is exactly the
+//! dispatch order the simulators promise in their determinism contracts.
+
+/// A totally ordered event key: `(time_bits, kind, seq)` lexicographic.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug, Hash)]
+pub struct EventKey {
+    time_bits: u64,
+    kind: u8,
+    seq: u64,
+}
+
+impl EventKey {
+    /// Build a key at time `t`. Panics on NaN, infinite, or negative
+    /// times — those are logic errors in the caller, and silently
+    /// accepting them would corrupt the bit-pattern order.
+    #[inline]
+    pub fn new(t: f64, kind: u8, seq: u64) -> Self {
+        let t = t + 0.0; // fold -0.0 → +0.0 so to_bits is order-isomorphic
+        assert!(
+            t.is_finite() && t >= 0.0,
+            "event time must be finite and non-negative, got {t}"
+        );
+        EventKey {
+            time_bits: t.to_bits(),
+            kind,
+            seq,
+        }
+    }
+
+    /// The event time as a double.
+    #[inline]
+    pub fn time(&self) -> f64 {
+        f64::from_bits(self.time_bits)
+    }
+
+    /// The raw bit pattern (what cohort equality is defined over).
+    #[inline]
+    pub fn time_bits(&self) -> u64 {
+        self.time_bits
+    }
+
+    /// The event-class rank.
+    #[inline]
+    pub fn kind(&self) -> u8 {
+        self.kind
+    }
+
+    /// The uniquifying sequence number.
+    #[inline]
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_is_time_then_kind_then_seq() {
+        let a = EventKey::new(1.0, 3, 9);
+        let b = EventKey::new(2.0, 0, 0);
+        assert!(a < b, "earlier time wins regardless of kind/seq");
+        let c = EventKey::new(1.0, 0, 9);
+        let d = EventKey::new(1.0, 1, 0);
+        assert!(c < d, "at equal times the kind rank breaks the tie");
+        let e = EventKey::new(1.0, 1, 1);
+        assert!(d < e, "at equal (time, kind) the sequence number decides");
+    }
+
+    #[test]
+    fn time_bits_compare_like_times_for_nonnegative_finites() {
+        let ts = [0.0, 1e-300, 1e-9, 0.5, 1.0, 1.0 + f64::EPSILON, 1e300];
+        for w in ts.windows(2) {
+            let a = EventKey::new(w[0], 0, 0);
+            let b = EventKey::new(w[1], 0, 0);
+            assert!(a < b && a.time_bits() < b.time_bits());
+        }
+    }
+
+    #[test]
+    fn negative_zero_is_folded_to_positive_zero() {
+        let a = EventKey::new(-0.0, 0, 0);
+        let b = EventKey::new(0.0, 0, 0);
+        assert_eq!(a, b);
+        assert_eq!(a.time_bits(), 0.0_f64.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn nan_time_is_rejected() {
+        EventKey::new(f64::NAN, 0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn negative_time_is_rejected() {
+        EventKey::new(-1.0, 0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn infinite_time_is_rejected() {
+        EventKey::new(f64::INFINITY, 0, 0);
+    }
+
+    #[test]
+    fn accessors_round_trip() {
+        let k = EventKey::new(3.5, 2, 77);
+        assert_eq!(k.time(), 3.5);
+        assert_eq!(k.time_bits(), 3.5_f64.to_bits());
+        assert_eq!(k.kind(), 2);
+        assert_eq!(k.seq(), 77);
+    }
+}

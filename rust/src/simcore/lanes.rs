@@ -1,0 +1,56 @@
+//! Deterministic parallel lanes (DESIGN.md §14).
+//!
+//! The fleet's `--threads` contract is *digest invariance*: any lane count
+//! (including 1) must produce bit-identical results. That is achievable
+//! only for **value-pure** fan-outs — closures whose result for item `i`
+//! depends on `i` and captured immutable state alone, never on lane
+//! assignment, interleaving, or shared mutable state. [`par_indexed`] is
+//! the one sanctioned shape: results come back in item order, so the
+//! caller's sequential merge (a `BTreeMap` fill, a fold) visits them in an
+//! order independent of how the lanes raced.
+//!
+//! The fleet calibration pre-warm is the proving workload: every
+//! per-(config, engine) cost cell is a pure function of the topology and
+//! spec, computed on whatever lane picks it up, merged in item order.
+
+use crate::util::threadpool::par_map;
+
+pub use crate::util::threadpool::default_threads;
+
+/// Run `f(0..n)` across at most `lanes` worker lanes (min 1) and return
+/// the results **in item order**. `f` must be value-pure (see module
+/// docs); under that contract the output is bit-identical for every lane
+/// count.
+pub fn par_indexed<R: Send, F: Fn(usize) -> R + Sync>(n: usize, lanes: usize, f: F) -> Vec<R> {
+    par_map(n, lanes.max(1), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_lane_count_invariant_for_pure_closures() {
+        // A value-pure closure with enough arithmetic that racy merges
+        // would scramble it; every lane count must agree bit-for-bit.
+        let f = |i: usize| {
+            let x = (i as u64).wrapping_mul(0x9e3779b97f4a7c15) ^ 0xdeadbeef;
+            (i, x, (x as f64).sqrt().to_bits())
+        };
+        let golden = par_indexed(257, 1, f);
+        for lanes in [2, 3, 4, 8] {
+            assert_eq!(par_indexed(257, lanes, f), golden, "{lanes} lanes");
+        }
+    }
+
+    #[test]
+    fn zero_lanes_is_clamped_to_one() {
+        assert_eq!(par_indexed(3, 0, |i| i * 2), vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn empty_fanout_is_a_noop() {
+        let out: Vec<u8> = par_indexed(0, 4, |_| unreachable!());
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,37 @@
+//! `simcore` — the one event core under both discrete-event layers
+//! (DESIGN.md §14; ROADMAP item 3).
+//!
+//! Before this module the repo ran two independent event engines: the
+//! FlowSim slab engine (`sim::flow`, PR 2) and the fleet simulator's
+//! serial `BinaryHeap` loop (`fleet::sim`, PRs 5/7). Both now sit on the
+//! same four primitives:
+//!
+//! * [`Slab`] — dense `u32`-indexed entity store with free-list
+//!   recycling; stable identities are caller fields, indices recycle.
+//! * [`EventKey`] — the shared `time_bits · kind · seq` key encoding.
+//!   Replaces FlowSim's `OrdTime` wrapper and the fleet's
+//!   `Reverse<(u64, u8, u64, usize)>` tuples; the fleet's pinned ordering
+//!   (completions < faults < arrivals < requeues) survives as kind ranks.
+//! * [`EventQueue`] — binary-heap and calendar-queue (time-wheel)
+//!   backends behind one key-ordered interface, observationally
+//!   bit-identical; [`BackendPolicy::Auto`] upgrades to the wheel for
+//!   timer-heavy mixes. `pop_cohort` drains the full equal-timestamp
+//!   cohort so the layers apply same-time events batched (one rate
+//!   recompute / one admission pass per cohort, not per event).
+//! * [`lanes`] — deterministic parallel lanes: value-pure indexed
+//!   fan-outs merged in item order, the contract that keeps `--threads`
+//!   digest-invariant.
+//!
+//! The adapters: `sim::flow::FlowSim` (and `Fabric` above it) and
+//! `fleet::sim::simulate_fleet_faulted` are thin layers over this core;
+//! `sim::reference` and `fleet::reference` stay frozen as differential
+//! oracles (`rust/tests/golden_trace.rs`, `rust/tests/simcore_parity.rs`).
+
+pub mod key;
+pub mod lanes;
+pub mod queue;
+pub mod slab;
+
+pub use key::EventKey;
+pub use queue::{BackendPolicy, EventQueue};
+pub use slab::Slab;

@@ -1,0 +1,532 @@
+//! The event queue: binary heap + calendar-queue (time-wheel) backends
+//! behind one interface, with cohort draining (DESIGN.md §14).
+//!
+//! Every queue operation is defined purely over [`EventKey`] order, so the
+//! two backends are observationally identical — `pop` always returns the
+//! globally minimal key, bit-for-bit, whichever structure holds it. The
+//! wheel exists because timer-heavy mixes (FlowSim timer storms, fleet
+//! backoff/requeue bursts) are near-sorted inserts: a calendar queue turns
+//! the heap's `O(log n)` sift per operation into `O(1)` amortized bucket
+//! pushes plus a short cursor scan.
+//!
+//! # Backend selection
+//!
+//! [`BackendPolicy::Auto`] starts on the heap (small queues — the fleet's
+//! typical few-hundred-event frontier — are fastest there) and upgrades to
+//! the wheel once the queue has ever held [`WHEEL_UPGRADE_LEN`] events.
+//! [`BackendPolicy::HeapOnly`] / [`BackendPolicy::WheelEager`] pin a
+//! backend, used by the differential tests that prove the two produce
+//! bit-identical streams.
+//!
+//! # Calendar-queue invariants
+//!
+//! Virtual bucket `vbucket(t) = min(⌊t / width⌋, VB_CAP)` is monotone in
+//! `t`; physical bucket = `vbucket & mask`. The wheel maintains:
+//!
+//! 1. no stored entry has `vbucket < cursor` (pushes below rewind the
+//!    cursor),
+//! 2. within a bucket, entries are a min-heap on the full key,
+//! 3. `cached_min` is either `None` or the exact global minimum key.
+//!
+//! `peek` scans one wheel revolution from the cursor; a physical bucket
+//! whose top entry maps to the scanned virtual bucket is the global
+//! minimum (any smaller key would map to an already-scanned virtual
+//! bucket, and within its physical bucket it would itself be the top). A
+//! full-revolution miss means the population is sparse relative to the
+//! horizon — the scan falls back to a direct min over bucket tops and the
+//! cursor jumps there. `VB_CAP` saturates far-future times into the last
+//! virtual bucket: ordering degrades to the in-bucket heap, correctness is
+//! untouched.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+use super::key::EventKey;
+
+/// `Auto` upgrades heap → wheel at this outstanding-event count.
+pub const WHEEL_UPGRADE_LEN: usize = 2048;
+/// `WheelEager` upgrades almost immediately (kept > 0 so an empty queue
+/// has no degenerate zero-entry wheel build).
+const WHEEL_EAGER_LEN: usize = 16;
+/// Wheel geometry bounds: power-of-two bucket counts in this range.
+const WHEEL_MIN_BUCKETS: usize = 16;
+const WHEEL_MAX_BUCKETS: usize = 1 << 16;
+/// Rebuild (re-size + re-width) when occupancy exceeds this per bucket.
+const WHEEL_REBUILD_FACTOR: usize = 8;
+/// Virtual-bucket saturation cap for far-future times (2^52 buckets).
+const VB_CAP: u64 = 1 << 52;
+
+/// One stored event; ordered by key alone so payloads need no bounds.
+#[derive(Debug)]
+struct Entry<P> {
+    key: EventKey,
+    payload: P,
+}
+
+impl<P> PartialEq for Entry<P> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+impl<P> Eq for Entry<P> {}
+impl<P> PartialOrd for Entry<P> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<P> Ord for Entry<P> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key.cmp(&other.key)
+    }
+}
+
+/// Which structure backs an [`EventQueue`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendPolicy {
+    /// Heap while small, calendar wheel past [`WHEEL_UPGRADE_LEN`].
+    Auto,
+    /// Binary heap forever (differential baseline).
+    HeapOnly,
+    /// Calendar wheel as soon as it is non-degenerate (differential and
+    /// timer-storm configurations).
+    WheelEager,
+}
+
+enum Backend<P> {
+    Heap(BinaryHeap<Reverse<Entry<P>>>),
+    Wheel(Wheel<P>),
+}
+
+/// A priority queue over [`EventKey`]s with a payload per event.
+pub struct EventQueue<P> {
+    policy: BackendPolicy,
+    backend: Backend<P>,
+}
+
+impl<P> Default for EventQueue<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<P> EventQueue<P> {
+    /// An [`BackendPolicy::Auto`] queue.
+    pub fn new() -> Self {
+        Self::with_policy(BackendPolicy::Auto)
+    }
+
+    pub fn with_policy(policy: BackendPolicy) -> Self {
+        EventQueue {
+            policy,
+            backend: Backend::Heap(BinaryHeap::new()),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.backend {
+            Backend::Heap(h) => h.len(),
+            Backend::Wheel(w) => w.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether the wheel backend is live (observability for tests/benches).
+    pub fn is_wheel(&self) -> bool {
+        matches!(self.backend, Backend::Wheel(_))
+    }
+
+    pub fn push(&mut self, key: EventKey, payload: P) {
+        let entry = Entry { key, payload };
+        let threshold = match self.policy {
+            BackendPolicy::HeapOnly => usize::MAX,
+            BackendPolicy::Auto => WHEEL_UPGRADE_LEN,
+            BackendPolicy::WheelEager => WHEEL_EAGER_LEN,
+        };
+        let upgrade = matches!(&self.backend, Backend::Heap(h) if h.len() + 1 >= threshold);
+        if upgrade {
+            let old = std::mem::replace(&mut self.backend, Backend::Heap(BinaryHeap::new()));
+            let Backend::Heap(h) = old else { unreachable!() };
+            let mut all: Vec<Entry<P>> = h.into_vec().into_iter().map(|Reverse(e)| e).collect();
+            all.push(entry);
+            self.backend = Backend::Wheel(Wheel::build(all));
+            return;
+        }
+        match &mut self.backend {
+            Backend::Heap(h) => h.push(Reverse(entry)),
+            Backend::Wheel(w) => w.push(entry),
+        }
+    }
+
+    /// The minimal outstanding key. `&mut` because the wheel memoizes the
+    /// scan result ([`Wheel::cached_min`]); observationally const.
+    pub fn peek_key(&mut self) -> Option<EventKey> {
+        match &mut self.backend {
+            Backend::Heap(h) => h.peek().map(|Reverse(e)| e.key),
+            Backend::Wheel(w) => w.peek(),
+        }
+    }
+
+    /// Remove and return the event with the minimal key.
+    pub fn pop(&mut self) -> Option<(EventKey, P)> {
+        match &mut self.backend {
+            Backend::Heap(h) => h.pop().map(|Reverse(e)| (e.key, e.payload)),
+            Backend::Wheel(w) => w.pop(),
+        }
+    }
+
+    /// Drain the full equal-timestamp cohort at the queue head into `out`
+    /// (cleared first), in key order. Returns `false` on an empty queue.
+    /// Cohort membership is bit-pattern time equality — exactly the
+    /// equality the simulators' zero-width-step fast paths are defined
+    /// over.
+    pub fn pop_cohort(&mut self, out: &mut Vec<(EventKey, P)>) -> bool {
+        out.clear();
+        let Some((k0, p0)) = self.pop() else {
+            return false;
+        };
+        let tb = k0.time_bits();
+        out.push((k0, p0));
+        while let Some(k) = self.peek_key() {
+            if k.time_bits() != tb {
+                break;
+            }
+            let next = self.pop().expect("peeked key must pop");
+            out.push(next);
+        }
+        true
+    }
+}
+
+/// The calendar-queue backend. See the module docs for the invariants.
+struct Wheel<P> {
+    buckets: Vec<BinaryHeap<Reverse<Entry<P>>>>,
+    /// Seconds per virtual bucket.
+    width: f64,
+    /// `buckets.len() - 1` (power-of-two bucket count).
+    mask: u64,
+    /// Lower bound on every stored entry's virtual bucket.
+    cursor: u64,
+    len: usize,
+    /// Memoized global minimum (invalidated by pop, tightened by push).
+    cached_min: Option<EventKey>,
+}
+
+impl<P> Wheel<P> {
+    /// Size a wheel for `entries` and insert them all. The width spreads
+    /// the current population one-per-bucket across its time span, floored
+    /// so that (a) a same-time population doesn't collapse to zero width
+    /// and (b) `t / width` stays far from `u64` overflow for in-span
+    /// times.
+    fn build(entries: Vec<Entry<P>>) -> Wheel<P> {
+        debug_assert!(!entries.is_empty(), "degenerate zero-entry wheel");
+        let mut t_min = f64::INFINITY;
+        let mut t_max: f64 = 0.0;
+        for e in &entries {
+            t_min = t_min.min(e.key.time());
+            t_max = t_max.max(e.key.time());
+        }
+        let n = entries.len();
+        let width = ((t_max - t_min) / n as f64).max(t_max / 1e12).max(1e-9);
+        let nb = n.next_power_of_two().clamp(WHEEL_MIN_BUCKETS, WHEEL_MAX_BUCKETS);
+        let mut w = Wheel {
+            buckets: (0..nb).map(|_| BinaryHeap::new()).collect(),
+            width,
+            mask: nb as u64 - 1,
+            cursor: 0,
+            len: 0,
+            cached_min: None,
+        };
+        w.cursor = w.vbucket(t_min);
+        for e in entries {
+            w.insert(e);
+        }
+        w
+    }
+
+    /// Monotone time → virtual bucket map (`as u64` saturates; the cap
+    /// keeps far-future times in one final ordered-by-heap bucket).
+    #[inline]
+    fn vbucket(&self, t: f64) -> u64 {
+        ((t / self.width) as u64).min(VB_CAP)
+    }
+
+    fn push(&mut self, e: Entry<P>) {
+        if self.len + 1 >= self.buckets.len() * WHEEL_REBUILD_FACTOR
+            && self.buckets.len() < WHEEL_MAX_BUCKETS
+        {
+            let mut all: Vec<Entry<P>> = Vec::with_capacity(self.len + 1);
+            for b in &mut self.buckets {
+                all.extend(b.drain().map(|Reverse(e)| e));
+            }
+            all.push(e);
+            *self = Wheel::build(all);
+            return;
+        }
+        self.insert(e);
+    }
+
+    fn insert(&mut self, e: Entry<P>) {
+        let vb = self.vbucket(e.key.time());
+        if vb < self.cursor {
+            self.cursor = vb; // push below the frontier: rewind
+        }
+        if let Some(m) = self.cached_min {
+            if e.key < m {
+                self.cached_min = Some(e.key);
+            }
+        }
+        let b = (vb & self.mask) as usize;
+        self.buckets[b].push(Reverse(e));
+        self.len += 1;
+    }
+
+    /// One-revolution cursor scan; falls back to a direct min over bucket
+    /// tops when the population is sparse over the horizon.
+    fn find_min(&self) -> EventKey {
+        debug_assert!(self.len > 0);
+        let nb = self.buckets.len() as u64;
+        for step in 0..nb {
+            let vb = self.cursor + step;
+            let b = (vb & self.mask) as usize;
+            if let Some(Reverse(e)) = self.buckets[b].peek() {
+                if self.vbucket(e.key.time()) == vb {
+                    return e.key;
+                }
+            }
+        }
+        let mut best: Option<EventKey> = None;
+        for bucket in &self.buckets {
+            if let Some(Reverse(e)) = bucket.peek() {
+                if best.map_or(true, |m| e.key < m) {
+                    best = Some(e.key);
+                }
+            }
+        }
+        best.expect("non-empty wheel has a minimum")
+    }
+
+    fn peek(&mut self) -> Option<EventKey> {
+        if self.len == 0 {
+            return None;
+        }
+        if self.cached_min.is_none() {
+            let k = self.find_min();
+            // The minimum's virtual bucket is a valid (tight) cursor: no
+            // entry can map below the global minimum under a monotone map.
+            self.cursor = self.vbucket(k.time());
+            self.cached_min = Some(k);
+        }
+        self.cached_min
+    }
+
+    fn pop(&mut self) -> Option<(EventKey, P)> {
+        let key = self.peek()?;
+        let vb = self.vbucket(key.time());
+        let b = (vb & self.mask) as usize;
+        let Reverse(e) = self.buckets[b].pop().expect("cached min must be present");
+        debug_assert_eq!(e.key, key, "bucket top must be the cached minimum");
+        self.cursor = vb;
+        self.len -= 1;
+        self.cached_min = None;
+        Some((e.key, e.payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{forall, F64Range, PairOf, UsizeRange, VecOf};
+
+    /// Quantize raw (time, kind) pairs so equal-time cohorts actually
+    /// occur; seq = input index keeps every key unique.
+    fn schedule(raw: &[(f64, usize)]) -> Vec<(EventKey, usize)> {
+        raw.iter()
+            .enumerate()
+            .map(|(i, &(t, kind))| {
+                let t = (t * 64.0).floor() / 16.0;
+                (EventKey::new(t, kind as u8, i as u64), i)
+            })
+            .collect()
+    }
+
+    fn gen_sched(max_len: usize) -> VecOf<PairOf<F64Range, UsizeRange>> {
+        VecOf {
+            inner: PairOf(F64Range { lo: 0.0, hi: 1.0 }, UsizeRange { lo: 0, hi: 3 }),
+            min_len: 1,
+            max_len,
+        }
+    }
+
+    #[test]
+    fn prop_random_schedules_dispatch_in_key_order() {
+        forall("simcore-key-order", 11, 16, &gen_sched(200), |raw| {
+            let sched = schedule(raw);
+            let mut q = EventQueue::new();
+            for &(k, p) in &sched {
+                q.push(k, p);
+            }
+            let mut popped = Vec::new();
+            while let Some(e) = q.pop() {
+                popped.push(e);
+            }
+            if popped.len() != sched.len() {
+                return Err(format!("lost events: {} of {}", popped.len(), sched.len()));
+            }
+            for w in popped.windows(2) {
+                if w[0].0 >= w[1].0 {
+                    return Err(format!("out of order: {:?} then {:?}", w[0].0, w[1].0));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_wheel_and_heap_backends_are_bit_identical() {
+        forall("simcore-wheel-vs-heap", 23, 16, &gen_sched(300), |raw| {
+            let sched = schedule(raw);
+            let mut heap = EventQueue::with_policy(BackendPolicy::HeapOnly);
+            let mut wheel = EventQueue::with_policy(BackendPolicy::WheelEager);
+            let mut hs = Vec::new();
+            let mut ws = Vec::new();
+            // Interleave pops with the pushes so later pushes land below
+            // the wheel cursor (the rewind path) mid-stream.
+            for (i, &(k, p)) in sched.iter().enumerate() {
+                heap.push(k, p);
+                wheel.push(k, p);
+                if i % 3 == 2 {
+                    hs.push(heap.pop());
+                    ws.push(wheel.pop());
+                }
+            }
+            while let Some(e) = heap.pop() {
+                hs.push(Some(e));
+            }
+            while let Some(e) = wheel.pop() {
+                ws.push(Some(e));
+            }
+            if hs != ws {
+                return Err(format!("streams diverge:\n  heap  {hs:?}\n  wheel {ws:?}"));
+            }
+            if !heap.is_empty() || !wheel.is_empty() {
+                return Err("residual events after drain".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_cohorts_are_atomic_maximal_and_sorted() {
+        forall("simcore-cohorts", 37, 16, &gen_sched(200), |raw| {
+            let sched = schedule(raw);
+            let mut q = EventQueue::new();
+            for &(k, p) in &sched {
+                q.push(k, p);
+            }
+            let mut cohort = Vec::new();
+            let mut seen = 0usize;
+            let mut last_tb: Option<u64> = None;
+            while q.pop_cohort(&mut cohort) {
+                let tb = cohort[0].0.time_bits();
+                if cohort.iter().any(|(k, _)| k.time_bits() != tb) {
+                    return Err("cohort mixes timestamps".into());
+                }
+                if let Some(prev) = last_tb {
+                    if f64::from_bits(tb) <= f64::from_bits(prev) {
+                        return Err("cohorts not strictly time-ordered (non-maximal)".into());
+                    }
+                }
+                for w in cohort.windows(2) {
+                    if w[0].0 >= w[1].0 {
+                        return Err("cohort not key-sorted internally".into());
+                    }
+                }
+                last_tb = Some(tb);
+                seen += cohort.len();
+            }
+            if seen != sched.len() {
+                return Err("cohorts lost events".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn auto_upgrades_to_wheel_mid_stream_and_stays_sorted() {
+        let mut q = EventQueue::new();
+        let mut golden = EventQueue::with_policy(BackendPolicy::HeapOnly);
+        assert!(!q.is_wheel());
+        let mut x = 1u64; // LCG: deterministic pseudo-random times
+        for i in 0..4000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let t = (x >> 11) as f64 / (1u64 << 53) as f64 * 1e3;
+            let k = EventKey::new(t, (i % 4) as u8, i);
+            q.push(k, i);
+            golden.push(k, i);
+        }
+        assert!(q.is_wheel(), "Auto must upgrade past WHEEL_UPGRADE_LEN");
+        assert!(!golden.is_wheel());
+        assert_eq!(q.len(), 4000);
+        loop {
+            let (a, b) = (q.pop(), golden.pop());
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn wheel_handles_pushes_below_the_cursor() {
+        let mut q = EventQueue::with_policy(BackendPolicy::WheelEager);
+        for i in 0..64u64 {
+            q.push(EventKey::new(1000.0 + i as f64, 0, i), i);
+        }
+        assert!(q.is_wheel());
+        assert_eq!(q.pop().unwrap().0.time(), 1000.0);
+        // A fresh event earlier than everything outstanding must surface
+        // first (cursor rewind), then the stream resumes where it was.
+        q.push(EventKey::new(0.5, 0, 999), 999);
+        assert_eq!(q.peek_key().unwrap().time(), 0.5);
+        assert_eq!(q.pop().unwrap().1, 999);
+        assert_eq!(q.pop().unwrap().0.time(), 1001.0);
+    }
+
+    #[test]
+    fn far_future_events_saturate_but_stay_ordered() {
+        let mut q = EventQueue::with_policy(BackendPolicy::WheelEager);
+        for i in 0..32u64 {
+            q.push(EventKey::new(i as f64 * 1e-6, 0, i), i);
+        }
+        q.push(EventKey::new(1e30, 0, 100), 100);
+        q.push(EventKey::new(2e30, 0, 101), 101);
+        let mut last: Option<EventKey> = None;
+        let mut n = 0;
+        while let Some((k, _)) = q.pop() {
+            if let Some(p) = last {
+                assert!(k > p, "saturated tail must still dispatch in order");
+            }
+            last = Some(k);
+            n += 1;
+        }
+        assert_eq!(n, 34);
+    }
+
+    #[test]
+    fn pop_cohort_on_empty_queue_is_false_and_clears_out() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        let mut out = vec![(EventKey::new(0.0, 0, 0), 1u32)];
+        assert!(!q.pop_cohort(&mut out));
+        assert!(out.is_empty(), "out must be cleared even on empty queues");
+        q.push(EventKey::new(1.0, 0, 0), 7);
+        q.push(EventKey::new(1.0, 1, 1), 8);
+        q.push(EventKey::new(2.0, 0, 2), 9);
+        assert!(q.pop_cohort(&mut out));
+        assert_eq!(out.len(), 2, "both t=1.0 events in one cohort");
+        assert_eq!((out[0].1, out[1].1), (7, 8));
+        assert_eq!(q.len(), 1);
+    }
+}

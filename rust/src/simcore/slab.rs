@@ -1,0 +1,130 @@
+//! Slab entity store with free-list recycling (DESIGN.md §14).
+//!
+//! Generalizes the `FlowSlot` slab PR 2 built inside `sim::flow`: entities
+//! live in a dense `Vec<T>` addressed by `u32` slot index; released slots
+//! are recycled LIFO through a free list, so a steady-state simulation
+//! allocates nothing per entity. Slot indices are *reused*; any stable
+//! identity (flow ids, job ids) is the caller's field inside `T` — the slab
+//! deliberately does not version its slots, matching the engines' existing
+//! contract that a released index is never dereferenced again.
+
+use std::ops::{Index, IndexMut};
+
+/// Dense `u32`-indexed entity store with LIFO slot recycling.
+#[derive(Clone, Debug, Default)]
+pub struct Slab<T> {
+    entries: Vec<T>,
+    free: Vec<u32>,
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Self {
+        Slab {
+            entries: Vec::new(),
+            free: Vec::new(),
+        }
+    }
+
+    /// Store `value`, reusing the most recently released slot if any.
+    pub fn insert(&mut self, value: T) -> u32 {
+        match self.free.pop() {
+            Some(i) => {
+                self.entries[i as usize] = value;
+                i
+            }
+            None => {
+                assert!(self.entries.len() < u32::MAX as usize, "slab full");
+                self.entries.push(value);
+                (self.entries.len() - 1) as u32
+            }
+        }
+    }
+
+    /// Mark a slot free for reuse. The value stays in place until the slot
+    /// is overwritten by a later [`Slab::insert`]; the caller promises not
+    /// to dereference the index again (and not to double-release).
+    pub fn release(&mut self, index: u32) {
+        debug_assert!((index as usize) < self.entries.len(), "release of unknown slot");
+        self.free.push(index);
+    }
+
+    /// Live (non-released) entries.
+    pub fn len(&self) -> usize {
+        self.entries.len() - self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total slots ever allocated (live + free) — the index-space bound
+    /// callers size per-slot side tables (e.g. rate buffers) against.
+    pub fn slot_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// The raw backing storage, including released slots. Per-slot passes
+    /// that walk an external live-index list (the engines' id-sorted
+    /// `active` vectors) borrow this to stay cache-linear.
+    pub fn entries(&self) -> &[T] {
+        &self.entries
+    }
+}
+
+impl<T> Index<usize> for Slab<T> {
+    type Output = T;
+    #[inline]
+    fn index(&self, i: usize) -> &T {
+        &self.entries[i]
+    }
+}
+
+impl<T> IndexMut<usize> for Slab<T> {
+    #[inline]
+    fn index_mut(&mut self, i: usize) -> &mut T {
+        &mut self.entries[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inserts_release_and_recycle_lifo() {
+        let mut s: Slab<&str> = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.slot_count(), 2);
+        s.release(a);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.slot_count(), 2, "released slots stay allocated");
+        let c = s.insert("c");
+        assert_eq!(c, a, "most recently released slot is reused first");
+        assert_eq!(s[c as usize], "c");
+        assert_eq!(s[b as usize], "b");
+        assert_eq!(s.slot_count(), 2, "no growth while the free list feeds inserts");
+    }
+
+    #[test]
+    fn index_mut_writes_in_place() {
+        let mut s: Slab<u64> = Slab::new();
+        let i = s.insert(5);
+        s[i as usize] += 10;
+        assert_eq!(s[i as usize], 15);
+        assert_eq!(s.entries(), &[15]);
+    }
+
+    #[test]
+    fn empty_slab_reports_empty() {
+        let mut s: Slab<u8> = Slab::default();
+        assert!(s.is_empty());
+        let i = s.insert(1);
+        assert!(!s.is_empty());
+        s.release(i);
+        assert!(s.is_empty());
+        assert_eq!(s.slot_count(), 1);
+    }
+}

@@ -1,0 +1,255 @@
+//! Differential parity suite for the shared `simcore` event core
+//! (DESIGN.md §14): both adapters — `sim::flow::FlowSim` and
+//! `fleet::sim::simulate_fleet_faulted` — are replayed against their
+//! frozen pre-port oracles (`sim::reference::RefFlowSim`,
+//! `fleet::reference::ref_simulate_fleet_faulted`) and must agree
+//! bit-for-bit.
+//!
+//! What this adds over `golden_trace.rs` (which already differentials the
+//! flow engines at workflow scale):
+//!
+//! * a timer storm deep enough to cross `WHEEL_UPGRADE_LEN`, so the
+//!   calendar-wheel backend (not just the heap) is the thing being
+//!   diffed against the frozen engine,
+//! * the fleet loop: every scheduler × recovery-policy cell on a faulted
+//!   trace, the pinned 100-job faulted cell across thread counts, and
+//!   the zero-fault bitwise no-op, all against the frozen reference,
+//! * self-blessing golden pins (`rust/tests/golden/*.digest`) so the
+//!   agreed digests also become cross-build regression gates.
+
+mod common;
+
+use cxlfine::fleet::reference::ref_simulate_fleet_faulted;
+use cxlfine::fleet::{
+    faults, mixed_trace_with_xl, pinned_faults_from_baseline, scheduler, simulate_fleet,
+    simulate_fleet_faulted, FaultGen, FaultTrace, FleetTrace, PolicyRef, RecoveryRef,
+};
+use cxlfine::sim::flow::{CapacityModel, Event, FlowSim, ResourceId};
+use cxlfine::sim::reference::RefFlowSim;
+use cxlfine::simcore::queue::WHEEL_UPGRADE_LEN;
+use cxlfine::topology::presets::{config_a, with_dram_capacity};
+use cxlfine::topology::SystemTopology;
+use cxlfine::util::digest::Fnv64;
+use cxlfine::util::units::GIB;
+
+const GB: f64 = 1e9;
+
+fn assert_golden_digest(name: &str, digest: u64) {
+    common::assert_golden_digest("simcore_parity", name, digest);
+}
+
+// ---------------------------------------------------------------------
+// Flow engines: a timer storm that forces the wheel backend.
+// ---------------------------------------------------------------------
+
+/// A minimal common surface over the two flow engines (the full trait
+/// lives in `golden_trace.rs`; this suite only needs the replay calls).
+trait Des {
+    fn add_resource(&mut self, name: &str, model: CapacityModel) -> ResourceId;
+    fn start_flow(&mut self, path: &[ResourceId], bytes: f64, setup: f64, tag: u64);
+    fn add_timer(&mut self, delay: f64, tag: u64);
+    fn next_event(&mut self) -> Option<Event>;
+    fn now(&self) -> f64;
+}
+
+macro_rules! impl_des {
+    ($t:ty) => {
+        impl Des for $t {
+            fn add_resource(&mut self, name: &str, model: CapacityModel) -> ResourceId {
+                <$t>::add_resource(self, name, model)
+            }
+            fn start_flow(&mut self, path: &[ResourceId], bytes: f64, setup: f64, tag: u64) {
+                <$t>::start_flow(self, path, bytes, setup, tag);
+            }
+            fn add_timer(&mut self, delay: f64, tag: u64) {
+                <$t>::add_timer(self, delay, tag);
+            }
+            fn next_event(&mut self) -> Option<Event> {
+                <$t>::next_event(self)
+            }
+            fn now(&self) -> f64 {
+                <$t>::now(self)
+            }
+        }
+    };
+}
+
+impl_des!(FlowSim);
+impl_des!(RefFlowSim);
+
+/// `n_timers` pending timers (well past the auto-upgrade threshold, so
+/// the timers `EventQueue` runs on the calendar wheel) plus a band of
+/// flows; deadlines repeat exactly (`i % 977` scaled) so duplicate
+/// timestamps, bucket cohorts and cursor rewinds are all exercised.
+fn timer_storm<S: Des>(sim: &mut S, n_timers: u64) -> Vec<(Event, u64)> {
+    let dram = sim.add_resource("dram-ctrl", CapacityModel::Fixed(204.0 * GB));
+    let aic = sim.add_resource(
+        "aic-tx",
+        CapacityModel::Contended { single: 54.0 * GB, contended: 26.0 * GB },
+    );
+    for i in 0..n_timers {
+        sim.add_timer((i % 977) as f64 * 1e-3, i);
+    }
+    for i in 0..64u64 {
+        let path = if i % 2 == 0 { [dram] } else { [aic] };
+        let setup = 1e-5 * (i % 9) as f64; // zero-setup flows activate inline
+        sim.start_flow(&path, 1e8 + i as f64 * 1e6, setup, 10_000 + i);
+    }
+    let mut out = Vec::new();
+    while let Some(e) = sim.next_event() {
+        out.push((e, sim.now().to_bits()));
+    }
+    out
+}
+
+fn stream_digest(events: &[(Event, u64)]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_u64(events.len() as u64);
+    for (e, now_bits) in events {
+        match e {
+            Event::FlowDone { id, tag } => {
+                h.write_u64(0).write_u64(id.0).write_u64(*tag);
+            }
+            Event::TimerFired { id, tag } => {
+                h.write_u64(1).write_u64(id.0).write_u64(*tag);
+            }
+        }
+        h.write_u64(*now_bits);
+    }
+    h.finish()
+}
+
+#[test]
+fn timer_storm_on_the_wheel_backend_is_bit_identical_to_reference() {
+    const STORM: u64 = 3_200;
+    assert!(
+        STORM as usize > WHEEL_UPGRADE_LEN,
+        "the storm must cross the wheel auto-upgrade threshold"
+    );
+    let mut new_sim = FlowSim::new();
+    let mut ref_sim = RefFlowSim::new();
+    let a = timer_storm(&mut new_sim, STORM);
+    let b = timer_storm(&mut ref_sim, STORM);
+    assert_eq!(a.len(), b.len(), "timer storm: event counts diverge");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(
+            x,
+            y,
+            "timer storm: event #{i} diverges — new {:?} @ {} vs reference {:?} @ {}",
+            x.0,
+            f64::from_bits(x.1),
+            y.0,
+            f64::from_bits(y.1)
+        );
+    }
+    assert_eq!(a.len() as u64, STORM + 64, "every timer and flow must complete");
+    assert_golden_digest("simcore_timer_storm_events", stream_digest(&a));
+}
+
+// ---------------------------------------------------------------------
+// Fleet loop: simcore adapter vs the frozen pre-port reference.
+// ---------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn assert_fleet_pair(
+    topo: &SystemTopology,
+    trace: &FleetTrace,
+    policy: &PolicyRef,
+    fault_trace: &FaultTrace,
+    recovery: &RecoveryRef,
+    threads: usize,
+    what: &str,
+) -> u64 {
+    let new = simulate_fleet_faulted(topo, trace, policy, fault_trace, recovery, threads);
+    let old = ref_simulate_fleet_faulted(topo, trace, policy, fault_trace, recovery, threads);
+    assert_eq!(
+        new.digest(),
+        old.digest(),
+        "{what}: the simcore adapter loop drifted from the frozen reference"
+    );
+    new.digest()
+}
+
+#[test]
+fn fleet_matrix_every_scheduler_and_recovery_matches_the_frozen_loop() {
+    let topo = with_dram_capacity(config_a(), 128 * GIB);
+    let trace = mixed_trace_with_xl(&topo, 1013, 28, 2);
+    assert_eq!(trace.jobs.len(), 30);
+    // A seeded synthetic fault trace spanning the arrival window, so the
+    // degradation / evacuation / requeue arms all run on both loops.
+    let horizon =
+        trace.jobs.last().map(|j| j.arrival_s).unwrap_or(0.0).max(1.0);
+    let fault_trace = FaultGen::new(29, 6, horizon).generate(&topo);
+    fault_trace.validate(&topo).unwrap();
+    for policy in scheduler::registry() {
+        for recovery in faults::registry() {
+            assert_fleet_pair(
+                &topo,
+                &trace,
+                &policy,
+                &fault_trace,
+                &recovery,
+                2,
+                &format!("30-job matrix {}/{}", policy.name(), recovery.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn fleet_pinned_faulted_cell_matches_reference_across_thread_counts() {
+    let topo = with_dram_capacity(config_a(), 128 * GIB);
+    let trace = mixed_trace_with_xl(&topo, 1007, 92, 8);
+    assert_eq!(trace.jobs.len(), 100);
+    let policy = scheduler::by_name("placement-aware").unwrap();
+    let baseline = simulate_fleet(&topo, &trace, &policy, 2);
+    let fault_trace = pinned_faults_from_baseline(&topo, &baseline);
+    fault_trace.validate(&topo).unwrap();
+    let recovery = faults::by_name("evacuate").unwrap();
+    let d1 = assert_fleet_pair(
+        &topo,
+        &trace,
+        &policy,
+        &fault_trace,
+        &recovery,
+        1,
+        "pinned evacuate, 1 thread",
+    );
+    let d4 = simulate_fleet_faulted(&topo, &trace, &policy, &fault_trace, &recovery, 4);
+    assert_eq!(d1, d4.digest(), "thread count must not change the digest");
+    assert_golden_digest("simcore_fleet_pinned_evacuate", d1);
+}
+
+#[test]
+fn fleet_zero_fault_trace_is_a_bitwise_noop_on_both_loops() {
+    let topo = with_dram_capacity(config_a(), 128 * GIB);
+    let trace = mixed_trace_with_xl(&topo, 1007, 10, 0);
+    assert_eq!(trace.jobs.len(), 10);
+    let policy = scheduler::by_name("backfill").unwrap();
+    let empty = FaultTrace::empty();
+    let mut digests = Vec::new();
+    for recovery in faults::registry() {
+        let d = assert_fleet_pair(
+            &topo,
+            &trace,
+            &policy,
+            &empty,
+            &recovery,
+            2,
+            &format!("zero-fault {}", recovery.name()),
+        );
+        digests.push(d);
+    }
+    // The digest excludes the recovery-policy name, so a zero-fault run
+    // is one bit pattern whatever the recovery policy.
+    assert!(
+        digests.windows(2).all(|w| w[0] == w[1]),
+        "zero-fault digests must agree across recovery policies: {digests:x?}"
+    );
+    let faultless = simulate_fleet(&topo, &trace, &policy, 2);
+    assert_eq!(
+        faultless.digest(),
+        digests[0],
+        "simulate_fleet must equal the zero-fault faulted run"
+    );
+}

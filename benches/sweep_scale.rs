@@ -1,0 +1,254 @@
+//! Incremental-sweep scale bench: cells/sec and cache hit-rates for the
+//! legacy uncached sweep, a cold incremental sweep, and a warm re-sweep
+//! on the same [`EvalCtx`], at small / medium / large engine × schedule
+//! grids on the §V-shaped hosts (config-a baseline, 128 GiB CXL host).
+//!
+//! Gates (enforced in CI via `--smoke`):
+//! * every path — legacy, cold cached, warm cached — produces the same
+//!   `SweepResult::digest` at every grid, and the digest is invariant in
+//!   the worker count (the cache-transparency contract pinned in
+//!   `rust/tests/sweep_incremental.rs`);
+//! * a warm re-sweep computes nothing: zero new cache misses;
+//! * full (non-smoke) runs enforce the ≥5× wall-clock gate of the warm
+//!   re-sweep against the legacy path at the pinned 8-context ×
+//!   4-batch grid.
+//!
+//! Results land in `bench_out/sweep_scale/` and in `BENCH_sweep.json`
+//! (override: `CXLFINE_BENCH_SWEEP_OUT`), uploaded by the CI bench-smoke
+//! job so the sweep-throughput trajectory is recorded alongside the DES,
+//! schedule, capacity and fleet ones.
+
+use std::time::Instant;
+
+use cxlfine::mem::{EngineRef, Policy};
+use cxlfine::model::presets::qwen25_7b;
+use cxlfine::offload::{
+    schedules, sweep_grid_matrix_nocache, sweep_grid_matrix_with_ctx, EvalCtx, ScheduleRef,
+    SweepResult,
+};
+use cxlfine::topology::presets::{config_a, with_dram_capacity};
+use cxlfine::trow;
+use cxlfine::util::bench::BenchReport;
+use cxlfine::util::json::{Json, JsonObj};
+use cxlfine::util::table::Table;
+use cxlfine::util::units::GIB;
+
+struct Grid {
+    name: &'static str,
+    contexts: Vec<usize>,
+    batches: Vec<usize>,
+    /// The full-run ≥5× warm-path gate applies only to the pinned
+    /// 8-context × 4-batch grid named by the PR-9 issue.
+    gated: bool,
+}
+
+fn grids(smoke: bool) -> Vec<Grid> {
+    let mut out = vec![
+        Grid {
+            name: "small",
+            contexts: vec![4096],
+            batches: vec![4, 8],
+            gated: false,
+        },
+        Grid {
+            name: "medium",
+            contexts: vec![4096, 8192],
+            batches: vec![4, 8],
+            gated: false,
+        },
+    ];
+    if !smoke {
+        out.push(Grid {
+            name: "large",
+            contexts: vec![1024, 2048, 4096, 6144, 8192, 12288, 16384, 24576],
+            batches: vec![1, 2, 4, 8],
+            gated: true,
+        });
+    }
+    out
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut report = BenchReport::new("sweep_scale");
+    let base = config_a();
+    let cxl = with_dram_capacity(config_a(), 128 * GIB);
+    let model = qwen25_7b();
+    let threads = cxlfine::util::threadpool::default_threads();
+
+    let policies: Vec<EngineRef> = vec![
+        EngineRef::from(Policy::DramOnly),
+        EngineRef::from(Policy::NaiveInterleave),
+        EngineRef::from(Policy::CxlAware { striping: true }),
+    ];
+    let scheds: Vec<ScheduleRef> = vec![
+        schedules::by_name("zero-offload").unwrap(),
+        schedules::by_name("lora").unwrap(),
+    ];
+
+    let mut json_grids = Vec::new();
+    for grid in grids(smoke) {
+        let n_cells = grid.contexts.len() * grid.batches.len();
+        let n_cols = n_cells * policies.len() * scheds.len();
+
+        let run_legacy = |nthreads: usize| -> SweepResult {
+            sweep_grid_matrix_nocache(
+                &base,
+                &cxl,
+                &model,
+                1,
+                &grid.contexts,
+                &grid.batches,
+                &policies,
+                &scheds,
+                nthreads,
+            )
+        };
+        let run_cached = |ctx: &EvalCtx, nthreads: usize| -> SweepResult {
+            sweep_grid_matrix_with_ctx(
+                ctx,
+                &base,
+                &cxl,
+                &model,
+                1,
+                &grid.contexts,
+                &grid.batches,
+                &policies,
+                &scheds,
+                nthreads,
+            )
+        };
+
+        let t0 = Instant::now();
+        let legacy = run_legacy(threads);
+        let wall_legacy = t0.elapsed().as_secs_f64().max(1e-9);
+
+        let ctx = EvalCtx::new();
+        let t0 = Instant::now();
+        let cold = run_cached(&ctx, threads);
+        let wall_cold = t0.elapsed().as_secs_f64().max(1e-9);
+        let stats_cold = ctx.stats();
+
+        let t0 = Instant::now();
+        let warm = run_cached(&ctx, threads);
+        let wall_warm = t0.elapsed().as_secs_f64().max(1e-9);
+        let stats_warm = ctx.stats();
+
+        // Transparency gates, always on (smoke included): the cache and
+        // the dispatch order may only change wall-clock, never a byte.
+        assert_eq!(
+            legacy.digest(),
+            cold.digest(),
+            "{}: cold cached sweep drifted from the legacy path",
+            grid.name
+        );
+        assert_eq!(
+            cold.digest(),
+            warm.digest(),
+            "{}: warm re-sweep drifted from its own cold pass",
+            grid.name
+        );
+        assert_eq!(
+            stats_warm.misses(),
+            stats_cold.misses(),
+            "{}: a warm re-sweep must not compute anything",
+            grid.name
+        );
+        let single = run_cached(&EvalCtx::new(), 1);
+        assert_eq!(
+            single.digest(),
+            legacy.digest(),
+            "{}: digests must be invariant in the worker count",
+            grid.name
+        );
+
+        let cold_speedup = wall_legacy / wall_cold;
+        let warm_speedup = wall_legacy / wall_warm;
+        if !smoke && grid.gated {
+            assert!(
+                warm_speedup >= 5.0,
+                "{}-grid warm re-sweep gate: expected >=5x vs the legacy sweep, \
+                 got {warm_speedup:.2}x ({wall_legacy:.3}s vs {wall_warm:.3}s)",
+                grid.name
+            );
+        }
+
+        let hit_rate = |h: u64, m: u64| -> f64 {
+            if h + m == 0 {
+                0.0
+            } else {
+                h as f64 / (h + m) as f64
+            }
+        };
+        let mut t = Table::new(&["path", "wall", "cells/s", "speedup", "exec hit", "digest"])
+            .left(0);
+        let mut raws = Vec::new();
+        for (path, wall, stats) in [
+            ("legacy", wall_legacy, None),
+            ("cold", wall_cold, Some(stats_cold)),
+            ("warm", wall_warm, Some(stats_warm)),
+        ] {
+            let exec_hit = stats
+                .map(|s| hit_rate(s.exec_hits, s.exec_misses))
+                .unwrap_or(0.0);
+            t.row(trow![
+                path,
+                format!("{wall:.3}s"),
+                format!("{:.1}", n_cells as f64 / wall),
+                format!("{:.2}x", wall_legacy / wall),
+                if stats.is_some() {
+                    format!("{:.0}%", 100.0 * exec_hit)
+                } else {
+                    "-".to_string()
+                },
+                format!("{:016x}", legacy.digest())
+            ]);
+            let mut cell = JsonObj::new();
+            cell.set("path", path);
+            cell.set("wall_s", wall);
+            cell.set("cells_per_sec", n_cells as f64 / wall);
+            cell.set("speedup_vs_legacy", wall_legacy / wall);
+            if let Some(s) = stats {
+                cell.set("probe_hit_rate", hit_rate(s.probe_hits, s.probe_misses));
+                cell.set("plan_hit_rate", hit_rate(s.plan_hits, s.plan_misses));
+                cell.set("sched_hit_rate", hit_rate(s.sched_hits, s.sched_misses));
+                cell.set("exec_hit_rate", exec_hit);
+                cell.set("cache_summary", s.summary_line());
+            }
+            cell.set("digest", format!("{:016x}", legacy.digest()));
+            raws.push(Json::Obj(cell));
+        }
+        println!(
+            "{} grid: {n_cells} cells x {} cols, cold {cold_speedup:.2}x, warm {warm_speedup:.2}x",
+            grid.name,
+            n_cols / n_cells
+        );
+        report.section(grid.name, t, Json::Arr(raws.clone()));
+        json_grids.push(Json::Obj({
+            let mut o = JsonObj::new();
+            o.set("grid", grid.name);
+            o.set("n_cells", n_cells);
+            o.set("n_columns", n_cols);
+            o.set("cold_speedup", cold_speedup);
+            o.set("warm_speedup", warm_speedup);
+            o.set("digest", format!("{:016x}", legacy.digest()));
+            o.set("paths", Json::Arr(raws));
+            o
+        }));
+    }
+
+    let mut root = JsonObj::new();
+    root.set("bench", "sweep_scale");
+    root.set("smoke", smoke);
+    root.set("model", model.name.as_str());
+    root.set("threads", threads);
+    root.set("grids", Json::Arr(json_grids));
+    let out =
+        std::env::var("CXLFINE_BENCH_SWEEP_OUT").unwrap_or_else(|_| "BENCH_sweep.json".into());
+    let payload = Json::Obj(root).to_string_pretty();
+    match std::fs::write(&out, &payload) {
+        Ok(()) => println!("\n[sweep_scale] wrote {out}"),
+        Err(e) => eprintln!("warn: could not write {out}: {e}"),
+    }
+    report.finish();
+}

@@ -8,7 +8,8 @@ use crate::mem::{engine, EngineRef, Policy};
 use crate::model::footprint::{Footprint, Workload};
 use crate::model::{presets as mpresets, ModelConfig};
 use crate::offload::{
-    schedules, simulate_iteration_report, sweep_grid_matrix, MemoryPlan, RunConfig, ScheduleRef,
+    schedules, simulate_iteration_report, sweep_grid_matrix_nocache, sweep_grid_matrix_with_ctx,
+    EvalCtx, MemoryPlan, RunConfig, ScheduleRef,
 };
 use crate::optim::{adam_step, AdamHp, AdamState};
 use crate::sim::memmodel::{OptLayout, OptimizerMemModel};
@@ -337,7 +338,11 @@ pub fn sweep(args: &[String]) -> Result<(), CliDone> {
             "comma list of fine-tuning schedules to sweep (engine × schedule matrix)",
         )
         .opt("json", "", "also write the full sweep (with digest) to this JSON file")
-        .flag("striping", "use the striped CXL-aware policy as 'ours'");
+        .flag("striping", "use the striped CXL-aware policy as 'ours'")
+        .flag(
+            "no-cache",
+            "evaluate through the legacy uncached path (bit-identical results, no memoization)",
+        );
     let a = parse(spec, args)?;
     let base_topo = get_topo(a.get("preset").unwrap(), None)?;
     let cxl_topo = get_topo(a.get("preset").unwrap(), a.get("dram"))?;
@@ -377,17 +382,40 @@ pub fn sweep(args: &[String]) -> Result<(), CliDone> {
         .collect::<Result<_, _>>()?;
     let policies: Vec<EngineRef> =
         vec![Policy::DramOnly.into(), Policy::NaiveInterleave.into(), ours];
-    let res = sweep_grid_matrix(
-        &base_topo,
-        &cxl_topo,
-        &model,
-        gpus,
-        &contexts,
-        &batches,
-        &policies,
-        &schedules,
-        crate::util::threadpool::default_threads(),
-    );
+    let nthreads = crate::util::threadpool::default_threads();
+    // Default path: the incremental engine (offload::evalcache) — memoized
+    // probes/plans/schedules/DES runs, per-worker arenas, heaviest-cell-
+    // first dispatch. --no-cache forces the legacy path; results are
+    // bit-identical either way (same digest), only the work differs.
+    let (res, cache_line) = if a.flag("no-cache") {
+        let res = sweep_grid_matrix_nocache(
+            &base_topo,
+            &cxl_topo,
+            &model,
+            gpus,
+            &contexts,
+            &batches,
+            &policies,
+            &schedules,
+            nthreads,
+        );
+        (res, None)
+    } else {
+        let ctx = EvalCtx::new();
+        let res = sweep_grid_matrix_with_ctx(
+            &ctx,
+            &base_topo,
+            &cxl_topo,
+            &model,
+            gpus,
+            &contexts,
+            &batches,
+            &policies,
+            &schedules,
+            nthreads,
+        );
+        (res, Some(ctx.stats().summary_line()))
+    };
     // Column 0 (DRAM baseline × first schedule) is the normalization root;
     // every other engine × schedule column reports % of it.
     let mut headers: Vec<String> = vec!["context".into(), "batch".into()];
@@ -430,6 +458,9 @@ pub fn sweep(args: &[String]) -> Result<(), CliDone> {
                 hi * 100.0
             );
         }
+    }
+    if let Some(line) = cache_line {
+        println!("{line}");
     }
     if let Some(path) = a.get("json").filter(|s| !s.is_empty()) {
         std::fs::write(path, res.to_json().to_string_pretty())

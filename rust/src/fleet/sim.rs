@@ -70,6 +70,7 @@ use crate::offload::{
 };
 use crate::simcore::{lanes, EventKey, EventQueue};
 use crate::topology::SystemTopology;
+use crate::util::memo::Memo;
 use crate::util::units::fmt_bytes;
 
 /// Calibrated price of one iteration of a (configuration, engine) pair,
@@ -129,18 +130,22 @@ fn compute_cost(
 /// placement-independent and always measured on the pristine topology;
 /// costs are keyed by the [`Degradation::key`] of the machine they were
 /// priced on (empty for pristine, so the zero-fault cache is unchanged).
+///
+/// Both layers are [`crate::util::memo::Memo`] tables — the same
+/// value-pure cache implementation the sweep's
+/// [`crate::offload::evalcache::EvalCtx`] builds on.
 pub struct Calibrator<'t> {
     topo: &'t SystemTopology,
-    profiles: BTreeMap<String, Option<RunProfiles>>,
-    costs: BTreeMap<String, Option<CalCost>>,
+    profiles: Memo<String, Option<RunProfiles>>,
+    costs: Memo<String, Option<CalCost>>,
 }
 
 impl<'t> Calibrator<'t> {
     pub fn new(topo: &'t SystemTopology) -> Self {
         Self {
             topo,
-            profiles: BTreeMap::new(),
-            costs: BTreeMap::new(),
+            profiles: Memo::new(),
+            costs: Memo::new(),
         }
     }
 
@@ -149,9 +154,7 @@ impl<'t> Calibrator<'t> {
     pub fn profiles(&mut self, spec: &JobSpec) -> Option<RunProfiles> {
         let topo = self.topo;
         self.profiles
-            .entry(spec.config_key())
-            .or_insert_with(|| compute_profiles(topo, spec))
-            .clone()
+            .get_or_insert_with(spec.config_key(), || compute_profiles(topo, spec))
     }
 
     /// Cached calibrated cost of (configuration, engine) on the pristine
@@ -174,7 +177,7 @@ impl<'t> Calibrator<'t> {
     ) -> Option<CalCost> {
         let key = format!("{}|{engine_name}|{deg_key}", spec.config_key());
         if let Some(v) = self.costs.get(&key) {
-            return *v;
+            return v;
         }
         let prof = self.profiles(spec);
         let v = compute_cost(topo, spec, engine_name, prof.as_ref());
@@ -204,11 +207,12 @@ impl<'t> Calibrator<'t> {
             (prof, cost)
         });
         for (spec, (prof, cost)) in cells.iter().zip(results) {
-            self.profiles.entry(spec.config_key()).or_insert(prof);
+            // Seeding is counter-neutral and never overwrites a value the
+            // lazy path already cached.
+            self.profiles.seed(spec.config_key(), prof);
             // Trailing '|' = the empty pristine degradation key.
             self.costs
-                .entry(format!("{}|{}|", spec.config_key(), spec.engine))
-                .or_insert(cost);
+                .seed(format!("{}|{}|", spec.config_key(), spec.engine), cost);
         }
     }
 }
@@ -274,12 +278,14 @@ struct ProbeCtx {
     /// Plan/reservation memo. `MemoryPlan::build_with_profiles` is a pure
     /// function of (config, engine, accounting, degradation, exact free
     /// vector), so a hit replays the reservation — or the byte-identical
-    /// refusal string — without building anything.
+    /// refusal string — without building anything. Bounded by
+    /// [`PLAN_MEMO_CAP`]: a [`Memo`] clears itself wholesale when full,
+    /// the same shared implementation the sweep's `EvalCtx` uses.
     #[allow(clippy::type_complexity)]
-    plans: BTreeMap<(u32, u16, bool, u32, Vec<u64>), Result<PlanReservation, String>>,
+    plans: Memo<(u32, u16, bool, u32, Vec<u64>), Result<PlanReservation, String>>,
     /// Calibrated price per (config, engine, degradation epoch): spares
     /// the per-call string key the calibrator itself would format.
-    costs: BTreeMap<(u32, u16, u32), Option<CalCost>>,
+    costs: Memo<(u32, u16, u32), Option<CalCost>>,
     /// Bumped at every fault. Epoch-keyed memo entries from a *restored*
     /// equivalent degradation state recompute rather than hit — the
     /// functions are pure, so the recomputed values cannot differ.
@@ -292,8 +298,8 @@ impl ProbeCtx {
             view: topo.clone(),
             engines: EngineInterner::default(),
             blocked: BTreeSet::new(),
-            plans: BTreeMap::new(),
-            costs: BTreeMap::new(),
+            plans: Memo::with_cap(PLAN_MEMO_CAP),
+            costs: Memo::new(),
             deg_epoch: 0,
         }
     }
@@ -385,7 +391,7 @@ impl AdmissionProbe for Probe<'_, '_> {
         let epoch = self.ctx.deg_epoch;
         let plan_key = (cfg_id, eng_id, lifetime, epoch, self.free.clone());
         let outcome = if let Some(v) = self.ctx.plans.get(&plan_key) {
-            v.clone()
+            v
         } else {
             let engine = self.ctx.engines.name(eng_id).to_string();
             let v = match self.cal.profiles(spec).zip(resolve_cfg(spec, &engine)) {
@@ -405,9 +411,7 @@ impl AdmissionProbe for Probe<'_, '_> {
                     }
                 }
             };
-            if self.ctx.plans.len() >= PLAN_MEMO_CAP {
-                self.ctx.plans.clear();
-            }
+            // The memo enforces PLAN_MEMO_CAP itself (clear-when-full).
             self.ctx.plans.insert(plan_key, v.clone());
             v
         };
@@ -423,7 +427,7 @@ impl AdmissionProbe for Probe<'_, '_> {
         // a real executor run, wasted on candidates whose plan fails.
         let cost_key = (cfg_id, eng_id, self.ctx.deg_epoch);
         let cost = if let Some(c) = self.ctx.costs.get(&cost_key) {
-            *c
+            c
         } else {
             let engine = self.ctx.engines.name(eng_id).to_string();
             let c = self.cal.cost_on(self.base, self.deg_key, spec, &engine);

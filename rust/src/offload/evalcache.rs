@@ -1,0 +1,543 @@
+//! The incremental sweep engine's shared evaluation cache.
+//!
+//! A grid sweep decomposes into three pure passes per (cell, engine,
+//! schedule) combination — profile probe, plan build, schedule build +
+//! DES run — and every pass is a pure function of a small digestible key:
+//!
+//! * **probe** — [`MemoryPlan::profile_run`] depends on the config alone
+//!   (placement-independent, pinned by `profiles_are_placement_independent`),
+//!   so its memo key is `(cfg-dims, topo)` with the engine *excluded*;
+//! * **plan** — [`MemoryPlan::build`] depends on `(cfg-dims, engine,
+//!   topo)`. The memo stores the plan's *shape digest* (or the
+//!   [`super::plan::PlanError`] reason for OOM cells), not the plan itself
+//!   — plans borrow the topology and are cheap to rebuild on the rare
+//!   cache path that needs one (a schedule miss);
+//! * **schedule / exec** — builders are pure functions of `(topo, cfg,
+//!   plan)` and read the plan only through placement observables (layouts,
+//!   fractions, footprint), so `(schedule, cfg-dims, plan-shape, topo)`
+//!   keys both the built DAG and its executed [`PhaseBreakdown`].
+//!
+//! Because every memoized value is *value-pure* (the cache can only
+//! substitute a bitwise-equal result), sweep output is invariant in cache
+//! state, worker count, and evaluation order — the property the
+//! `sweep_incremental` suite and the `sweep_scale` bench pin.
+//!
+//! DES runs draw on a per-worker thread-local [`FlowSim`] arena through
+//! [`crate::offload::executor::execute_reusing`] (tracing off), so the
+//! hot path re-allocates neither the simulator slabs nor the span
+//! strings. An [`EvalCtx`] is the sweep-layer sibling of the fleet
+//! simulator's `Calibrator`/`ProbeCtx`, and all four memo layers share
+//! one implementation: [`crate::util::memo::Memo`].
+
+use std::cell::RefCell;
+use std::sync::{Arc, Mutex};
+
+use super::executor::execute_reusing;
+use super::metrics::PhaseBreakdown;
+use super::plan::{MemoryPlan, RunConfig, RunProfiles};
+use super::schedule::Schedule;
+use super::schedules::ScheduleRef;
+use crate::mem::EngineRef;
+use crate::model::footprint::Workload;
+use crate::model::ModelConfig;
+use crate::sim::flow::FlowSim;
+use crate::sim::memmodel::AccessMode;
+use crate::topology::{MemKind, SystemTopology};
+use crate::util::digest::Fnv64;
+use crate::util::memo::Memo;
+
+/// Probe memo key: `(cfg-dims digest, topo digest)` — no engine.
+type ProbeKey = (u64, u64);
+/// Plan memo key: `(cfg-dims digest, engine name, topo digest)`.
+type PlanKey = (u64, String, u64);
+/// Schedule / exec memo key:
+/// `(schedule name, cfg-dims digest, plan-shape digest, topo digest)`.
+type SchedKey = (String, u64, u64, u64);
+
+/// Digest of every timing-relevant topology field. Two topologies with
+/// equal digests produce bitwise-equal simulations, so the digest stands
+/// in for the topology in every memo key.
+pub fn topo_digest(topo: &SystemTopology) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_str(&topo.name);
+    h.write_str(&topo.cpu.name)
+        .write_u64(topo.cpu.cores as u64)
+        .write_u64(topo.cpu.llc_bytes)
+        .write_f64(topo.cpu.adam_compute_ns_per_elem)
+        .write_u64(topo.cpu.optimizer_threads as u64);
+    h.write_u64(topo.mem_nodes.len() as u64);
+    for n in &topo.mem_nodes {
+        h.write_str(&n.name)
+            .write_u64(match n.kind {
+                MemKind::LocalDram => 0,
+                MemKind::CxlAic => 1,
+            })
+            .write_u64(n.capacity)
+            .write_f64(n.latency_ns)
+            .write_f64(n.peak_bw)
+            .write_f64(n.cpu_stream_bw);
+        match n.link {
+            None => h.write_u64(0),
+            Some(l) => h.write_u64(1).write_u64(l.0 as u64),
+        };
+    }
+    h.write_u64(topo.links.len() as u64);
+    for l in &topo.links {
+        h.write_str(&l.name)
+            .write_f64(l.per_dir_bw)
+            .write_f64(l.single_stream_eff)
+            .write_f64(l.contended_eff);
+    }
+    h.write_u64(topo.gpus.len() as u64);
+    for g in &topo.gpus {
+        h.write_str(&g.name)
+            .write_f64(g.bf16_flops)
+            .write_f64(g.mfu)
+            .write_u64(g.hbm_bytes)
+            .write_u64(g.link.0 as u64);
+    }
+    h.finish()
+}
+
+/// Digest of every run dimension except the placement engine: model
+/// shape, workload, prefetch depth, and the config's *own* schedule name
+/// (the one the plan builder profiles against). Engines key the plan
+/// memo separately; the swept schedule keys the exec memo separately.
+pub fn cfg_key(cfg: &RunConfig) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_str(&cfg.model.name)
+        .write_u64(cfg.model.layers as u64)
+        .write_u64(cfg.model.hidden as u64)
+        .write_u64(cfg.model.heads as u64)
+        .write_u64(cfg.model.kv_heads as u64)
+        .write_u64(cfg.model.head_dim as u64)
+        .write_u64(cfg.model.ffn_hidden as u64)
+        .write_u64(cfg.model.vocab as u64)
+        .write_u64(u64::from(cfg.model.tie_embeddings));
+    h.write_u64(cfg.workload.n_gpus as u64)
+        .write_u64(cfg.workload.batch as u64)
+        .write_u64(cfg.workload.context as u64)
+        .write_u64(cfg.prefetch_depth as u64);
+    h.write_str(cfg.schedule.name());
+    h.finish()
+}
+
+/// Digest of everything a schedule builder can observe in a built plan:
+/// region names, exact per-node byte shards, access modes, and committed
+/// lifetimes, in allocation order. Two plans with equal shape digests
+/// drive builders to identical schedules (builders read plans only via
+/// `opt_layout` / `region_layout` / `*_fractions` / the footprint, all of
+/// which are functions of these fields plus the config).
+pub fn plan_shape_digest(plan: &MemoryPlan<'_>) -> u64 {
+    let mut h = Fnv64::new();
+    let mut count = 0u64;
+    for r in plan.alloc.regions() {
+        count += 1;
+        h.write_str(&r.name).write_u64(r.bytes);
+        h.write_u64(r.placement.parts.len() as u64);
+        for (n, b) in &r.placement.parts {
+            h.write_u64(n.0 as u64).write_u64(*b);
+        }
+        h.write_u64(match r.placement.mode {
+            AccessMode::Interleaved => 0,
+            AccessMode::Partitioned => 1,
+        });
+        match r.lifetime {
+            None => h.write_u64(0),
+            Some(l) => h
+                .write_u64(1)
+                .write_u64(u64::from(l.birth_phase))
+                .write_u64(u64::from(l.death_phase)),
+        };
+    }
+    h.write_u64(count);
+    h.finish()
+}
+
+thread_local! {
+    /// Per-worker DES arena: slabs, heaps and maxmin scratch survive
+    /// across runs (`FlowSim::reset` pins reuse as bitwise-fresh).
+    static ARENA: RefCell<FlowSim> = RefCell::new(FlowSim::new());
+}
+
+/// Run `sched` inside the calling worker's thread-local arena, tracing
+/// off. Bitwise-identical to `simulate_iteration`'s execute-and-reduce
+/// (pinned by `reused_arena_without_tracing_matches_fresh_execute_bitwise`
+/// and the sweep parity suite).
+fn run_in_arena(topo: &SystemTopology, sched: &Schedule) -> PhaseBreakdown {
+    ARENA.with(|a| {
+        let sim = std::mem::replace(&mut *a.borrow_mut(), FlowSim::new());
+        let (ex, sim) = execute_reusing(topo, sched, sim, false);
+        *a.borrow_mut() = sim;
+        ex.report.to_breakdown()
+    })
+}
+
+/// Hit/miss counters of every [`EvalCtx`] memo layer, snapshotted by
+/// [`EvalCtx::stats`] (printed by `cxlfine sweep` and recorded by the
+/// `sweep_scale` bench).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub probe_hits: u64,
+    pub probe_misses: u64,
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub sched_hits: u64,
+    pub sched_misses: u64,
+    pub exec_hits: u64,
+    pub exec_misses: u64,
+}
+
+impl CacheStats {
+    pub fn hits(&self) -> u64 {
+        self.probe_hits + self.plan_hits + self.sched_hits + self.exec_hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.probe_misses + self.plan_misses + self.sched_misses + self.exec_misses
+    }
+
+    /// The one-line summary `cxlfine sweep` prints after the table.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "cache: probe {}/{} plan {}/{} sched {}/{} exec {}/{} (hits/lookups)",
+            self.probe_hits,
+            self.probe_hits + self.probe_misses,
+            self.plan_hits,
+            self.plan_hits + self.plan_misses,
+            self.sched_hits,
+            self.sched_hits + self.sched_misses,
+            self.exec_hits,
+            self.exec_hits + self.exec_misses,
+        )
+    }
+}
+
+/// The shared evaluation context of an incremental sweep: four interned,
+/// digest-keyed memo layers behind mutexes, safe to share across sweep
+/// workers and across successive sweeps (that cross-sweep reuse is the
+/// ≥5× warm-path gate of `benches/sweep_scale.rs`).
+#[derive(Default)]
+pub struct EvalCtx {
+    probes: Mutex<Memo<ProbeKey, Result<RunProfiles, String>>>,
+    plans: Mutex<Memo<PlanKey, Result<u64, String>>>,
+    scheds: Mutex<Memo<SchedKey, Arc<Schedule>>>,
+    execs: Mutex<Memo<SchedKey, PhaseBreakdown>>,
+}
+
+impl EvalCtx {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot the per-layer hit/miss counters.
+    pub fn stats(&self) -> CacheStats {
+        let probes = self.probes.lock().unwrap();
+        let plans = self.plans.lock().unwrap();
+        let scheds = self.scheds.lock().unwrap();
+        let execs = self.execs.lock().unwrap();
+        CacheStats {
+            probe_hits: probes.hits(),
+            probe_misses: probes.misses(),
+            plan_hits: plans.hits(),
+            plan_misses: plans.misses(),
+            sched_hits: scheds.hits(),
+            sched_misses: scheds.misses(),
+            exec_hits: execs.hits(),
+            exec_misses: execs.misses(),
+        }
+    }
+
+    /// Memoized [`MemoryPlan::profile_run`]. Keyed without the engine:
+    /// one probe serves every profile-consuming engine of the same cell,
+    /// and every later sweep over the same grid.
+    pub fn profiles(
+        &self,
+        topo: &SystemTopology,
+        topo_d: u64,
+        cfg: &RunConfig,
+        ck: u64,
+    ) -> Result<RunProfiles, String> {
+        let key = (ck, topo_d);
+        if let Some(v) = self.probes.lock().unwrap().get(&key) {
+            return v;
+        }
+        let v = MemoryPlan::profile_run(topo, cfg).map_err(|e| e.to_string());
+        self.probes.lock().unwrap().insert(key, v.clone());
+        v
+    }
+
+    /// Build `cfg`'s plan the way the legacy sweep would, except that
+    /// profile-consuming engines draw on the probe memo (byte-identical
+    /// plans, pinned by `build_with_profiles_matches_the_self_profiling_paths`);
+    /// everything else takes the plain static path so it stays
+    /// work-identical, not just byte-identical.
+    fn build_plan<'t>(
+        &self,
+        topo: &'t SystemTopology,
+        topo_d: u64,
+        cfg: &RunConfig,
+        ck: u64,
+    ) -> Result<MemoryPlan<'t>, String> {
+        if cfg.engine.uses_profiles() {
+            let prof = self.profiles(topo, topo_d, cfg, ck)?;
+            MemoryPlan::build_with_profiles(topo, cfg, false, prof).map_err(|e| e.to_string())
+        } else {
+            MemoryPlan::build(topo, cfg).map_err(|e| e.to_string())
+        }
+    }
+
+    /// Evaluate one engine column of one grid cell: every schedule's
+    /// breakdown, or `(all None, Some(reason))` when the plan does not
+    /// fit. The warm path (all memos hit) does zero probe passes, zero
+    /// plan builds, zero schedule builds, and zero DES runs; an OOM cell
+    /// short-circuits on its cached plan error without re-probing.
+    pub fn eval_engine_cell(
+        &self,
+        topo: &SystemTopology,
+        topo_d: u64,
+        model: &ModelConfig,
+        w: Workload,
+        engine: &EngineRef,
+        schedules: &[ScheduleRef],
+    ) -> (Vec<Option<PhaseBreakdown>>, Option<String>) {
+        assert!(
+            w.n_gpus <= topo.gpus.len(),
+            "workload wants {} GPUs, topology has {}",
+            w.n_gpus,
+            topo.gpus.len()
+        );
+        let cfg = RunConfig::new(model.clone(), w, engine.clone());
+        let ck = cfg_key(&cfg);
+        let pk: PlanKey = (ck, engine.name().to_string(), topo_d);
+
+        // The plan is rebuilt lazily: a cell whose schedules all hit the
+        // exec memo never touches the allocator again.
+        let mut local_plan: Option<MemoryPlan<'_>> = None;
+        let plan_entry = {
+            let cached = self.plans.lock().unwrap().get(&pk);
+            match cached {
+                Some(v) => v,
+                None => {
+                    let built = self.build_plan(topo, topo_d, &cfg, ck);
+                    let entry = match &built {
+                        Ok(p) => Ok(plan_shape_digest(p)),
+                        Err(e) => Err(e.clone()),
+                    };
+                    self.plans.lock().unwrap().insert(pk, entry.clone());
+                    if let Ok(p) = built {
+                        local_plan = Some(p);
+                    }
+                    entry
+                }
+            }
+        };
+
+        let shape = match plan_entry {
+            Err(reason) => return (vec![None; schedules.len()], Some(reason)),
+            Ok(shape) => shape,
+        };
+        let mut runs = Vec::with_capacity(schedules.len());
+        for sref in schedules {
+            let ek: SchedKey = (sref.name().to_string(), ck, shape, topo_d);
+            if let Some(b) = self.execs.lock().unwrap().get(&ek) {
+                runs.push(Some(b));
+                continue;
+            }
+            let sched: Arc<Schedule> = {
+                let hit = self.scheds.lock().unwrap().get(&ek);
+                match hit {
+                    Some(s) => s,
+                    None => {
+                        if local_plan.is_none() {
+                            local_plan = Some(
+                                self.build_plan(topo, topo_d, &cfg, ck)
+                                    .expect("plan memo says this cell fits"),
+                            );
+                        }
+                        let plan = local_plan.as_ref().unwrap();
+                        let run_cfg = cfg.clone().with_schedule(sref.clone());
+                        let s = Arc::new(run_cfg.schedule.build(topo, &run_cfg, plan));
+                        self.scheds.lock().unwrap().insert(ek.clone(), s.clone());
+                        s
+                    }
+                }
+            };
+            let b = run_in_arena(topo, &sched);
+            self.execs.lock().unwrap().insert(ek, b);
+            runs.push(Some(b));
+        }
+        (runs, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Policy;
+    use crate::model::presets::{qwen25_7b, tiny_2m};
+    use crate::offload::schedules;
+    use crate::offload::simulate_iteration;
+    use crate::topology::presets::{config_a, dev_tiny, with_dram_capacity};
+    use crate::util::units::GIB;
+
+    #[test]
+    fn cfg_key_separates_every_dimension() {
+        let base = RunConfig::new(
+            qwen25_7b(),
+            Workload::new(1, 8, 4096),
+            Policy::DramOnly,
+        );
+        let k0 = cfg_key(&base);
+        // Engine must NOT separate (one probe per cell serves all engines).
+        let other_engine = RunConfig {
+            engine: Policy::NaiveInterleave.into(),
+            ..base.clone()
+        };
+        assert_eq!(k0, cfg_key(&other_engine));
+        // Every swept dimension must.
+        let mut v = base.clone();
+        v.workload = Workload::new(1, 8, 8192);
+        assert_ne!(k0, cfg_key(&v));
+        let mut v = base.clone();
+        v.workload = Workload::new(1, 4, 4096);
+        assert_ne!(k0, cfg_key(&v));
+        let mut v = base.clone();
+        v.workload = Workload::new(2, 8, 4096);
+        assert_ne!(k0, cfg_key(&v));
+        let mut v = base.clone();
+        v.prefetch_depth = 3;
+        assert_ne!(k0, cfg_key(&v));
+        let mut v = base.clone();
+        v.model.layers += 1;
+        assert_ne!(k0, cfg_key(&v));
+        let v = base
+            .clone()
+            .with_schedule(schedules::by_name("lora").unwrap());
+        assert_ne!(k0, cfg_key(&v));
+    }
+
+    #[test]
+    fn topo_digest_tracks_capacity_and_identity() {
+        let a = config_a();
+        assert_eq!(topo_digest(&a), topo_digest(&config_a()));
+        let shrunk = with_dram_capacity(config_a(), 128 * GIB);
+        assert_ne!(topo_digest(&a), topo_digest(&shrunk));
+        assert_ne!(topo_digest(&a), topo_digest(&dev_tiny()));
+    }
+
+    #[test]
+    fn plan_shape_digest_tracks_placements() {
+        let cxl = with_dram_capacity(config_a(), 128 * GIB);
+        let cfg = |p: Policy| RunConfig::new(qwen25_7b(), Workload::new(1, 8, 4096), p);
+        let a = MemoryPlan::build(&cxl, &cfg(Policy::CxlAware { striping: false })).unwrap();
+        let b = MemoryPlan::build(&cxl, &cfg(Policy::CxlAware { striping: false })).unwrap();
+        assert_eq!(plan_shape_digest(&a), plan_shape_digest(&b));
+        let n = MemoryPlan::build(&cxl, &cfg(Policy::NaiveInterleave)).unwrap();
+        assert_ne!(plan_shape_digest(&a), plan_shape_digest(&n));
+    }
+
+    #[test]
+    fn eval_matches_the_direct_path_bitwise_and_then_hits() {
+        let topo = dev_tiny();
+        let topo_d = topo_digest(&topo);
+        let model = tiny_2m();
+        let w = Workload::new(2, 4, 512);
+        let engine: EngineRef = Policy::CxlAware { striping: false }.into();
+        let scheds = vec![schedules::zero_offload(), schedules::by_name("lora").unwrap()];
+
+        let ctx = EvalCtx::new();
+        let (runs, oom) = ctx.eval_engine_cell(&topo, topo_d, &model, w, &engine, &scheds);
+        assert!(oom.is_none());
+        // Direct (legacy) evaluation of the same column.
+        let cfg = RunConfig::new(model.clone(), w, engine.clone());
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        for (run, sref) in runs.iter().zip(&scheds) {
+            let direct = {
+                let cfg = cfg.clone().with_schedule(sref.clone());
+                simulate_iteration(&topo, &cfg, &plan)
+            };
+            let got = run.expect("cell fits");
+            assert_eq!(got.iter_s.to_bits(), direct.iter_s.to_bits());
+            assert_eq!(got.fwd_s.to_bits(), direct.fwd_s.to_bits());
+            assert_eq!(got.bwd_s.to_bits(), direct.bwd_s.to_bits());
+            assert_eq!(got.step_s.to_bits(), direct.step_s.to_bits());
+            assert_eq!(got.tokens, direct.tokens);
+        }
+        let cold = ctx.stats();
+        assert_eq!(cold.exec_misses, 2);
+        assert_eq!(cold.plan_misses, 1);
+
+        // Second evaluation: pure memo traffic, identical values.
+        let (again, oom) = ctx.eval_engine_cell(&topo, topo_d, &model, w, &engine, &scheds);
+        assert!(oom.is_none());
+        for (a, b) in runs.iter().zip(&again) {
+            assert_eq!(
+                a.unwrap().iter_s.to_bits(),
+                b.unwrap().iter_s.to_bits()
+            );
+        }
+        let warm = ctx.stats();
+        assert_eq!(warm.exec_hits, 2);
+        assert_eq!(warm.plan_hits, 1);
+        assert_eq!(warm.exec_misses, cold.exec_misses, "warm pass must not miss");
+        assert_eq!(warm.sched_misses, cold.sched_misses);
+    }
+
+    #[test]
+    fn oom_cells_short_circuit_with_a_cached_reason() {
+        let tiny = with_dram_capacity(config_a(), 8 * GIB);
+        let topo_d = topo_digest(&tiny);
+        let ctx = EvalCtx::new();
+        let engine: EngineRef = Policy::DramOnly.into();
+        let scheds = vec![schedules::zero_offload()];
+        let (runs, oom) = ctx.eval_engine_cell(
+            &tiny,
+            topo_d,
+            &qwen25_7b(),
+            Workload::new(1, 8, 4096),
+            &engine,
+            &scheds,
+        );
+        assert_eq!(runs, vec![None]);
+        let reason = oom.expect("OOM must carry its reason");
+        // The reason is the PlanError rendering the legacy path produced.
+        let cfg = RunConfig::new(qwen25_7b(), Workload::new(1, 8, 4096), engine.clone());
+        let direct = MemoryPlan::build(&tiny, &cfg).unwrap_err();
+        assert_eq!(reason, direct.to_string());
+        // Re-evaluating hits the cached error: no second build attempt.
+        let before = ctx.stats();
+        let (_, oom2) = ctx.eval_engine_cell(
+            &tiny,
+            topo_d,
+            &qwen25_7b(),
+            Workload::new(1, 8, 4096),
+            &engine,
+            &scheds,
+        );
+        assert_eq!(oom2.as_deref(), Some(reason.as_str()));
+        let after = ctx.stats();
+        assert_eq!(after.plan_hits, before.plan_hits + 1);
+        assert_eq!(after.plan_misses, before.plan_misses);
+    }
+
+    #[test]
+    fn stats_summary_line_is_stable() {
+        let s = CacheStats {
+            probe_hits: 1,
+            probe_misses: 2,
+            plan_hits: 3,
+            plan_misses: 4,
+            sched_hits: 5,
+            sched_misses: 6,
+            exec_hits: 7,
+            exec_misses: 8,
+        };
+        assert_eq!(
+            s.summary_line(),
+            "cache: probe 1/3 plan 3/7 sched 5/11 exec 7/15 (hits/lookups)"
+        );
+        assert_eq!(s.hits(), 16);
+        assert_eq!(s.misses(), 20);
+    }
+}

@@ -26,7 +26,7 @@ use super::metrics::{PhaseReport, PhaseSpan};
 use super::schedule::{Op, OpId, RegionTouch, Schedule};
 use crate::mem::RegionId;
 use crate::sim::fabric::Fabric;
-use crate::sim::flow::Event;
+use crate::sim::flow::{Event, FlowSim};
 use crate::sim::memmodel::OptimizerMemModel;
 use crate::sim::trace::TraceRecorder;
 use crate::topology::SystemTopology;
@@ -86,6 +86,25 @@ impl PhaseAcc {
 /// Execute `sched` on `topo`. Panics on an invalid schedule (use
 /// [`Schedule::validate`] first for a `Result`).
 pub fn execute(topo: &SystemTopology, sched: &Schedule) -> Execution {
+    execute_reusing(topo, sched, FlowSim::new(), true).0
+}
+
+/// [`execute`] inside a reused DES arena, with optional trace recording.
+///
+/// `sim` is reset and rebuilt for `topo` (see `Fabric::new_in`), so
+/// passing a dirty engine from a previous run is byte-identical to a
+/// fresh one — the arena is handed back as the second return value for
+/// the caller's next run. With `record_trace = false` the per-span trace
+/// strings are never allocated; everything else, including the phase
+/// accumulators and the region ledger, is computed identically (the
+/// returned `Execution::trace` is simply empty). The sweep's hot path
+/// runs this with a per-worker arena and tracing off.
+pub fn execute_reusing(
+    topo: &SystemTopology,
+    sched: &Schedule,
+    sim: FlowSim,
+    record_trace: bool,
+) -> (Execution, FlowSim) {
     // Validation hands back the dependency bookkeeping it had to build
     // anyway (indegrees + dependents), so the adjacency is walked once.
     let (mut remaining_deps, dependents) = sched
@@ -93,7 +112,7 @@ pub fn execute(topo: &SystemTopology, sched: &Schedule) -> Execution {
         .unwrap_or_else(|e| panic!("invalid schedule: {e}"));
 
     let n = sched.nodes.len();
-    let mut fab = Fabric::new(topo);
+    let mut fab = Fabric::new_in(topo, sim);
     let mm = OptimizerMemModel::new(topo);
     let mut trace = TraceRecorder::new();
 
@@ -187,7 +206,11 @@ pub fn execute(topo: &SystemTopology, sched: &Schedule) -> Execution {
     macro_rules! record_span {
         ($i:expr, $start:expr, $end:expr) => {{
             let node = &sched.nodes[$i];
-            trace.record(node.name.as_str(), node.lane.as_str(), $start, $end);
+            // Tracing is the only skippable effect: the phase accumulators
+            // below always run, so timing output is trace-independent.
+            if record_trace {
+                trace.record(node.name.as_str(), node.lane.as_str(), $start, $end);
+            }
             let acc = &mut phase_acc[node.phase];
             acc.span_start = acc.span_start.min($start);
             acc.span_end = acc.span_end.max($end);
@@ -304,7 +327,7 @@ pub fn execute(topo: &SystemTopology, sched: &Schedule) -> Execution {
         })
         .collect();
 
-    Execution {
+    let exec = Execution {
         report: PhaseReport {
             phases,
             iter_s,
@@ -314,7 +337,8 @@ pub fn execute(topo: &SystemTopology, sched: &Schedule) -> Execution {
         completion_order,
         completion_s,
         region_traffic,
-    }
+    };
+    (exec, fab.sim)
 }
 
 #[cfg(test)]
@@ -379,6 +403,37 @@ mod tests {
         assert_eq!(ex.trace.spans().len(), 3);
         assert!(ex.report.iter_s > 0.0);
         assert_eq!(ex.report.tokens, 10);
+    }
+
+    #[test]
+    fn reused_arena_without_tracing_matches_fresh_execute_bitwise() {
+        let topo = dev_tiny();
+        let mut s = Schedule::new(10);
+        let p = s.phase("only");
+        let a = s.push(xfer(0, 1e8, vec![], p));
+        let b = s.push(kern(0, 1e12, vec![a], p));
+        let c = s.push(kern(1, 3e11, vec![a], p));
+        s.push(xfer(1, 2e8, vec![b, c], p));
+
+        let fresh = execute(&topo, &s);
+        // Dirty an arena on a different schedule, then reuse it untraced.
+        let mut warmup = Schedule::new(0);
+        let q = warmup.phase("only");
+        warmup.push(xfer(1, 5e8, vec![], q));
+        let (_, arena) = execute_reusing(&topo, &warmup, FlowSim::new(), true);
+        let (reused, arena) = execute_reusing(&topo, &s, arena, false);
+
+        assert_eq!(reused.report, fresh.report);
+        assert_eq!(reused.completion_order, fresh.completion_order);
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&reused.completion_s), bits(&fresh.completion_s));
+        assert_eq!(reused.region_traffic, fresh.region_traffic);
+        // Tracing off means no span strings were recorded …
+        assert!(reused.trace.spans().is_empty());
+        assert_eq!(fresh.trace.spans().len(), 4);
+        // … and the recovered arena is clean enough to go again.
+        let (again, _) = execute_reusing(&topo, &s, arena, false);
+        assert_eq!(bits(&again.completion_s), bits(&fresh.completion_s));
     }
 
     #[test]

@@ -3,6 +3,8 @@
 //! expressible as a task DAG.
 //!
 //! * [`plan`] — Table-I region allocation under a placement policy,
+//! * [`evalcache`] — the incremental sweep engine's shared memo layers
+//!   (probe / plan / schedule / exec) and per-worker DES arenas,
 //! * [`schedule`] — the schedule-graph IR: typed ops + dependency edges,
 //! * [`schedules`] — named scenario builders (`zero-offload`,
 //!   `grad-accum`, `lora`, `no-act-offload`) and their registry,
@@ -13,6 +15,7 @@
 //! * [`sweep`] — (C, B) grid sweeps over engine × schedule matrices
 //!   producing the Fig. 9/10 matrices and the ablation grids.
 
+pub mod evalcache;
 pub mod executor;
 pub mod iteration;
 pub mod metrics;
@@ -21,14 +24,16 @@ pub mod schedule;
 pub mod schedules;
 pub mod sweep;
 
-pub use executor::{execute, Execution, RegionTraffic};
+pub use evalcache::{CacheStats, EvalCtx};
+pub use executor::{execute, execute_reusing, Execution, RegionTraffic};
 pub use iteration::{legacy_simulate_iteration, legacy_simulate_iteration_traced};
 pub use metrics::{PhaseBreakdown, PhaseReport, PhaseSpan};
 pub use plan::{MemoryPlan, PlanError, PlanReservation, RunConfig, RunProfiles};
 pub use schedule::{FlopsTerm, Op, OpId, OpNode, RegionTouch, Schedule};
 pub use schedules::{ScheduleBuilder, ScheduleRef};
 pub use sweep::{
-    sweep_grid, sweep_grid_matrix, sweep_grid_with_threads, GridPoint, SweepResult,
+    sweep_grid, sweep_grid_matrix, sweep_grid_matrix_nocache, sweep_grid_matrix_with_ctx,
+    sweep_grid_with_threads, GridPoint, SweepResult,
 };
 
 use crate::sim::trace::TraceRecorder;

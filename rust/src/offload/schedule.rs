@@ -200,6 +200,93 @@ impl Schedule {
         }
     }
 
+    /// FNV-1a digest over the schedule's full structural content: phases,
+    /// tokens, and every node's op payload (discriminants, `to_bits`
+    /// floats), edges, labels, phase markers, and touch annotations. Two
+    /// schedules digest equal iff the executor (and the profiling pass)
+    /// cannot tell them apart — the key contract the sweep's DAG memo and
+    /// the memo-soundness property tests are built on.
+    pub fn digest(&self) -> u64 {
+        use crate::util::digest::Fnv64;
+        let mut h = Fnv64::new();
+        h.write_u64(self.phases.len() as u64);
+        for p in &self.phases {
+            h.write_str(p);
+        }
+        h.write_u64(self.tokens);
+        h.write_u64(self.nodes.len() as u64);
+        let mut layout = |h: &mut Fnv64, l: &crate::sim::memmodel::OptLayout| {
+            h.write_u64(l.parts.len() as u64);
+            for (n, f) in &l.parts {
+                h.write_u64(n.0 as u64).write_f64(*f);
+            }
+            h.write_u64(match l.mode {
+                crate::sim::memmodel::AccessMode::Interleaved => 0,
+                crate::sim::memmodel::AccessMode::Partitioned => 1,
+            });
+        };
+        for node in &self.nodes {
+            match &node.op {
+                Op::Transfer { gpu, stripes, dir, bytes } => {
+                    h.write_u64(0).write_u64(gpu.0 as u64);
+                    h.write_u64(stripes.len() as u64);
+                    for (n, f) in stripes {
+                        h.write_u64(n.0 as u64).write_f64(*f);
+                    }
+                    h.write_u64(match dir {
+                        Dir::HostToGpu => 0,
+                        Dir::GpuToHost => 1,
+                    });
+                    h.write_f64(*bytes);
+                }
+                Op::Compute { gpu, work } => {
+                    h.write_u64(1).write_u64(gpu.0 as u64);
+                    h.write_u64(work.len() as u64);
+                    for t in work {
+                        h.write_f64(t.flops).write_f64(t.scale);
+                    }
+                }
+                Op::CpuStep { adam_elements, adam_layout, streams } => {
+                    h.write_u64(2).write_u64(*adam_elements);
+                    layout(&mut h, adam_layout);
+                    h.write_u64(streams.len() as u64);
+                    for (bytes, l) in streams {
+                        h.write_f64(*bytes);
+                        layout(&mut h, l);
+                    }
+                }
+                Op::Barrier => {
+                    h.write_u64(3);
+                }
+            }
+            h.write_u64(node.deps.len() as u64);
+            for d in &node.deps {
+                h.write_u64(d.0 as u64);
+            }
+            h.write_str(&node.name).write_str(&node.lane);
+            h.write_u64(node.phase as u64);
+            h.write_u64(u64::from(node.ends_phase));
+            h.write_u64(node.touches.len() as u64);
+            for t in &node.touches {
+                match t {
+                    RegionTouch::Dma(r) => {
+                        h.write_u64(0).write_u64(r.0 as u64);
+                    }
+                    RegionTouch::CpuRmw(r) => {
+                        h.write_u64(1).write_u64(r.0 as u64);
+                    }
+                    RegionTouch::CpuStream { region, stream } => {
+                        h.write_u64(2).write_u64(region.0 as u64).write_u64(*stream as u64);
+                    }
+                    RegionTouch::Keepalive(r) => {
+                        h.write_u64(3).write_u64(r.0 as u64);
+                    }
+                }
+            }
+        }
+        h.finish()
+    }
+
     /// [`Schedule::validate`] that additionally hands back the dependency
     /// bookkeeping the lint pass had to build anyway — `(indegree,
     /// dependents)` per node — so the executor does not rebuild the
@@ -412,6 +499,51 @@ mod tests {
         n2.touches = vec![RegionTouch::Dma(RegionId(1))];
         s.push(n2);
         assert!(s.validate_strict(&topo).is_ok());
+    }
+
+    #[test]
+    fn digest_separates_structural_differences() {
+        let mut base = Schedule::new(128);
+        base.phase("fwd");
+        let a = base.push(transfer(vec![], 0));
+        base.push(transfer(vec![a], 0));
+        let d0 = base.digest();
+        assert_eq!(base.digest(), d0, "digest is a pure function");
+
+        // Same shape, different payload byte count.
+        let mut b = Schedule::new(128);
+        b.phase("fwd");
+        let a = b.push(transfer(vec![], 0));
+        let mut n = transfer(vec![a], 0);
+        if let Op::Transfer { bytes, .. } = &mut n.op {
+            *bytes += 1.0;
+        }
+        b.push(n);
+        assert_ne!(b.digest(), d0, "payload bytes must be digested");
+
+        // Same nodes, different edge set.
+        let mut c = Schedule::new(128);
+        c.phase("fwd");
+        c.push(transfer(vec![], 0));
+        c.push(transfer(vec![], 0));
+        assert_ne!(c.digest(), d0, "dependency edges must be digested");
+
+        // Same graph, different token count.
+        let mut t = Schedule::new(129);
+        t.phase("fwd");
+        let a = t.push(transfer(vec![], 0));
+        t.push(transfer(vec![a], 0));
+        assert_ne!(t.digest(), d0, "tokens must be digested");
+
+        // Touch annotations distinguish too (the profiling pass sees them).
+        use crate::mem::RegionId;
+        let mut u = Schedule::new(128);
+        u.phase("fwd");
+        let a = u.push(transfer(vec![], 0));
+        let mut n = transfer(vec![a], 0);
+        n.touches = vec![RegionTouch::Dma(RegionId(0))];
+        u.push(n);
+        assert_ne!(u.digest(), d0, "touches must be digested");
     }
 
     #[test]

@@ -5,11 +5,23 @@
 //! baseline, reproducing the paper's "% of baseline" bars.
 //!
 //! Grid points are independent, so the sweep fans them out across
-//! [`crate::util::threadpool::par_map`] — one task per cell, results
-//! collected in deterministic (context-major, batch-minor) order regardless
-//! of worker interleaving. A full Fig. 9 panel (16 cells × 3 engines) drops
-//! from sum-of-cells to max-of-cells wall-clock on a multicore host.
+//! [`crate::util::threadpool::par_map_ordered`] — one task per cell,
+//! dispatched heaviest-first (largest context × batch, the cells that
+//! dominate the critical path) but collected in deterministic
+//! (context-major, batch-minor) order regardless of worker interleaving.
+//! A full Fig. 9 panel (16 cells × 3 engines) drops from sum-of-cells to
+//! max-of-cells wall-clock on a multicore host.
+//!
+//! Since the incremental engine landed, the default path evaluates every
+//! cell through a shared [`EvalCtx`] (see [`super::evalcache`]): probe
+//! passes, plans, schedule DAGs and DES results are interned under
+//! digest keys, and re-sweeping an unchanged grid is pure memo traffic.
+//! Every memoized value is value-pure, so cached, uncached
+//! ([`sweep_grid_matrix_nocache`]) and warm sweeps produce bit-identical
+//! [`SweepResult::digest`]s at any thread count — the contract
+//! `rust/tests/sweep_incremental.rs` and `benches/sweep_scale.rs` pin.
 
+use super::evalcache::{topo_digest, EvalCtx};
 use super::metrics::PhaseBreakdown;
 use super::plan::{MemoryPlan, RunConfig};
 use super::schedules::{self, ScheduleRef};
@@ -21,7 +33,7 @@ use crate::model::ModelConfig;
 use crate::topology::SystemTopology;
 use crate::util::digest::Fnv64;
 use crate::util::json::Json;
-use crate::util::threadpool::{default_threads, par_map};
+use crate::util::threadpool::{default_threads, par_map, par_map_ordered};
 
 /// One grid cell result.
 #[derive(Clone, Debug)]
@@ -30,6 +42,10 @@ pub struct GridPoint {
     pub batch: usize,
     /// Breakdown per engine, ordered as the `policies` argument.
     pub runs: Vec<Option<PhaseBreakdown>>,
+    /// Why a column did not run, parallel to `runs`: `Some(reason)` for
+    /// OOM cells (the [`super::plan::PlanError`] rendering), `None` for
+    /// cells that ran. Frontier plots use this to tell OOM from not-run.
+    pub oom: Vec<Option<String>>,
 }
 
 /// A whole sweep.
@@ -88,9 +104,11 @@ impl SweepResult {
     }
 
     /// Machine-readable form of the whole sweep (written by `cxlfine sweep
-    /// --json`): cell coordinates, per-column breakdowns (`null` for OOM
-    /// cells), and the bitwise digest so perf-trajectory files are
-    /// self-certifying.
+    /// --json`): cell coordinates, per-column breakdowns (an `{"oom":
+    /// reason}` object for cells whose plan did not fit, `null` only for
+    /// columns that never ran), and the bitwise digest so perf-trajectory
+    /// files are self-certifying. The digest ignores the reason strings —
+    /// it hashes the same bytes it always has.
     pub fn to_json(&self) -> Json {
         let policies: Vec<Json> = self.policies.iter().map(|p| Json::Str(p.clone())).collect();
         let points: Vec<Json> = self
@@ -100,8 +118,12 @@ impl SweepResult {
                 let runs: Vec<Json> = pt
                     .runs
                     .iter()
-                    .map(|r| match r {
-                        None => Json::Null,
+                    .enumerate()
+                    .map(|(i, r)| match r {
+                        None => match pt.oom.get(i).and_then(|o| o.as_deref()) {
+                            Some(reason) => jobj! { "oom" => reason },
+                            None => Json::Null,
+                        },
                         Some(b) => b.to_json(),
                     })
                     .collect();
@@ -191,14 +213,62 @@ pub fn sweep_grid_with_threads(
     )
 }
 
+/// Column labels, engine-major schedule-minor. A single-schedule
+/// `zero-offload` sweep keeps plain engine labels (bit-compatible with
+/// pre-IR sweep digests); any other schedule set labels **every** column
+/// `engine@schedule`, so the normalization root (column 0) is always
+/// unambiguous.
+fn column_labels(policies: &[EngineRef], schedules: &[ScheduleRef]) -> Vec<String> {
+    let plain_labels = schedules.len() == 1 && schedules[0].name() == "zero-offload";
+    policies
+        .iter()
+        .flat_map(|p| {
+            schedules.iter().map(move |s| {
+                if plain_labels {
+                    p.name().to_string()
+                } else {
+                    format!("{}@{}", p.name(), s.name())
+                }
+            })
+        })
+        .collect()
+}
+
+/// The context-major, batch-minor cell list — the historical serial
+/// (and result) ordering of every sweep.
+fn grid_cells(contexts: &[usize], batches: &[usize]) -> Vec<(usize, usize)> {
+    contexts
+        .iter()
+        .flat_map(|&c| batches.iter().map(move |&b| (c, b)))
+        .collect()
+}
+
+/// Dispatch order: heaviest cells first (largest context × batch — DES
+/// cost grows with both), ascending index as the deterministic
+/// tie-break. Long-pole cells start immediately instead of landing on
+/// whichever worker drains the tail, which squeezes the makespan of
+/// skewed grids; results are still merged in grid order, so dispatch
+/// order never shows in the output.
+fn cost_order(grid: &[(usize, usize)]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..grid.len()).collect();
+    order.sort_by(|&a, &b| {
+        let ka = grid[a].0 * grid[a].1;
+        let kb = grid[b].0 * grid[b].1;
+        kb.cmp(&ka).then(a.cmp(&b))
+    });
+    order
+}
+
 /// The full engine × schedule sweep: every grid cell runs every
-/// combination, columns ordered engine-major, schedule-minor. A
-/// single-schedule `zero-offload` sweep keeps plain engine labels
-/// (bit-compatible with pre-IR sweep digests); any other schedule set
-/// labels **every** column `engine@schedule`, so the normalization root
-/// (column 0) is always unambiguous. Per cell the memory plan is built
-/// once per engine and shared by its schedules — placement is
-/// schedule-independent.
+/// combination, columns ordered engine-major, schedule-minor (labels per
+/// [`column_labels`]). Per cell the memory plan is built once per engine
+/// and shared by its schedules — placement is schedule-independent.
+///
+/// This is the incremental path: a fresh [`EvalCtx`] per call, so
+/// within-sweep sharing (probe passes, plan shapes, schedule DAGs)
+/// already applies. Callers that re-sweep — the CLI, the benches, a
+/// frontier search — should hold their own context and use
+/// [`sweep_grid_matrix_with_ctx`] to make later sweeps warm.
 #[allow(clippy::too_many_arguments)]
 pub fn sweep_grid_matrix(
     baseline_topo: &SystemTopology,
@@ -211,16 +281,104 @@ pub fn sweep_grid_matrix(
     schedules: &[ScheduleRef],
     nthreads: usize,
 ) -> SweepResult {
+    let ctx = EvalCtx::new();
+    sweep_grid_matrix_with_ctx(
+        &ctx,
+        baseline_topo,
+        policy_topo,
+        model,
+        n_gpus,
+        contexts,
+        batches,
+        policies,
+        schedules,
+        nthreads,
+    )
+}
+
+/// [`sweep_grid_matrix`] against a caller-held [`EvalCtx`]: every probe
+/// pass, plan build, schedule DAG and DES result already interned in
+/// `ctx` is reused, so an unchanged cell costs four memo lookups. The
+/// cache is value-pure — results (and [`SweepResult::digest`]s) are
+/// bit-identical to [`sweep_grid_matrix_nocache`] whatever the cache
+/// holds and whatever `nthreads` is.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_grid_matrix_with_ctx(
+    ctx: &EvalCtx,
+    baseline_topo: &SystemTopology,
+    policy_topo: &SystemTopology,
+    model: &ModelConfig,
+    n_gpus: usize,
+    contexts: &[usize],
+    batches: &[usize],
+    policies: &[EngineRef],
+    schedules: &[ScheduleRef],
+    nthreads: usize,
+) -> SweepResult {
     assert!(!schedules.is_empty(), "need at least one schedule");
-    // context-major, batch-minor — the historical serial ordering.
-    let grid: Vec<(usize, usize)> = contexts
-        .iter()
-        .flat_map(|&c| batches.iter().map(move |&b| (c, b)))
-        .collect();
+    let grid = grid_cells(contexts, batches);
+    let order = cost_order(&grid);
+    let baseline_d = topo_digest(baseline_topo);
+    let policy_d = topo_digest(policy_topo);
+    let points = par_map_ordered(grid.len(), nthreads.max(1), &order, |i| {
+        let (c, b) = grid[i];
+        let w = Workload::new(n_gpus, b, c);
+        let ncols = policies.len() * schedules.len();
+        let mut runs = Vec::with_capacity(ncols);
+        let mut oom = Vec::with_capacity(ncols);
+        for engine in policies {
+            let (topo, topo_d) = if engine.is_baseline() {
+                (baseline_topo, baseline_d)
+            } else {
+                (policy_topo, policy_d)
+            };
+            let (mut col, reason) =
+                ctx.eval_engine_cell(topo, topo_d, model, w, engine, schedules);
+            for _ in 0..col.len() {
+                oom.push(reason.clone());
+            }
+            runs.append(&mut col);
+        }
+        GridPoint {
+            context: c,
+            batch: b,
+            runs,
+            oom,
+        }
+    });
+    SweepResult {
+        model: model.name.clone(),
+        n_gpus,
+        policies: column_labels(policies, schedules),
+        points,
+    }
+}
+
+/// The pre-incremental sweep, kept as the differential oracle (and the
+/// CLI's `--no-cache` path): no memoization, no arena reuse, static
+/// `par_map` chunking. `rust/tests/sweep_incremental.rs` pins the cached
+/// path bit-identical to this one; `benches/sweep_scale.rs` measures the
+/// speedup against it.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_grid_matrix_nocache(
+    baseline_topo: &SystemTopology,
+    policy_topo: &SystemTopology,
+    model: &ModelConfig,
+    n_gpus: usize,
+    contexts: &[usize],
+    batches: &[usize],
+    policies: &[EngineRef],
+    schedules: &[ScheduleRef],
+    nthreads: usize,
+) -> SweepResult {
+    assert!(!schedules.is_empty(), "need at least one schedule");
+    let grid = grid_cells(contexts, batches);
     let points = par_map(grid.len(), nthreads.max(1), |i| {
         let (c, b) = grid[i];
         let w = Workload::new(n_gpus, b, c);
-        let mut runs = Vec::with_capacity(policies.len() * schedules.len());
+        let ncols = policies.len() * schedules.len();
+        let mut runs = Vec::with_capacity(ncols);
+        let mut oom = Vec::with_capacity(ncols);
         for engine in policies {
             let topo = if engine.is_baseline() {
                 baseline_topo
@@ -228,37 +386,32 @@ pub fn sweep_grid_matrix(
                 policy_topo
             };
             let cfg = RunConfig::new(model.clone(), w, engine.clone());
-            let plan = MemoryPlan::build(topo, &cfg).ok();
+            let plan = MemoryPlan::build(topo, &cfg).map_err(|e| e.to_string());
             for sched in schedules {
-                runs.push(plan.as_ref().map(|plan| {
-                    let cfg = cfg.clone().with_schedule(sched.clone());
-                    simulate_iteration(topo, &cfg, plan)
-                }));
+                match &plan {
+                    Ok(plan) => {
+                        let cfg = cfg.clone().with_schedule(sched.clone());
+                        runs.push(Some(simulate_iteration(topo, &cfg, plan)));
+                        oom.push(None);
+                    }
+                    Err(reason) => {
+                        runs.push(None);
+                        oom.push(Some(reason.clone()));
+                    }
+                }
             }
         }
         GridPoint {
             context: c,
             batch: b,
             runs,
+            oom,
         }
     });
-    let plain_labels = schedules.len() == 1 && schedules[0].name() == "zero-offload";
-    let labels = policies
-        .iter()
-        .flat_map(|p| {
-            schedules.iter().map(move |s| {
-                if plain_labels {
-                    p.name().to_string()
-                } else {
-                    format!("{}@{}", p.name(), s.name())
-                }
-            })
-        })
-        .collect();
     SweepResult {
         model: model.name.clone(),
         n_gpus,
-        policies: labels,
+        policies: column_labels(policies, schedules),
         points,
     }
 }
@@ -471,11 +624,108 @@ mod tests {
         assert_eq!(points.len(), 1);
         let runs = points[0].path(&["runs"]).unwrap().as_arr().unwrap();
         assert_eq!(runs.len(), 2);
+        // OOM cells carry their PlanError rendering instead of a bare null,
+        // so frontier plots can tell OOM from not-run.
+        let reason = runs[0]
+            .path(&["oom"])
+            .expect("OOM cell must serialize as an {\"oom\": reason} object")
+            .as_str()
+            .unwrap();
+        assert!(!reason.is_empty());
         assert!(
-            matches!(runs[0], crate::util::json::Json::Null),
-            "OOM cell must serialize as null"
+            reason.contains("baseline-dram"),
+            "reason names the failing policy: {reason}"
         );
+        assert_eq!(res.points[0].oom[0].as_deref(), Some(reason));
+        assert_eq!(res.points[0].oom[1], None);
         assert!(runs[1].path(&["iter_s"]).unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn cached_sweep_matches_nocache_bitwise_including_oom_reasons() {
+        // The incremental engine's core contract at module granularity
+        // (the pinned cross-thread matrix lives in
+        // rust/tests/sweep_incremental.rs): cached and legacy paths agree
+        // bitwise, including which cells OOM and why.
+        let tiny_base = with_dram_capacity(config_a(), 8 * GIB);
+        let cxl = with_dram_capacity(config_a(), 128 * GIB);
+        let policies = engines(&[Policy::DramOnly, Policy::CxlAware { striping: true }]);
+        let scheds = vec![
+            crate::offload::schedules::by_name("zero-offload").unwrap(),
+            crate::offload::schedules::by_name("lora").unwrap(),
+        ];
+        let cached = sweep_grid_matrix(
+            &tiny_base,
+            &cxl,
+            &qwen25_7b(),
+            1,
+            &[4096, 8192],
+            &[4],
+            &policies,
+            &scheds,
+            2,
+        );
+        let legacy = sweep_grid_matrix_nocache(
+            &tiny_base,
+            &cxl,
+            &qwen25_7b(),
+            1,
+            &[4096, 8192],
+            &[4],
+            &policies,
+            &scheds,
+            2,
+        );
+        assert_eq!(cached.digest(), legacy.digest());
+        for (c, l) in cached.points.iter().zip(&legacy.points) {
+            assert_eq!(c.oom, l.oom, "OOM reasons must match the legacy path");
+        }
+        // baseline OOMs on the tiny host; its reason is repeated per
+        // schedule column of the engine.
+        assert!(cached.points[0].oom[0].is_some());
+        assert_eq!(cached.points[0].oom[0], cached.points[0].oom[1]);
+        assert!(cached.points[0].oom[2].is_none());
+    }
+
+    #[test]
+    fn shared_ctx_resweep_is_pure_memo_traffic() {
+        let base = config_a();
+        let cxl = with_dram_capacity(config_a(), 128 * GIB);
+        let policies = engines(&[Policy::DramOnly, Policy::NaiveInterleave]);
+        let ctx = crate::offload::evalcache::EvalCtx::new();
+        let run = |threads| {
+            sweep_grid_matrix_with_ctx(
+                &ctx,
+                &base,
+                &cxl,
+                &qwen25_7b(),
+                1,
+                &[4096, 8192],
+                &[4],
+                &policies,
+                &[schedules::zero_offload()],
+                threads,
+            )
+        };
+        let cold = run(2);
+        let after_cold = ctx.stats();
+        assert_eq!(after_cold.exec_hits, 0, "cold sweep cannot hit");
+        let warm = run(1);
+        let after_warm = ctx.stats();
+        assert_eq!(cold.digest(), warm.digest(), "warm re-sweep is bit-identical");
+        assert_eq!(
+            after_warm.misses(),
+            after_cold.misses(),
+            "warm re-sweep must not compute anything"
+        );
+        assert_eq!(after_warm.exec_hits, 4, "2 cells x 2 engines all hit");
+    }
+
+    #[test]
+    fn cost_order_is_heaviest_first_with_stable_ties() {
+        let grid = vec![(4096, 2), (4096, 8), (8192, 2), (8192, 8), (16384, 1)];
+        // costs: 8192, 32768, 16384, 65536, 16384
+        assert_eq!(cost_order(&grid), vec![3, 1, 2, 4, 0]);
     }
 
     #[test]

@@ -50,7 +50,16 @@ pub struct Fabric {
 
 impl Fabric {
     pub fn new(topo: &SystemTopology) -> Self {
-        let mut sim = FlowSim::new();
+        Self::new_in(topo, FlowSim::new())
+    }
+
+    /// Build the fabric inside a reused DES arena: `sim` is reset (which
+    /// makes it observationally identical to a fresh engine while keeping
+    /// its allocations) and its resource table rebuilt from `topo`. The
+    /// sweep's per-worker arenas thread the engine back out through the
+    /// public `sim` field after each run.
+    pub fn new_in(topo: &SystemTopology, mut sim: FlowSim) -> Self {
+        sim.reset();
         let mut nodes = Vec::new();
         let mut latency_s = Vec::new();
         for n in &topo.mem_nodes {
@@ -315,6 +324,30 @@ mod tests {
         }
         assert_eq!(fab.sim.finished_len(), 0, "all stats consumed");
         assert!(fab.take_stats(flows[0]).is_none(), "take is exactly-once");
+    }
+
+    #[test]
+    fn new_in_reused_arena_matches_fresh_fabric_bitwise() {
+        let topo = config_a();
+        let cxl = topo.cxl_nodes()[0];
+        let drive = |fab: &mut Fabric| {
+            fab.transfer(GpuId(0), dram(), Dir::HostToGpu, 3.0 * GIB as f64, 0);
+            fab.transfer(GpuId(1), cxl, Dir::HostToGpu, 2.0 * GIB as f64, 1);
+            fab.compute(0.002, 2);
+            let mut ev = Vec::new();
+            while let Some(e) = fab.next_event() {
+                ev.push((e, fab.now().to_bits()));
+            }
+            ev
+        };
+        let mut fresh = Fabric::new(&topo);
+        let golden = drive(&mut fresh);
+        // Dirty an arena on a different topology, then rebuild in place.
+        let mut dirty = Fabric::new(&config_b());
+        dirty.transfer(GpuId(0), dram(), Dir::GpuToHost, 1.0 * GIB as f64, 9);
+        dirty.sim.run_to_idle();
+        let mut reused = Fabric::new_in(&topo, dirty.sim);
+        assert_eq!(drive(&mut reused), golden);
     }
 
     #[test]

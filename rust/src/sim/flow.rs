@@ -369,6 +369,33 @@ impl FlowSim {
         }
     }
 
+    /// Return the sim to its freshly-constructed state while retaining
+    /// every backing allocation (slab entries, event-queue storage, the
+    /// max-min scratch, the finished map's table). The arena-reuse
+    /// contract: after `reset`, every observable — event streams, ids,
+    /// tags, `to_bits` timestamps — is byte-identical to a brand-new
+    /// [`FlowSim::new`] driven by the same call sequence. Resources are
+    /// cleared too: drivers (e.g. `sim::fabric::Fabric`) re-add them per
+    /// run, so a reused arena replays resource ids from zero exactly like
+    /// a fresh engine.
+    pub fn reset(&mut self) {
+        self.now = 0.0;
+        self.resources.clear();
+        self.slots.clear();
+        self.active.clear();
+        self.pending.clear();
+        self.timers.clear();
+        self.next_id = 0;
+        self.rates_dirty = true;
+        self.cand_t = f64::INFINITY;
+        self.cand_slot = None;
+        self.finished.clear();
+        self.resource_bytes.clear();
+        self.events = 0;
+        // `scratch` is pure per-call workspace — every consumer clears or
+        // resizes it before reading — so it carries over untouched.
+    }
+
     pub fn now(&self) -> SimTime {
         self.now
     }
@@ -1057,6 +1084,102 @@ mod tests {
         sim.start_flow(&[l], 0.1, 0.5, 2);
         let tags: Vec<u64> = sim.run_to_idle().iter().map(|e| e.tag()).collect();
         assert_eq!(tags, vec![2, 1]);
+    }
+
+    // ---- arena reuse (`FlowSim::reset`) ------------------------------
+
+    /// Fig. 6-shaped drive: contended AIC + DRAM + two GPUs, mixed setup
+    /// latencies, one timer. Returns every event with its `to_bits`
+    /// timestamp — the full observable stream.
+    fn drive_fig6_shape(sim: &mut FlowSim) -> Vec<(Event, u64)> {
+        let d = sim.add_resource("dram", CapacityModel::Fixed(204.0 * GB));
+        let x = sim.add_resource(
+            "aic",
+            CapacityModel::Contended { single: 54.0 * GB, contended: 26.0 * GB },
+        );
+        let g0 = sim.add_resource("g0", CapacityModel::Fixed(54.0 * GB));
+        let g1 = sim.add_resource("g1", CapacityModel::Fixed(54.0 * GB));
+        sim.start_flow(&[x, g0], 3.0 * GB, 10e-6, 1);
+        sim.start_flow(&[x, g1], 2.0 * GB, 10e-6, 2);
+        sim.start_flow(&[d, g0], 5.0 * GB, 0.0, 3);
+        sim.add_timer(0.01, 4);
+        let mut ev = Vec::new();
+        while let Some(e) = sim.next_event() {
+            ev.push((e, sim.now().to_bits()));
+        }
+        ev
+    }
+
+    /// Workflow-shaped drive: the executor's interactive pattern — consume
+    /// one event at a time and issue dependent flows/timers as each
+    /// completes, consuming stats through `take_stats` like the executor.
+    fn drive_workflow_shape(sim: &mut FlowSim) -> Vec<(Event, u64, u64)> {
+        let d = sim.add_resource("dram", CapacityModel::Fixed(204.0 * GB));
+        let g = sim.add_resource("g0-rx", CapacityModel::Fixed(54.0 * GB));
+        let gtx = sim.add_resource("g0-tx", CapacityModel::Fixed(54.0 * GB));
+        sim.start_flow(&[d, g], 1.5 * GB, 10e-6, 100);
+        sim.add_timer(0.005, 101);
+        let mut ev = Vec::new();
+        let mut spawned = 0u64;
+        while let Some(e) = sim.next_event() {
+            let mut consumed = 0u64;
+            if let Event::FlowDone { id, tag } = &e {
+                consumed = sim.take_stats(*id).expect("stats once").finished.to_bits();
+                // Dependency chain: each completion launches the next
+                // stage until three stages have run.
+                if spawned < 3 {
+                    spawned += 1;
+                    sim.start_flow(&[gtx, d], 0.5 * GB * spawned as f64, 10e-6, tag + 1);
+                    sim.add_timer(0.001 * spawned as f64, 200 + spawned);
+                }
+            }
+            ev.push((e, sim.now().to_bits(), consumed));
+        }
+        assert_eq!(sim.finished_len(), 0, "workflow drive consumes every stat");
+        ev
+    }
+
+    #[test]
+    fn reset_replays_fig6_shape_bitwise() {
+        let mut fresh = FlowSim::new();
+        let golden = drive_fig6_shape(&mut fresh);
+        // Dirty a sim with a different workload first, then reset it.
+        let mut reused = FlowSim::new();
+        let l = reused.add_resource("other", CapacityModel::Fixed(3.0 * GB));
+        for i in 0..17 {
+            reused.start_flow(&[l], 0.25 * GB * (i + 1) as f64, 0.001, i);
+        }
+        reused.add_timer(0.5, 99);
+        reused.run_to_idle();
+        reused.reset();
+        assert_eq!(drive_fig6_shape(&mut reused), golden);
+        // A second reuse cycle is just as clean.
+        reused.reset();
+        assert_eq!(drive_fig6_shape(&mut reused), golden);
+    }
+
+    #[test]
+    fn reset_replays_workflow_shape_bitwise() {
+        let mut fresh = FlowSim::new();
+        let golden = drive_workflow_shape(&mut fresh);
+        let mut reused = FlowSim::new();
+        // Dirty enough state to exercise every cleared structure: pending
+        // activations, timers, unconsumed finished stats, resource bytes.
+        let a = reused.add_resource("a", CapacityModel::Fixed(1.0 * GB));
+        let b = reused.add_resource(
+            "b",
+            CapacityModel::Contended { single: 2.0 * GB, contended: 1.0 * GB },
+        );
+        for i in 0..9 {
+            reused.start_flow(&[a, b], 0.5 * GB, 0.01 * i as f64, i);
+        }
+        reused.run_to_idle();
+        assert!(reused.finished_len() > 0, "left stats unconsumed on purpose");
+        reused.reset();
+        assert_eq!(reused.len(), 0);
+        assert_eq!(reused.finished_len(), 0);
+        assert_eq!(reused.events_processed(), 0);
+        assert_eq!(drive_workflow_shape(&mut reused), golden);
     }
 
     #[test]

@@ -138,6 +138,20 @@ impl<P> EventQueue<P> {
         matches!(self.backend, Backend::Wheel(_))
     }
 
+    /// Drop every outstanding event and return to the initial backend
+    /// state. A fresh queue always starts on the heap whatever its policy
+    /// (upgrades happen on push), so a cleared wheel-backed queue swaps
+    /// back to an empty heap: after `clear` the queue is observationally
+    /// identical to [`EventQueue::with_policy`] of the same policy — the
+    /// arena-reuse contract `FlowSim::reset` builds on. A retained heap
+    /// keeps its capacity.
+    pub fn clear(&mut self) {
+        match &mut self.backend {
+            Backend::Heap(h) => h.clear(),
+            Backend::Wheel(_) => self.backend = Backend::Heap(BinaryHeap::new()),
+        }
+    }
+
     pub fn push(&mut self, key: EventKey, payload: P) {
         let entry = Entry { key, payload };
         let threshold = match self.policy {
@@ -513,6 +527,40 @@ mod tests {
             n += 1;
         }
         assert_eq!(n, 34);
+    }
+
+    #[test]
+    fn clear_restores_the_initial_backend_state() {
+        // Heap-backed: clear drops the events, stays a heap.
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..8u64 {
+            q.push(EventKey::new(i as f64, 0, i), i);
+        }
+        q.clear();
+        assert!(q.is_empty() && !q.is_wheel());
+        // Wheel-backed: clear swaps back to the empty heap a fresh queue
+        // of the same policy would start on, and the reused queue's event
+        // stream is bit-identical to a fresh one's.
+        let mut reused = EventQueue::with_policy(BackendPolicy::WheelEager);
+        for i in 0..64u64 {
+            reused.push(EventKey::new(i as f64 * 0.5, 0, i), i);
+        }
+        assert!(reused.is_wheel());
+        reused.clear();
+        assert!(reused.is_empty() && !reused.is_wheel());
+        let mut fresh = EventQueue::with_policy(BackendPolicy::WheelEager);
+        for i in 0..64u64 {
+            let k = EventKey::new((i % 7) as f64, (i % 3) as u8, i);
+            reused.push(k, i);
+            fresh.push(k, i);
+        }
+        loop {
+            let (a, b) = (reused.pop(), fresh.pop());
+            assert_eq!(a, b, "reused queue drifted from fresh");
+            if a.is_none() {
+                break;
+            }
+        }
     }
 
     #[test]

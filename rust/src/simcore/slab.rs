@@ -69,6 +69,14 @@ impl<T> Slab<T> {
     pub fn entries(&self) -> &[T] {
         &self.entries
     }
+
+    /// Drop every entry and forget every free slot, retaining the backing
+    /// capacity. After `clear` the slab is observationally identical to
+    /// [`Slab::new`] — the arena-reuse contract `FlowSim::reset` builds on.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.free.clear();
+    }
 }
 
 impl<T> Index<usize> for Slab<T> {
@@ -115,6 +123,20 @@ mod tests {
         s[i as usize] += 10;
         assert_eq!(s[i as usize], 15);
         assert_eq!(s.entries(), &[15]);
+    }
+
+    #[test]
+    fn clear_is_observationally_fresh() {
+        let mut s: Slab<u32> = Slab::new();
+        let a = s.insert(1);
+        s.insert(2);
+        s.release(a);
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.slot_count(), 0);
+        // Fresh allocation order: index 0 first, no recycled free list.
+        assert_eq!(s.insert(9), 0);
+        assert_eq!(s.insert(10), 1);
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! One memo-table implementation for every value-pure cache in the crate.
+//!
+//! Both caching layers — the fleet calibrator/probe context
+//! (`fleet::sim`) and the sweep evaluation context
+//! (`offload::evalcache`) — memoize *pure functions*: every value is
+//! fully determined by its key, so warm-up order, thread count, and even
+//! wholesale eviction can only cost recomputation, never change a
+//! result. [`Memo`] packages that contract once: a `BTreeMap` (ordered,
+//! hash-DoS-free, deterministic iteration) plus hit/miss counters and an
+//! optional capacity at which the table is cleared wholesale (the
+//! `PLAN_MEMO_CAP` semantics the fleet probe context pioneered in PR 8).
+//!
+//! Counters are observability, not behavior: they feed the `sweep`
+//! CLI's cache summary and `benches/sweep_scale.rs` hit-rate reporting.
+
+use std::collections::BTreeMap;
+
+/// A memo table for a value-pure function of `K`.
+#[derive(Debug)]
+pub struct Memo<K: Ord, V: Clone> {
+    map: BTreeMap<K, V>,
+    /// Clear-when-full bound (`None` = unbounded).
+    cap: Option<usize>,
+    hits: u64,
+    misses: u64,
+}
+
+impl<K: Ord, V: Clone> Default for Memo<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Ord, V: Clone> Memo<K, V> {
+    pub fn new() -> Self {
+        Self {
+            map: BTreeMap::new(),
+            cap: None,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// A memo that clears itself wholesale when `cap` entries are
+    /// resident and another insert arrives. Sound only because values
+    /// are pure: dropping them costs recomputation, nothing else.
+    pub fn with_cap(cap: usize) -> Self {
+        Self {
+            map: BTreeMap::new(),
+            cap: Some(cap),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Cached value for `key`, counting a hit or a miss. A miss is
+    /// expected to be followed by [`Memo::insert`] once the value has
+    /// been computed (the get/compute/insert split exists so callers can
+    /// run the computation without holding any borrow of the memo).
+    pub fn get(&mut self, key: &K) -> Option<V> {
+        match self.map.get(key) {
+            Some(v) => {
+                self.hits += 1;
+                Some(v.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert the computed value for a key (typically after a miss).
+    /// Enforces the clear-when-full bound.
+    pub fn insert(&mut self, key: K, value: V) {
+        if let Some(cap) = self.cap {
+            if self.map.len() >= cap {
+                self.map.clear();
+            }
+        }
+        self.map.insert(key, value);
+    }
+
+    /// Insert only if absent, without touching the hit/miss counters
+    /// (the pre-warm idiom: results computed out-of-band are seeded into
+    /// the table but were neither hits nor misses of the lazy path).
+    pub fn seed(&mut self, key: K, value: V) {
+        if let Some(cap) = self.cap {
+            if self.map.len() >= cap {
+                self.map.clear();
+            }
+        }
+        self.map.entry(key).or_insert(value);
+    }
+
+    /// The classic memoized call: return the cached value or compute,
+    /// store and return it. `f` runs with no borrow of the memo held.
+    pub fn get_or_insert_with(&mut self, key: K, f: impl FnOnce() -> V) -> V {
+        if let Some(v) = self.get(&key) {
+            return v;
+        }
+        let v = f();
+        self.insert(key, v.clone());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_or_insert_computes_once() {
+        let mut m: Memo<u64, u64> = Memo::new();
+        let mut calls = 0;
+        let a = m.get_or_insert_with(7, || {
+            calls += 1;
+            42
+        });
+        let b = m.get_or_insert_with(7, || {
+            calls += 1;
+            99
+        });
+        assert_eq!((a, b, calls), (42, 42, 1));
+        assert_eq!((m.hits(), m.misses()), (1, 1));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn cap_clears_wholesale_like_plan_memo() {
+        let mut m: Memo<u64, u64> = Memo::with_cap(4);
+        for k in 0..4 {
+            m.insert(k, k);
+        }
+        assert_eq!(m.len(), 4);
+        // The 5th insert finds the table at cap and clears it first.
+        m.insert(4, 4);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.get(&4), Some(4));
+        assert_eq!(m.get(&0), None, "evicted values recompute, never lie");
+    }
+
+    #[test]
+    fn seed_does_not_overwrite_or_count() {
+        let mut m: Memo<&'static str, u32> = Memo::new();
+        m.seed("a", 1);
+        m.seed("a", 2);
+        assert_eq!(m.get(&"a"), Some(1));
+        assert_eq!((m.hits(), m.misses()), (1, 0), "seeding is counter-neutral");
+    }
+
+    #[test]
+    fn miss_then_insert_round_trips() {
+        let mut m: Memo<(u32, bool), String> = Memo::new();
+        assert_eq!(m.get(&(3, true)), None);
+        m.insert((3, true), "v".to_string());
+        assert_eq!(m.get(&(3, true)).as_deref(), Some("v"));
+        assert_eq!((m.hits(), m.misses()), (1, 1));
+    }
+}

@@ -7,6 +7,7 @@ pub mod cli;
 pub mod digest;
 pub mod json;
 pub mod logging;
+pub mod memo;
 pub mod prng;
 pub mod proptest_lite;
 pub mod stats;

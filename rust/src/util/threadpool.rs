@@ -248,6 +248,51 @@ where
     slots.into_iter().map(|s| s.expect("worker filled slot")).collect()
 }
 
+/// [`par_map`] with an explicit dispatch order: workers pull item indices
+/// from `order` (a permutation of `0..nitems`) instead of ascending index,
+/// so expensive items can be started first and stragglers don't serialize
+/// the tail. Results still come back in *item* order — slots are indexed
+/// by item, not by dispatch position — so for value-pure closures the
+/// output is byte-identical to [`par_map`] at every worker count.
+pub fn par_map_ordered<R: Send, F>(nitems: usize, nworkers: usize, order: &[usize], f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    debug_assert_eq!(order.len(), nitems, "order must be a permutation");
+    if nitems == 0 {
+        return Vec::new();
+    }
+    let nworkers = nworkers.max(1).min(nitems);
+    if nworkers == 1 {
+        // Serial path iterates in *item* order, exactly like `par_map`'s
+        // serial shortcut, so `threads = 1` is the reference ordering.
+        return (0..nitems).map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = (0..nitems).map(|_| None).collect();
+    {
+        let cells: Vec<std::sync::Mutex<&mut Option<R>>> =
+            slots.iter_mut().map(std::sync::Mutex::new).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..nworkers {
+                let cursor = &cursor;
+                let cells = &cells;
+                let f = &f;
+                scope.spawn(move || loop {
+                    let k = cursor.fetch_add(1, Ordering::Relaxed);
+                    if k >= nitems {
+                        break;
+                    }
+                    let i = order[k];
+                    let r = f(i);
+                    **cells[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+    }
+    slots.into_iter().map(|s| s.expect("worker filled slot")).collect()
+}
+
 /// Parallel fold: run `f(chunk_index, range)` per contiguous index range and
 /// combine the per-thread results with `combine`.
 pub fn par_ranges<R: Send, F, C>(n: usize, nthreads: usize, f: F, combine: C) -> Option<R>
@@ -351,6 +396,27 @@ mod tests {
     #[test]
     fn map_empty() {
         let out: Vec<u32> = par_map(0, 8, |_| unreachable!());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn ordered_map_matches_par_map_at_every_worker_count() {
+        // Dispatch heaviest-last (a reversed order) and heaviest-first;
+        // both must produce the same item-ordered output as par_map.
+        let n = 97;
+        let reference: Vec<usize> = par_map(n, 1, |i| i * 3 + 1);
+        let reversed: Vec<usize> = (0..n).rev().collect();
+        for workers in [1, 2, 8] {
+            let out = par_map_ordered(n, workers, &reversed, |i| i * 3 + 1);
+            assert_eq!(out, reference);
+        }
+        let identity: Vec<usize> = (0..n).collect();
+        assert_eq!(par_map_ordered(n, 8, &identity, |i| i * 3 + 1), reference);
+    }
+
+    #[test]
+    fn ordered_map_empty() {
+        let out: Vec<u32> = par_map_ordered(0, 8, &[], |_| unreachable!());
         assert!(out.is_empty());
     }
 

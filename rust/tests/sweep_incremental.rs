@@ -1,0 +1,327 @@
+//! Incremental sweep engine pins (the PR-9 contract): the cached path
+//! (`sweep_grid_matrix` / `sweep_grid_matrix_with_ctx`) must be
+//! bit-for-bit identical to the PR-8 uncached path
+//! (`sweep_grid_matrix_nocache`) on a pinned engine × schedule ×
+//! context grid, across thread counts {1, 4, 8}, cold and warm — plus
+//! proptest memo-soundness: equal keys imply bitwise-equal values, and
+//! perturbing any config dimension changes the key.
+
+use cxlfine::mem::{EngineRef, Policy};
+use cxlfine::model::footprint::Workload;
+use cxlfine::model::presets::{qwen25_7b, tiny_2m};
+use cxlfine::offload::evalcache::{cfg_key, topo_digest};
+use cxlfine::offload::{
+    schedules, sweep_grid_matrix, sweep_grid_matrix_nocache, sweep_grid_matrix_with_ctx, EvalCtx,
+    RunConfig, ScheduleRef, SweepResult,
+};
+use cxlfine::topology::presets::{config_a, dev_tiny, with_dram_capacity};
+use cxlfine::util::units::GIB;
+
+/// The pinned grid: a DRAM-starved baseline host (so `baseline-dram`
+/// OOMs, exercising the cached-error short-circuit), a CXL-rich policy
+/// host, three engines, two schedules, short and long contexts.
+struct PinnedGrid {
+    base: cxlfine::topology::SystemTopology,
+    cxl: cxlfine::topology::SystemTopology,
+    policies: Vec<EngineRef>,
+    scheds: Vec<ScheduleRef>,
+    contexts: Vec<usize>,
+    batches: Vec<usize>,
+}
+
+fn pinned_grid() -> PinnedGrid {
+    PinnedGrid {
+        base: with_dram_capacity(config_a(), 8 * GIB),
+        cxl: with_dram_capacity(config_a(), 128 * GIB),
+        policies: vec![
+            EngineRef::from(Policy::DramOnly),
+            EngineRef::from(Policy::NaiveInterleave),
+            EngineRef::from(Policy::CxlAware { striping: false }),
+        ],
+        scheds: vec![
+            schedules::by_name("zero-offload").unwrap(),
+            schedules::by_name("lora").unwrap(),
+        ],
+        contexts: vec![4096, 16384],
+        batches: vec![2, 8],
+    }
+}
+
+fn run_nocache(g: &PinnedGrid, nthreads: usize) -> SweepResult {
+    sweep_grid_matrix_nocache(
+        &g.base,
+        &g.cxl,
+        &qwen25_7b(),
+        1,
+        &g.contexts,
+        &g.batches,
+        &g.policies,
+        &g.scheds,
+        nthreads,
+    )
+}
+
+fn run_cached(g: &PinnedGrid, nthreads: usize) -> SweepResult {
+    sweep_grid_matrix(
+        &g.base,
+        &g.cxl,
+        &qwen25_7b(),
+        1,
+        &g.contexts,
+        &g.batches,
+        &g.policies,
+        &g.scheds,
+        nthreads,
+    )
+}
+
+fn run_with_ctx(g: &PinnedGrid, ctx: &EvalCtx, nthreads: usize) -> SweepResult {
+    sweep_grid_matrix_with_ctx(
+        ctx,
+        &g.base,
+        &g.cxl,
+        &qwen25_7b(),
+        1,
+        &g.contexts,
+        &g.batches,
+        &g.policies,
+        &g.scheds,
+        nthreads,
+    )
+}
+
+/// Field-by-field bitwise comparison — stricter than `digest()` equality
+/// in that a digest collision cannot mask a drift, and failures name the
+/// exact cell and column.
+fn assert_bits_equal(a: &SweepResult, b: &SweepResult, what: &str) {
+    assert_eq!(a.digest(), b.digest(), "{what}: digests differ");
+    assert_eq!(a.policies, b.policies, "{what}: column labels differ");
+    assert_eq!(a.points.len(), b.points.len(), "{what}: grid size differs");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        let cell = format!("{what}: cell (C={}, B={})", pa.context, pa.batch);
+        assert_eq!(pa.context, pb.context, "{cell}: context");
+        assert_eq!(pa.batch, pb.batch, "{cell}: batch");
+        assert_eq!(pa.oom, pb.oom, "{cell}: OOM reasons");
+        assert_eq!(pa.runs.len(), pb.runs.len(), "{cell}: column count");
+        for (i, (ra, rb)) in pa.runs.iter().zip(&pb.runs).enumerate() {
+            match (ra, rb) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.fwd_s.to_bits(), y.fwd_s.to_bits(), "{cell} col {i}: fwd_s");
+                    assert_eq!(x.bwd_s.to_bits(), y.bwd_s.to_bits(), "{cell} col {i}: bwd_s");
+                    assert_eq!(x.step_s.to_bits(), y.step_s.to_bits(), "{cell} col {i}: step_s");
+                    assert_eq!(x.iter_s.to_bits(), y.iter_s.to_bits(), "{cell} col {i}: iter_s");
+                    assert_eq!(x.tokens, y.tokens, "{cell} col {i}: tokens");
+                }
+                _ => panic!("{cell} col {i}: ran on one path but not the other"),
+            }
+        }
+    }
+}
+
+#[test]
+fn cached_sweep_matches_the_uncached_path_across_thread_counts() {
+    let g = pinned_grid();
+    let oracle = run_nocache(&g, 1);
+
+    // The pinned grid must actually exercise both branches: OOM cells
+    // (starved baseline at long context) and completed DES runs.
+    let n_oom: usize = oracle
+        .points
+        .iter()
+        .flat_map(|p| &p.oom)
+        .filter(|o| o.is_some())
+        .count();
+    let n_ran: usize = oracle
+        .points
+        .iter()
+        .flat_map(|p| &p.runs)
+        .filter(|r| r.is_some())
+        .count();
+    assert!(n_oom > 0, "pinned grid must contain OOM cells");
+    assert!(n_ran > 0, "pinned grid must contain completed cells");
+
+    for nthreads in [1usize, 4, 8] {
+        let cached = run_cached(&g, nthreads);
+        assert_bits_equal(&oracle, &cached, &format!("cold cache, {nthreads} threads"));
+    }
+}
+
+#[test]
+fn warm_resweeps_are_bitwise_identical_and_compute_nothing() {
+    let g = pinned_grid();
+    let ctx = EvalCtx::new();
+    let cold = run_with_ctx(&g, &ctx, 4);
+    let after_cold = ctx.stats();
+    assert_eq!(after_cold.exec_hits, 0, "a cold context cannot hit");
+    assert!(after_cold.exec_misses > 0, "cold sweep must run the DES");
+
+    for nthreads in [1usize, 4, 8] {
+        let warm = run_with_ctx(&g, &ctx, nthreads);
+        assert_bits_equal(&cold, &warm, &format!("warm re-sweep, {nthreads} threads"));
+    }
+    let after_warm = ctx.stats();
+    assert_eq!(
+        after_warm.misses(),
+        after_cold.misses(),
+        "warm re-sweeps must be pure memo traffic: no new probe, plan, \
+         schedule, or DES work"
+    );
+    assert!(after_warm.exec_hits > 0 && after_warm.plan_hits > 0);
+}
+
+#[test]
+fn warm_resweep_matches_the_uncached_oracle_exactly() {
+    // Transitivity check done explicitly: legacy == cold == warm, so a
+    // stale cache entry can never leak into results.
+    let g = pinned_grid();
+    let oracle = run_nocache(&g, 4);
+    let ctx = EvalCtx::new();
+    let _cold = run_with_ctx(&g, &ctx, 4);
+    let warm = run_with_ctx(&g, &ctx, 1);
+    assert_bits_equal(&oracle, &warm, "warm vs uncached oracle");
+}
+
+/// Memo-soundness properties, randomized over config dimensions.
+mod memo_soundness {
+    use super::*;
+    use cxlfine::util::memo::Memo;
+    use cxlfine::util::proptest_lite::*;
+
+    fn cfg_from(dims: &[u64; 5]) -> RunConfig {
+        let mut model = tiny_2m();
+        model.layers = 1 + (dims[0] as usize % 4);
+        let w = Workload::new(
+            1 + (dims[1] as usize % 2),
+            1 + (dims[2] as usize % 4),
+            256 * (1 + dims[3] as usize % 4),
+        );
+        let mut cfg = RunConfig::new(model, w, Policy::DramOnly);
+        cfg.prefetch_depth = 1 + (dims[4] as usize % 3);
+        cfg
+    }
+
+    fn dims_gen() -> VecOf<U64Range> {
+        VecOf {
+            inner: U64Range { lo: 0, hi: 1 << 32 },
+            min_len: 5,
+            max_len: 5,
+        }
+    }
+
+    #[test]
+    fn equal_dimensions_hash_equal_and_engines_are_excluded() {
+        let gen = dims_gen();
+        forall("cfg-key-equal", 0x5eed, 32, &gen, |dims| {
+            let d: [u64; 5] = [dims[0], dims[1], dims[2], dims[3], dims[4]];
+            let a = cfg_from(&d);
+            // Same dimensions, different engine object: the key must not
+            // see the engine (it keys the plan memo separately).
+            let mut b = cfg_from(&d);
+            b.engine = EngineRef::from(Policy::NaiveInterleave);
+            if cfg_key(&a) != cfg_key(&b) {
+                return Err("equal dimensions must produce equal keys".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn perturbing_any_dimension_changes_the_key() {
+        let gen = PairOf(dims_gen(), UsizeRange { lo: 0, hi: 4 });
+        forall("cfg-key-separates", 0xd1ff, 48, &gen, |(dims, which)| {
+            let d: [u64; 5] = [dims[0], dims[1], dims[2], dims[3], dims[4]];
+            let a = cfg_from(&d);
+            let mut d2 = d;
+            // Every dimension feeds cfg_from through `1 + d % m`, and
+            // `(d + 1) % m != d % m` for every m >= 2, so a +1 bump is
+            // guaranteed to change exactly that config dimension.
+            d2[*which] += 1;
+            let b = cfg_from(&d2);
+            if cfg_key(&a) == cfg_key(&b) {
+                return Err(format!("dimension {which} perturbed but key unchanged"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn equal_keys_yield_bitwise_equal_values() {
+        // Run the same cell through a fresh context and through a shared
+        // (already warm) one, across random small workloads: equal memo
+        // keys must reproduce the cold value bit-for-bit.
+        let topo = dev_tiny();
+        let topo_d = topo_digest(&topo);
+        let scheds = vec![schedules::by_name("zero-offload").unwrap()];
+        let engine = EngineRef::from(Policy::CxlAware { striping: false });
+        let shared = EvalCtx::new();
+        let gen = PairOf(UsizeRange { lo: 1, hi: 4 }, UsizeRange { lo: 1, hi: 4 });
+        forall("memo-value-stable", 0xcafe, 8, &gen, |(batch, ctx_step)| {
+            let w = Workload::new(1, *batch, 256 * *ctx_step);
+            let model = tiny_2m();
+            let fresh = EvalCtx::new();
+            let (cold, cold_oom) =
+                fresh.eval_engine_cell(&topo, topo_d, &model, w, &engine, &scheds);
+            // First visit seeds the shared memo; later proptest cases
+            // that collide on the key replay it and must match `cold`.
+            let (warm, warm_oom) =
+                shared.eval_engine_cell(&topo, topo_d, &model, w, &engine, &scheds);
+            if cold_oom != warm_oom {
+                return Err("OOM outcome must not depend on cache state".into());
+            }
+            for (a, b) in cold.iter().zip(&warm) {
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(x), Some(y)) => {
+                        if x.iter_s.to_bits() != y.iter_s.to_bits()
+                            || x.fwd_s.to_bits() != y.fwd_s.to_bits()
+                            || x.bwd_s.to_bits() != y.bwd_s.to_bits()
+                            || x.step_s.to_bits() != y.step_s.to_bits()
+                            || x.tokens != y.tokens
+                        {
+                            return Err("memoized value drifted from cold value".into());
+                        }
+                    }
+                    _ => return Err("ran on one path but not the other".into()),
+                }
+            }
+            Ok(())
+        });
+        // Re-visiting a cell must replay it from the memo without any
+        // recomputation (the random cases above may or may not collide).
+        let w = Workload::new(1, 2, 512);
+        let model = tiny_2m();
+        shared.eval_engine_cell(&topo, topo_d, &model, w, &engine, &scheds);
+        let before = shared.stats();
+        shared.eval_engine_cell(&topo, topo_d, &model, w, &engine, &scheds);
+        let after = shared.stats();
+        assert!(after.exec_hits > before.exec_hits, "revisit must hit the exec memo");
+        assert_eq!(after.misses(), before.misses(), "revisit must not compute");
+    }
+
+    #[test]
+    fn memo_round_trips_are_bitwise_stable() {
+        // The Memo container itself: get after insert returns the exact
+        // bits that went in, and counters see through it.
+        let gen = PairOf(
+            U64Range { lo: 0, hi: u64::MAX - 1 },
+            U64Range { lo: 1, hi: 1 << 62 },
+        );
+        forall("memo-roundtrip", 0xbeef, 64, &gen, |(k, v)| {
+            let mut memo: Memo<u64, f64> = Memo::new();
+            let val = f64::from_bits(*v);
+            if memo.get(k).is_some() {
+                return Err("empty memo must miss".into());
+            }
+            memo.insert(*k, val);
+            match memo.get(k) {
+                Some(got) if got.to_bits() == val.to_bits() => {}
+                _ => return Err("round-trip lost bits".into()),
+            }
+            if memo.hits() != 1 || memo.misses() != 1 {
+                return Err(format!("counters off: {}h {}m", memo.hits(), memo.misses()));
+            }
+            Ok(())
+        });
+    }
+}

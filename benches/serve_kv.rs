@@ -1,0 +1,181 @@
+//! Serving bench: the CXL-tiered paged KV cache vs a DRAM-only cache on
+//! the pinned long-context request trace (every prompt overflows the
+//! DRAM KV budget but fits DRAM+CXL), plus a heavy-tailed mixed workload
+//! for the latency/occupancy profile.
+//!
+//! Gates (enforced in CI via `--smoke`):
+//! * the tiered cache sustains strictly more req/s than `dram-only` on
+//!   the pinned trace while meeting every TTFT SLO (p99 ≤ SLO),
+//! * bit-identical result digests across reruns (the determinism
+//!   contract extends to serving).
+//!
+//! Results land in `bench_out/serve_kv/` and in `BENCH_serve.json`
+//! (override: `CXLFINE_BENCH_SERVE_OUT`), which the CI bench-smoke job
+//! uploads on every push so the serving trajectory is recorded alongside
+//! the fleet ones.
+
+use std::time::Instant;
+
+use cxlfine::model::presets as mpresets;
+use cxlfine::offload::schedules::inference::kv_bytes_per_token;
+use cxlfine::serve::{
+    admission_by_name, dram_kv_budget, kv, simulate_serving, RequestGen, RequestSpec,
+    RequestTrace, ServeResult, PAGE_TOKENS,
+};
+use cxlfine::topology::presets::{dev_tiny, with_dram_capacity};
+use cxlfine::topology::SystemTopology;
+use cxlfine::trow;
+use cxlfine::util::bench::BenchReport;
+use cxlfine::util::json::{Json, JsonObj};
+use cxlfine::util::table::Table;
+use cxlfine::util::units::{fmt_bytes, MIB};
+
+const SLO_MS: f64 = 3_600_000.0;
+
+/// Every prompt lands in the capacity gap: bigger than the DRAM KV
+/// budget, far below DRAM+CXL (same arithmetic as `rust/tests/serve_sim.rs`).
+fn gap_trace(topo: &SystemTopology, n: usize) -> RequestTrace {
+    let budget = dram_kv_budget(topo, "tiny-2m");
+    let m = mpresets::by_name("tiny-2m").unwrap();
+    let page = PAGE_TOKENS as u64 * kv_bytes_per_token(&m);
+    let prompt = ((budget / page) as usize + 8) * PAGE_TOKENS;
+    RequestTrace {
+        seed: 0,
+        requests: (0..n)
+            .map(|i| RequestSpec {
+                id: i as u64,
+                arrival_s: i as f64,
+                model: "tiny-2m".into(),
+                prompt_tokens: prompt,
+                max_output_tokens: 8,
+                slo_ms: SLO_MS,
+            })
+            .collect(),
+    }
+}
+
+fn run(topo: &SystemTopology, trace: &RequestTrace, kv_name: &str, threads: usize) -> ServeResult {
+    simulate_serving(
+        topo,
+        trace,
+        &kv::by_name(kv_name).unwrap(),
+        &admission_by_name("fcfs").unwrap(),
+        8,
+        threads,
+    )
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut report = BenchReport::new("serve_kv");
+    let topo = with_dram_capacity(dev_tiny(), 48 * MIB);
+    let threads = cxlfine::util::threadpool::default_threads();
+    let n = if smoke { 8 } else { 16 };
+    let pinned = gap_trace(&topo, n);
+    let mut mixed = RequestGen::mixed(77, if smoke { 16 } else { 48 }, "tiny-2m");
+    mixed.slo_ms = SLO_MS;
+    let mixed = mixed.generate();
+    println!(
+        "pinned gap trace: {} requests of {} prompt tokens (digest {:016x}) on {}",
+        pinned.requests.len(),
+        pinned.requests[0].prompt_tokens,
+        pinned.digest(),
+        topo.name
+    );
+
+    let policies = ["dram-only", "tiered:2", "tiered:4"];
+    let mut raws = Vec::new();
+    let mut by_name = Vec::new();
+    for (label, trace) in [("pinned_gap", &pinned), ("mixed", &mixed)] {
+        let mut t = Table::new(&[
+            "kv policy",
+            "wall",
+            "completed",
+            "rejected",
+            "req/s",
+            "p99 ttft ms",
+            "p99 tpot ms",
+            "cold reads",
+            "demoted",
+        ])
+        .left(0);
+        for kv_name in policies {
+            let t0 = Instant::now();
+            let res = run(&topo, trace, kv_name, threads);
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            t.row(trow![
+                kv_name,
+                format!("{wall:.2}s"),
+                res.completed(),
+                res.rejected(),
+                format!("{:.3}", res.sustained_req_per_s()),
+                res.p99_ttft_ms().map(|v| format!("{v:.1}")).unwrap_or_else(|| "-".into()),
+                res.p99_tpot_ms().map(|v| format!("{v:.1}")).unwrap_or_else(|| "-".into()),
+                fmt_bytes(res.cold_read_bytes()),
+                fmt_bytes(res.kv.demoted_bytes)
+            ]);
+            let mut cell = JsonObj::new();
+            cell.set("trace", label);
+            cell.set("kv_policy", kv_name);
+            cell.set("wall_s", wall);
+            cell.set("completed", res.completed());
+            cell.set("rejected", res.rejected());
+            cell.set("truncated", res.truncated());
+            cell.set("sustained_req_per_s", res.sustained_req_per_s());
+            match res.p99_ttft_ms() {
+                Some(v) => cell.set("p99_ttft_ms", v),
+                None => cell.set("p99_ttft_ms", Json::Null),
+            }
+            cell.set("slo_attainment", res.slo_attainment());
+            cell.set("cold_read_bytes", res.cold_read_bytes());
+            cell.set("demoted_bytes", res.kv.demoted_bytes);
+            cell.set("digest", format!("{:016x}", res.digest()));
+            raws.push(Json::Obj(cell));
+            by_name.push((format!("{label}/{kv_name}"), res));
+        }
+        report.section(label, t, Json::Null);
+    }
+    let get = |name: &str| {
+        by_name
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, r)| r)
+            .expect("swept policy ran")
+    };
+
+    // Gate 1: on the pinned gap trace the tiered cache strictly beats
+    // dram-only on sustained req/s, with every TTFT SLO met.
+    let (dram, tiered) = (get("pinned_gap/dram-only"), get("pinned_gap/tiered:4"));
+    assert_eq!(dram.completed(), 0, "dram-only must reject the whole gap");
+    assert_eq!(tiered.completed(), n, "tiered must complete the whole gap");
+    assert!(
+        tiered.sustained_req_per_s() > dram.sustained_req_per_s(),
+        "the strict req/s beat: {:.3} vs {:.3}",
+        tiered.sustained_req_per_s(),
+        dram.sustained_req_per_s()
+    );
+    let p99 = tiered.p99_ttft_ms().expect("tiered completed requests");
+    assert!(p99 <= SLO_MS, "tiered p99 TTFT {p99}ms blew the {SLO_MS}ms SLO");
+    assert_eq!(tiered.slo_attainment(), 1.0);
+
+    // Gate 2: determinism — a single-threaded rerun is bit-identical.
+    let rerun = run(&topo, &pinned, "tiered:4", 1);
+    assert_eq!(rerun.digest(), tiered.digest(), "serving rerun must be bit-identical");
+
+    let mut root = JsonObj::new();
+    root.set("bench", "serve_kv");
+    root.set("smoke", smoke);
+    root.set("pinned_digest", format!("{:016x}", pinned.digest()));
+    root.set("mixed_digest", format!("{:016x}", mixed.digest()));
+    root.set("tiered_req_per_s", tiered.sustained_req_per_s());
+    root.set("dram_only_req_per_s", dram.sustained_req_per_s());
+    root.set("cells", Json::Arr(raws));
+    let out =
+        std::env::var("CXLFINE_BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    let payload = Json::Obj(root).to_string_pretty();
+    match std::fs::write(&out, &payload) {
+        Ok(()) => println!("\n[serve_kv] wrote {out}"),
+        Err(e) => eprintln!("warn: could not write {out}: {e}"),
+    }
+    report.finish();
+}

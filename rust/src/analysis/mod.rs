@@ -21,6 +21,7 @@
 //! | `P101`–`P105` | plan / allocator | [`lint_plan`], [`lint_commit`] |
 //! | `P201`–`P206` | fleet trace | [`lint_trace`] |
 //! | `P207`–`P209` | fault trace | [`lint_fault_trace`] |
+//! | `P210`–`P212` | request trace | [`lint_request_trace`] |
 //!
 //! Integration: `Schedule::validate` renders the first `Error` (same
 //! strings as the legacy checks), `Schedule::validate_strict` also fails
@@ -37,4 +38,4 @@ pub use diag::{Anchor, Diagnostic, Diagnostics, Severity};
 pub use plan_lint::{lint_commit, lint_plan};
 pub(crate) use schedule_lint::lint_schedule_adjacency;
 pub use schedule_lint::{lint_schedule, RegionInfo, ScheduleLintContext};
-pub use trace_lint::{lint_fault_trace, lint_trace};
+pub use trace_lint::{lint_fault_trace, lint_request_trace, lint_trace};

@@ -4,6 +4,9 @@
 //! [`lint_fault_trace`]: target validity (P207), time ordering (P208) and
 //! offline/restore pairing (P209) — the conditions
 //! [`FaultTrace::validate`] aborts on, reported exhaustively instead.
+//! Serving request traces get theirs via [`lint_request_trace`]: arrival
+//! ordering (P210), token/SLO positivity (P211) and digest integrity
+//! (P212), reusing P202/P204/P205/P206 for the shared shapes.
 //!
 //! Operates on parsed JSON rather than a [`FleetTrace`] so it can keep
 //! going where `FleetTrace::from_json` must abort: one malformed job
@@ -11,6 +14,7 @@
 
 use super::diag::{Anchor, Diagnostics, Severity};
 use crate::fleet::{FaultEvent, FaultKind, FaultTrace, FleetTrace, JobSpec};
+use crate::serve::{RequestSpec, RequestTrace};
 use crate::topology::{MemKind, SystemTopology};
 use crate::util::json::Json;
 
@@ -120,6 +124,121 @@ pub fn lint_trace(j: &Json) -> Diagnostics {
             Severity::Info,
             Anchor::Trace,
             "trace carries no digest — integrity cannot be verified",
+        ),
+    }
+    ds
+}
+
+/// Lint a serving request trace as parsed JSON. See DESIGN.md §12 for the
+/// catalog. Shares the fleet trace's codes for the shared shapes (P205
+/// malformed, P202 duplicate ids, P204 registry resolution, P206 missing
+/// digest) and adds the serving-specific ones: P210 (arrivals out of
+/// order — legal for the replay loop but usually a hand-edit), P211
+/// (non-positive token counts / SLO, which `simulate_serving` aborts on),
+/// P212 (digest mismatch).
+pub fn lint_request_trace(j: &Json) -> Diagnostics {
+    let mut ds = Diagnostics::new();
+    let Some(obj) = j.as_obj() else {
+        ds.push(
+            "P205",
+            Severity::Error,
+            Anchor::Trace,
+            "request trace is not a JSON object",
+        );
+        return ds;
+    };
+    let seed = match obj.get("seed") {
+        Some(Json::Str(s)) => s.parse::<u64>().ok(),
+        Some(v) => v.as_u64(),
+        None => None,
+    };
+    if seed.is_none() {
+        ds.push(
+            "P205",
+            Severity::Error,
+            Anchor::Trace,
+            "request trace is missing a u64 'seed'",
+        );
+    }
+    let Some(reqs_json) = obj.get("requests").and_then(|v| v.as_arr()) else {
+        ds.push(
+            "P205",
+            Severity::Error,
+            Anchor::Trace,
+            "request trace is missing a 'requests' array",
+        );
+        return ds;
+    };
+    let mut requests: Vec<RequestSpec> = Vec::new();
+    let mut all_parsed = true;
+    for (idx, rj) in reqs_json.iter().enumerate() {
+        match RequestSpec::from_json(rj) {
+            Ok(r) => {
+                for issue in r.registry_issues() {
+                    ds.push("P204", Severity::Error, Anchor::Job { id: r.id }, issue);
+                }
+                // `from_json` is value-lenient so one bad count stays one
+                // diagnostic; the simulator itself refuses such traces.
+                for issue in r.validity_issues() {
+                    ds.push("P211", Severity::Error, Anchor::Job { id: r.id }, issue);
+                }
+                requests.push(r);
+            }
+            Err(e) => {
+                all_parsed = false;
+                ds.push(
+                    "P205",
+                    Severity::Error,
+                    Anchor::Trace,
+                    format!("requests[{idx}]: {e}"),
+                );
+            }
+        }
+    }
+    let mut seen_ids = std::collections::BTreeSet::new();
+    for r in &requests {
+        if !seen_ids.insert(r.id) {
+            ds.push(
+                "P202",
+                Severity::Error,
+                Anchor::Job { id: r.id },
+                "duplicate request id",
+            );
+        }
+    }
+    for w in requests.windows(2) {
+        if w[1].arrival_s < w[0].arrival_s {
+            ds.push(
+                "P210",
+                Severity::Warn,
+                Anchor::Job { id: w[1].id },
+                format!(
+                    "arrives at {:.3}s, before preceding request {} at {:.3}s \
+                     (arrivals are not sorted)",
+                    w[1].arrival_s, w[0].id, w[0].arrival_s
+                ),
+            );
+        }
+    }
+    match obj.get("digest").and_then(|v| v.as_str()) {
+        Some(want) => {
+            if let (Some(seed), true) = (seed, all_parsed) {
+                let got = format!("{:016x}", RequestTrace { seed, requests }.digest());
+                if got != want {
+                    ds.push(
+                        "P212",
+                        Severity::Error,
+                        Anchor::Trace,
+                        format!("digest mismatch: file says {want}, contents hash to {got}"),
+                    );
+                }
+            }
+        }
+        None => ds.push(
+            "P206",
+            Severity::Info,
+            Anchor::Trace,
+            "request trace carries no digest — integrity cannot be verified",
         ),
     }
     ds

@@ -752,6 +752,139 @@ pub fn fleet(args: &[String]) -> Result<(), CliDone> {
     Ok(())
 }
 
+/// `cxlfine serve` — request-level inference on a CXL-tiered KV cache.
+pub fn serve(args: &[String]) -> Result<(), CliDone> {
+    use crate::serve::{self, RequestGen, RequestTrace};
+    let spec = CliSpec::new(
+        "cxlfine serve",
+        "request-level inference serving: continuous batching over a CXL-tiered paged KV cache",
+    )
+    .opt("preset", "config-a", "hardware preset of the serving host")
+    .opt("dram", "", "override DRAM capacity, e.g. 64GiB")
+    .opt(
+        "model",
+        "7b",
+        "model preset every request runs (one resident model per host)",
+    )
+    .opt(
+        "kv-policy",
+        "tiered",
+        "KV cache policy (dram-only|tiered[:H]; 'ours' = the tiered default)",
+    )
+    .opt("policy", "slo-strict", "admission policy (fcfs|slo-strict)")
+    .opt(
+        "requests",
+        "50",
+        "requests to generate when no trace file is replayed",
+    )
+    .opt("seed", "42", "trace-generator seed")
+    .opt("rate", "2", "mean inter-arrival seconds of the Poisson arrivals")
+    .opt("slo-ms", "30000", "TTFT SLO stamped on generated requests")
+    .opt("max-batch", "8", "continuous-batching slot count")
+    .opt(
+        "trace",
+        "",
+        "trace JSON path: replay it if the file exists, else generate and save there",
+    )
+    .opt(
+        "json",
+        "",
+        "write the full result (per-request records + occupancy, digest-self-certifying) here",
+    )
+    .opt("threads", "0", "calibration worker threads (0 = default)");
+    let a = parse(spec, args)?;
+    let topo = get_topo(a.get("preset").unwrap(), a.get("dram").filter(|s| !s.is_empty()))?;
+    let model_name = a.get("model").unwrap();
+    get_model(model_name)?; // validate the name up front
+    let kv_name = a.get("kv-policy").unwrap();
+    let kv = serve::kv::by_name(kv_name).ok_or_else(|| {
+        CliDone::Bad(format!(
+            "unknown KV policy {kv_name:?} ({})",
+            serve::kv::known_names().join("|")
+        ))
+    })?;
+    let adm_name = a.get("policy").unwrap();
+    let adm = serve::admission_by_name(adm_name).ok_or_else(|| {
+        CliDone::Bad(format!(
+            "unknown admission policy {adm_name:?} ({})",
+            serve::admission_known_names().join("|")
+        ))
+    })?;
+    let max_batch = a.parse_usize("max-batch")?;
+    if max_batch == 0 {
+        return Err(CliDone::Bad("--max-batch must be at least 1".into()));
+    }
+    let trace_path = a.get("trace").filter(|s| !s.is_empty()).map(str::to_string);
+    let trace = match trace_path
+        .as_deref()
+        .filter(|p| std::path::Path::new(p).exists())
+    {
+        Some(p) => {
+            let text = std::fs::read_to_string(p).map_err(|e| anyhow!("reading {p}: {e}"))?;
+            let json =
+                crate::util::json::Json::parse(&text).map_err(|e| anyhow!("parsing {p}: {e}"))?;
+            let t = RequestTrace::from_json(&json).map_err(|e| anyhow!("{p}: {e}"))?;
+            println!(
+                "replaying {} requests from {p} (generation flags --requests/--seed/--rate/\
+                 --slo-ms/--model are ignored on replay; delete the file to regenerate)",
+                t.requests.len()
+            );
+            t
+        }
+        None => {
+            let rate = a.parse_f64("rate")?;
+            if !(rate.is_finite() && rate > 0.0) {
+                return Err(CliDone::Bad(format!(
+                    "--rate must be a positive number of seconds, got {rate}"
+                )));
+            }
+            let slo_ms = a.parse_f64("slo-ms")?;
+            if !(slo_ms.is_finite() && slo_ms > 0.0) {
+                return Err(CliDone::Bad(format!(
+                    "--slo-ms must be a positive number of milliseconds, got {slo_ms}"
+                )));
+            }
+            let mut rg =
+                RequestGen::mixed(a.parse_u64("seed")?, a.parse_usize("requests")?, model_name);
+            rg.mean_interarrival_s = rate;
+            rg.slo_ms = slo_ms;
+            let t = rg.generate();
+            if let Some(p) = &trace_path {
+                std::fs::write(p, t.to_json().to_string_pretty())
+                    .map_err(|e| anyhow!("writing {p}: {e}"))?;
+                println!("wrote generated trace to {p}");
+            }
+            t
+        }
+    };
+    let threads = match a.parse_usize("threads")? {
+        0 => crate::util::threadpool::default_threads(),
+        n => n,
+    };
+    let res = serve::simulate_serving(&topo, &trace, &kv, &adm, max_batch, threads);
+    println!(
+        "served {} requests under {} + {} on {} (digest {:016x})",
+        trace.requests.len(),
+        res.kv_policy,
+        res.admission,
+        topo.name,
+        res.digest()
+    );
+    print!("{}", res.summary_table().render());
+    println!();
+    print!("{}", res.occupancy_table().render());
+    if let Some(rt) = res.reasons_table() {
+        println!();
+        print!("{}", rt.render());
+    }
+    if let Some(path) = a.get("json").filter(|s| !s.is_empty()) {
+        std::fs::write(path, res.to_json().to_string_pretty())
+            .map_err(|e| anyhow!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 /// `cxlfine lint` — run the static verifier over schedules / plans / traces.
 ///
 /// Sweeps every registered schedule (or one, with `--schedule`) across the
@@ -781,8 +914,9 @@ pub fn lint(args: &[String]) -> Result<(), CliDone> {
     .opt(
         "trace",
         "",
-        "also lint this fleet-trace or fault-trace JSON file (P2xx codes; fault traces \
-         are detected by their 'events' array and checked against the first --preset)",
+        "also lint this fleet-trace, fault-trace, or request-trace JSON file (P2xx codes; \
+         request traces are detected by their 'requests' array, fault traces by their \
+         'events' array — the latter checked against the first --preset)",
     )
     .opt("json", "", "write the full diagnostic report to this JSON file")
     .flag("deny-warnings", "treat Warn diagnostics as fatal (CI mode)");
@@ -888,8 +1022,11 @@ pub fn lint(args: &[String]) -> Result<(), CliDone> {
     if let Some(path) = a.get("trace").filter(|s| !s.is_empty()) {
         let text = std::fs::read_to_string(path).map_err(|e| anyhow!("reading {path}: {e}"))?;
         let json = Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
-        // A fault trace carries 'events' where a fleet trace carries 'jobs'.
-        let diags = if json.path(&["events"]).is_some() {
+        // A request trace carries 'requests', a fault trace 'events', a
+        // fleet trace 'jobs'.
+        let diags = if json.path(&["requests"]).is_some() {
+            analysis::lint_request_trace(&json)
+        } else if json.path(&["events"]).is_some() {
             let topo = get_topo(presets.first().copied().unwrap_or("config-a"), dram)?;
             analysis::lint_fault_trace(&json, Some(&topo))
         } else {

@@ -9,7 +9,8 @@
 //! * `bandwidth` — host→GPU transfer bandwidth matrix (Fig. 6),
 //! * `train`     — run the functional fine-tuning loop on the artifacts,
 //! * `fleet`     — multi-tenant job scheduling on one shared DRAM+CXL host,
-//! * `lint`      — static verifier for schedules, memory plans, and fleet traces.
+//! * `serve`     — request-level inference over a CXL-tiered paged KV cache,
+//! * `lint`      — static verifier for schedules, memory plans, and traces.
 
 pub mod commands;
 
@@ -32,6 +33,7 @@ pub fn run(args: Vec<String>) -> i32 {
         "train" => commands::train(rest),
         "trace" => commands::trace(rest),
         "fleet" => commands::fleet(rest),
+        "serve" => commands::serve(rest),
         "lint" => commands::lint(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
@@ -73,6 +75,7 @@ fn usage() -> String {
        train      run the functional fine-tuning loop on AOT artifacts\n  \
        trace      export a chrome://tracing JSON of one simulated iteration\n  \
        fleet      multi-tenant job scheduling + online capacity management (--trace/--policy)\n  \
+       serve      request-level inference over a CXL-tiered paged KV cache (--kv-policy)\n  \
        lint       static verifier: schedules x plans x traces (--all --deny-warnings)"
         .to_string()
 }

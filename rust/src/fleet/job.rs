@@ -271,6 +271,55 @@ impl TraceGen {
         }
     }
 
+    /// Heavy-tailed variant of [`Self::generate`] sharing the serving
+    /// layer's samplers: context is drawn by Zipf *rank* over the mix
+    /// ladder (rank 1 = the shortest context dominates, the long-context
+    /// cells are the tail) and the iteration count is bounded-Pareto over
+    /// the `[min_iterations, max_iterations]` range — the production
+    /// fine-tuning mix where most jobs are short and a fat tail runs long.
+    /// Same fixed per-job sampling order discipline: inter-arrival,
+    /// model, batch, context rank, schedule, engine, iterations.
+    pub fn generate_heavy(&self) -> FleetTrace {
+        assert!(
+            !self.models.is_empty()
+                && !self.contexts.is_empty()
+                && !self.batches.is_empty()
+                && !self.schedules.is_empty()
+                && !self.engines.is_empty(),
+            "every mix dimension needs at least one entry"
+        );
+        assert!(self.min_iterations >= 1 && self.min_iterations <= self.max_iterations);
+        let mut rng = Xoshiro256pp::seeded(self.seed);
+        let mut t = 0.0;
+        let mut jobs = Vec::with_capacity(self.n_jobs);
+        for id in 0..self.n_jobs {
+            t += rng.exp_mean(self.mean_interarrival_s);
+            let model = rng.choice(&self.models).clone();
+            let batch = *rng.choice(&self.batches);
+            let rank = rng.zipf(self.contexts.len() as u64, 1.1) as usize - 1;
+            let schedule = rng.choice(&self.schedules).clone();
+            let engine = rng.choice(&self.engines).clone();
+            let iterations = rng
+                .bounded_pareto(self.min_iterations as f64, self.max_iterations as f64, 1.2)
+                .round() as u32;
+            jobs.push(JobSpec {
+                id: id as u64,
+                arrival_s: t,
+                model,
+                gpus: self.gpus,
+                batch,
+                context: self.contexts[rank],
+                schedule,
+                engine,
+                iterations: iterations.clamp(self.min_iterations, self.max_iterations),
+            });
+        }
+        FleetTrace {
+            seed: self.seed,
+            jobs,
+        }
+    }
+
     pub fn generate(&self) -> FleetTrace {
         assert!(
             !self.models.is_empty()
@@ -343,6 +392,28 @@ mod tests {
         let schedules: std::collections::BTreeSet<&str> =
             t.jobs.iter().map(|j| j.schedule.as_str()).collect();
         assert_eq!(schedules.len(), 2);
+    }
+
+    #[test]
+    fn heavy_trace_is_deterministic_and_skews_short() {
+        let a = TraceGen::mixed(91, 300).generate_heavy();
+        let b = TraceGen::mixed(91, 300).generate_heavy();
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+        for j in &a.jobs {
+            assert!((2..=8).contains(&j.iterations));
+            assert!(j.registry_issues().is_empty());
+        }
+        // Zipf rank 1 = the shortest context must dominate the mix.
+        let short = a.jobs.iter().filter(|j| j.context == 4096).count();
+        let longest = a.jobs.iter().filter(|j| j.context == 32768).count();
+        assert!(
+            short > a.jobs.len() / 3 && short > longest,
+            "heavy tail must skew short: {short} short vs {longest} longest of {}",
+            a.jobs.len()
+        );
+        // And it is a different mix than the uniform generator.
+        assert_ne!(a.digest(), TraceGen::mixed(91, 300).generate().digest());
     }
 
     #[test]

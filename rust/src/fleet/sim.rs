@@ -556,19 +556,7 @@ impl JobState {
 /// CXL AIC (DRAM-bound moves ride those same links), with the DRAM
 /// stream bandwidth as the floor when every AIC is gone.
 pub(crate) fn migration_bandwidth(topo: &SystemTopology) -> f64 {
-    let mut bw = 0.0;
-    for n in topo.cxl_nodes() {
-        if topo.node(n).capacity > 0 {
-            if let Some(l) = topo.node(n).link {
-                bw += topo.link(l).capacity(1);
-            }
-        }
-    }
-    if bw > 0.0 {
-        bw
-    } else {
-        topo.dram().peak_bw
-    }
+    topo.migration_bandwidth()
 }
 
 /// Human-readable fault description for job records and CLI summaries.

@@ -25,6 +25,7 @@ pub mod model;
 pub mod offload;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod simcore;
 pub mod topology;

@@ -1,0 +1,331 @@
+//! Inference schedules: the serving layer's two phases as schedule DAGs.
+//!
+//! * [`Prefill`] — one forward pass over the whole prompt: per block,
+//!   stream the bf16 parameters in (prefetch window exactly like the
+//!   Fig. 1 forward), run the block kernel, and write the block's KV
+//!   pairs back to the host KV pool. No backward, no optimizer.
+//! * [`Decode`] — one autoregressive step for a batch of sequences whose
+//!   KV length is `workload.context`: per block, stream the parameters
+//!   in, read the block's accumulated KV from the host pool, run the
+//!   single-token kernel (projection/MLP work for one token plus the
+//!   attention reads over the whole context), and append the new token's
+//!   KV.
+//!
+//! Both builders carry honest [`RegionTouch::Dma`] annotations on every
+//! transfer — KV traffic rides the plan's per-GPU activation region (the
+//! host-side streaming pool) and parameter streams ride `params16` — so
+//! `AccessProfile`/lifetime accounting and the P009 honesty lint see
+//! exactly the bytes the executor will move. The serving simulator
+//! calibrates its per-(configuration, phase) step costs by pricing these
+//! schedules through `offload::simulate_iteration`, the same machinery
+//! the fleet calibrator uses for training jobs.
+
+use super::super::plan::{MemoryPlan, RunConfig};
+use super::super::schedule::{FlopsTerm, Op, OpNode, Schedule};
+use super::zero_offload::IterQuantities;
+use super::ScheduleBuilder;
+use crate::model::flops;
+use crate::model::ModelConfig;
+use crate::sim::fabric::Dir;
+use crate::topology::{GpuId, SystemTopology};
+
+/// KV-cache bytes one token adds per transformer block: K and V vectors
+/// (2 tensors) in bf16 (2 bytes) across every KV head.
+pub fn kv_bytes_per_token_block(m: &ModelConfig) -> f64 {
+    2.0 * 2.0 * (m.kv_heads as f64) * (m.head_dim as f64)
+}
+
+/// KV-cache bytes one token occupies across the whole model — what the
+/// serving pager sizes its pages from.
+pub fn kv_bytes_per_token(m: &ModelConfig) -> u64 {
+    (kv_bytes_per_token_block(m) * m.layers as f64) as u64
+}
+
+/// The prompt pass: forward-only parameter streaming + per-block KV
+/// writeback for `workload.context` prompt tokens.
+pub struct Prefill;
+
+impl ScheduleBuilder for Prefill {
+    fn name(&self) -> &str {
+        "prefill"
+    }
+
+    fn build(&self, _topo: &SystemTopology, cfg: &RunConfig, plan: &MemoryPlan<'_>) -> Schedule {
+        let q = IterQuantities::compute(cfg, plan);
+        let (b, c) = (cfg.workload.batch, cfg.workload.context);
+        let kv_block_bytes = (b * c) as f64 * kv_bytes_per_token_block(&cfg.model);
+        let p16 = plan.params16_fractions();
+
+        let mut s = Schedule::new(cfg.workload.tokens_per_iter());
+        let prefill = s.phase("prefill");
+        for g in 0..cfg.workload.n_gpus {
+            let acts = plan.activation_fractions(GpuId(g));
+            let h2d = format!("gpu{g}/h2d");
+            let d2h = format!("gpu{g}/d2h");
+            let compute = format!("gpu{g}/compute");
+            let mut load = vec![None; q.layers];
+            let mut fwd = vec![None; q.layers];
+            for l in 0..q.depth.min(q.layers) {
+                load[l] = Some(s.push(OpNode {
+                    op: Op::Transfer {
+                        gpu: GpuId(g),
+                        stripes: p16.clone(),
+                        dir: Dir::HostToGpu,
+                        bytes: q.param_block_bytes,
+                    },
+                    deps: vec![],
+                    name: format!("param-load b{l}"),
+                    lane: h2d.clone(),
+                    phase: prefill,
+                    ends_phase: false,
+                    touches: vec![crate::offload::RegionTouch::Dma(plan.params16)],
+                }));
+            }
+            for l in 0..q.layers {
+                let mut deps = vec![load[l].expect("prefetch covered every block")];
+                if l > 0 {
+                    deps.push(fwd[l - 1].unwrap());
+                }
+                let mut work = vec![FlopsTerm::new(q.f_fwd_block)];
+                if l == 0 || l == q.layers - 1 {
+                    // embedding on the first block, LM head on the last
+                    work.push(FlopsTerm::scaled(q.f_head, 0.5));
+                }
+                let fc = s.push(OpNode {
+                    op: Op::Compute {
+                        gpu: GpuId(g),
+                        work,
+                    },
+                    deps,
+                    name: format!("prefill b{l}"),
+                    lane: compute.clone(),
+                    phase: prefill,
+                    ends_phase: false,
+                    touches: vec![],
+                });
+                fwd[l] = Some(fc);
+                s.push(OpNode {
+                    op: Op::Transfer {
+                        gpu: GpuId(g),
+                        stripes: acts.clone(),
+                        dir: Dir::GpuToHost,
+                        bytes: kv_block_bytes,
+                    },
+                    deps: vec![fc],
+                    name: format!("kv-writeback b{l}"),
+                    lane: d2h.clone(),
+                    phase: prefill,
+                    // The last block's writeback closes the (only) phase.
+                    ends_phase: g == cfg.workload.n_gpus - 1 && l == q.layers - 1,
+                    touches: vec![crate::offload::RegionTouch::Dma(plan.activations[g])],
+                });
+                let nxt = l + q.depth;
+                if nxt < q.layers {
+                    load[nxt] = Some(s.push(OpNode {
+                        op: Op::Transfer {
+                            gpu: GpuId(g),
+                            stripes: p16.clone(),
+                            dir: Dir::HostToGpu,
+                            bytes: q.param_block_bytes,
+                        },
+                        deps: vec![fc],
+                        name: format!("param-load b{nxt}"),
+                        lane: h2d.clone(),
+                        phase: prefill,
+                        ends_phase: false,
+                        touches: vec![crate::offload::RegionTouch::Dma(plan.params16)],
+                    }));
+                }
+            }
+        }
+        s
+    }
+}
+
+/// One autoregressive decode step: `workload.context` is the sequences'
+/// current KV length, `workload.batch` the number of sequences per GPU.
+/// Emits one new token per sequence.
+pub struct Decode;
+
+impl ScheduleBuilder for Decode {
+    fn name(&self) -> &str {
+        "decode"
+    }
+
+    fn build(&self, _topo: &SystemTopology, cfg: &RunConfig, plan: &MemoryPlan<'_>) -> Schedule {
+        let q = IterQuantities::compute(cfg, plan);
+        let m = &cfg.model;
+        let (b, c) = (cfg.workload.batch, cfg.workload.context);
+        let kv_read_bytes = (b * c) as f64 * kv_bytes_per_token_block(m);
+        let kv_append_bytes = b as f64 * kv_bytes_per_token_block(m);
+        // Single-token block work: projections/MLP for one token, plus the
+        // attention reads over the whole context (QKᵀ and attn·V, 2·2
+        // FLOPs per context element per attended dimension).
+        let f_token = flops::block_fwd_flops(m, b, 1);
+        let f_attn = 4.0 * (b * c) as f64 * (m.heads * m.head_dim) as f64;
+        let p16 = plan.params16_fractions();
+
+        let mut s = Schedule::new((cfg.workload.n_gpus * b) as u64);
+        let decode = s.phase("decode");
+        for g in 0..cfg.workload.n_gpus {
+            let acts = plan.activation_fractions(GpuId(g));
+            let h2d = format!("gpu{g}/h2d");
+            let d2h = format!("gpu{g}/d2h");
+            let compute = format!("gpu{g}/compute");
+            let mut load = vec![None; q.layers];
+            let mut kv_read = vec![None; q.layers];
+            let mut dec = vec![None; q.layers];
+            let mut issue = |s: &mut Schedule, l: usize, dep: Option<crate::offload::OpId>| {
+                let deps: Vec<_> = dep.into_iter().collect();
+                (
+                    s.push(OpNode {
+                        op: Op::Transfer {
+                            gpu: GpuId(g),
+                            stripes: p16.clone(),
+                            dir: Dir::HostToGpu,
+                            bytes: q.param_block_bytes,
+                        },
+                        deps: deps.clone(),
+                        name: format!("param-load b{l}"),
+                        lane: h2d.clone(),
+                        phase: decode,
+                        ends_phase: false,
+                        touches: vec![crate::offload::RegionTouch::Dma(plan.params16)],
+                    }),
+                    s.push(OpNode {
+                        op: Op::Transfer {
+                            gpu: GpuId(g),
+                            stripes: acts.clone(),
+                            dir: Dir::HostToGpu,
+                            bytes: kv_read_bytes,
+                        },
+                        deps,
+                        name: format!("kv-read b{l}"),
+                        lane: h2d.clone(),
+                        phase: decode,
+                        ends_phase: false,
+                        touches: vec![crate::offload::RegionTouch::Dma(plan.activations[g])],
+                    }),
+                )
+            };
+            for l in 0..q.depth.min(q.layers) {
+                let (p, k) = issue(&mut s, l, None);
+                load[l] = Some(p);
+                kv_read[l] = Some(k);
+            }
+            for l in 0..q.layers {
+                let mut deps = vec![
+                    load[l].expect("prefetch covered every block"),
+                    kv_read[l].unwrap(),
+                ];
+                if l > 0 {
+                    deps.push(dec[l - 1].unwrap());
+                }
+                let mut work = vec![FlopsTerm::new(f_token), FlopsTerm::new(f_attn)];
+                if l == q.layers - 1 {
+                    work.push(FlopsTerm::new(flops::head_fwd_flops(m, b, 1)));
+                }
+                let dc = s.push(OpNode {
+                    op: Op::Compute {
+                        gpu: GpuId(g),
+                        work,
+                    },
+                    deps,
+                    name: format!("decode b{l}"),
+                    lane: compute.clone(),
+                    phase: decode,
+                    ends_phase: false,
+                    touches: vec![],
+                });
+                dec[l] = Some(dc);
+                s.push(OpNode {
+                    op: Op::Transfer {
+                        gpu: GpuId(g),
+                        stripes: acts.clone(),
+                        dir: Dir::GpuToHost,
+                        bytes: kv_append_bytes,
+                    },
+                    deps: vec![dc],
+                    name: format!("kv-append b{l}"),
+                    lane: d2h.clone(),
+                    phase: decode,
+                    ends_phase: g == cfg.workload.n_gpus - 1 && l == q.layers - 1,
+                    touches: vec![crate::offload::RegionTouch::Dma(plan.activations[g])],
+                });
+                let nxt = l + q.depth;
+                if nxt < q.layers {
+                    let (p, k) = issue(&mut s, nxt, Some(dc));
+                    load[nxt] = Some(p);
+                    kv_read[nxt] = Some(k);
+                }
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Policy;
+    use crate::model::footprint::Workload;
+    use crate::model::presets::tiny_2m;
+    use crate::topology::presets::dev_tiny;
+
+    #[test]
+    fn prefill_builds_a_strict_clean_forward_only_dag() {
+        let topo = dev_tiny();
+        let cfg = RunConfig::new(tiny_2m(), Workload::new(2, 2, 256), Policy::DramOnly);
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        let s = Prefill.build(&topo, &cfg, &plan);
+        s.validate_strict(&topo).unwrap();
+        // per GPU: L loads + L kernels + L writebacks, nothing else
+        let l = cfg.model.layers;
+        assert_eq!(s.len(), 2 * 3 * l);
+        assert_eq!(s.phases, vec!["prefill"]);
+        assert!(s.nodes.last().unwrap().ends_phase);
+        assert_eq!(s.tokens, cfg.workload.tokens_per_iter());
+    }
+
+    #[test]
+    fn decode_builds_a_strict_clean_single_token_dag() {
+        let topo = dev_tiny();
+        let cfg = RunConfig::new(tiny_2m(), Workload::new(2, 4, 512), Policy::DramOnly);
+        let plan = MemoryPlan::build(&topo, &cfg).unwrap();
+        let s = Decode.build(&topo, &cfg, &plan);
+        s.validate_strict(&topo).unwrap();
+        // per GPU: L loads + L kv-reads + L kernels + L kv-appends
+        let l = cfg.model.layers;
+        assert_eq!(s.len(), 2 * 4 * l);
+        assert_eq!(s.phases, vec!["decode"]);
+        // one new token per sequence
+        assert_eq!(s.tokens, 2 * 4);
+        // KV read grows with context, append does not
+        let reads: Vec<f64> = s
+            .nodes
+            .iter()
+            .filter(|n| n.name.starts_with("kv-read"))
+            .map(|n| match &n.op {
+                crate::offload::Op::Transfer { bytes, .. } => *bytes,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(reads.len(), 2 * l);
+        let per_block = kv_bytes_per_token_block(&cfg.model);
+        assert!((reads[0] - 4.0 * 512.0 * per_block).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_sizing_matches_the_model_shape() {
+        let m = tiny_2m();
+        // 2 tensors × 2 bytes × kv_heads × head_dim per block
+        assert_eq!(
+            kv_bytes_per_token_block(&m),
+            (4 * m.kv_heads * m.head_dim) as f64
+        );
+        assert_eq!(
+            kv_bytes_per_token(&m),
+            (4 * m.kv_heads * m.head_dim * m.layers) as u64
+        );
+    }
+}

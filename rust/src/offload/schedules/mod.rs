@@ -11,6 +11,8 @@
 //! | `grad-accum[:K]` | K micro-batches per optimizer step (default 4) |
 //! | `lora[:R]` | frozen base model, rank-R adapters (default 16): tiny optimizer working set |
 //! | `no-act-offload` | checkpoints stay in GPU HBM: the activation-traffic ablation |
+//! | `prefill` | serving: forward-only prompt pass with per-block KV writeback |
+//! | `decode` | serving: one autoregressive step over a context-long KV read |
 //!
 //! Adding a scenario = write a builder (usually by composing
 //! [`zero_offload::build_fig1_passes`] with a [`zero_offload::Fig1Shape`],
@@ -18,6 +20,7 @@
 //! in [`by_name`].
 
 pub mod grad_accum;
+pub mod inference;
 pub mod lora;
 pub mod no_act_offload;
 pub mod zero_offload;
@@ -61,13 +64,22 @@ pub fn by_name(name: &str) -> Option<ScheduleRef> {
     match name {
         "zero-offload" => Some(zero_offload()),
         "no-act-offload" => Some(Arc::new(no_act_offload::NoActOffload)),
+        "prefill" => Some(Arc::new(inference::Prefill)),
+        "decode" => Some(Arc::new(inference::Decode)),
         _ => None,
     }
 }
 
 /// Registry names for CLI help (parameterized entries show their syntax).
 pub fn known_names() -> Vec<&'static str> {
-    vec!["zero-offload", "grad-accum[:K]", "lora[:R]", "no-act-offload"]
+    vec![
+        "zero-offload",
+        "grad-accum[:K]",
+        "lora[:R]",
+        "no-act-offload",
+        "prefill",
+        "decode",
+    ]
 }
 
 /// One concrete instance of every registered scenario (parameterized
@@ -79,6 +91,8 @@ pub fn registered() -> Vec<ScheduleRef> {
         Arc::new(grad_accum::GradAccum::new(grad_accum::DEFAULT_MICRO_BATCHES)),
         Arc::new(lora::Lora::new(lora::DEFAULT_RANK)),
         Arc::new(no_act_offload::NoActOffload),
+        Arc::new(inference::Prefill),
+        Arc::new(inference::Decode),
     ]
 }
 
@@ -97,6 +111,8 @@ mod tests {
     fn registry_resolves_all_known_names() {
         assert_eq!(by_name("zero-offload").unwrap().name(), "zero-offload");
         assert_eq!(by_name("no-act-offload").unwrap().name(), "no-act-offload");
+        assert_eq!(by_name("prefill").unwrap().name(), "prefill");
+        assert_eq!(by_name("decode").unwrap().name(), "decode");
         assert_eq!(
             by_name("grad-accum").unwrap().name(),
             format!("grad-accum:{}", grad_accum::DEFAULT_MICRO_BATCHES)

@@ -1,0 +1,573 @@
+//! Paged KV cache with CXL tiering — the serving-side memory subsystem.
+//!
+//! The cache is paged: each live sequence owns `ceil(kv_tokens /
+//! PAGE_TOKENS)` fixed-size pages, growing one page at a time as decode
+//! appends tokens. The [`KvPager`] keeps each sequence's *newest* pages
+//! (the hot attention window plus the append frontier) in DRAM and
+//! demotes older pages to the CXL tier, striping every demoted page
+//! across the online AICs capacity-proportionally via
+//! [`weighted_split`] — the same largest-remainder splitter the
+//! fine-tuning placement engines use. Promotion / demotion byte counters
+//! accumulate on the pager, and the simulator prices them at
+//! [`SystemTopology::migration_bandwidth`], so KV paging traffic flows
+//! through the same degraded-topology views as fleet evacuations.
+//!
+//! Policies are a registry ([`by_name`], mirroring `fleet::scheduler`):
+//! `dram-only` keeps everything hot and admits nothing it cannot hold in
+//! DRAM; `tiered[:H]` (alias `ours`) caps the per-sequence hot window at
+//! H pages and spills the rest to CXL. Everything is deterministic —
+//! sequences live in a `BTreeMap` keyed by request id, so eviction,
+//! demotion and promotion orders are a pure function of the trace.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::mem::striping::weighted_split;
+use crate::topology::{NodeId, SystemTopology};
+
+/// Tokens per KV page (every sequence's unit of growth and migration).
+pub const PAGE_TOKENS: usize = 256;
+
+/// Default hot-window size (pages per sequence) for `tiered`.
+pub const DEFAULT_HOT_PAGES: usize = 4;
+
+/// A KV placement policy: how many of each sequence's newest pages stay
+/// in DRAM, and whether older pages may spill to the CXL tier at all.
+pub trait KvPolicy: Send + Sync {
+    /// Registry / CLI name, e.g. `"tiered:4"`.
+    fn name(&self) -> &str;
+
+    /// Per-sequence hot-window size in pages (`usize::MAX` = never demote).
+    fn hot_pages(&self) -> usize;
+
+    /// Whether demoted pages may live on CXL AICs.
+    fn uses_cxl(&self) -> bool;
+}
+
+/// Shared handle to a policy.
+pub type KvPolicyRef = Arc<dyn KvPolicy>;
+
+/// Everything in DRAM; a request that cannot fit there is rejected.
+pub struct DramOnly;
+
+impl KvPolicy for DramOnly {
+    fn name(&self) -> &str {
+        "dram-only"
+    }
+    fn hot_pages(&self) -> usize {
+        usize::MAX
+    }
+    fn uses_cxl(&self) -> bool {
+        false
+    }
+}
+
+/// Hot window of `hot` newest pages per sequence in DRAM, older pages
+/// striped across the CXL AICs.
+pub struct Tiered {
+    hot: usize,
+    name: String,
+}
+
+impl Tiered {
+    pub fn new(hot: usize) -> Self {
+        assert!(hot >= 1, "the hot window needs at least one page");
+        Self {
+            hot,
+            name: format!("tiered:{hot}"),
+        }
+    }
+}
+
+impl KvPolicy for Tiered {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn hot_pages(&self) -> usize {
+        self.hot
+    }
+    fn uses_cxl(&self) -> bool {
+        true
+    }
+}
+
+/// Resolve a registry name (`dram-only`, `tiered[:H]`, alias `ours`).
+pub fn by_name(name: &str) -> Option<KvPolicyRef> {
+    if let Some(rest) = name.strip_prefix("tiered") {
+        let h = if rest.is_empty() {
+            DEFAULT_HOT_PAGES
+        } else {
+            rest.strip_prefix(':')?.parse().ok().filter(|&v| v >= 1)?
+        };
+        return Some(Arc::new(Tiered::new(h)));
+    }
+    match name {
+        "dram-only" => Some(Arc::new(DramOnly)),
+        "ours" => Some(Arc::new(Tiered::new(DEFAULT_HOT_PAGES))),
+        _ => None,
+    }
+}
+
+/// Canonical names of every registered policy (CLI help text).
+pub fn known_names() -> Vec<&'static str> {
+    vec!["dram-only", "tiered[:H]"]
+}
+
+/// One concrete instance of every registered policy.
+pub fn registry() -> Vec<KvPolicyRef> {
+    vec![Arc::new(DramOnly), Arc::new(Tiered::new(DEFAULT_HOT_PAGES))]
+}
+
+/// One live sequence's pages. Growth is append-only and demotion always
+/// takes the *oldest* hot page, so the layout is always: pages
+/// `[0, cold.len())` cold (each a stripe vector), the rest hot in DRAM.
+#[derive(Clone, Debug)]
+struct SeqKv {
+    tokens: usize,
+    /// Stripe layout of each cold page, oldest first.
+    cold: Vec<Vec<(NodeId, u64)>>,
+    /// Pages currently resident in DRAM (the newest pages).
+    hot: usize,
+}
+
+impl SeqKv {
+    fn pages(&self) -> usize {
+        self.cold.len() + self.hot
+    }
+}
+
+/// Cumulative pager counters — monotone, so the simulator can charge
+/// migration traffic from per-step deltas and tests can state the page
+/// conservation law `resident + evicted + freed == allocated`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct KvCounters {
+    /// Pages ever allocated (prefill + decode growth).
+    pub allocated_pages: u64,
+    /// Pages released by completed requests draining.
+    pub freed_pages: u64,
+    /// Pages dropped by forced eviction ([`KvPager::evict`]).
+    pub evicted_pages: u64,
+    /// Bytes moved DRAM → CXL (demotions).
+    pub demoted_bytes: u64,
+    /// Bytes moved CXL → DRAM (promotions).
+    pub promoted_bytes: u64,
+}
+
+impl KvCounters {
+    /// Pages currently resident (the conservation law, rearranged).
+    pub fn resident_pages(&self) -> u64 {
+        self.allocated_pages - self.freed_pages - self.evicted_pages
+    }
+
+    /// Total migration traffic since construction.
+    pub fn migrated_bytes(&self) -> u64 {
+        self.demoted_bytes + self.promoted_bytes
+    }
+}
+
+/// The paged, tiered KV cache for one serving host.
+pub struct KvPager {
+    policy: KvPolicyRef,
+    /// Bytes per page (PAGE_TOKENS × per-token KV bytes for the model).
+    page_bytes: u64,
+    /// DRAM bytes available to KV (host capacity minus the resident
+    /// weights and a working-set reserve — computed by the simulator).
+    dram_budget: u64,
+    /// Online CXL AICs and their capacities (weights for striping).
+    cxl: Vec<NodeId>,
+    cxl_caps: Vec<u64>,
+    /// Bytes in use per memory node, indexed by `NodeId.0` (0 = DRAM).
+    used: Vec<u64>,
+    seqs: BTreeMap<u64, SeqKv>,
+    counters: KvCounters,
+}
+
+impl KvPager {
+    /// Build a pager over the (possibly degraded) topology view. AICs
+    /// with zero capacity — knocked out by `with_node_offline` — are
+    /// excluded from striping entirely.
+    pub fn new(
+        topo: &SystemTopology,
+        page_bytes: u64,
+        dram_budget: u64,
+        policy: KvPolicyRef,
+    ) -> Self {
+        assert!(page_bytes > 0, "pages must hold at least one byte");
+        let cxl: Vec<NodeId> = topo
+            .cxl_nodes()
+            .into_iter()
+            .filter(|&n| topo.node(n).capacity > 0)
+            .collect();
+        let cxl_caps = cxl.iter().map(|&n| topo.node(n).capacity).collect();
+        Self {
+            policy,
+            page_bytes,
+            dram_budget,
+            used: vec![0; topo.mem_nodes.len()],
+            cxl,
+            cxl_caps,
+            seqs: BTreeMap::new(),
+            counters: KvCounters::default(),
+        }
+    }
+
+    pub fn policy(&self) -> &dyn KvPolicy {
+        self.policy.as_ref()
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    pub fn counters(&self) -> KvCounters {
+        self.counters
+    }
+
+    /// Bytes in use per memory node (`NodeId.0`-indexed, 0 = DRAM).
+    pub fn used(&self) -> &[u64] {
+        &self.used
+    }
+
+    /// KV bytes resident in DRAM.
+    pub fn dram_used(&self) -> u64 {
+        self.used[0]
+    }
+
+    /// KV bytes resident on the CXL tier.
+    pub fn cxl_used(&self) -> u64 {
+        self.used.iter().skip(1).sum()
+    }
+
+    pub fn dram_budget(&self) -> u64 {
+        self.dram_budget
+    }
+
+    /// Total KV capacity the policy can reach (DRAM budget, plus the CXL
+    /// tier when the policy spills).
+    pub fn capacity(&self) -> u64 {
+        let cxl: u64 = if self.policy.uses_cxl() {
+            self.cxl_caps.iter().sum()
+        } else {
+            0
+        };
+        self.dram_budget + cxl
+    }
+
+    pub fn live_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    fn dram_free(&self) -> u64 {
+        self.dram_budget.saturating_sub(self.used[0])
+    }
+
+    fn cxl_free(&self) -> u64 {
+        self.cxl
+            .iter()
+            .zip(&self.cxl_caps)
+            .map(|(&n, &cap)| cap.saturating_sub(self.used[n.0]))
+            .sum()
+    }
+
+    fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(PAGE_TOKENS)
+    }
+
+    /// Would a request holding `tokens` KV tokens fit right now? The
+    /// admission gate: its hot window must fit DRAM and the remainder
+    /// must fit the CXL tier (or DRAM again, for `dram-only`).
+    pub fn can_fit(&self, tokens: usize) -> bool {
+        let pages = self.pages_for(tokens.max(1)) as u64;
+        let hot = pages.min(self.policy.hot_pages() as u64);
+        let cold = pages - hot;
+        let hot_ok = hot * self.page_bytes <= self.dram_free();
+        let cold_ok = if cold == 0 {
+            true
+        } else if self.policy.uses_cxl() {
+            cold * self.page_bytes <= self.cxl_free()
+        } else {
+            false
+        };
+        hot_ok && cold_ok
+    }
+
+    /// Would a request holding `tokens` KV tokens fit on an *empty*
+    /// pager? The admission-feasibility floor: a request failing this can
+    /// never be admitted no matter how the queue drains, so the simulator
+    /// rejects it at arrival instead of parking it forever.
+    pub fn fits_empty(&self, tokens: usize) -> bool {
+        let pages = self.pages_for(tokens.max(1)) as u64;
+        let hot = pages.min(self.policy.hot_pages() as u64);
+        let cold = pages - hot;
+        hot * self.page_bytes <= self.dram_budget
+            && (cold == 0
+                || (self.policy.uses_cxl()
+                    && cold * self.page_bytes <= self.cxl_caps.iter().sum::<u64>()))
+    }
+
+    /// Demote the oldest hot page of sequence `id` to the CXL tier.
+    /// Returns false (state unchanged) if the tier is full or the policy
+    /// forbids spilling.
+    fn demote_oldest(&mut self, id: u64) -> bool {
+        if !self.policy.uses_cxl() {
+            return false;
+        }
+        let free: Vec<u64> = {
+            let used = &self.used;
+            let mut f = vec![0u64; used.len()];
+            for (&n, &cap) in self.cxl.iter().zip(&self.cxl_caps) {
+                f[n.0] = cap.saturating_sub(used[n.0]);
+            }
+            f
+        };
+        let weights: Vec<f64> = self.cxl_caps.iter().map(|&c| c as f64).collect();
+        let (shards, unplaced) = weighted_split(self.page_bytes, &self.cxl, &weights, &free);
+        if unplaced > 0 {
+            return false;
+        }
+        let seq = self.seqs.get_mut(&id).expect("demote of unknown sequence");
+        assert!(seq.hot > 0, "nothing hot to demote");
+        seq.hot -= 1;
+        for &(n, b) in &shards {
+            self.used[n.0] += b;
+        }
+        seq.cold.push(shards);
+        self.used[0] -= self.page_bytes;
+        self.counters.demoted_bytes += self.page_bytes;
+        true
+    }
+
+    /// Allocate a brand-new sequence holding `tokens` KV tokens (the
+    /// prefill footprint). Pages beyond the policy's hot window go
+    /// straight to CXL. Returns false — with no partial allocation — if
+    /// the request does not fit.
+    pub fn alloc(&mut self, id: u64, tokens: usize) -> bool {
+        assert!(
+            !self.seqs.contains_key(&id),
+            "sequence {id} already allocated"
+        );
+        if !self.can_fit(tokens) {
+            return false;
+        }
+        let pages = self.pages_for(tokens.max(1));
+        let hot = pages.min(self.policy.hot_pages());
+        self.seqs.insert(
+            id,
+            SeqKv {
+                tokens,
+                cold: Vec::new(),
+                hot: pages,
+            },
+        );
+        self.used[0] += pages as u64 * self.page_bytes;
+        self.counters.allocated_pages += pages as u64;
+        // Demote the pre-window prefix oldest-first, exactly as decode
+        // growth would have.
+        for _ in 0..pages - hot {
+            let ok = self.demote_oldest(id);
+            assert!(ok, "can_fit admitted a request the tier cannot hold");
+        }
+        true
+    }
+
+    /// Append `new_tokens` decode tokens to sequence `id`, growing it by
+    /// however many page boundaries that crosses. The new page lands hot;
+    /// if the hot window overflows (or DRAM is out of room), the oldest
+    /// hot page demotes. Returns false when the cache is exhausted (the
+    /// simulator then truncates the request; pages already granted stay
+    /// resident until the sequence is freed).
+    pub fn append(&mut self, id: u64, new_tokens: usize) -> bool {
+        let (old_pages, old_tokens) = {
+            let seq = self.seqs.get(&id).expect("append to unknown sequence");
+            (seq.pages(), seq.tokens)
+        };
+        let new_pages = self.pages_for(old_tokens + new_tokens) - old_pages;
+        for _ in 0..new_pages {
+            // Make DRAM room for one hot page, demoting oldest-first.
+            while self.dram_free() < self.page_bytes {
+                let nothing_hot = self.seqs[&id].hot == 0;
+                if nothing_hot || !self.demote_oldest(id) {
+                    return false;
+                }
+            }
+            let seq = self.seqs.get_mut(&id).expect("append to unknown sequence");
+            seq.hot += 1;
+            self.used[0] += self.page_bytes;
+            self.counters.allocated_pages += 1;
+            // Keep the hot window at the policy bound.
+            while self.seqs[&id].hot > self.policy.hot_pages() {
+                if !self.demote_oldest(id) {
+                    break; // CXL full: tolerate an over-wide window
+                }
+            }
+        }
+        let seq = self.seqs.get_mut(&id).expect("append to unknown sequence");
+        seq.tokens += new_tokens;
+        true
+    }
+
+    /// Promote cold pages back into under-full hot windows (newest cold
+    /// page first, ascending request id) while DRAM has room. Called by
+    /// the simulator after completions free space. Returns bytes moved.
+    pub fn promote_slack(&mut self) -> u64 {
+        let hot_cap = self.policy.hot_pages();
+        let mut moved = 0u64;
+        let ids: Vec<u64> = self.seqs.keys().copied().collect();
+        for id in ids {
+            loop {
+                let seq = &self.seqs[&id];
+                if seq.cold.is_empty() || seq.hot >= hot_cap || self.dram_free() < self.page_bytes
+                {
+                    break;
+                }
+                let seq = self.seqs.get_mut(&id).expect("promote of unknown sequence");
+                let shards = seq.cold.pop().expect("checked non-empty");
+                seq.hot += 1;
+                for &(n, b) in &shards {
+                    self.used[n.0] -= b;
+                }
+                self.used[0] += self.page_bytes;
+                self.counters.promoted_bytes += self.page_bytes;
+                moved += self.page_bytes;
+            }
+        }
+        moved
+    }
+
+    fn release(&mut self, id: u64) -> u64 {
+        let seq = self.seqs.remove(&id).expect("release of unknown sequence");
+        for page in &seq.cold {
+            for &(n, b) in page {
+                self.used[n.0] -= b;
+            }
+        }
+        self.used[0] -= seq.hot as u64 * self.page_bytes;
+        seq.pages() as u64
+    }
+
+    /// Release a completed sequence's pages.
+    pub fn free(&mut self, id: u64) {
+        let pages = self.release(id);
+        self.counters.freed_pages += pages;
+    }
+
+    /// Forcibly drop a sequence (SLO shed / fault), counting its pages
+    /// as evicted rather than freed.
+    pub fn evict(&mut self, id: u64) {
+        let pages = self.release(id);
+        self.counters.evicted_pages += pages;
+    }
+
+    /// KV bytes of sequence `id` resident on the CXL tier — what a
+    /// decode step must pull across the link to attend over.
+    pub fn cold_bytes(&self, id: u64) -> u64 {
+        self.seqs
+            .get(&id)
+            .map(|s| s.cold.len() as u64 * self.page_bytes)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets;
+
+    fn tiny_pager(policy: &str, dram_budget: u64) -> KvPager {
+        let topo = presets::dev_tiny();
+        KvPager::new(&topo, 1 << 20, dram_budget, by_name(policy).unwrap())
+    }
+
+    #[test]
+    fn registry_resolves_and_rejects() {
+        assert_eq!(by_name("dram-only").unwrap().name(), "dram-only");
+        assert_eq!(
+            by_name("tiered").unwrap().name(),
+            format!("tiered:{DEFAULT_HOT_PAGES}")
+        );
+        assert_eq!(by_name("tiered:9").unwrap().name(), "tiered:9");
+        assert_eq!(by_name("ours").unwrap().name(), "tiered:4");
+        assert!(by_name("tiered:0").is_none());
+        assert!(by_name("tiered:x").is_none());
+        assert!(by_name("nope").is_none());
+        assert_eq!(registry().len(), known_names().len());
+    }
+
+    #[test]
+    fn tiered_keeps_the_hot_window_in_dram_and_stripes_the_rest() {
+        // 1 MiB pages, room for 8 hot pages in DRAM.
+        let mut p = tiny_pager("tiered:2", 8 << 20);
+        // 6 pages: 2 hot + 4 demoted, striped across both AICs.
+        assert!(p.alloc(0, 6 * PAGE_TOKENS));
+        assert_eq!(p.dram_used(), 2 << 20);
+        assert_eq!(p.cxl_used(), 4 << 20);
+        assert_eq!(p.counters().demoted_bytes, 4 << 20);
+        assert_eq!(p.cold_bytes(0), 4 << 20);
+        // dev_tiny's two AICs are equal-capacity: the stripe must balance.
+        assert_eq!(p.used()[1], p.used()[2]);
+        // Decode growth: one more page in, one demoted out of the window.
+        assert!(p.append(0, PAGE_TOKENS));
+        assert_eq!(p.dram_used(), 2 << 20);
+        assert_eq!(p.cxl_used(), 5 << 20);
+        // Freeing returns every byte on every node.
+        p.free(0);
+        assert_eq!(p.used(), &[0, 0, 0]);
+        assert_eq!(p.counters().resident_pages(), 0);
+        assert_eq!(p.counters().allocated_pages, 7);
+        assert_eq!(p.counters().freed_pages, 7);
+    }
+
+    #[test]
+    fn dram_only_rejects_what_the_tiered_policy_accepts() {
+        // Budget of 4 pages. A 6-page request only fits by spilling.
+        let six = 6 * PAGE_TOKENS;
+        let dram = tiny_pager("dram-only", 4 << 20);
+        assert!(!dram.can_fit(six), "dram-only must reject a 6-page seq");
+        let mut tiered = tiny_pager("tiered:2", 4 << 20);
+        assert!(tiered.can_fit(six));
+        assert!(tiered.alloc(0, six));
+        assert_eq!(tiered.dram_used(), 2 << 20);
+    }
+
+    #[test]
+    fn append_demotes_under_dram_pressure_and_fails_when_exhausted() {
+        // DRAM holds 2 pages; AIC tier in dev_tiny holds 8 GiB total.
+        let mut p = tiny_pager("tiered:8", 2 << 20);
+        assert!(p.alloc(0, PAGE_TOKENS));
+        assert!(p.alloc(1, PAGE_TOKENS));
+        assert_eq!(p.dram_used(), 2 << 20);
+        // Growing seq 0 must demote its own oldest page despite the
+        // window allowing 8 hot pages.
+        assert!(p.append(0, PAGE_TOKENS));
+        assert_eq!(p.dram_used(), 2 << 20);
+        assert_eq!(p.cold_bytes(0), 1 << 20);
+        // After a free the slack promoter pulls the cold page back.
+        p.free(1);
+        let moved = p.promote_slack();
+        assert_eq!(moved, 1 << 20);
+        assert_eq!(p.cold_bytes(0), 0);
+        assert_eq!(p.counters().promoted_bytes, 1 << 20);
+        // dram-only exhaustion: appends fail once the budget is spent.
+        let mut d = tiny_pager("dram-only", 2 << 20);
+        assert!(d.alloc(0, 2 * PAGE_TOKENS));
+        assert!(!d.append(0, PAGE_TOKENS), "no spill path for dram-only");
+        // The failed append must not have changed anything.
+        assert_eq!(d.dram_used(), 2 << 20);
+        assert_eq!(d.counters().allocated_pages, 2);
+    }
+
+    #[test]
+    fn eviction_counts_separately_and_conservation_holds() {
+        let mut p = tiny_pager("tiered:1", 8 << 20);
+        assert!(p.alloc(0, 3 * PAGE_TOKENS));
+        assert!(p.alloc(1, 2 * PAGE_TOKENS));
+        p.evict(0);
+        p.free(1);
+        let c = p.counters();
+        assert_eq!(c.allocated_pages, 5);
+        assert_eq!(c.evicted_pages, 3);
+        assert_eq!(c.freed_pages, 2);
+        assert_eq!(c.resident_pages(), 0);
+        assert_eq!(p.used(), &[0, 0, 0]);
+    }
+}

@@ -1,0 +1,695 @@
+//! Serving metrics: per-request records, TTFT / TPOT latency statistics,
+//! per-tier KV occupancy curves, bitwise digests and the
+//! digest-self-certifying JSON form (the serving analogue of
+//! `fleet::metrics`).
+
+use crate::fleet::OccupancySample;
+use crate::jobj;
+use crate::serve::kv::KvCounters;
+use crate::topology::SystemTopology;
+use crate::trow;
+use crate::util::digest::Fnv64;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::util::units::fmt_bytes;
+
+/// Lifecycle state of a request. `Queued`/`Running` are transient; a
+/// finished simulation leaves only `Completed`, `Rejected` and `Shed`
+/// (asserted by the serving invariant tests). A request truncated by KV
+/// exhaustion still *completes* — the truncation rides the record flag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestStatus {
+    Queued,
+    Running,
+    Completed,
+    /// Never admitted: its full KV footprint exceeds what the policy's
+    /// tiers can ever hold.
+    Rejected,
+    /// Dropped from the queue by the SLO-aware admission policy.
+    Shed,
+}
+
+impl RequestStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestStatus::Queued => "queued",
+            RequestStatus::Running => "running",
+            RequestStatus::Completed => "completed",
+            RequestStatus::Rejected => "rejected",
+            RequestStatus::Shed => "shed",
+        }
+    }
+
+    fn code(self) -> u64 {
+        match self {
+            RequestStatus::Queued => 0,
+            RequestStatus::Running => 1,
+            RequestStatus::Completed => 2,
+            RequestStatus::Rejected => 3,
+            RequestStatus::Shed => 4,
+        }
+    }
+}
+
+/// Everything the simulator knows about one request at the end of a run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub model: String,
+    pub prompt_tokens: usize,
+    pub max_output_tokens: usize,
+    pub slo_ms: f64,
+    pub arrival_s: f64,
+    /// Admission time (prefill starts here).
+    pub start_s: Option<f64>,
+    /// End of the step that emitted the first output token.
+    pub first_token_s: Option<f64>,
+    pub finish_s: Option<f64>,
+    /// Output tokens actually generated (< `max_output_tokens` iff
+    /// truncated).
+    pub output_tokens: u64,
+    /// Decode was cut short because the KV cache was exhausted.
+    pub truncated: bool,
+    pub status: RequestStatus,
+    /// Why the request was rejected or shed. `None` for clean lifecycles.
+    pub reason: Option<String>,
+    /// CXL-resident KV bytes this request's decode steps pulled across
+    /// the link (cold-page attention reads).
+    pub cold_read_bytes: u64,
+}
+
+impl RequestRecord {
+    /// Time to first token (the SLO metric); `None` unless prefill ran.
+    pub fn ttft_ms(&self) -> Option<f64> {
+        Some((self.first_token_s? - self.arrival_s) * 1e3)
+    }
+
+    /// Mean time per output token over the decode phase; `None` unless
+    /// the request decoded at least two tokens.
+    pub fn tpot_ms(&self) -> Option<f64> {
+        if self.output_tokens < 2 {
+            return None;
+        }
+        let span = self.finish_s? - self.first_token_s?;
+        Some(span * 1e3 / (self.output_tokens - 1) as f64)
+    }
+
+    fn fold(&self, h: &mut Fnv64) {
+        h.write_u64(self.id);
+        h.write_str(&self.model);
+        h.write_u64(self.prompt_tokens as u64);
+        h.write_u64(self.max_output_tokens as u64);
+        h.write_f64(self.slo_ms);
+        h.write_f64(self.arrival_s);
+        for opt in [self.start_s, self.first_token_s, self.finish_s] {
+            match opt {
+                Some(v) => {
+                    h.write_u64(1);
+                    h.write_f64(v);
+                }
+                None => {
+                    h.write_u64(0);
+                }
+            }
+        }
+        h.write_u64(self.output_tokens);
+        h.write_u64(self.truncated as u64);
+        h.write_u64(self.status.code());
+        match &self.reason {
+            Some(r) => {
+                h.write_u64(1);
+                h.write_str(r);
+            }
+            None => {
+                h.write_u64(0);
+            }
+        }
+        h.write_u64(self.cold_read_bytes);
+    }
+
+    fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        jobj! {
+            "id" => self.id,
+            "model" => self.model.as_str(),
+            "prompt_tokens" => self.prompt_tokens,
+            "max_output_tokens" => self.max_output_tokens,
+            "slo_ms" => self.slo_ms,
+            "arrival_s" => self.arrival_s,
+            "start_s" => opt(self.start_s),
+            "first_token_s" => opt(self.first_token_s),
+            "finish_s" => opt(self.finish_s),
+            "ttft_ms" => opt(self.ttft_ms()),
+            "tpot_ms" => opt(self.tpot_ms()),
+            "output_tokens" => self.output_tokens,
+            "truncated" => self.truncated,
+            "status" => self.status.name(),
+            "reason" => self.reason.as_deref().map(Json::from).unwrap_or(Json::Null),
+            "cold_read_bytes" => self.cold_read_bytes,
+        }
+    }
+}
+
+/// The complete outcome of one serving simulation.
+#[derive(Clone, Debug)]
+pub struct ServeResult {
+    pub kv_policy: String,
+    pub admission: String,
+    pub topology: String,
+    pub node_names: Vec<String>,
+    pub node_caps: Vec<u64>,
+    /// DRAM bytes the pager could give to KV (capacity minus resident
+    /// weights and reserve).
+    pub dram_kv_budget: u64,
+    pub records: Vec<RequestRecord>,
+    /// Per-tier KV occupancy after every processed event (same shape as
+    /// the fleet curve: used bytes per `NodeId.0`).
+    pub samples: Vec<OccupancySample>,
+    /// Discrete events processed (arrivals + batch steps).
+    pub n_events: u64,
+    /// Batch steps executed.
+    pub n_steps: u64,
+    /// Final pager counters (page conservation + migration traffic).
+    pub kv: KvCounters,
+}
+
+impl ServeResult {
+    pub fn new(kv_policy: &str, admission: &str, topo: &SystemTopology) -> Self {
+        Self {
+            kv_policy: kv_policy.to_string(),
+            admission: admission.to_string(),
+            topology: topo.name.clone(),
+            node_names: topo.mem_nodes.iter().map(|n| n.name.clone()).collect(),
+            node_caps: topo.mem_nodes.iter().map(|n| n.capacity).collect(),
+            dram_kv_budget: 0,
+            records: Vec::new(),
+            samples: Vec::new(),
+            n_events: 0,
+            n_steps: 0,
+            kv: KvCounters::default(),
+        }
+    }
+
+    pub fn arrived(&self) -> usize {
+        self.records.len()
+    }
+
+    fn count(&self, s: RequestStatus) -> usize {
+        self.records.iter().filter(|r| r.status == s).count()
+    }
+
+    pub fn completed(&self) -> usize {
+        self.count(RequestStatus::Completed)
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.count(RequestStatus::Rejected)
+    }
+
+    pub fn shed(&self) -> usize {
+        self.count(RequestStatus::Shed)
+    }
+
+    pub fn truncated(&self) -> usize {
+        self.records.iter().filter(|r| r.truncated).count()
+    }
+
+    /// Requests still transient when the event heap drained (0 for a
+    /// finished simulation — pinned by the invariant tests).
+    pub fn unfinished(&self) -> usize {
+        self.count(RequestStatus::Queued) + self.count(RequestStatus::Running)
+    }
+
+    /// Simulated-clock end of the run: the last completion time.
+    pub fn makespan_s(&self) -> f64 {
+        self.records
+            .iter()
+            .filter_map(|r| r.finish_s)
+            .fold(0.0, f64::max)
+    }
+
+    /// TTFTs of all completed requests, milliseconds.
+    pub fn ttfts_ms(&self) -> Vec<f64> {
+        self.records
+            .iter()
+            .filter(|r| r.status == RequestStatus::Completed)
+            .filter_map(RequestRecord::ttft_ms)
+            .collect()
+    }
+
+    pub fn mean_ttft_ms(&self) -> Option<f64> {
+        let xs = self.ttfts_ms();
+        (!xs.is_empty()).then(|| xs.iter().sum::<f64>() / xs.len() as f64)
+    }
+
+    pub fn p99_ttft_ms(&self) -> Option<f64> {
+        Self::p99(self.ttfts_ms())
+    }
+
+    /// TPOTs of all completed multi-token requests, milliseconds.
+    pub fn tpots_ms(&self) -> Vec<f64> {
+        self.records
+            .iter()
+            .filter(|r| r.status == RequestStatus::Completed)
+            .filter_map(RequestRecord::tpot_ms)
+            .collect()
+    }
+
+    pub fn mean_tpot_ms(&self) -> Option<f64> {
+        let xs = self.tpots_ms();
+        (!xs.is_empty()).then(|| xs.iter().sum::<f64>() / xs.len() as f64)
+    }
+
+    pub fn p99_tpot_ms(&self) -> Option<f64> {
+        Self::p99(self.tpots_ms())
+    }
+
+    fn p99(mut xs: Vec<f64>) -> Option<f64> {
+        if xs.is_empty() {
+            return None;
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((xs.len() - 1) as f64 * 0.99).round() as usize;
+        Some(xs[idx])
+    }
+
+    /// The headline serving metric: completed requests per simulated
+    /// second over the makespan.
+    pub fn sustained_req_per_s(&self) -> f64 {
+        let span = self.makespan_s();
+        if span > 0.0 {
+            self.completed() as f64 / span
+        } else {
+            0.0
+        }
+    }
+
+    /// Output tokens generated by completed requests.
+    pub fn generated_tokens(&self) -> u64 {
+        self.records
+            .iter()
+            .filter(|r| r.status == RequestStatus::Completed)
+            .map(|r| r.output_tokens)
+            .sum()
+    }
+
+    pub fn generated_tokens_per_sec(&self) -> f64 {
+        let span = self.makespan_s();
+        if span > 0.0 {
+            self.generated_tokens() as f64 / span
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of completed requests whose TTFT met their SLO.
+    pub fn slo_attainment(&self) -> f64 {
+        let done: Vec<&RequestRecord> = self
+            .records
+            .iter()
+            .filter(|r| r.status == RequestStatus::Completed)
+            .collect();
+        if done.is_empty() {
+            return 1.0;
+        }
+        let met = done
+            .iter()
+            .filter(|r| r.ttft_ms().is_some_and(|t| t <= r.slo_ms))
+            .count();
+        met as f64 / done.len() as f64
+    }
+
+    /// Total CXL cold-page attention traffic across all requests.
+    pub fn cold_read_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.cold_read_bytes).sum()
+    }
+
+    pub fn max_queue_len(&self) -> usize {
+        self.samples.iter().map(|s| s.queue_len).max().unwrap_or(0)
+    }
+
+    /// Peak KV bytes on a node across the whole run.
+    pub fn peak_used(&self, node: usize) -> u64 {
+        self.samples.iter().map(|s| s.used[node]).max().unwrap_or(0)
+    }
+
+    /// Time-weighted mean KV occupancy of a node.
+    pub fn mean_used(&self, node: usize) -> f64 {
+        if self.samples.len() < 2 {
+            return self
+                .samples
+                .first()
+                .map(|s| s.used[node] as f64)
+                .unwrap_or(0.0);
+        }
+        let mut acc = 0.0;
+        let mut span = 0.0;
+        for w in self.samples.windows(2) {
+            let dt = w[1].t_s - w[0].t_s;
+            acc += w[0].used[node] as f64 * dt;
+            span += dt;
+        }
+        if span > 0.0 {
+            acc / span
+        } else {
+            self.samples[0].used[node] as f64
+        }
+    }
+
+    /// Bit-exact FNV-1a digest of the whole result — per-request records,
+    /// occupancy curve, pager counters and event counts. The determinism
+    /// contract: reruns and different `--threads` settings must reproduce
+    /// it exactly.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_str(&self.kv_policy);
+        h.write_str(&self.admission);
+        h.write_str(&self.topology);
+        h.write_u64(self.node_caps.len() as u64);
+        for c in &self.node_caps {
+            h.write_u64(*c);
+        }
+        h.write_u64(self.dram_kv_budget);
+        h.write_u64(self.records.len() as u64);
+        for r in &self.records {
+            r.fold(&mut h);
+        }
+        h.write_u64(self.samples.len() as u64);
+        for s in &self.samples {
+            h.write_f64(s.t_s);
+            for u in &s.used {
+                h.write_u64(*u);
+            }
+            h.write_u64(s.queue_len as u64);
+            h.write_u64(s.running as u64);
+        }
+        h.write_u64(self.n_events);
+        h.write_u64(self.n_steps);
+        h.write_u64(self.kv.allocated_pages);
+        h.write_u64(self.kv.freed_pages);
+        h.write_u64(self.kv.evicted_pages);
+        h.write_u64(self.kv.demoted_bytes);
+        h.write_u64(self.kv.promoted_bytes);
+        h.finish()
+    }
+
+    /// Machine-readable form (written by `cxlfine serve --json`):
+    /// summary, per-node KV occupancy statistics, the full per-request
+    /// record set and the occupancy curve, digest-self-certifying like
+    /// `FleetResult::to_json`.
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        let nodes: Vec<Json> = self
+            .node_names
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                jobj! {
+                    "name" => name.as_str(),
+                    "capacity" => self.node_caps[i],
+                    "peak_kv" => self.peak_used(i),
+                    "mean_kv" => self.mean_used(i),
+                }
+            })
+            .collect();
+        let requests: Vec<Json> = self.records.iter().map(RequestRecord::to_json).collect();
+        let occupancy: Vec<Json> = self
+            .samples
+            .iter()
+            .map(|s| {
+                let used: Vec<Json> = s.used.iter().map(|&u| Json::from(u)).collect();
+                jobj! {
+                    "t_s" => s.t_s,
+                    "used" => Json::Arr(used),
+                    "queue_len" => s.queue_len,
+                    "running" => s.running,
+                }
+            })
+            .collect();
+        jobj! {
+            "kv_policy" => self.kv_policy.as_str(),
+            "admission" => self.admission.as_str(),
+            "topology" => self.topology.as_str(),
+            "digest" => format!("{:016x}", self.digest()),
+            "summary" => jobj! {
+                "arrived" => self.arrived(),
+                "completed" => self.completed(),
+                "rejected" => self.rejected(),
+                "shed" => self.shed(),
+                "truncated" => self.truncated(),
+                "unfinished" => self.unfinished(),
+                "makespan_s" => self.makespan_s(),
+                "sustained_req_per_s" => self.sustained_req_per_s(),
+                "mean_ttft_ms" => opt(self.mean_ttft_ms()),
+                "p99_ttft_ms" => opt(self.p99_ttft_ms()),
+                "mean_tpot_ms" => opt(self.mean_tpot_ms()),
+                "p99_tpot_ms" => opt(self.p99_tpot_ms()),
+                "slo_attainment" => self.slo_attainment(),
+                "generated_tokens" => self.generated_tokens(),
+                "generated_tokens_per_sec" => self.generated_tokens_per_sec(),
+                "cold_read_bytes" => self.cold_read_bytes(),
+                "max_queue_len" => self.max_queue_len(),
+                "dram_kv_budget" => self.dram_kv_budget,
+                "kv_allocated_pages" => self.kv.allocated_pages,
+                "kv_freed_pages" => self.kv.freed_pages,
+                "kv_evicted_pages" => self.kv.evicted_pages,
+                "kv_demoted_bytes" => self.kv.demoted_bytes,
+                "kv_promoted_bytes" => self.kv.promoted_bytes,
+                "n_events" => self.n_events,
+                "n_steps" => self.n_steps,
+            },
+            "nodes" => Json::Arr(nodes),
+            "requests" => Json::Arr(requests),
+            "occupancy" => Json::Arr(occupancy),
+        }
+    }
+
+    /// The serving summary (rendered by `cxlfine serve`).
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(&["metric", "value"]).left(0);
+        t.row(trow!["requests arrived", self.arrived()]);
+        t.row(trow!["requests completed", self.completed()]);
+        t.row(trow!["requests rejected", self.rejected()]);
+        t.row(trow!["requests shed", self.shed()]);
+        t.row(trow!["requests truncated", self.truncated()]);
+        t.row(trow!["max queue length", self.max_queue_len()]);
+        t.row(trow!["makespan", format!("{:.1}s", self.makespan_s())]);
+        t.row(trow![
+            "sustained throughput",
+            format!("{:.3} req/s", self.sustained_req_per_s())
+        ]);
+        let ms = |v: Option<f64>| v.map(|x| format!("{x:.1}ms")).unwrap_or_else(|| "-".into());
+        t.row(trow!["mean TTFT", ms(self.mean_ttft_ms())]);
+        t.row(trow!["p99 TTFT", ms(self.p99_ttft_ms())]);
+        t.row(trow!["mean TPOT", ms(self.mean_tpot_ms())]);
+        t.row(trow!["p99 TPOT", ms(self.p99_tpot_ms())]);
+        t.row(trow![
+            "SLO attainment",
+            format!("{:.1}%", 100.0 * self.slo_attainment())
+        ]);
+        t.row(trow![
+            "decode throughput",
+            format!("{:.0} tok/s", self.generated_tokens_per_sec())
+        ]);
+        t.row(trow![
+            "KV demoted",
+            fmt_bytes(self.kv.demoted_bytes)
+        ]);
+        t.row(trow![
+            "KV promoted",
+            fmt_bytes(self.kv.promoted_bytes)
+        ]);
+        t.row(trow![
+            "cold KV reads",
+            fmt_bytes(self.cold_read_bytes())
+        ]);
+        t.row(trow!["events processed", self.n_events]);
+        t
+    }
+
+    /// Per-request rejection / shed reasons (rendered when any request
+    /// carries one).
+    pub fn reasons_table(&self) -> Option<Table> {
+        let mut t = Table::new(&["request", "status", "reason"]).left(2);
+        let mut any = false;
+        for r in &self.records {
+            if let Some(reason) = &r.reason {
+                t.row(trow![r.id, r.status.name(), reason.clone()]);
+                any = true;
+            }
+        }
+        any.then_some(t)
+    }
+
+    /// Per-tier KV occupancy statistics (rendered by `cxlfine serve`).
+    pub fn occupancy_table(&self) -> Table {
+        let mut t = Table::new(&["node", "capacity", "peak KV", "peak %", "mean KV"]).left(0);
+        for (i, name) in self.node_names.iter().enumerate() {
+            let peak = self.peak_used(i);
+            let cap = if i == 0 {
+                self.dram_kv_budget.max(1)
+            } else {
+                self.node_caps[i]
+            };
+            t.row(trow![
+                name.clone(),
+                fmt_bytes(cap),
+                fmt_bytes(peak),
+                format!("{:.1}%", 100.0 * peak as f64 / cap.max(1) as f64),
+                fmt_bytes(self.mean_used(i) as u64)
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets::dev_tiny;
+
+    fn record(id: u64, arrival: f64, finish: Option<f64>, out: u64) -> RequestRecord {
+        RequestRecord {
+            id,
+            model: "tiny-2m".into(),
+            prompt_tokens: 512,
+            max_output_tokens: out as usize,
+            slo_ms: 2000.0,
+            arrival_s: arrival,
+            start_s: finish.map(|_| arrival + 0.1),
+            first_token_s: finish.map(|_| arrival + 0.5),
+            finish_s: finish,
+            output_tokens: if finish.is_some() { out } else { 0 },
+            truncated: false,
+            status: if finish.is_some() {
+                RequestStatus::Completed
+            } else {
+                RequestStatus::Rejected
+            },
+            reason: finish
+                .is_none()
+                .then(|| "kv footprint exceeds tier capacity".to_string()),
+            cold_read_bytes: if finish.is_some() { 1 << 20 } else { 0 },
+        }
+    }
+
+    fn result() -> ServeResult {
+        let topo = dev_tiny();
+        let mut r = ServeResult::new("tiered:4", "fcfs", &topo);
+        r.dram_kv_budget = 4 << 30;
+        r.records = vec![
+            record(0, 0.0, Some(10.0), 64),
+            record(1, 2.0, Some(4.0), 2),
+            record(2, 3.0, None, 64),
+        ];
+        r.samples = vec![
+            OccupancySample { t_s: 0.0, used: vec![100, 0, 0], queue_len: 0, running: 1 },
+            OccupancySample { t_s: 2.0, used: vec![300, 50, 0], queue_len: 1, running: 2 },
+            OccupancySample { t_s: 10.0, used: vec![0, 0, 0], queue_len: 0, running: 0 },
+        ];
+        r.n_events = 7;
+        r.n_steps = 4;
+        r.kv = KvCounters {
+            allocated_pages: 10,
+            freed_pages: 10,
+            evicted_pages: 0,
+            demoted_bytes: 2 << 20,
+            promoted_bytes: 1 << 20,
+        };
+        r
+    }
+
+    #[test]
+    fn summary_statistics() {
+        let r = result();
+        assert_eq!(r.arrived(), 3);
+        assert_eq!(r.completed(), 2);
+        assert_eq!(r.rejected(), 1);
+        assert_eq!(r.unfinished(), 0);
+        assert_eq!(r.makespan_s(), 10.0);
+        // TTFT is 500ms for both completions.
+        assert!((r.mean_ttft_ms().unwrap() - 500.0).abs() < 1e-9);
+        assert!((r.p99_ttft_ms().unwrap() - 500.0).abs() < 1e-9);
+        // Request 0: (10 − 0.5)s over 63 inter-token gaps.
+        let tpot0 = 9.5e3 / 63.0;
+        // Request 1: (4 − 2.5)s over 1 gap = 1500ms.
+        assert!((r.mean_tpot_ms().unwrap() - (tpot0 + 1500.0) / 2.0).abs() < 1e-9);
+        assert!((r.sustained_req_per_s() - 0.2).abs() < 1e-12);
+        assert_eq!(r.generated_tokens(), 66);
+        assert_eq!(r.slo_attainment(), 1.0);
+        assert_eq!(r.cold_read_bytes(), 2 << 20);
+        assert_eq!(r.max_queue_len(), 1);
+        assert_eq!(r.peak_used(0), 300);
+        // time-weighted: 100·2 + 300·8 over 10s = 260
+        assert!((r.mean_used(0) - 260.0).abs() < 1e-12);
+        assert_eq!(r.kv.resident_pages(), 0);
+    }
+
+    #[test]
+    fn digest_is_stable_and_sensitive() {
+        let a = result();
+        let b = result();
+        assert_eq!(a.digest(), b.digest());
+        let mut c = result();
+        c.records[1].finish_s = Some(4.000001);
+        assert_ne!(a.digest(), c.digest(), "a float wiggle must change it");
+        let mut d = result();
+        d.samples[1].used[1] = 51;
+        assert_ne!(a.digest(), d.digest());
+        let mut e = result();
+        e.kv.demoted_bytes += 1;
+        assert_ne!(a.digest(), e.digest(), "pager traffic is digest-material");
+        let mut f = result();
+        f.records[0].truncated = true;
+        assert_ne!(a.digest(), f.digest());
+        let mut g = result();
+        g.kv_policy = "dram-only".into();
+        assert_ne!(a.digest(), g.digest());
+    }
+
+    #[test]
+    fn slo_misses_and_truncation_flow_into_the_summary() {
+        let mut r = result();
+        // Request 0 misses its SLO once TTFT > 2000ms.
+        r.records[0].first_token_s = Some(2.5);
+        assert!((r.slo_attainment() - 0.5).abs() < 1e-12);
+        r.records[1].truncated = true;
+        r.records[2].status = RequestStatus::Shed;
+        r.records[2].reason = Some("projected TTFT exceeds SLO".into());
+        assert_eq!(r.shed(), 1);
+        assert_eq!(r.rejected(), 0);
+        assert_eq!(r.truncated(), 1);
+        let s = r.summary_table().render();
+        assert!(s.contains("requests shed") && s.contains("SLO attainment"), "{s}");
+        let reasons = r.reasons_table().expect("reasons present").render();
+        assert!(reasons.contains("projected TTFT"), "{reasons}");
+    }
+
+    #[test]
+    fn json_is_parseable_and_self_certifying() {
+        let r = result();
+        let text = r.to_json().to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.path(&["digest"]).unwrap().as_str(),
+            Some(format!("{:016x}", r.digest()).as_str())
+        );
+        assert_eq!(
+            parsed.path(&["summary", "completed"]).unwrap().as_u64(),
+            Some(2)
+        );
+        assert_eq!(
+            parsed.path(&["summary", "kv_demoted_bytes"]).unwrap().as_u64(),
+            Some(2 << 20)
+        );
+        let reqs = parsed.path(&["requests"]).unwrap().as_arr().unwrap();
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(reqs[2].path(&["status"]).unwrap().as_str(), Some("rejected"));
+        assert!(matches!(reqs[2].path(&["finish_s"]), Some(Json::Null)));
+        let occ = parsed.path(&["occupancy"]).unwrap().as_arr().unwrap();
+        assert_eq!(occ.len(), 3);
+        // Tables render every tier.
+        let o = r.occupancy_table().render();
+        assert!(o.contains("dram") && o.contains("cxl1"), "{o}");
+    }
+}

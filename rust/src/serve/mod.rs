@@ -1,0 +1,38 @@
+//! The serving layer: request-level inference over a CXL-tiered paged
+//! KV cache — the complement to [`crate::fleet`]'s training fleet, and
+//! the paper's capacity argument turned around: if CXL-attached memory
+//! can hold a fine-tuning job's optimizer state, it can also hold the
+//! *cold tail* of long-context KV caches, keeping only each sequence's
+//! hot attention window in DRAM.
+//!
+//! * [`request`] — request specs, digest-signed replayable JSON traces,
+//!   and the seeded generator with heavy-tailed prompt/output lengths
+//!   (bounded-Pareto prompts, Zipf output ranks via [`crate::util::prng`]),
+//! * [`kv`] — the paged KV cache: fixed [`kv::PAGE_TOKENS`]-token pages,
+//!   a per-sequence hot window in DRAM, cold pages striped across CXL
+//!   AICs through [`crate::mem::striping::weighted_split`], and the
+//!   `dram-only` / `tiered[:H]` policy registry,
+//! * [`sim`] — the continuous-batching event loop (an adapter over
+//!   [`crate::simcore`] like `fleet::sim`), the `fcfs` / `slo-strict`
+//!   admission registry, and the memoized per-(model, phase, batch
+//!   bucket, context bucket) step-cost calibrator that prices steps with
+//!   real `offload::executor` runs of the `prefill` / `decode` schedules,
+//! * [`metrics`] — per-request records, TTFT/TPOT distributions,
+//!   sustained throughput, per-tier KV occupancy curves, digests, JSON.
+//!
+//! Determinism is the same contract as the fleet: identical traces
+//! produce bit-identical [`ServeResult::digest`]s across reruns and
+//! thread counts.
+
+pub mod kv;
+pub mod metrics;
+pub mod request;
+pub mod sim;
+
+pub use kv::{KvCounters, KvPager, KvPolicy, KvPolicyRef, PAGE_TOKENS};
+pub use metrics::{RequestRecord, RequestStatus, ServeResult};
+pub use request::{RequestGen, RequestSpec, RequestTrace};
+pub use sim::{
+    admission_by_name, admission_known_names, dram_kv_budget, simulate_serving, AdmitPolicy,
+    AdmitRef, ServeCalibrator, ServeProbe,
+};

@@ -1,0 +1,388 @@
+//! Serving requests and arrival traces (the request-level analogue of
+//! `fleet::job`).
+//!
+//! A [`RequestSpec`] names one inference request by configuration — model
+//! preset × prompt length × output budget × latency SLO — plus its
+//! arrival time. Models are stored as registry names (resolved through
+//! `model::presets::by_name` at simulation time), so traces serialize to
+//! plain JSON and replay bit-identically on any host.
+//!
+//! [`RequestGen`] is the seeded synthetic workload generator: Poisson-ish
+//! arrivals via [`Xoshiro256pp::exp_mean`] and heavy-tailed lengths —
+//! prompts are bounded-Pareto (most prompts short, a fat tail of
+//! long-context ones), output budgets ride a Zipf rank over a geometric
+//! ladder. One PRNG stream, one fixed sampling order per request
+//! (inter-arrival, prompt, output, jitterless SLO), so the same seed
+//! always yields a byte-identical trace, and [`RequestTrace::to_json`]
+//! embeds a digest so a replayed file is self-certifying.
+
+use crate::jobj;
+use crate::util::digest::Fnv64;
+use crate::util::json::Json;
+use crate::util::prng::Xoshiro256pp;
+
+/// One inference request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestSpec {
+    pub id: u64,
+    /// Arrival time at the serving host, seconds from trace start.
+    pub arrival_s: f64,
+    /// Model preset name (`model::presets::by_name`).
+    pub model: String,
+    /// Prompt length in tokens (prefill work + initial KV footprint).
+    pub prompt_tokens: usize,
+    /// Output budget: the request decodes exactly this many tokens.
+    pub max_output_tokens: usize,
+    /// Time-to-first-token SLO in milliseconds.
+    pub slo_ms: f64,
+}
+
+impl RequestSpec {
+    /// Total KV-cache tokens the request holds when fully decoded.
+    pub fn total_kv_tokens(&self) -> usize {
+        self.prompt_tokens + self.max_output_tokens
+    }
+
+    /// Memoization key of the request's *configuration* — the identity
+    /// fields that determine calibrated step costs (id/arrival/SLO
+    /// excluded).
+    pub fn config_key(&self) -> String {
+        format!(
+            "{}|{}|{}",
+            self.model, self.prompt_tokens, self.max_output_tokens
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        jobj! {
+            "id" => self.id,
+            "arrival_s" => self.arrival_s,
+            "model" => self.model.as_str(),
+            "prompt_tokens" => self.prompt_tokens,
+            "max_output_tokens" => self.max_output_tokens,
+            "slo_ms" => self.slo_ms,
+        }
+    }
+
+    /// Parse one request. Shape errors (missing / mistyped fields,
+    /// non-finite times) abort; *value* errors — non-positive token
+    /// counts or SLO — do not, so the trace linter can report every P211
+    /// instead of stopping at the first. Strict consumers
+    /// ([`RequestTrace::from_json`]) reject on [`Self::validity_issues`].
+    pub fn from_json(j: &Json) -> Result<RequestSpec, String> {
+        let num = |key: &str| {
+            j.path(&[key])
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("request missing numeric {key:?}"))
+        };
+        let spec = RequestSpec {
+            id: num("id")?,
+            arrival_s: j
+                .path(&["arrival_s"])
+                .and_then(Json::as_f64)
+                .ok_or_else(|| "request missing arrival_s".to_string())?,
+            model: j
+                .path(&["model"])
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| "request missing string \"model\"".to_string())?,
+            prompt_tokens: num("prompt_tokens")? as usize,
+            max_output_tokens: num("max_output_tokens")? as usize,
+            slo_ms: j
+                .path(&["slo_ms"])
+                .and_then(Json::as_f64)
+                .ok_or_else(|| "request missing slo_ms".to_string())?,
+        };
+        if !(spec.arrival_s.is_finite() && spec.arrival_s >= 0.0) {
+            return Err(format!(
+                "request {}: arrival_s must be a non-negative finite time",
+                spec.id
+            ));
+        }
+        if !spec.slo_ms.is_finite() {
+            return Err(format!("request {}: slo_ms must be finite", spec.id));
+        }
+        Ok(spec)
+    }
+
+    /// Value-level problems a parsed request may still carry: the
+    /// non-positive token counts / SLO the P211 lint reports. Empty for a
+    /// simulatable request.
+    pub fn validity_issues(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if self.prompt_tokens == 0 {
+            out.push("prompt_tokens must be positive".to_string());
+        }
+        if self.max_output_tokens == 0 {
+            out.push("max_output_tokens must be positive".to_string());
+        }
+        if self.slo_ms <= 0.0 {
+            out.push(format!("slo_ms {} must be positive", self.slo_ms));
+        }
+        out
+    }
+
+    /// Registry resolution: does the request's model preset exist? The
+    /// static verifier reports each entry as a P204 diagnostic.
+    pub fn registry_issues(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if crate::model::presets::by_name(&self.model).is_none() {
+            out.push(format!("names unregistered model preset {:?}", self.model));
+        }
+        out
+    }
+
+    pub(crate) fn fold(&self, h: &mut Fnv64) {
+        h.write_u64(self.id);
+        h.write_f64(self.arrival_s);
+        h.write_str(&self.model);
+        h.write_u64(self.prompt_tokens as u64);
+        h.write_u64(self.max_output_tokens as u64);
+        h.write_f64(self.slo_ms);
+    }
+}
+
+/// A replayable request-arrival trace: the generator seed (0 for
+/// hand-built traces) plus every request in arrival order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestTrace {
+    pub seed: u64,
+    pub requests: Vec<RequestSpec>,
+}
+
+impl RequestTrace {
+    /// Bit-exact FNV-1a fingerprint of the whole trace (float fields by
+    /// IEEE-754 pattern): two traces match iff they are byte-identical.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_u64(self.seed);
+        h.write_u64(self.requests.len() as u64);
+        for r in &self.requests {
+            r.fold(&mut h);
+        }
+        h.finish()
+    }
+
+    /// Machine-readable trace (what `cxlfine serve --trace` writes and
+    /// replays), digest-embedded so files are self-certifying. The seed
+    /// rides a decimal *string* for the same reason `FleetTrace` does:
+    /// JSON numbers are f64 here and would round seeds above 2^53.
+    pub fn to_json(&self) -> Json {
+        let requests: Vec<Json> = self.requests.iter().map(RequestSpec::to_json).collect();
+        jobj! {
+            "seed" => self.seed.to_string(),
+            "digest" => format!("{:016x}", self.digest()),
+            "requests" => Json::Arr(requests),
+        }
+    }
+
+    /// Parse a trace, verifying the embedded digest when present and
+    /// rejecting duplicate ids and value-invalid requests (the replay
+    /// path is strict; only the linter tolerates them).
+    pub fn from_json(j: &Json) -> Result<RequestTrace, String> {
+        let seed_field = j
+            .path(&["seed"])
+            .ok_or_else(|| "trace missing seed".to_string())?;
+        let seed = match seed_field {
+            Json::Str(s) => s
+                .parse::<u64>()
+                .map_err(|e| format!("trace seed {s:?}: {e}"))?,
+            other => other
+                .as_u64()
+                .ok_or_else(|| "trace seed must be a u64".to_string())?,
+        };
+        let raw = j
+            .path(&["requests"])
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "trace missing requests array".to_string())?;
+        let requests = raw
+            .iter()
+            .map(RequestSpec::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let mut ids = std::collections::BTreeSet::new();
+        for r in &requests {
+            if !ids.insert(r.id) {
+                return Err(format!("trace has duplicate request id {}", r.id));
+            }
+            if let Some(issue) = r.validity_issues().into_iter().next() {
+                return Err(format!("request {}: {issue}", r.id));
+            }
+        }
+        let trace = RequestTrace { seed, requests };
+        if let Some(want) = j.path(&["digest"]).and_then(Json::as_str) {
+            let got = format!("{:016x}", trace.digest());
+            if want != got {
+                return Err(format!(
+                    "trace digest mismatch: file says {want}, contents hash to {got}"
+                ));
+            }
+        }
+        Ok(trace)
+    }
+}
+
+/// Seeded synthetic request generator.
+///
+/// Arrivals are a Poisson process (inverse-CDF exponential inter-arrivals
+/// on [`Xoshiro256pp`]); prompt lengths are bounded-Pareto in
+/// `[prompt_lo, prompt_hi]` with tail index `prompt_alpha`; output budgets
+/// are `out_unit · zipf(out_ranks, out_s)` (rank 1 = the shortest reply
+/// dominates). Sampling order per request is fixed (inter-arrival,
+/// prompt, output), so a seed pins the whole trace bitwise.
+#[derive(Clone, Debug)]
+pub struct RequestGen {
+    pub seed: u64,
+    pub n_requests: usize,
+    pub mean_interarrival_s: f64,
+    pub model: String,
+    pub prompt_lo: f64,
+    pub prompt_hi: f64,
+    pub prompt_alpha: f64,
+    /// Output budget = `out_unit × rank`, rank Zipf-distributed.
+    pub out_unit: usize,
+    pub out_ranks: u64,
+    pub out_s: f64,
+    pub slo_ms: f64,
+}
+
+impl RequestGen {
+    /// The default chat-style mix on a given model: short-prompt-heavy
+    /// with a long-context tail, short replies dominating.
+    pub fn mixed(seed: u64, n_requests: usize, model: &str) -> Self {
+        Self {
+            seed,
+            n_requests,
+            mean_interarrival_s: 2.0,
+            model: model.to_string(),
+            prompt_lo: 256.0,
+            prompt_hi: 16384.0,
+            prompt_alpha: 1.1,
+            out_unit: 32,
+            out_ranks: 16,
+            out_s: 1.1,
+            slo_ms: 30_000.0,
+        }
+    }
+
+    pub fn generate(&self) -> RequestTrace {
+        assert!(self.n_requests > 0, "generator needs at least one request");
+        assert!(self.out_unit >= 1 && self.out_ranks >= 1);
+        let mut rng = Xoshiro256pp::seeded(self.seed);
+        let mut t = 0.0;
+        let mut requests = Vec::with_capacity(self.n_requests);
+        for id in 0..self.n_requests {
+            t += rng.exp_mean(self.mean_interarrival_s);
+            let prompt = rng
+                .bounded_pareto(self.prompt_lo, self.prompt_hi, self.prompt_alpha)
+                .round() as usize;
+            let out = self.out_unit * rng.zipf(self.out_ranks, self.out_s) as usize;
+            requests.push(RequestSpec {
+                id: id as u64,
+                arrival_s: t,
+                model: self.model.clone(),
+                prompt_tokens: prompt.max(1),
+                max_output_tokens: out,
+                slo_ms: self.slo_ms,
+            });
+        }
+        RequestTrace {
+            seed: self.seed,
+            requests,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_yields_byte_identical_traces() {
+        let a = RequestGen::mixed(7, 50, "tiny-2m").generate();
+        let b = RequestGen::mixed(7, 50, "tiny-2m").generate();
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty()
+        );
+        let c = RequestGen::mixed(8, 50, "tiny-2m").generate();
+        assert_ne!(a.digest(), c.digest(), "a different seed must diverge");
+    }
+
+    #[test]
+    fn arrivals_ascend_and_lengths_are_heavy_tailed() {
+        let t = RequestGen::mixed(5, 400, "tiny-2m").generate();
+        assert_eq!(t.requests.len(), 400);
+        for w in t.requests.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s, "arrivals must ascend");
+        }
+        for r in &t.requests {
+            assert!((256..=16384).contains(&r.prompt_tokens));
+            assert!(r.max_output_tokens >= 32 && r.max_output_tokens <= 32 * 16);
+            assert!(r.validity_issues().is_empty());
+            assert!(r.registry_issues().is_empty());
+        }
+        // Heavy tail: short prompts dominate, but long ones exist.
+        let short = t.requests.iter().filter(|r| r.prompt_tokens < 1024).count();
+        let long = t.requests.iter().filter(|r| r.prompt_tokens > 8192).count();
+        assert!(short > t.requests.len() / 2, "short {short}");
+        assert!(long >= 1, "the Pareto tail must reach past 8k tokens");
+    }
+
+    #[test]
+    fn trace_json_round_trips_and_verifies_digest() {
+        let t = RequestGen::mixed(11, 17, "7b").generate();
+        let text = t.to_json().to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let back = RequestTrace::from_json(&parsed).unwrap();
+        assert_eq!(t, back, "round trip must preserve every field bitwise");
+        // Tampering must be rejected by the digest check.
+        let mut t2 = t.clone();
+        t2.requests[0].prompt_tokens += 1;
+        let mut tampered = t2.to_json();
+        if let Json::Obj(o) = &mut tampered {
+            o.set("digest", format!("{:016x}", t.digest()));
+        }
+        let err = RequestTrace::from_json(&tampered).unwrap_err();
+        assert!(err.contains("digest mismatch"), "{err}");
+    }
+
+    #[test]
+    fn strict_parse_rejects_bad_values_lenient_parse_reports_them() {
+        // Zero output budget: parses (shape-valid) but is value-invalid.
+        let j = Json::parse(
+            r#"{"id": 3, "arrival_s": 1.0, "model": "7b",
+                "prompt_tokens": 128, "max_output_tokens": 0, "slo_ms": 500.0}"#,
+        )
+        .unwrap();
+        let spec = RequestSpec::from_json(&j).unwrap();
+        assert_eq!(
+            spec.validity_issues(),
+            vec!["max_output_tokens must be positive".to_string()]
+        );
+        let trace = Json::parse(&format!(
+            r#"{{"seed": 1, "requests": [{}]}}"#,
+            j.to_string_pretty()
+        ))
+        .unwrap();
+        let err = RequestTrace::from_json(&trace).unwrap_err();
+        assert!(err.contains("max_output_tokens"), "{err}");
+        // Duplicate ids are rejected even without a digest.
+        let mut dup = RequestGen::mixed(1, 2, "7b").generate();
+        dup.requests[1].id = dup.requests[0].id;
+        let mut json = dup.to_json();
+        if let Json::Obj(o) = &mut json {
+            o.set("digest", Json::Null);
+        }
+        let err = RequestTrace::from_json(&json).unwrap_err();
+        assert!(err.contains("duplicate request id"), "{err}");
+        // Seeds above 2^53 survive the string round trip.
+        let mut big = RequestGen::mixed(1, 3, "7b").generate();
+        big.seed = (1u64 << 53) + 7;
+        let back =
+            RequestTrace::from_json(&Json::parse(&big.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back.seed, (1u64 << 53) + 7);
+    }
+}

@@ -1,0 +1,812 @@
+//! The request-level serving simulator: continuous batching with
+//! SLO-aware admission over the CXL-tiered paged KV cache, an adapter
+//! over the shared [`crate::simcore`] event core like `fleet::sim`.
+//!
+//! Requests arrive over simulated time (a [`simcore::EventQueue`] ordered
+//! by [`simcore::EventKey`]; batch-step completions sort before arrivals
+//! at equal timestamps, unique sequence numbers break the remaining
+//! ties). The host runs one batch *step* at a time:
+//!
+//! * a step carries every newly admitted request's **prefill** (full
+//!   prompt forward pass, KV written back per block) plus **one decode
+//!   token** for every request already past prefill — the continuous
+//!   batching discipline: completions leave and admissions join at step
+//!   boundaries, never mid-step;
+//! * step membership is frozen when the step is scheduled, so requests
+//!   admitted while a step is in flight simply join the next one;
+//! * the step's duration is priced from *calibrated* costs: one real
+//!   schedule build + executor run per distinct (model, phase, batch
+//!   bucket, context bucket) cell via a [`ServeCalibrator`] — the same
+//!   `Memo` machinery as the fleet's [`crate::fleet::Calibrator`] — plus
+//!   the KV pager's cold-page attention reads and promotion/demotion
+//!   traffic priced at [`SystemTopology::migration_bandwidth`], so tier
+//!   traffic flows through the same degraded-topology views as fleet
+//!   evacuations.
+//!
+//! Admission is a policy registry mirroring `fleet::scheduler`: `fcfs`
+//! admits strictly in arrival order and stops at the first refusal;
+//! `slo-strict` (alias `ours`) first sheds queued requests whose
+//! *projected* TTFT already exceeds their SLO — they can no longer meet
+//! it, so spending KV on them only hurts the rest — then backfills every
+//! queued request that fits. A request whose full KV footprint exceeds
+//! what the policy's tiers can *ever* hold is rejected at arrival; a
+//! request whose decode outgrows the cache mid-flight is truncated (it
+//! still completes, flagged).
+//!
+//! Determinism contract: the event loop is serial, every tie is broken by
+//! explicit keys, live sequences sit in `BTreeMap`s, and calibration
+//! cells are pure functions of (topology, model, phase, buckets) — so
+//! pre-warming them in parallel (`--threads`) cannot change any value.
+//! Identical traces produce bit-identical [`ServeResult::digest`]s across
+//! reruns and thread counts (pinned by `rust/tests/serve_sim.rs`).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use super::kv::{KvPager, KvPolicyRef, PAGE_TOKENS};
+use super::metrics::{RequestRecord, RequestStatus, ServeResult};
+use super::request::{RequestSpec, RequestTrace};
+use crate::fleet::OccupancySample;
+use crate::mem::engine;
+use crate::model::footprint::Workload;
+use crate::model::presets as mpresets;
+use crate::offload::schedules::inference::kv_bytes_per_token;
+use crate::offload::{schedules, simulate_iteration, MemoryPlan, RunConfig};
+use crate::simcore::{lanes, EventKey, EventQueue};
+use crate::topology::SystemTopology;
+use crate::util::memo::Memo;
+
+/// Event kinds: step completions apply before arrivals at one timestamp
+/// (a slot freed at `t` is visible to a request arriving at `t`).
+const EV_STEP: u8 = 0;
+const EV_ARRIVE: u8 = 1;
+
+/// Fraction of DRAM held back from KV as working-set reserve
+/// (activations, fragmentation slack): capacity / `DRAM_RESERVE_DIV`.
+const DRAM_RESERVE_DIV: u64 = 20;
+
+/// DRAM bytes the KV pager may use on `topo` when serving `model`:
+/// capacity minus the resident bf16 weights minus the working-set
+/// reserve. Zero when the weights alone don't fit.
+pub fn dram_kv_budget(topo: &SystemTopology, model: &str) -> u64 {
+    let Some(m) = mpresets::by_name(model) else {
+        return 0;
+    };
+    let params_bytes = m.params() * 2;
+    let cap = topo.dram().capacity;
+    cap.saturating_sub(params_bytes)
+        .saturating_sub(cap / DRAM_RESERVE_DIV)
+}
+
+/// Round a token/batch count to its calibration bucket: the next power
+/// of two, floored so tiny prompts share a cell.
+fn bucket(x: usize, floor: usize) -> usize {
+    x.max(1).next_power_of_two().max(floor)
+}
+
+const CTX_BUCKET_FLOOR: usize = 256;
+
+/// Memoized per-(model, phase, batch bucket, context bucket) step-cost
+/// model: one real schedule build + executor run per cell, priced with
+/// the `prefill` / `decode` builders from `offload::schedules::inference`
+/// on the `baseline-dram` engine (serving weights are DRAM-resident).
+/// Every value is a pure function of the topology, so cache warm-up
+/// order — including the parallel pre-warm — cannot change results.
+pub struct ServeCalibrator<'t> {
+    topo: &'t SystemTopology,
+    costs: Memo<String, Option<f64>>,
+}
+
+fn compute_step_cost(
+    topo: &SystemTopology,
+    model: &str,
+    phase: &str,
+    batch: usize,
+    ctx: usize,
+) -> Option<f64> {
+    let m = mpresets::by_name(model)?;
+    let eng = engine::by_name("baseline-dram")?;
+    let sched = schedules::by_name(phase)?;
+    let cfg = RunConfig::new(m, Workload::new(1, batch, ctx), eng).with_schedule(sched);
+    let prof = MemoryPlan::profile_run(topo, &cfg).ok()?;
+    let plan = MemoryPlan::build_with_profiles(topo, &cfg, false, prof.clone())
+        .or_else(|_| MemoryPlan::build_with_profiles(topo, &cfg, true, prof))
+        .ok()?;
+    Some(simulate_iteration(topo, &cfg, &plan).iter_s)
+}
+
+impl<'t> ServeCalibrator<'t> {
+    pub fn new(topo: &'t SystemTopology) -> Self {
+        Self {
+            topo,
+            costs: Memo::new(),
+        }
+    }
+
+    fn cell(&mut self, model: &str, phase: &str, batch: usize, ctx: usize) -> Option<f64> {
+        let topo = self.topo;
+        let key = format!("{model}|{phase}|{batch}|{ctx}");
+        self.costs
+            .get_or_insert_with(key, || compute_step_cost(topo, model, phase, batch, ctx))
+    }
+
+    /// Calibrated prompt-pass seconds for one request: the bucket cell's
+    /// full-prompt cost scaled linearly to the actual token count
+    /// (documented approximation — attention's quadratic term is priced
+    /// at the bucket's shape).
+    pub fn prefill_s(&mut self, model: &str, prompt_tokens: usize) -> Option<f64> {
+        let b = bucket(prompt_tokens, CTX_BUCKET_FLOOR);
+        let cell = self.cell(model, "prefill", 1, b)?;
+        Some(cell * prompt_tokens as f64 / b as f64)
+    }
+
+    /// Calibrated seconds for one batched decode step (one token per
+    /// sequence) at the given batch size and maximum live context.
+    pub fn decode_step_s(
+        &mut self,
+        model: &str,
+        batch: usize,
+        max_ctx: usize,
+    ) -> Option<f64> {
+        let bb = bucket(batch, 1);
+        let cb = bucket(max_ctx, CTX_BUCKET_FLOOR);
+        self.cell(model, "decode", bb, cb)
+    }
+
+    /// Pre-compute the distinct prefill cells of a trace across `threads`
+    /// workers. Decode cells (whose buckets depend on runtime batch
+    /// composition) still fill in lazily, serially. Seeding is
+    /// counter-neutral and value-pure, so the digest is independent of
+    /// the worker count.
+    pub fn prewarm(&mut self, requests: &[RequestSpec], threads: usize) {
+        let mut cells: BTreeMap<String, (String, usize)> = BTreeMap::new();
+        for r in requests {
+            let b = bucket(r.prompt_tokens, CTX_BUCKET_FLOOR);
+            cells
+                .entry(format!("{}|prefill|1|{b}", r.model))
+                .or_insert_with(|| (r.model.clone(), b));
+        }
+        let cells: Vec<(String, (String, usize))> = cells.into_iter().collect();
+        let topo = self.topo;
+        let results = lanes::par_indexed(cells.len(), threads, |i| {
+            let (model, b) = &cells[i].1;
+            compute_step_cost(topo, model, "prefill", 1, *b)
+        });
+        for ((key, _), cost) in cells.into_iter().zip(results) {
+            self.costs.seed(key, cost);
+        }
+    }
+}
+
+/// What the admission policy sees and does during one scheduling pass.
+/// Indices are positions in the current queue and stay stable for the
+/// whole pass — admitted / shed entries are compacted afterwards.
+pub trait ServeProbe {
+    fn now_s(&self) -> f64;
+    fn queue_len(&self) -> usize;
+    fn request(&self, idx: usize) -> &RequestSpec;
+    /// Wait so far plus the request's calibrated prefill, milliseconds:
+    /// the best TTFT it could still achieve if admitted right now.
+    fn projected_ttft_ms(&self, idx: usize) -> f64;
+    /// Try to admit: checks a free batch slot and the KV fit of the
+    /// prompt, allocates on success. Idempotently false once decided.
+    fn try_admit(&mut self, idx: usize) -> bool;
+    /// Drop the request from the queue (recorded as `Shed` with a
+    /// projected-TTFT reason).
+    fn shed(&mut self, idx: usize);
+}
+
+/// An SLO-aware admission policy: pure decision logic over a
+/// [`ServeProbe`], exactly like `fleet::SchedPolicy` over its probe.
+pub trait AdmitPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn admit(&self, probe: &mut dyn ServeProbe);
+}
+
+pub type AdmitRef = Arc<dyn AdmitPolicy>;
+
+/// Strict arrival order: admit from the head, stop at the first refusal.
+/// Never sheds.
+pub struct Fcfs;
+
+impl AdmitPolicy for Fcfs {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn admit(&self, probe: &mut dyn ServeProbe) {
+        for idx in 0..probe.queue_len() {
+            if !probe.try_admit(idx) {
+                break;
+            }
+        }
+    }
+}
+
+/// Shed queued requests that can no longer meet their TTFT SLO (their
+/// wait plus calibrated prefill already exceeds it), then backfill: try
+/// every remaining request, not just the head.
+pub struct SloStrict;
+
+impl AdmitPolicy for SloStrict {
+    fn name(&self) -> &'static str {
+        "slo-strict"
+    }
+
+    fn admit(&self, probe: &mut dyn ServeProbe) {
+        for idx in 0..probe.queue_len() {
+            let slo = probe.request(idx).slo_ms;
+            if probe.projected_ttft_ms(idx) > slo {
+                probe.shed(idx);
+            }
+        }
+        for idx in 0..probe.queue_len() {
+            probe.try_admit(idx);
+        }
+    }
+}
+
+/// Resolve an admission-policy name (`fcfs`, `slo-strict`, alias `ours`).
+pub fn admission_by_name(name: &str) -> Option<AdmitRef> {
+    match name {
+        "fcfs" => Some(Arc::new(Fcfs)),
+        "slo-strict" | "ours" => Some(Arc::new(SloStrict)),
+        _ => None,
+    }
+}
+
+/// Canonical admission-policy names (CLI help text).
+pub fn admission_known_names() -> Vec<&'static str> {
+    vec!["fcfs", "slo-strict"]
+}
+
+/// Per-pass decision state of one queue entry.
+#[derive(Clone, Copy, PartialEq)]
+enum Decision {
+    Pending,
+    Admitted,
+    Shed,
+}
+
+/// The concrete probe: queue indices → trace requests, KV fit through
+/// the pager, projections from pre-computed prefill estimates.
+struct QueueProbe<'a> {
+    now_s: f64,
+    specs: &'a [RequestSpec],
+    /// Trace indices of queued requests, arrival order.
+    queue: &'a [usize],
+    /// Calibrated prefill estimate per queue entry, seconds
+    /// (`f64::INFINITY` when calibration failed).
+    prefill_est_s: &'a [f64],
+    pager: &'a mut KvPager,
+    slots_free: usize,
+    decisions: Vec<Decision>,
+}
+
+impl ServeProbe for QueueProbe<'_> {
+    fn now_s(&self) -> f64 {
+        self.now_s
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn request(&self, idx: usize) -> &RequestSpec {
+        &self.specs[self.queue[idx]]
+    }
+
+    fn projected_ttft_ms(&self, idx: usize) -> f64 {
+        let r = self.request(idx);
+        (self.now_s - r.arrival_s + self.prefill_est_s[idx]) * 1e3
+    }
+
+    fn try_admit(&mut self, idx: usize) -> bool {
+        if self.decisions[idx] != Decision::Pending || self.slots_free == 0 {
+            return false;
+        }
+        let r = &self.specs[self.queue[idx]];
+        if !self.pager.can_fit(r.prompt_tokens) || !self.pager.alloc(r.id, r.prompt_tokens) {
+            return false;
+        }
+        self.slots_free -= 1;
+        self.decisions[idx] = Decision::Admitted;
+        true
+    }
+
+    fn shed(&mut self, idx: usize) {
+        if self.decisions[idx] == Decision::Pending {
+            self.decisions[idx] = Decision::Shed;
+        }
+    }
+}
+
+/// One running request's progress.
+struct RunState {
+    /// Output tokens generated so far (0 until its prefill step lands).
+    generated: usize,
+    /// Prefill has executed (set at the end of its first step).
+    prefilled: bool,
+}
+
+/// The step in flight: membership frozen at schedule time.
+struct StepPlan {
+    /// Trace indices running their prefill in this step.
+    prefills: Vec<usize>,
+    /// Trace indices decoding one token in this step.
+    decodes: Vec<usize>,
+    /// CXL cold-page bytes the decode reads pulled (for records).
+    cold_read: Vec<(usize, u64)>,
+}
+
+/// One scheduling pass: pre-compute TTFT projections, run the policy
+/// over the probe, apply its decisions, compact the queue.
+#[allow(clippy::too_many_arguments)]
+fn admit_pass(
+    specs: &[RequestSpec],
+    admission: &AdmitRef,
+    max_batch: usize,
+    now: f64,
+    queue: &mut Vec<usize>,
+    running: &mut BTreeMap<usize, RunState>,
+    records: &mut [RequestRecord],
+    pager: &mut KvPager,
+    cal: &mut ServeCalibrator<'_>,
+) {
+    if queue.is_empty() || running.len() >= max_batch {
+        return;
+    }
+    let est: Vec<f64> = queue
+        .iter()
+        .map(|&i| {
+            cal.prefill_s(&specs[i].model, specs[i].prompt_tokens)
+                .unwrap_or(f64::INFINITY)
+        })
+        .collect();
+    let mut probe = QueueProbe {
+        now_s: now,
+        specs,
+        queue: queue.as_slice(),
+        prefill_est_s: &est,
+        pager,
+        slots_free: max_batch - running.len(),
+        decisions: vec![Decision::Pending; queue.len()],
+    };
+    admission.admit(&mut probe);
+    let decisions = probe.decisions;
+    let mut kept = Vec::with_capacity(queue.len());
+    for (idx, &i) in queue.iter().enumerate() {
+        match decisions[idx] {
+            Decision::Pending => kept.push(i),
+            Decision::Admitted => {
+                records[i].start_s = Some(now);
+                records[i].status = RequestStatus::Running;
+                running.insert(
+                    i,
+                    RunState {
+                        generated: 0,
+                        prefilled: false,
+                    },
+                );
+            }
+            Decision::Shed => {
+                records[i].status = RequestStatus::Shed;
+                records[i].reason = Some(format!(
+                    "projected TTFT {:.0}ms exceeds SLO {:.0}ms",
+                    (now - specs[i].arrival_s + est[idx]) * 1e3,
+                    specs[i].slo_ms
+                ));
+            }
+        }
+    }
+    *queue = kept;
+}
+
+/// Freeze the next step's membership and price it. `None` when nothing
+/// is running.
+fn schedule_step(
+    specs: &[RequestSpec],
+    model: &str,
+    migration_bw: f64,
+    running: &BTreeMap<usize, RunState>,
+    pager: &KvPager,
+    cal: &mut ServeCalibrator<'_>,
+    charged_migrated: &mut u64,
+) -> Option<(StepPlan, f64)> {
+    if running.is_empty() {
+        return None;
+    }
+    let mut plan = StepPlan {
+        prefills: Vec::new(),
+        decodes: Vec::new(),
+        cold_read: Vec::new(),
+    };
+    let mut dt = 0.0f64;
+    let mut max_ctx = 0usize;
+    for (&i, st) in running {
+        if !st.prefilled {
+            plan.prefills.push(i);
+            dt += cal
+                .prefill_s(&specs[i].model, specs[i].prompt_tokens)
+                .unwrap_or(1.0);
+        } else {
+            plan.decodes.push(i);
+            max_ctx = max_ctx.max(specs[i].prompt_tokens + st.generated);
+        }
+    }
+    if !plan.decodes.is_empty() {
+        dt += cal
+            .decode_step_s(model, plan.decodes.len(), max_ctx)
+            .unwrap_or(1.0);
+        // Cold-page attention reads ride the CXL links.
+        let mut cold_total = 0u64;
+        for &i in &plan.decodes {
+            let cold = pager.cold_bytes(specs[i].id);
+            if cold > 0 {
+                plan.cold_read.push((i, cold));
+                cold_total += cold;
+            }
+        }
+        dt += cold_total as f64 / migration_bw;
+    }
+    // Promotion/demotion traffic since the last step rides the same
+    // links (charged once, to the step that follows it).
+    let migrated = pager.counters().migrated_bytes();
+    dt += (migrated - *charged_migrated) as f64 / migration_bw;
+    *charged_migrated = migrated;
+    debug_assert!(dt > 0.0, "a non-empty step must take time");
+    Some((plan, dt.max(1e-9)))
+}
+
+/// Run a whole request trace under one (KV policy, admission policy)
+/// pair. `threads` only parallelizes the calibration pre-warm — the
+/// event loop itself is serial and the result digest is independent of
+/// the worker count. `max_batch` caps concurrently running requests.
+pub fn simulate_serving(
+    topo: &SystemTopology,
+    trace: &RequestTrace,
+    kv_policy: &KvPolicyRef,
+    admission: &AdmitRef,
+    max_batch: usize,
+    threads: usize,
+) -> ServeResult {
+    assert!(max_batch >= 1, "need at least one batch slot");
+    let mut ids = BTreeSet::new();
+    for r in &trace.requests {
+        assert!(ids.insert(r.id), "duplicate request id {}", r.id);
+        assert!(
+            r.arrival_s.is_finite() && r.arrival_s >= 0.0,
+            "request {}: arrival must be a non-negative finite time",
+            r.id
+        );
+        assert!(
+            r.validity_issues().is_empty(),
+            "request {}: {:?}",
+            r.id,
+            r.validity_issues()
+        );
+        assert!(
+            r.registry_issues().is_empty(),
+            "request {}: {:?}",
+            r.id,
+            r.registry_issues()
+        );
+    }
+    let model = trace
+        .requests
+        .first()
+        .map(|r| r.model.clone())
+        .unwrap_or_else(|| "7b".to_string());
+    assert!(
+        trace.requests.iter().all(|r| r.model == model),
+        "one serving host holds one resident model; mixed-model traces \
+         need one simulator per model"
+    );
+
+    let mut cal = ServeCalibrator::new(topo);
+    cal.prewarm(&trace.requests, threads);
+
+    let page_bytes = (PAGE_TOKENS as u64) * kv_bytes_per_token(
+        &mpresets::by_name(&model).expect("validated above"),
+    );
+    let budget = dram_kv_budget(topo, &model);
+    let mut pager = KvPager::new(topo, page_bytes.max(1), budget, kv_policy.clone());
+    let migration_bw = topo.migration_bandwidth();
+
+    let mut result = ServeResult::new(kv_policy.name(), admission.name(), topo);
+    result.dram_kv_budget = budget;
+    result.records = trace
+        .requests
+        .iter()
+        .map(|r| RequestRecord {
+            id: r.id,
+            model: r.model.clone(),
+            prompt_tokens: r.prompt_tokens,
+            max_output_tokens: r.max_output_tokens,
+            slo_ms: r.slo_ms,
+            arrival_s: r.arrival_s,
+            start_s: None,
+            first_token_s: None,
+            finish_s: None,
+            output_tokens: 0,
+            truncated: false,
+            status: RequestStatus::Queued,
+            reason: None,
+            cold_read_bytes: 0,
+        })
+        .collect();
+
+    let mut events: EventQueue<usize> = EventQueue::new();
+    for (i, r) in trace.requests.iter().enumerate() {
+        events.push(EventKey::new(r.arrival_s, EV_ARRIVE, i as u64), i);
+    }
+    let mut seq: u64 = trace.requests.len() as u64;
+
+    let mut queue: Vec<usize> = Vec::new();
+    let mut running: BTreeMap<usize, RunState> = BTreeMap::new();
+    let mut step: Option<StepPlan> = None;
+    // Migration bytes already charged to a scheduled step.
+    let mut charged_migrated: u64 = pager.counters().migrated_bytes();
+    let specs = &trace.requests;
+
+    while let Some((key, payload)) = events.pop() {
+        let now = key.time();
+        result.n_events += 1;
+        match key.kind() {
+            EV_ARRIVE => {
+                let i = payload;
+                let r = &specs[i];
+                // Reject immediately iff the request can never be held:
+                // its full KV footprint exceeds what the policy's tiers
+                // can ever reach, or its prompt cannot be admitted even
+                // onto an empty pager (it would otherwise park forever).
+                let full_pages = r.total_kv_tokens().div_ceil(PAGE_TOKENS) as u64;
+                if full_pages * pager.page_bytes() > pager.capacity()
+                    || !pager.fits_empty(r.prompt_tokens)
+                {
+                    result.records[i].status = RequestStatus::Rejected;
+                    result.records[i].reason = Some(format!(
+                        "kv footprint of {full_pages} pages exceeds what the \
+                         {} policy can hold",
+                        kv_policy.name()
+                    ));
+                } else {
+                    queue.push(i);
+                    admit_pass(
+                        specs,
+                        admission,
+                        max_batch,
+                        now,
+                        &mut queue,
+                        &mut running,
+                        &mut result.records,
+                        &mut pager,
+                        &mut cal,
+                    );
+                }
+            }
+            EV_STEP => {
+                let plan = step.take().expect("EV_STEP without a step in flight");
+                result.n_steps += 1;
+                let mut finished: Vec<usize> = Vec::new();
+                for &i in &plan.prefills {
+                    let st = running.get_mut(&i).expect("prefill member running");
+                    st.prefilled = true;
+                    // Prefill emits the first output token.
+                    st.generated = 1;
+                    result.records[i].first_token_s = Some(now);
+                    if !pager.append(specs[i].id, 1) {
+                        result.records[i].truncated = true;
+                        finished.push(i);
+                    } else if st.generated >= specs[i].max_output_tokens {
+                        finished.push(i);
+                    }
+                }
+                for (i, cold) in &plan.cold_read {
+                    result.records[*i].cold_read_bytes += cold;
+                }
+                for &i in &plan.decodes {
+                    let st = running.get_mut(&i).expect("decode member running");
+                    st.generated += 1;
+                    if !pager.append(specs[i].id, 1) {
+                        result.records[i].truncated = true;
+                        finished.push(i);
+                    } else if st.generated >= specs[i].max_output_tokens {
+                        finished.push(i);
+                    }
+                }
+                for &i in &finished {
+                    let st = running.remove(&i).expect("finishing request running");
+                    result.records[i].finish_s = Some(now);
+                    result.records[i].output_tokens = st.generated as u64;
+                    result.records[i].status = RequestStatus::Completed;
+                    pager.free(specs[i].id);
+                }
+                if !finished.is_empty() {
+                    pager.promote_slack();
+                }
+                admit_pass(
+                    specs,
+                    admission,
+                    max_batch,
+                    now,
+                    &mut queue,
+                    &mut running,
+                    &mut result.records,
+                    &mut pager,
+                    &mut cal,
+                );
+            }
+            other => unreachable!("unknown event kind {other}"),
+        }
+        // Start the next step if none is in flight and work remains.
+        if step.is_none() {
+            if let Some((plan, dt)) = schedule_step(
+                specs,
+                &model,
+                migration_bw,
+                &running,
+                &pager,
+                &mut cal,
+                &mut charged_migrated,
+            ) {
+                events.push(EventKey::new(now + dt, EV_STEP, seq), usize::MAX);
+                seq += 1;
+                step = Some(plan);
+            }
+        }
+        result.samples.push(OccupancySample {
+            t_s: now,
+            used: pager.used().to_vec(),
+            queue_len: queue.len(),
+            running: running.len(),
+        });
+    }
+
+    assert!(
+        running.is_empty() && queue.is_empty(),
+        "event heap drained with live requests"
+    );
+    result.kv = pager.counters();
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::kv;
+    use crate::serve::request::RequestGen;
+    use crate::topology::presets;
+
+    fn tiny_topo(dram: u64) -> SystemTopology {
+        presets::with_dram_capacity(presets::dev_tiny(), dram)
+    }
+
+    fn run(
+        topo: &SystemTopology,
+        trace: &RequestTrace,
+        kv_name: &str,
+        adm: &str,
+        threads: usize,
+    ) -> ServeResult {
+        simulate_serving(
+            topo,
+            trace,
+            &kv::by_name(kv_name).unwrap(),
+            &admission_by_name(adm).unwrap(),
+            8,
+            threads,
+        )
+    }
+
+    #[test]
+    fn admission_registry_round_trips() {
+        assert_eq!(admission_by_name("fcfs").unwrap().name(), "fcfs");
+        assert_eq!(admission_by_name("slo-strict").unwrap().name(), "slo-strict");
+        assert_eq!(admission_by_name("ours").unwrap().name(), "slo-strict");
+        assert!(admission_by_name("nope").is_none());
+        for n in admission_known_names() {
+            assert_eq!(admission_by_name(n).unwrap().name(), n);
+        }
+    }
+
+    #[test]
+    fn every_request_reaches_a_terminal_state() {
+        let topo = presets::dev_tiny();
+        let trace = RequestGen::mixed(21, 24, "tiny-2m").generate();
+        let r = run(&topo, &trace, "tiered", "fcfs", 1);
+        assert_eq!(r.arrived(), 24);
+        assert_eq!(r.unfinished(), 0);
+        assert_eq!(r.completed() + r.rejected() + r.shed(), 24);
+        // Plenty of DRAM: nothing rejected, everything completes.
+        assert_eq!(r.completed(), 24);
+        assert_eq!(r.kv.resident_pages(), 0, "drained cache must be empty");
+        for rec in &r.records {
+            assert!(rec.ttft_ms().unwrap() > 0.0);
+            assert_eq!(rec.output_tokens as usize, rec.max_output_tokens);
+        }
+        // The occupancy curve ends empty.
+        let last = r.samples.last().unwrap();
+        assert!(last.used.iter().all(|&u| u == 0));
+    }
+
+    #[test]
+    fn digests_are_bitwise_stable_across_reruns_and_threads() {
+        let topo = tiny_topo(64 << 20);
+        let trace = RequestGen::mixed(33, 20, "tiny-2m").generate();
+        let a = run(&topo, &trace, "tiered:2", "slo-strict", 1);
+        let b = run(&topo, &trace, "tiered:2", "slo-strict", 1);
+        let c = run(&topo, &trace, "tiered:2", "slo-strict", 4);
+        assert_eq!(a.digest(), b.digest(), "rerun must be bit-identical");
+        assert_eq!(a.digest(), c.digest(), "thread count must not leak");
+        let d = run(&topo, &trace, "dram-only", "slo-strict", 1);
+        assert_ne!(a.digest(), d.digest(), "policy is digest-material");
+    }
+
+    #[test]
+    fn slo_strict_sheds_what_fcfs_leaves_waiting() {
+        // One batch slot, long prefills, impatient SLOs: the queue backs
+        // up and slo-strict must shed hopeless requests.
+        let topo = presets::dev_tiny();
+        let mut gen = RequestGen::mixed(9, 12, "tiny-2m");
+        gen.mean_interarrival_s = 0.001; // everyone arrives at once
+        gen.slo_ms = 1.0; // nobody tolerates a queue
+        let trace = gen.generate();
+        let strict = simulate_serving(
+            &topo,
+            &trace,
+            &kv::by_name("tiered").unwrap(),
+            &admission_by_name("slo-strict").unwrap(),
+            1,
+            1,
+        );
+        assert!(strict.shed() > 0, "backlogged SLOs must shed");
+        assert_eq!(strict.unfinished(), 0);
+        let fcfs = simulate_serving(
+            &topo,
+            &trace,
+            &kv::by_name("tiered").unwrap(),
+            &admission_by_name("fcfs").unwrap(),
+            1,
+            1,
+        );
+        assert_eq!(fcfs.shed(), 0, "fcfs never sheds");
+        assert_eq!(fcfs.completed(), 12);
+    }
+
+    #[test]
+    fn tiering_admits_what_dram_only_rejects() {
+        let topo = tiny_topo(48 << 20);
+        let budget = dram_kv_budget(&topo, "tiny-2m");
+        let m = mpresets::by_name("tiny-2m").unwrap();
+        let page = PAGE_TOKENS as u64 * kv_bytes_per_token(&m);
+        let dram_pages = budget / page;
+        // A request bigger than the DRAM budget but far below DRAM+CXL.
+        let big_tokens = (dram_pages as usize + 8) * PAGE_TOKENS;
+        let trace = RequestTrace {
+            seed: 0,
+            requests: vec![RequestSpec {
+                id: 0,
+                arrival_s: 0.5,
+                model: "tiny-2m".into(),
+                prompt_tokens: big_tokens,
+                max_output_tokens: 16,
+                slo_ms: 60_000.0,
+            }],
+        };
+        let dram = run(&topo, &trace, "dram-only", "fcfs", 1);
+        assert_eq!(dram.rejected(), 1);
+        assert!(dram.records[0]
+            .reason
+            .as_deref()
+            .unwrap()
+            .contains("exceeds"));
+        let tiered = run(&topo, &trace, "tiered", "fcfs", 1);
+        assert_eq!(tiered.completed(), 1);
+        assert!(tiered.kv.demoted_bytes > 0, "the big prompt must spill");
+        assert!(
+            tiered.records[0].cold_read_bytes > 0,
+            "decode must pay for cold pages"
+        );
+    }
+}

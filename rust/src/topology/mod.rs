@@ -172,6 +172,29 @@ impl SystemTopology {
         self.mem_nodes.iter().map(|n| n.capacity).sum()
     }
 
+    /// Aggregate bandwidth available for bulk page migration between DRAM
+    /// and the CXL tier: the sum of the single-flow link capacities of
+    /// every *online* AIC (offline nodes — capacity zeroed by a degraded
+    /// view — contribute nothing), with the DRAM stream bandwidth as the
+    /// floor when every AIC is gone. Shared by the fleet's fault-recovery
+    /// evacuations and the serving KV pager's promotion/demotion costing,
+    /// so both price traffic through the same degraded-topology views.
+    pub fn migration_bandwidth(&self) -> f64 {
+        let mut bw = 0.0;
+        for n in self.cxl_nodes() {
+            if self.node(n).capacity > 0 {
+                if let Some(l) = self.node(n).link {
+                    bw += self.link(l).capacity(1);
+                }
+            }
+        }
+        if bw > 0.0 {
+            bw
+        } else {
+            self.dram().peak_bw
+        }
+    }
+
     /// Consistency checks; panics on violation (used by tests and presets).
     pub fn validate(&self) {
         assert!(!self.mem_nodes.is_empty(), "need at least local DRAM");

@@ -142,6 +142,47 @@ impl Xoshiro256pp {
         assert!(!xs.is_empty());
         &xs[self.below(xs.len() as u64) as usize]
     }
+
+    /// Zipf-distributed rank in `[1, n]` with exponent `s ≥ 0`
+    /// (`P(k) ∝ k^{-s}`; `s = 0` degenerates to uniform). Inverse-CDF by
+    /// linear scan over the normalized weights — O(n) per call, which is
+    /// fine for the trace generators' rank spaces (≤ a few thousand) and
+    /// buys the property the crate's determinism contract needs: exactly
+    /// **one** uniform draw per call, so the stream position after a call
+    /// is seed-determined and the same seed yields a byte-identical
+    /// sample sequence.
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        assert!(n >= 1, "zipf needs a non-empty rank space");
+        assert!(s >= 0.0 && s.is_finite(), "zipf exponent must be finite and >= 0");
+        let z: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+        let u = self.next_f64() * z;
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += (k as f64).powf(-s);
+            if u < acc {
+                return k;
+            }
+        }
+        n
+    }
+
+    /// Bounded-Pareto sample in `[lo, hi]` with tail index `alpha > 0` —
+    /// the heavy-tailed length distribution serving traces are drawn from
+    /// (most requests short, a fat tail of very long ones). Inverse-CDF
+    /// transform, one uniform draw per call:
+    /// `x = lo / (1 − U·(1 − (lo/hi)^α))^(1/α)`.
+    pub fn bounded_pareto(&mut self, lo: f64, hi: f64, alpha: f64) -> f64 {
+        assert!(
+            lo > 0.0 && hi >= lo && hi.is_finite(),
+            "bounded_pareto needs 0 < lo <= hi < inf"
+        );
+        assert!(alpha > 0.0 && alpha.is_finite(), "bounded_pareto needs alpha > 0");
+        let u = self.next_f64();
+        let r = (lo / hi).powf(alpha);
+        let x = lo / (1.0 - u * (1.0 - r)).powf(1.0 / alpha);
+        // Float roundoff can land a hair past hi; the support is closed.
+        x.min(hi)
+    }
 }
 
 #[cfg(test)]
@@ -247,6 +288,83 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.02, "mean {mean}");
         assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn zipf_pinned_values_and_determinism() {
+        // Pinned reference stream: any change to the sampler's arithmetic
+        // or draw count shows up here before it silently reshapes every
+        // generated serving trace.
+        let mut rng = Xoshiro256pp::seeded(4242);
+        let v: Vec<u64> = (0..8).map(|_| rng.zipf(64, 1.1)).collect();
+        assert_eq!(v, vec![2, 1, 12, 1, 1, 2, 11, 16]);
+        let mut a = Xoshiro256pp::seeded(97);
+        let mut b = Xoshiro256pp::seeded(97);
+        for _ in 0..200 {
+            assert_eq!(a.zipf(1000, 0.9), b.zipf(1000, 0.9));
+        }
+    }
+
+    #[test]
+    fn zipf_support_and_skew() {
+        let mut rng = Xoshiro256pp::seeded(51);
+        let n = 50_000;
+        let mut ones = 0usize;
+        for _ in 0..n {
+            let k = rng.zipf(100, 1.0);
+            assert!((1..=100).contains(&k));
+            if k == 1 {
+                ones += 1;
+            }
+        }
+        // P(1) = 1/H_100 ≈ 0.193 — rank 1 must dominate visibly.
+        let frac = ones as f64 / n as f64;
+        assert!((0.17..=0.22).contains(&frac), "P(rank 1) = {frac}");
+        // s = 0 degenerates to uniform: rank 1 near 1%.
+        let mut uni = 0usize;
+        for _ in 0..n {
+            if rng.zipf(100, 0.0) == 1 {
+                uni += 1;
+            }
+        }
+        let frac = uni as f64 / n as f64;
+        assert!((0.005..=0.016).contains(&frac), "uniform P(rank 1) = {frac}");
+    }
+
+    #[test]
+    fn bounded_pareto_pinned_values_and_determinism() {
+        let mut rng = Xoshiro256pp::seeded(4242);
+        let v: Vec<u64> = (0..6).map(|_| rng.bounded_pareto(64.0, 8192.0, 1.2) as u64).collect();
+        assert_eq!(v, vec![92, 73, 174, 75, 66, 85]);
+        let mut a = Xoshiro256pp::seeded(11);
+        let mut b = Xoshiro256pp::seeded(11);
+        for _ in 0..200 {
+            assert_eq!(
+                a.bounded_pareto(16.0, 1024.0, 1.5).to_bits(),
+                b.bounded_pareto(16.0, 1024.0, 1.5).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn bounded_pareto_support_and_tail() {
+        let mut rng = Xoshiro256pp::seeded(73);
+        let n = 50_000;
+        let (mut below_2lo, mut above_half) = (0usize, 0usize);
+        for _ in 0..n {
+            let x = rng.bounded_pareto(100.0, 10_000.0, 1.1);
+            assert!((100.0..=10_000.0).contains(&x), "sample {x}");
+            if x < 200.0 {
+                below_2lo += 1;
+            }
+            if x > 5_000.0 {
+                above_half += 1;
+            }
+        }
+        // Mass concentrates near lo (analytic P(x < 2·lo) ≈ 0.54 for
+        // α = 1.1) but the bounded tail is fat enough to matter.
+        assert!(below_2lo as f64 / n as f64 > 0.45, "head mass {below_2lo}");
+        assert!(above_half as f64 / n as f64 > 0.005, "tail mass {above_half}");
     }
 
     #[test]

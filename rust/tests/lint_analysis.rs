@@ -12,12 +12,16 @@
 //!   non-monotonic arrivals (P203), unregistered names (P204).
 //! * Fault-trace drills: bad targets / DRAM offline (P207), unsorted
 //!   times (P208), unpaired offline/restore (P209).
+//! * Request-trace drills (ISSUE 10): non-monotonic arrivals (P210),
+//!   non-positive tokens/SLO (P211), digest mismatch (P212), plus the
+//!   shared P202/P204/P205/P206 shapes.
 
 use cxlfine::analysis::{
-    lint_commit, lint_fault_trace, lint_plan, lint_schedule, lint_trace, ScheduleLintContext,
-    Severity,
+    lint_commit, lint_fault_trace, lint_plan, lint_request_trace, lint_schedule, lint_trace,
+    ScheduleLintContext, Severity,
 };
 use cxlfine::fleet::{FaultEvent, FaultGen, FaultKind, FaultTrace, TraceGen};
+use cxlfine::serve::RequestGen;
 use cxlfine::mem::{Lifetime, NumaAllocator, Placement, Policy, RegionRequest, TensorClass};
 use cxlfine::model::footprint::Workload;
 use cxlfine::model::presets;
@@ -358,4 +362,83 @@ fn fault_trace_corruptions_fire_their_codes() {
     // Without a topology the shape checks still run; target checks skip.
     let d = lint_fault_trace(&clean.to_json(), None);
     assert!(!d.has_errors(), "topology-free lint of a clean trace:\n{}", d.render());
+}
+
+/// Request-trace drills: each corruption of a generated (clean) serving
+/// trace fires its documented P2xx code.
+#[test]
+fn request_trace_corruptions_fire_their_codes() {
+    let clean = RequestGen::mixed(9, 12, "tiny-2m").generate();
+    let d = lint_request_trace(&clean.to_json());
+    assert!(
+        !d.has_errors() && !d.has_warnings(),
+        "generated request trace must lint clean:\n{}",
+        d.render()
+    );
+
+    // P210: arrivals out of order (a warning, not an error).
+    let mut t = clean.clone();
+    let last = t.requests.len() - 1;
+    t.requests[last].arrival_s = 0.0;
+    let d = lint_request_trace(&t.to_json());
+    assert!(d.has_code("P210"), "inverted arrivals must fire P210:\n{}", d.render());
+    assert!(!d.has_errors(), "P210 is a warning:\n{}", d.render());
+
+    // P211: non-positive token counts and SLOs, all reported.
+    let mut t = clean.clone();
+    t.requests[0].prompt_tokens = 0;
+    t.requests[1].max_output_tokens = 0;
+    t.requests[2].slo_ms = 0.0;
+    let d = lint_request_trace(&t.to_json());
+    assert!(d.has_code("P211"), "non-positive values must fire P211:\n{}", d.render());
+    assert!(
+        d.count(Severity::Error) >= 3,
+        "zero prompt, zero output and zero SLO all report:\n{}",
+        d.render()
+    );
+
+    // P212: digest field says one thing, contents hash to another.
+    let mut j = clean.to_json();
+    if let cxlfine::util::json::Json::Obj(o) = &mut j {
+        o.set("digest", "deadbeefdeadbeef");
+    }
+    let d = lint_request_trace(&j);
+    assert!(d.has_code("P212"), "corrupted digest must fire P212:\n{}", d.render());
+
+    // Shared shapes carry over: duplicate ids (P202), unregistered model
+    // (P204), malformed entries (P205), unsigned trace (P206 Info-only).
+    let mut t = clean.clone();
+    let id0 = t.requests[0].id;
+    t.requests[1].id = id0;
+    let d = lint_request_trace(&t.to_json());
+    assert!(d.has_code("P202"), "duplicate ids must fire P202:\n{}", d.render());
+
+    let mut t = clean.clone();
+    t.requests[0].model = "no-such-model".into();
+    let d = lint_request_trace(&t.to_json());
+    assert!(d.has_code("P204"), "unregistered model must fire P204:\n{}", d.render());
+
+    let mut j = clean.to_json();
+    if let cxlfine::util::json::Json::Obj(o) = &mut j {
+        let mut reqs = o.get("requests").and_then(|v| v.as_arr()).unwrap().to_vec();
+        reqs[0] = cxlfine::util::json::Json::Str("not a request".into());
+        o.set("requests", cxlfine::util::json::Json::Arr(reqs));
+    }
+    let d = lint_request_trace(&j);
+    assert!(d.has_code("P205"), "malformed entries must fire P205:\n{}", d.render());
+
+    let mut stripped = cxlfine::util::json::JsonObj::new();
+    if let cxlfine::util::json::Json::Obj(o) = &clean.to_json() {
+        for (k, v) in o.iter() {
+            if k != "digest" {
+                stripped.set(k, v.clone());
+            }
+        }
+    }
+    let d = lint_request_trace(&cxlfine::util::json::Json::Obj(stripped));
+    assert!(
+        d.has_code("P206") && !d.has_errors(),
+        "unsigned request trace is Info-only:\n{}",
+        d.render()
+    );
 }
